@@ -1,0 +1,174 @@
+//! Perf microbenchmarks for the hot paths (criterion is unavailable
+//! offline; this is a hand-rolled warmup+repeat harness with median/p90).
+//! Used by the EXPERIMENTS.md §Perf iteration log.
+//!
+//!     cargo bench --bench perf [filter]
+
+use apt::linalg::inv_spd;
+use apt::prune::{
+    compensate_m, compensate_sequential, select_24_m, select_unstructured_s, sparsegpt_prune,
+    HessianAccumulator, Mask, Sparsity,
+};
+use apt::linalg::cholesky_upper;
+use apt::tensor::{Mat, MatF64};
+use apt::util::{Quantiles, Rng, Timer};
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
+    // warmup
+    for _ in 0..2 {
+        f();
+    }
+    let mut q = Quantiles::new();
+    for _ in 0..iters {
+        let t = Timer::start();
+        f();
+        q.push(t.elapsed_ms());
+    }
+    println!(
+        "{name:<44} median {:>9.3} ms   p90 {:>9.3} ms   n={}",
+        q.median(),
+        q.quantile(0.9),
+        q.len()
+    );
+}
+
+fn setup(n: usize, m: usize, seed: u64) -> (Mat, MatF64, MatF64) {
+    let mut rng = Rng::new(seed);
+    let w = Mat::randn(n, m, 1.0, &mut rng);
+    let x = Mat::randn(2 * m, m, 1.0, &mut rng);
+    let mut acc = HessianAccumulator::new(m);
+    acc.add_chunk(&x);
+    let hd = acc.damped(0.01);
+    let hinv = inv_spd(&hd).unwrap();
+    (w, hd, hinv)
+}
+
+fn main() {
+    let filter = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_default();
+    let run = |name: &str| filter.is_empty() || name.contains(&filter);
+
+    println!("== L3 hot paths (native) ==");
+
+    if run("gemm") {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(512, 512, 1.0, &mut rng);
+        let b = Mat::randn(512, 512, 1.0, &mut rng);
+        bench("gemm 512x512x512", 10, || {
+            std::hint::black_box(a.matmul(&b));
+        });
+        bench("gemm_tb 512x512x512", 10, || {
+            std::hint::black_box(a.matmul_tb(&b));
+        });
+    }
+
+    if run("hessian") {
+        let mut rng = Rng::new(2);
+        let x = Mat::randn(512, 256, 1.0, &mut rng);
+        bench("hessian accumulate 2XtX (512x256)", 10, || {
+            let mut acc = HessianAccumulator::new(256);
+            acc.add_chunk(&x);
+            std::hint::black_box(acc);
+        });
+        bench("hessian accumulate (convert-in-loop)", 10, || {
+            let mut acc = HessianAccumulator::new(256);
+            acc.add_chunk_convert_in_loop(&x);
+            std::hint::black_box(acc);
+        });
+    }
+
+    if run("finalize") {
+        let (_w, _hd, _hinv) = setup(8, 256, 3);
+        let mut rng = Rng::new(3);
+        let x = Mat::randn(512, 256, 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(256);
+        acc.add_chunk(&x);
+        bench("hessian finalize (chol+inv, m=256)", 8, || {
+            std::hint::black_box(acc.finalize(0.01));
+        });
+    }
+
+    if run("compensate") {
+        let (w0, _hd, hinv) = setup(256, 256, 4);
+        let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 256, 0.5);
+        bench("compensate_m n=256 m=256 k=128", 6, || {
+            let mut w = w0.clone();
+            std::hint::black_box(compensate_m(&mut w, &mask, &hinv));
+        });
+        let (w0l, _hd, hinvl) = setup(256, 512, 5);
+        let maskl = select_unstructured_s(&w0l, &hinvl.diag(), 0, 512, 0.5);
+        bench("compensate_m n=256 m=512 k=256", 4, || {
+            let mut w = w0l.clone();
+            std::hint::black_box(compensate_m(&mut w, &maskl, &hinvl));
+        });
+    }
+
+    if run("sequential") {
+        let (w0, _hd, hinv) = setup(256, 256, 6);
+        let u = cholesky_upper(&hinv).unwrap();
+        let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 256, 0.5);
+        bench("sparsegpt sweep n=256 m=256", 6, || {
+            let mut w = w0.clone();
+            compensate_sequential(&mut w, &mask, &u);
+            std::hint::black_box(w);
+        });
+        let (w0b, _hd, hinvb) = setup(256, 256, 7);
+        bench("sparsegpt full (mask+sweep) S=64", 6, || {
+            let mut w = w0b.clone();
+            std::hint::black_box(sparsegpt_prune(
+                &mut w,
+                &hinvb,
+                Sparsity::Unstructured { rate: 0.5 },
+                Some(64),
+                false,
+            ));
+        });
+    }
+
+    if run("mask24") {
+        let (w, _hd, hinv) = setup(512, 512, 8);
+        bench("select_24_m (Eq12 6-combo) 512x512", 10, || {
+            std::hint::black_box(select_24_m(&w, &hinv, 0, 512));
+        });
+    }
+
+    if run("sparse") {
+        let mut rng = Rng::new(9);
+        let mut w = Mat::randn(256, 512, 1.0, &mut rng);
+        apt::prune::magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.8 });
+        let csr = apt::sparse::Csr::from_dense(&w);
+        let x = Mat::randn(64, 512, 1.0, &mut rng);
+        bench("dense matmul_tb 64x512 @ (256,512)", 20, || {
+            std::hint::black_box(x.matmul_tb(&w));
+        });
+        bench("csr matmul_tb @80% sparsity", 20, || {
+            std::hint::black_box(csr.matmul_tb(&x));
+        });
+    }
+
+    if run("hlo") {
+        if let Ok(rt) = apt::runtime::Runtime::load(std::path::Path::new("artifacts")) {
+            if let Some(entry) = rt.find("prune_24_mm", 256, 256) {
+                let entry = entry.clone();
+                let (w, _hd, hinv) = setup(256, 256, 10);
+                let hinv32 = hinv.to_f32();
+                // include one warm compile, then measure steady-state exec
+                let _ = rt.exec_prune(&entry, &w, &hinv32);
+                bench("hlo prune_24_mm 256x256 (PJRT exec)", 6, || {
+                    std::hint::black_box(rt.exec_prune(&entry, &w, &hinv32).unwrap());
+                });
+            }
+            if let Some(entry) = rt.find_m("hessian_update", 256) {
+                let entry = entry.clone();
+                let mut rng = Rng::new(11);
+                let x = Mat::randn(entry.t, 256, 1.0, &mut rng);
+                let h = Mat::zeros(256, 256);
+                let _ = rt.exec(&entry, &[&x, &h], &[], &[256]);
+                bench("hlo hessian_update 128x256 (PJRT exec)", 10, || {
+                    std::hint::black_box(rt.exec(&entry, &[&x, &h], &[], &[256]).unwrap());
+                });
+            }
+        } else {
+            println!("(artifacts missing; hlo benches skipped)");
+        }
+    }
+}

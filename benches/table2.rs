@@ -1,0 +1,8 @@
+//! Regenerates the paper's table2 on the scaled substitute workload.
+//! `cargo bench --bench table2` (set APT_FAST=1 for a smoke run).
+fn main() -> anyhow::Result<()> {
+    let zoo = apt::harness::Zoo::new(42);
+    let out = apt::harness::run_table("table2", &zoo, None)?;
+    println!("{out}");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Mamba scenario (paper SS5.2/5.3): prune micromamba with the LAMBADA-like
+//! calibration set, then report perplexity AND the zero-shot suite —
+//! reproducing Table 3's structure including the magnitude-collapse on the
+//! LAMBADA-like task.
+//!
+//!     cargo run --release --example prune_mamba
+
+use apt::coordinator::{prune_model, PipelineConfig};
+use apt::data::Profile;
+use apt::harness::suite::{eval_ppl_lambada, eval_zeroshot};
+use apt::harness::Zoo;
+use apt::model::{Mamba, MambaConfig};
+use apt::model::LanguageModel as _;
+use apt::prune::{Method, PruneConfig, Sparsity};
+
+fn main() -> anyhow::Result<()> {
+    let zoo = Zoo::new(42);
+    let base = zoo.model("mamba", "small", 400)?;
+    let apt::harness::AnyModel::Mamba(base) = base else { unreachable!() };
+    println!("micromamba-small: {} params", base.n_params());
+
+    let calib = zoo.calibration(Profile::LambadaLike, 32, 64);
+    println!("\n| method | ppl-lambada | lambada-acc | hellaswag | avg(5 tasks) |");
+    println!("|---|---|---|---|---|");
+
+    let dense_ppl = eval_ppl_lambada(&base, &zoo);
+    let dense_zs = eval_zeroshot(&base, &zoo, 120);
+    println!(
+        "| original | {dense_ppl:.3} | {:.1}% | {:.1}% | {:.2}% |",
+        dense_zs.lambada * 100.0,
+        dense_zs.hellaswag * 100.0,
+        dense_zs.average() * 100.0
+    );
+
+    for method in [Method::Magnitude, Method::Wanda, Method::SS, Method::SM] {
+        let mut pruned = Mamba { cfg: base.cfg, params: base.params.clone() };
+        let cfg = PipelineConfig::new(PruneConfig::new(
+            method,
+            Sparsity::Unstructured { rate: 0.5 },
+        ));
+        prune_model(&mut pruned, &calib, &cfg, None)?;
+        let ppl = eval_ppl_lambada(&pruned, &zoo);
+        let zs = eval_zeroshot(&pruned, &zoo, 120);
+        println!(
+            "| {} | {ppl:.3} | {:.1}% | {:.1}% | {:.2}% |",
+            method.name(),
+            zs.lambada * 100.0,
+            zs.hellaswag * 100.0,
+            zs.average() * 100.0
+        );
+    }
+    println!("\nPaper Sec 5.3's shape: magnitude collapses on the LAMBADA-like");
+    println!("column (token prediction) while staying near chance on the");
+    println!("multiple-choice columns; ours (SM) degrades least everywhere.");
+    Ok(())
+}

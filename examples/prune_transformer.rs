@@ -1,0 +1,82 @@
+//! END-TO-END DRIVER (DESIGN.md deliverable (b)): trains a transformer
+//! from scratch on the synthetic corpus, logs the loss curve, prunes it
+//! with every method at 50% unstructured AND 2:4 semi-structured through
+//! the full L3 coordinator pipeline (optionally on the AOT/PJRT engine),
+//! and reports the paper-style perplexity table. Recorded in
+//! EXPERIMENTS.md SSE2E.
+//!
+//!     cargo run --release --example prune_transformer [hlo]
+
+use apt::coordinator::{prune_model, PipelineConfig};
+use apt::data::Profile;
+use apt::eval::perplexity;
+use apt::harness::Zoo;
+use apt::model::{train, LanguageModel, TrainConfig, Transformer};
+use apt::prune::{Method, PruneConfig, Sparsity};
+use apt::runtime::{Engine, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let use_hlo = std::env::args().any(|a| a == "hlo");
+    let zoo = Zoo::new(42);
+    let runtime = if use_hlo {
+        Some(Runtime::load(std::path::Path::new("artifacts"))?)
+    } else {
+        None
+    };
+
+    // ---- 1. train the dense model (logged loss curve)
+    let cfg = zoo.transformer_config("llama", "small");
+    let mut model = Transformer::init(cfg, &mut apt::util::Rng::new(42));
+    println!("training microllama-small ({} params)...", model.n_params());
+    let data = zoo.gen.generate(Profile::C4Like, 120_000, 43);
+    let curve = train(
+        &mut model,
+        &data,
+        &TrainConfig { steps: 400, batch: 8, seq_len: 64, log_every: 50, ..Default::default() },
+    );
+    println!("loss curve: {curve:.3?}");
+
+    // ---- 2. evaluate dense
+    let eval = |m: &dyn LanguageModel| -> (f64, f64, f64) {
+        let wt2 = zoo.gen.generate(Profile::Wt2Like, 8_192, 7);
+        let ptb = zoo.gen.generate(Profile::PtbLike, 8_192, 8);
+        let c4 = zoo.gen.generate(Profile::C4Like, 8_192, 9);
+        (
+            perplexity(m, &wt2, 128),
+            perplexity(m, &ptb, 128),
+            perplexity(m, &c4, 128),
+        )
+    };
+    let (wt2, ptb, c4) = eval(&model);
+    println!("\n| method | sparsity | wt2 | ptb | c4 | engine |");
+    println!("|---|---|---|---|---|---|");
+    println!("| original | - | {wt2:.3} | {ptb:.3} | {c4:.3} | - |");
+
+    // ---- 3. prune with every method through the coordinator
+    let calib = zoo.calibration(Profile::C4Like, 32, 64);
+    for sparsity in [Sparsity::Unstructured { rate: 0.5 }, Sparsity::two_four()] {
+        let methods: &[Method] = match sparsity {
+            Sparsity::Unstructured { .. } => {
+                &[Method::Magnitude, Method::Wanda, Method::SS, Method::SM]
+            }
+            _ => &[Method::Magnitude, Method::Wanda, Method::SS, Method::SM, Method::MS, Method::MM],
+        };
+        for &method in methods {
+            let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
+            let pcfg = PipelineConfig::new(PruneConfig::new(method, sparsity)).with_engine(
+                if use_hlo { Engine::Hlo } else { Engine::Native },
+            );
+            let report = prune_model(&mut pruned, &calib, &pcfg, runtime.as_ref())?;
+            let (wt2, ptb, c4) = eval(&pruned);
+            println!(
+                "| {} | {} | {wt2:.3} | {ptb:.3} | {c4:.3} | {} |",
+                method.name(),
+                sparsity.label(),
+                if report.hlo_fraction() > 0.0 { "hlo" } else { "native" }
+            );
+        }
+    }
+    println!("\nShape to verify vs the paper: SM <= SS on every dataset; at 2:4");
+    println!("MM/SM beat SS; wanda/magnitude trail everything.");
+    Ok(())
+}

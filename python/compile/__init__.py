@@ -1,0 +1,4 @@
+"""Build-time-only package: L1 Pallas kernels + L2 JAX graphs + AOT export.
+
+Never imported at runtime - the Rust binary consumes artifacts/*.hlo.txt.
+"""

@@ -1,0 +1,98 @@
+"""AOT compile path: lower the L2 graphs to HLO text + manifest.
+
+Usage (from python/):  python -m compile.aot --out ../artifacts
+
+Interchange format is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the `xla` rust crate) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+The artifact set covers the layer shapes of the in-repo demo models (see
+shapes below) x the method graphs in model.entry_points. The Rust runtime
+reads artifacts/manifest.json, memoizes compiled executables per (file),
+and falls back to the native Rust solver for shapes not in the registry.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model as L2
+
+# (n_out, m_in, calib_chunk_t): the linear-layer shapes used by the demo
+# models in rust/src/model/ plus a small shape for the quickstart example.
+DEFAULT_SHAPES = [
+    (64, 64, 64),      # quickstart / tests
+    (128, 128, 128),   # microllama-s attention
+    (256, 128, 128),   # microllama-s mlp up/gate
+    (128, 256, 128),   # microllama-s mlp down
+    (256, 256, 128),   # microllama-m attention
+    (512, 256, 128),   # microllama-m mlp up/gate
+    (256, 512, 128),   # microllama-m mlp down
+]
+
+
+def to_hlo_text(fn, example_args):
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_sig(s):
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--shapes", default="", help="semicolon list n,m,t overriding defaults")
+    ap.add_argument("--only", default="", help="comma list of entry names to build")
+    args = ap.parse_args(argv)
+
+    shapes = DEFAULT_SHAPES
+    if args.shapes:
+        shapes = [tuple(int(v) for v in part.split(",")) for part in args.shapes.split(";")]
+    only = set(args.only.split(",")) if args.only else None
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest = {"format": "hlo-text-v1", "entries": []}
+    for (n, m, t) in shapes:
+        k = m // 2  # 50% unstructured (the headline sparsity)
+        for name, (fn, ex) in L2.entry_points(n, m, t, k).items():
+            if only and name not in only:
+                continue
+            fname = f"{name}_n{n}_m{m}_t{t}.hlo.txt"
+            text = to_hlo_text(fn, ex)
+            path = os.path.join(args.out, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["entries"].append(
+                {
+                    "name": name,
+                    "file": fname,
+                    "n": n,
+                    "m": m,
+                    "t": t,
+                    "k": k,
+                    "inputs": [shape_sig(s) for s in ex],
+                    "sha256": hashlib.sha256(text.encode()).hexdigest()[:16],
+                }
+            )
+            print(f"wrote {fname} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"manifest: {len(manifest['entries'])} entries -> {args.out}/manifest.json",
+          file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: tiled damped-Hessian accumulation H = 2 * X^T X.
+
+TPU mapping (DESIGN.md SS3 "Hardware adaptation"): the rank-B update chain
+the paper runs as a cuBLAS GEMM becomes an MXU-tiled GEMM with the output
+tile resident in VMEM across the batch-chunk grid axis. The grid is
+(row_tiles, col_tiles, batch_chunks); because the batch axis is the
+innermost (sequential) grid dimension, `o_ref` for a given (i, j) tile
+persists across the k-steps and we accumulate in place — the classic
+"revisiting output" Pallas accumulation pattern. HBM->VMEM streaming of the
+two X tiles is expressed by the BlockSpec index maps; on a real TPU the
+Mosaic pipeline double-buffers them automatically.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; interpret mode lowers to plain HLO (see /opt/xla-example).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hessian_kernel(xi_ref, xj_ref, o_ref):
+    """One (bt, bm) x (bt, bm) -> (bm, bm) accumulation step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    xi = xi_ref[...]
+    xj = xj_ref[...]
+    # f32 accumulation regardless of input dtype (MXU-native behaviour).
+    o_ref[...] += 2.0 * jax.lax.dot_general(
+        xi, xj,
+        dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bt"))
+def hessian_xtx(x, bm=128, bt=128):
+    """2 * X^T X for X:(T, m) via the tiled Pallas kernel.
+
+    bm: output tile edge (VMEM: 2 tiles of bt*bm inputs + bm*bm out).
+    bt: batch-chunk length streamed per grid step.
+    """
+    t, m = x.shape
+    bm = min(bm, m)
+    bt = min(bt, t)
+    assert m % bm == 0 and t % bt == 0, (t, m, bt, bm)
+    grid = (m // bm, m // bm, t // bt)
+    return pl.pallas_call(
+        _hessian_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bt, bm), lambda i, j, k: (k, i)),
+            pl.BlockSpec((bt, bm), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bm), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, m), jnp.float32),
+        interpret=True,
+    )(x, x)
+
+
+def hessian_damped(x, gamma, bm=128, bt=128):
+    """H = 2 X^T X + gamma * mean(diag) * I (Remark 4.1 dampening)."""
+    h = hessian_xtx(x, bm=bm, bt=bt)
+    damp = gamma * jnp.mean(jnp.diag(h))
+    return h + damp * jnp.eye(x.shape[1], dtype=h.dtype)

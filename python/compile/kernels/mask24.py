@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: Solution-M 2:4 mask selection (paper Eq. 12).
+
+For every 4-column group the paper enumerates the C(4,2)=6 ways of pruning
+2 weights and picks the combination with minimal Eq. (12) loss
+
+    L(a, b) = 1/2 * [w_a w_b] inv(S_ab) [w_a w_b]^T ,
+    S_ab    = Hinv[[a,b]][:, [a,b]]   (2x2, closed-form inverse)
+
+using the 4x4 *diagonal blocks* of Hinv (groups interact only through the
+later compensation step — the paper's per-group simplification, Sec 4.2.1).
+
+TPU mapping: the 6-combo inner loop is unrolled in-register on the VPU; no
+gathers are needed because L2 re-lays Hinv's diagonal blocks out as a dense
+(m/4, 4, 4) tensor once per layer. Grid is over row tiles; one kernel
+invocation consumes a (bn, m) weight tile plus the (m/4, 16) block table
+and emits the 0/1 mask tile and the per-group minimal loss.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import COMBOS_2_4
+
+
+def _mask24_kernel(w_ref, hb_ref, mask_ref, loss_ref):
+    bn = w_ref.shape[0]
+    m = w_ref.shape[1]
+    g = m // 4
+    wg = w_ref[...].reshape(bn, g, 4)
+    hb = hb_ref[...].reshape(g, 4, 4)
+
+    losses = []
+    for (a, b) in COMBOS_2_4:  # unrolled: 6 combos
+        s11 = hb[:, a, a][None, :]
+        s22 = hb[:, b, b][None, :]
+        s12 = hb[:, a, b][None, :]
+        det = s11 * s22 - s12 * s12
+        wa = wg[:, :, a]
+        wb = wg[:, :, b]
+        losses.append(
+            0.5 * (wa * wa * s22 - 2.0 * wa * wb * s12 + wb * wb * s11) / det
+        )
+    lstack = jnp.stack(losses, axis=0)  # (6, bn, g)
+    best = jnp.argmin(lstack, axis=0)  # (bn, g)
+    loss_ref[...] = jnp.min(lstack, axis=0)
+
+    # Combo -> 4-lane 0/1 pattern lookup, computed via comparisons (VPU).
+    table = jnp.zeros((len(COMBOS_2_4), 4), dtype=jnp.float32)
+    for ci, (a, b) in enumerate(COMBOS_2_4):
+        table = table.at[ci, a].set(1.0).at[ci, b].set(1.0)
+    mask = table[best]  # (bn, g, 4)
+    mask_ref[...] = mask.reshape(bn, m)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def solution_m_mask24(w, hinv_blocks, bn=128):
+    """2:4 Solution-M mask for w:(n,m), hinv_blocks:(m//4,4,4).
+
+    Returns (mask, group_loss): mask (n,m) 1.0=pruned (exactly 2 per group),
+    group_loss (n, m//4) minimal Eq. (12) loss per group.
+    """
+    n, m = w.shape
+    g = m // 4
+    bn = min(bn, n)
+    assert n % bn == 0 and m % 4 == 0, (n, m, bn)
+    hb_flat = hinv_blocks.reshape(g, 16)
+    return pl.pallas_call(
+        _mask24_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((g, 16), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((bn, g), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, m), jnp.float32),
+            jax.ShapeDtypeStruct((n, g), jnp.float32),
+        ],
+        interpret=True,
+    )(w, hb_flat)
+
+
+def extract_diag_blocks4(hinv):
+    """(m,m) -> (m//4,4,4) diagonal 4x4 blocks (L2-side re-layout)."""
+    m = hinv.shape[0]
+    g = m // 4
+    return hinv.reshape(g, 4, g, 4)[jnp.arange(g), :, jnp.arange(g), :]

@@ -1,0 +1,172 @@
+"""Pure-jnp reference oracles for the L1 Pallas kernels and L2 graphs.
+
+Every kernel in this package has an oracle here; pytest asserts
+`assert_allclose(kernel(...), ref(...))`. The oracles follow the paper's
+equations literally (Zhao et al., EMNLP 2024 Findings):
+
+  Eq. (12)  L* = 1/2 * sum_i  w_qi . inv(Hinv[P_i,P_i]) . w_qi^T
+  Eq. (13)  dw[q_i,:] = - w_qi . inv(Hinv[P_i,P_i]) . Hinv[P_i,:]
+  Eq. (14)  Lhat   = w_ij^2 / (2 * Hinv[j,j])          (Solution S score)
+
+with Hinv = (2 X^T X + gamma I)^{-1} ("2xx^T" in the paper's m x B
+convention; we carry activations as (T, m) token-rows).
+"""
+
+from itertools import combinations
+
+import jax.numpy as jnp
+import numpy as np
+
+# The 6 ways of pruning 2 weights out of a group of 4 (2:4 sparsity).
+COMBOS_2_4 = list(combinations(range(4), 2))  # [(0,1),(0,2),...,(2,3)]
+
+
+def ref_hessian(x, gamma=0.0):
+    """Damped layer Hessian H = 2 X^T X + gamma*mean(diag)*I for X:(T,m)."""
+    h = 2.0 * x.T @ x
+    if gamma:
+        damp = gamma * jnp.mean(jnp.diag(h))
+        h = h + damp * jnp.eye(x.shape[1], dtype=x.dtype)
+    return h
+
+
+def ref_scores(w, hinv_diag):
+    """Eq. (14): per-weight Solution-S pruning loss w^2 / (2*diag(Hinv))."""
+    return (w * w) / (2.0 * hinv_diag[None, :])
+
+
+def ref_group_loss_2of4(w_group, hinv_block, a, b):
+    """Eq. (12) for one row-group: prune columns {a,b} of a 4-wide group.
+
+    w_group:(4,)  hinv_block:(4,4) = Hinv restricted to the group's columns.
+    Uses the closed-form 2x2 inverse.
+    """
+    s11 = hinv_block[a, a]
+    s22 = hinv_block[b, b]
+    s12 = hinv_block[a, b]
+    det = s11 * s22 - s12 * s12
+    wa, wb = w_group[a], w_group[b]
+    return 0.5 * (wa * wa * s22 - 2.0 * wa * wb * s12 + wb * wb * s11) / det
+
+
+def ref_mask24(w, hinv_blocks):
+    """Solution-M 2:4 mask (Eq. 12 enumerated over the 6 combos per group).
+
+    w:(n,m), hinv_blocks:(m//4,4,4) diagonal 4x4 blocks of Hinv.
+    Returns (mask, loss): mask (n,m) with 1.0 at pruned entries, exactly 2
+    per 4-group; loss (n, m//4) the minimal group loss.
+    """
+    n, m = w.shape
+    g = m // 4
+    wg = np.asarray(w, dtype=np.float64).reshape(n, g, 4)
+    hb = np.asarray(hinv_blocks, dtype=np.float64)
+    losses = np.empty((len(COMBOS_2_4), n, g))
+    for ci, (a, b) in enumerate(COMBOS_2_4):
+        s11 = hb[:, a, a][None, :]
+        s22 = hb[:, b, b][None, :]
+        s12 = hb[:, a, b][None, :]
+        det = s11 * s22 - s12 * s12
+        wa, wb = wg[:, :, a], wg[:, :, b]
+        losses[ci] = 0.5 * (wa * wa * s22 - 2 * wa * wb * s12 + wb * wb * s11) / det
+    best = np.argmin(losses, axis=0)  # (n, g)
+    mask = np.zeros((n, g, 4), dtype=np.float32)
+    for ci, (a, b) in enumerate(COMBOS_2_4):
+        sel = best == ci
+        mask[:, :, a] += sel
+        mask[:, :, b] += sel
+    minloss = np.min(losses, axis=0).astype(np.float32)
+    return jnp.asarray(mask.reshape(n, m)), jnp.asarray(minloss)
+
+
+def ref_compensate(w, idx, hinv):
+    """Eq. (13) optimal Solution-M compensation, row by row.
+
+    w:(n,m), idx:(n,k) pruned column indices per row, hinv:(m,m).
+    Returns (w_new, pred_loss) with w_new exactly zero at pruned entries and
+    pred_loss the Eq. (12) total.
+    """
+    wn = np.array(w, dtype=np.float64)
+    hi = np.asarray(hinv, dtype=np.float64)
+    n, _ = wn.shape
+    total = 0.0
+    out = wn.copy()
+    for r in range(n):
+        p = np.asarray(idx[r])
+        sub = hi[np.ix_(p, p)]
+        rhs = wn[r, p]
+        lam = np.linalg.solve(sub, rhs)
+        out[r] -= lam @ hi[p, :]
+        out[r, p] = 0.0
+        total += 0.5 * float(rhs @ lam)
+    return jnp.asarray(out.astype(np.float32)), jnp.float32(total)
+
+
+def ref_sparsegpt_compensate(w, mask, hinv):
+    """Solution-S compensation: SparseGPT/OBC sequential column sweep.
+
+    Processes columns left->right using the Cholesky factor of Hinv; all
+    columns before the current one are frozen (the paper's Sec. 2.3.2).
+    mask:(n,m) 1.0 = prune. Returns w_new (pruned entries exactly zero).
+    """
+    wn = np.array(w, dtype=np.float64)
+    hi = np.asarray(hinv, dtype=np.float64)
+    mk = np.asarray(mask)
+    u = np.linalg.cholesky(hi).T  # upper triangular, hinv = u.T @ u
+    n, m = wn.shape
+    for j in range(m):
+        d = u[j, j]
+        err = (wn[:, j] * mk[:, j]) / d
+        wn[:, j:] -= np.outer(err, u[j, j:])
+        wn[mk[:, j] > 0, j] = 0.0
+    return jnp.asarray(wn.astype(np.float32))
+
+
+def ref_zeroing_loss(w, mask, h):
+    """Loss of pruning WITHOUT compensation: dw = -w at pruned entries.
+
+    L = 1/2 dw H dw^T summed over rows (the magnitude-pruning loss under
+    the same quadratic metric).
+    """
+    dw = -np.asarray(w, dtype=np.float64) * np.asarray(mask, dtype=np.float64)
+    hh = np.asarray(h, dtype=np.float64)
+    return jnp.float32(0.5 * float(np.sum((dw @ hh) * dw)))
+
+
+def ref_quadratic_loss(w_before, w_after, h):
+    """Achieved loss 1/2 * sum_rows (dw H dw^T) for dw = after - before."""
+    dw = np.asarray(w_after, dtype=np.float64) - np.asarray(w_before, dtype=np.float64)
+    hh = np.asarray(h, dtype=np.float64)
+    return jnp.float32(0.5 * float(np.sum((dw @ hh) * dw)))
+
+
+def ref_prune_unstructured_sm(w, hinv, k):
+    """Solution-S mask (Eq. 14, per-row top-k) + Solution-M compensation."""
+    scores = np.asarray(ref_scores(w, jnp.diag(hinv)))
+    idx = np.argsort(scores, axis=1, kind="stable")[:, :k]
+    idx = np.sort(idx, axis=1)
+    w_new, loss = ref_compensate(w, jnp.asarray(idx), hinv)
+    return w_new, loss, jnp.asarray(idx)
+
+
+def ref_prune_24_sm(w, hinv):
+    """Solution-S mask restricted to 2-per-4 groups + Solution-M comp."""
+    n, m = w.shape
+    scores = np.asarray(ref_scores(w, jnp.diag(hinv))).reshape(n, m // 4, 4)
+    order = np.argsort(scores, axis=2, kind="stable")[:, :, :2]  # (n,g,2)
+    base = (np.arange(m // 4) * 4)[None, :, None]
+    idx = np.sort((order + base).reshape(n, m // 2), axis=1)
+    w_new, loss = ref_compensate(w, jnp.asarray(idx), hinv)
+    return w_new, loss, jnp.asarray(idx)
+
+
+def ref_prune_24_mm(w, hinv):
+    """Solution-M mask (Eq. 12 enumeration) + Solution-M compensation."""
+    g = w.shape[1] // 4
+    hb = np.stack(
+        [np.asarray(hinv)[i * 4:(i + 1) * 4, i * 4:(i + 1) * 4] for i in range(g)]
+    )
+    mask, _ = ref_mask24(w, jnp.asarray(hb))
+    idx = np.argsort(-np.asarray(mask), axis=1, kind="stable")[:, : w.shape[1] // 2]
+    idx = np.sort(idx, axis=1)
+    w_new, loss = ref_compensate(w, jnp.asarray(idx), hinv)
+    return w_new, loss, jnp.asarray(idx)

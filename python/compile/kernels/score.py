@@ -1,0 +1,41 @@
+"""L1 Pallas kernel: Solution-S pruning scores (paper Eq. 14).
+
+score[i, j] = w[i, j]^2 / (2 * diag(Hinv)[j])
+
+Pure VPU elementwise work: one fused pass over a (bn, m) weight tile with
+the Hinv diagonal broadcast from a (1, m) row resident in VMEM. The fusion
+(square + divide in one kernel) is the TPU analogue of the paper's GPU
+elementwise kernel; no HBM round-trip for the intermediate w^2.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _score_kernel(w_ref, d_ref, o_ref):
+    w = w_ref[...]
+    d = d_ref[...]  # (1, m) broadcast row
+    o_ref[...] = (w * w) / (2.0 * d)
+
+
+@functools.partial(jax.jit, static_argnames=("bn",))
+def solution_s_scores(w, hinv_diag, bn=128):
+    """Eq. (14) scores for w:(n,m), hinv_diag:(m,)."""
+    n, m = w.shape
+    bn = min(bn, n)
+    assert n % bn == 0, (n, bn)
+    d2 = hinv_diag.reshape(1, m)
+    return pl.pallas_call(
+        _score_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, m), lambda i: (i, 0)),
+            pl.BlockSpec((1, m), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, m), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, m), jnp.float32),
+        interpret=True,
+    )(w, d2)

@@ -1,0 +1,84 @@
+"""Pure-HLO batched linear algebra for the AOT graphs.
+
+jnp.linalg.{solve,cholesky,inv} lower to LAPACK FFI custom-calls on CPU
+(e.g. "lapack_spotrf_ffi") which xla_extension 0.5.1 — the runtime behind
+the rust `xla` crate — does not register. These replacements lower to plain
+HLO (while-loops + elementwise + dynamic slices) so the artifacts run on
+any PJRT backend.
+
+All routines are batched over the leading axis and assume SPD inputs (the
+Hinv principal sub-matrices of the pruning math are SPD by construction).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def batched_cholesky(a):
+    """Lower-triangular L with a = L L^T, a:(..., k, k) SPD.
+
+    Outer-product Cholesky: k iterations of rank-1 downdates, each a
+    vectorized (batched) elementwise step — no LAPACK.
+    """
+    k = a.shape[-1]
+    ar = jnp.arange(k)
+
+    def body(j, carry):
+        acur, l = carry
+        d = jnp.sqrt(acur[..., j, j])  # (...,)
+        col = acur[..., :, j] / d[..., None]  # (..., k)
+        col = jnp.where(ar >= j, col, 0.0)
+        l = l.at[..., :, j].set(col)
+        acur = acur - col[..., :, None] * col[..., None, :]
+        return (acur, l)
+
+    _, l = jax.lax.fori_loop(0, k, body, (a, jnp.zeros_like(a)))
+    return l
+
+
+def batched_solve_lower(l, b):
+    """Solve L y = b for lower-triangular L:(...,k,k), b:(...,k)."""
+    k = l.shape[-1]
+    ar = jnp.arange(k)
+
+    def body(j, y):
+        # y_j = (b_j - sum_{i<j} L[j,i] y_i) / L[j,j]
+        dot = jnp.sum(jnp.where(ar < j, l[..., j, :] * y, 0.0), axis=-1)
+        yj = (b[..., j] - dot) / l[..., j, j]
+        return y.at[..., j].set(yj)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(b))
+
+
+def batched_solve_lower_t(l, y):
+    """Solve L^T x = y for lower-triangular L."""
+    k = l.shape[-1]
+    ar = jnp.arange(k)
+
+    def body(i, x):
+        j = k - 1 - i
+        dot = jnp.sum(jnp.where(ar > j, l[..., :, j] * x, 0.0), axis=-1)
+        xj = (y[..., j] - dot) / l[..., j, j]
+        return x.at[..., j].set(xj)
+
+    return jax.lax.fori_loop(0, k, body, jnp.zeros_like(y))
+
+
+def batched_spd_solve(a, b):
+    """Solve a x = b for SPD a:(...,k,k), b:(...,k) via Cholesky."""
+    l = batched_cholesky(a)
+    return batched_solve_lower_t(l, batched_solve_lower(l, b))
+
+
+def spd_inverse(a):
+    """Inverse of SPD a:(k,k) by solving against the identity columns."""
+    k = a.shape[-1]
+    eye = jnp.eye(k, dtype=a.dtype)
+    # batch over columns: solve a x_i = e_i
+    cols = jax.vmap(lambda e: batched_spd_solve(a, e))(eye)  # (k, k) rows=solutions
+    return cols.T
+
+
+def cholesky_upper(a):
+    """Upper factor U with a = U^T U (the SparseGPT sweep wants this)."""
+    return jnp.swapaxes(batched_cholesky(a), -1, -2)

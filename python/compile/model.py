@@ -1,0 +1,179 @@
+"""L2: JAX pruning graphs composing the L1 Pallas kernels (build time only).
+
+Each public function here is a fixed-shape, jit-able graph that `aot.py`
+lowers to HLO text for the Rust runtime. The graphs implement the paper's
+Algorithm 1 for one linear layer with S=all (whole-matrix block); the Rust
+native path (`rust/src/prune/`) additionally implements the S<all blockwise
+sweep with identical math (see DESIGN.md SS7 delta #1).
+
+Naming follows the paper: Solution S = diagonal approximation (SparseGPT-
+like), Solution M = full-interaction optimal solution (ours). A method
+"XY" uses X for the pruning mask and Y for the compensation.
+
+Memory note: the Eq. (13) compensation is evaluated as a scatter + one
+dense GEMM  dw = -scatter(lambda) @ Hinv  rather than gathering the (n,k,m)
+row-bundle of Hinv, so peak memory stays O(n*m + n*k^2) and the update runs
+on the MXU.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .linalg import batched_spd_solve, cholesky_upper, spd_inverse
+from .kernels.hessian import hessian_xtx
+from .kernels.mask24 import extract_diag_blocks4, solution_m_mask24
+from .kernels.score import solution_s_scores
+
+
+# ---------------------------------------------------------------------------
+# Hessian accumulation (calibration stream)
+# ---------------------------------------------------------------------------
+
+def hessian_update(x, h):
+    """One calibration chunk: h + 2 * X^T X  (X:(T,m), h:(m,m))."""
+    return (h + hessian_xtx(x),)
+
+
+def hessian_finalize(h, gamma):
+    """Remark 4.1 dampening + inversion: returns Hinv = (H + g*mean(diag)*I)^-1.
+
+    gamma is a traced scalar input so one artifact serves every dampening
+    ratio in the Fig. A1 ablation.
+    """
+    m = h.shape[0]
+    damp = gamma * jnp.mean(jnp.diag(h))
+    hd = h + damp * jnp.eye(m, dtype=h.dtype)
+    # Cholesky-based symmetric inverse (pure-HLO; see linalg.py).
+    return (spd_inverse(hd),)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (13) Solution-M compensation (batched over rows, uniform k)
+# ---------------------------------------------------------------------------
+
+def _compensate(w, idx, hinv):
+    """Optimal MRP compensation for per-row pruned column sets idx:(n,k).
+
+    Returns (w_new, pred_loss): w_new exactly zero at pruned entries,
+    pred_loss = Eq. (12) total over all rows.
+    """
+    n, m = w.shape
+    k = idx.shape[1]
+
+    # sub[r] = Hinv[idx_r, idx_r]  (n,k,k); rhs[r] = w[r, idx_r]  (n,k)
+    sub = jax.vmap(lambda p: hinv[p][:, p])(idx)
+    rhs = jnp.take_along_axis(w, idx, axis=1)
+
+    # lambda* = inv(sub) @ rhs  (Eq. 10 with the 1/2, absorbed signs);
+    # pure-HLO batched Cholesky solve (linalg.py) instead of LAPACK.
+    lam = batched_spd_solve(sub, rhs)  # (n,k)
+
+    # dw = -scatter(lam) @ Hinv  (Eq. 13, Hinv symmetric)
+    lam_full = jnp.zeros((n, m), w.dtype)
+    lam_full = jnp.put_along_axis(lam_full, idx, lam, axis=1, inplace=False)
+    w_new = w - lam_full @ hinv
+
+    # Exact zeros at pruned entries (theory guarantees it; enforce exactly).
+    w_new = jnp.put_along_axis(w_new, idx, jnp.zeros_like(lam), axis=1, inplace=False)
+
+    pred_loss = 0.5 * jnp.sum(lam * rhs)
+    return w_new, pred_loss
+
+
+# ---------------------------------------------------------------------------
+# Full prune graphs (one linear layer, S=all)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def prune_unstructured_sm(w, hinv, k):
+    """Unstructured SM: Eq. (14) per-row top-k mask + Eq. (13) compensation."""
+    # argsort instead of lax.top_k: the `topk` HLO instruction is newer
+    # than the xla_extension 0.5.1 parser.
+    scores = solution_s_scores(w, jnp.diag(hinv))
+    idx = jnp.sort(jnp.argsort(scores, axis=1)[:, :k], axis=1)
+    w_new, loss = _compensate(w, idx, hinv)
+    return w_new, loss
+
+
+@jax.jit
+def prune_24_sm(w, hinv):
+    """2:4 SM: Eq. (14) scores, 2 smallest per 4-group, Eq. (13) comp."""
+    n, m = w.shape
+    g = m // 4
+    scores = solution_s_scores(w, jnp.diag(hinv)).reshape(n, g, 4)
+    local = jnp.argsort(scores, axis=2)[:, :, :2]  # (n,g,2) within group
+    idx = (local + (jnp.arange(g) * 4)[None, :, None]).reshape(n, m // 2)
+    idx = jnp.sort(idx, axis=1)
+    w_new, loss = _compensate(w, idx, hinv)
+    return w_new, loss
+
+
+@jax.jit
+def prune_24_mm(w, hinv):
+    """2:4 MM: Eq. (12) 6-combo group mask (Pallas) + Eq. (13) comp."""
+    n, m = w.shape
+    hb = extract_diag_blocks4(hinv)
+    mask, _ = solution_m_mask24(w, hb)
+    # mask has exactly 2 ones per 4-group -> m/2 pruned per row; stable
+    # argsort keeps indices ascending among equal keys.
+    idx = jnp.sort(jnp.argsort(-mask, axis=1, stable=True)[:, : m // 2], axis=1)
+    w_new, loss = _compensate(w, idx, hinv)
+    return w_new, loss
+
+
+@jax.jit
+def prune_seq_given_mask(w, mask, hinv):
+    """Solution-S (SparseGPT/OBC) sequential compensation for a given mask.
+
+    The paper's Sec. 2.3.2 freezing scheme: sweep columns left->right with
+    the upper Cholesky factor U of Hinv (Hinv = U^T U); weights left of the
+    cursor stay frozen. Used for the SS and MS method variants.
+    """
+    u = cholesky_upper(hinv)  # (m, m) upper, pure-HLO (linalg.py)
+
+    def body(j, wcur):
+        d = u[j, j]
+        err = (wcur[:, j] * mask[:, j]) / d
+        upd = jnp.outer(err, u[j])
+        # Zero the update strictly left of j (those columns are frozen);
+        # u[j, :j] is already zero for an upper factor, so this is exact.
+        wcur = wcur - upd
+        return wcur.at[:, j].set(jnp.where(mask[:, j] > 0, 0.0, wcur[:, j]))
+
+    w_new = jax.lax.fori_loop(0, w.shape[1], body, w)
+    return (w_new,)
+
+
+@jax.jit
+def prune_24_ms(w, hinv):
+    """2:4 MS: Eq. (12) group mask + SparseGPT sequential compensation."""
+    hb = extract_diag_blocks4(hinv)
+    mask, _ = solution_m_mask24(w, hb)
+    return prune_seq_given_mask(w, mask, hinv)
+
+
+# ---------------------------------------------------------------------------
+# AOT entry-point registry (name -> (fn, example-args builder))
+# ---------------------------------------------------------------------------
+
+def entry_points(n, m, t, k):
+    """All exportable graphs for a (n out, m in) layer, calib chunk t."""
+    f32 = jnp.float32
+    s = jax.ShapeDtypeStruct
+    return {
+        "hessian_update": (hessian_update, (s((t, m), f32), s((m, m), f32))),
+        "hessian_finalize": (hessian_finalize, (s((m, m), f32), s((), f32))),
+        "prune_sm": (
+            functools.partial(prune_unstructured_sm, k=k),
+            (s((n, m), f32), s((m, m), f32)),
+        ),
+        "prune_24_sm": (prune_24_sm, (s((n, m), f32), s((m, m), f32))),
+        "prune_24_mm": (prune_24_mm, (s((n, m), f32), s((m, m), f32))),
+        "prune_24_ms": (prune_24_ms, (s((n, m), f32), s((m, m), f32))),
+        "prune_seq": (
+            prune_seq_given_mask,
+            (s((n, m), f32), s((n, m), f32), s((m, m), f32)),
+        ),
+    }

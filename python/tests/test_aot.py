@@ -1,0 +1,36 @@
+"""AOT lowering smoke tests: every entry point lowers to valid HLO text."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as L2
+
+
+class TestLowering:
+    @pytest.mark.parametrize("name", list(L2.entry_points(8, 8, 8, 4).keys()))
+    def test_entry_lowers_to_hlo_text(self, name):
+        fn, ex = L2.entry_points(16, 16, 16, 8)[name]
+        text = aot.to_hlo_text(fn, ex)
+        assert text.startswith("HloModule"), text[:80]
+        assert "ROOT" in text
+
+    def test_manifest_roundtrip(self, tmp_path):
+        aot.main(["--out", str(tmp_path), "--shapes", "8,8,8", "--only", "prune_24_sm"])
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert man["format"] == "hlo-text-v1"
+        assert len(man["entries"]) == 1
+        e = man["entries"][0]
+        assert e["name"] == "prune_24_sm"
+        assert (tmp_path / e["file"]).exists()
+        assert e["inputs"][0]["shape"] == [8, 8]
+
+    def test_shapes_flag_parsing(self, tmp_path):
+        aot.main(
+            ["--out", str(tmp_path), "--shapes", "8,8,8;16,8,8", "--only", "hessian_update"]
+        )
+        man = json.loads((tmp_path / "manifest.json").read_text())
+        assert len(man["entries"]) == 2

@@ -1,0 +1,165 @@
+"""L1 kernel correctness: Pallas kernels vs pure-jnp/numpy oracles.
+
+Hypothesis sweeps shapes/dtypes per the session's testing policy; every
+kernel is asserted allclose against ref.py.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.hessian import hessian_damped, hessian_xtx
+from compile.kernels.mask24 import extract_diag_blocks4, solution_m_mask24
+from compile.kernels.score import solution_s_scores
+from compile.kernels import ref
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, scale=1.0, rng=RNG):
+    return jnp.asarray(rng.normal(size=shape, scale=scale).astype(np.float32))
+
+
+def spd_hinv(m, rng=RNG):
+    """A well-conditioned SPD matrix standing in for (2XtX+gI)^-1."""
+    a = rng.normal(size=(m, 2 * m)).astype(np.float64)
+    h = 2.0 * a @ a.T + 0.05 * np.trace(a @ a.T) / m * np.eye(m)
+    return jnp.asarray(np.linalg.inv(h).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# hessian kernel
+# ---------------------------------------------------------------------------
+
+class TestHessian:
+    def test_matches_ref_basic(self):
+        x = rand((128, 128))
+        assert_allclose(hessian_xtx(x), ref.ref_hessian(x), rtol=2e-4, atol=2e-4)
+
+    def test_matches_ref_multi_tile(self):
+        x = rand((256, 256))
+        got = hessian_xtx(x, bm=128, bt=64)
+        assert_allclose(got, ref.ref_hessian(x), rtol=3e-4, atol=3e-4)
+
+    def test_symmetric(self):
+        x = rand((64, 64))
+        h = np.asarray(hessian_xtx(x))
+        assert_allclose(h, h.T, rtol=1e-5, atol=1e-5)
+
+    def test_damped_adds_gamma_mean_diag(self):
+        x = rand((64, 64))
+        h0 = np.asarray(hessian_xtx(x))
+        hd = np.asarray(hessian_damped(x, gamma=0.01))
+        expect = h0 + 0.01 * np.mean(np.diag(h0)) * np.eye(64)
+        assert_allclose(hd, expect, rtol=1e-5, atol=1e-5)
+
+    def test_psd(self):
+        x = rand((96, 32))
+        evs = np.linalg.eigvalsh(np.asarray(hessian_xtx(x, bm=32, bt=32), dtype=np.float64))
+        assert evs.min() >= -1e-3
+
+    @settings(deadline=None, max_examples=12)
+    @given(
+        t_tiles=st.integers(1, 3),
+        m_tiles=st.integers(1, 3),
+        tile=st.sampled_from([8, 16, 32]),
+        scale=st.sampled_from([0.1, 1.0, 10.0]),
+    )
+    def test_hypothesis_shapes(self, t_tiles, m_tiles, tile, scale):
+        rng = np.random.default_rng(t_tiles * 100 + m_tiles * 10 + tile)
+        x = rand((t_tiles * tile, m_tiles * tile), scale=scale, rng=rng)
+        got = hessian_xtx(x, bm=tile, bt=tile)
+        assert_allclose(got, ref.ref_hessian(x), rtol=1e-3, atol=1e-3 * scale * scale)
+
+
+# ---------------------------------------------------------------------------
+# score kernel (Eq. 14)
+# ---------------------------------------------------------------------------
+
+class TestScores:
+    def test_matches_ref(self):
+        w = rand((128, 64))
+        d = jnp.abs(rand((64,))) + 0.1
+        assert_allclose(
+            solution_s_scores(w, d), ref.ref_scores(w, d), rtol=1e-5, atol=1e-6
+        )
+
+    def test_zero_weight_zero_score(self):
+        w = jnp.zeros((16, 16))
+        d = jnp.ones((16,))
+        assert float(jnp.max(solution_s_scores(w, d, bn=16))) == 0.0
+
+    def test_scale_invariance_relation(self):
+        # score(c*w) = c^2 * score(w)
+        w = rand((32, 32))
+        d = jnp.abs(rand((32,))) + 0.1
+        s1 = np.asarray(solution_s_scores(w, d, bn=32))
+        s2 = np.asarray(solution_s_scores(3.0 * w, d, bn=32))
+        assert_allclose(s2, 9.0 * s1, rtol=1e-5)
+
+    @settings(deadline=None, max_examples=10)
+    @given(n=st.sampled_from([8, 32, 128]), m=st.sampled_from([4, 64, 256]))
+    def test_hypothesis_shapes(self, n, m):
+        rng = np.random.default_rng(n * 1000 + m)
+        w = rand((n, m), rng=rng)
+        d = jnp.abs(rand((m,), rng=rng)) + 0.05
+        got = solution_s_scores(w, d, bn=min(8, n))
+        assert_allclose(got, ref.ref_scores(w, d), rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# 2:4 Solution-M mask kernel (Eq. 12)
+# ---------------------------------------------------------------------------
+
+class TestMask24:
+    def _setup(self, n, m, seed=0):
+        rng = np.random.default_rng(seed)
+        w = rand((n, m), rng=rng)
+        hinv = spd_hinv(m, rng=rng)
+        hb = extract_diag_blocks4(hinv)
+        return w, hinv, hb
+
+    def test_matches_ref(self):
+        w, _, hb = self._setup(64, 64)
+        mask, loss = solution_m_mask24(w, hb, bn=32)
+        rmask, rloss = ref.ref_mask24(w, hb)
+        assert_allclose(mask, rmask)
+        assert_allclose(loss, rloss, rtol=1e-4, atol=1e-6)
+
+    def test_exactly_2_per_group(self):
+        w, _, hb = self._setup(32, 128, seed=3)
+        mask, _ = solution_m_mask24(w, hb, bn=32)
+        per_group = np.asarray(mask).reshape(32, 32, 4).sum(axis=2)
+        assert (per_group == 2.0).all()
+
+    def test_mask_loss_is_group_minimum(self):
+        # brute force: every other combo in every group has >= loss.
+        w, _, hb = self._setup(8, 16, seed=5)
+        mask, loss = solution_m_mask24(w, hb, bn=8)
+        wn, hbn = np.asarray(w), np.asarray(hb)
+        for r in range(8):
+            for g in range(4):
+                for (a, b) in ref.COMBOS_2_4:
+                    l = ref.ref_group_loss_2of4(wn[r, 4 * g:4 * g + 4], hbn[g], a, b)
+                    assert float(l) >= float(loss[r, g]) - 1e-5
+
+    def test_diag_blocks_extraction(self):
+        hinv = spd_hinv(16)
+        hb = np.asarray(extract_diag_blocks4(hinv))
+        hn = np.asarray(hinv)
+        for g in range(4):
+            assert_allclose(hb[g], hn[4 * g:4 * g + 4, 4 * g:4 * g + 4])
+
+    @settings(deadline=None, max_examples=8)
+    @given(n=st.sampled_from([8, 16, 64]), g=st.sampled_from([2, 8, 16]), seed=st.integers(0, 99))
+    def test_hypothesis_shapes(self, n, g, seed):
+        w, _, hb = self._setup(n, 4 * g, seed=seed)
+        mask, loss = solution_m_mask24(w, hb, bn=min(8, n))
+        rmask, rloss = ref.ref_mask24(w, hb)
+        assert_allclose(loss, rloss, rtol=1e-4, atol=1e-6)
+        # Masks can differ only on exact loss ties; compare losses instead,
+        # plus structural 2-per-4 validity.
+        per_group = np.asarray(mask).reshape(n, g, 4).sum(axis=2)
+        assert (per_group == 2.0).all()

@@ -1,0 +1,167 @@
+"""L2 prune-graph correctness + the paper's core mathematical claims.
+
+Beyond kernel-vs-oracle equality this asserts the *theory*:
+  - constraint satisfaction: (w + dw) is exactly zero at pruned entries
+  - Eq. (12) predicted loss == achieved 1/2 dw H dw^T (optimality identity)
+  - Solution-M compensation <= sequential SparseGPT comp <= plain zeroing
+    (the paper's Sec. 4.4 ordering), for identical masks
+  - MM group mask <= SM group mask in Eq. (12) loss
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as L2
+from compile.kernels import ref
+
+RNG = np.random.default_rng(7)
+
+
+def make_layer(n, m, t=None, seed=0):
+    """Random layer + calibration activations + damped H, Hinv."""
+    rng = np.random.default_rng(seed)
+    t = t or 4 * m
+    w = rng.normal(size=(n, m)).astype(np.float32)
+    x = rng.normal(size=(t, m)).astype(np.float32)
+    h = 2.0 * x.astype(np.float64).T @ x.astype(np.float64)
+    h += 0.01 * np.mean(np.diag(h)) * np.eye(m)
+    hinv = np.linalg.inv(h)
+    return (
+        jnp.asarray(w),
+        jnp.asarray(x),
+        jnp.asarray(h.astype(np.float32)),
+        jnp.asarray(hinv.astype(np.float32)),
+    )
+
+
+class TestHessianGraphs:
+    def test_update_accumulates(self):
+        w, x, h, hinv = make_layer(8, 32, t=64)
+        h0 = jnp.zeros((32, 32))
+        (h1,) = L2.hessian_update(x[:32], h0)
+        (h2,) = L2.hessian_update(x[32:], h1)
+        assert_allclose(h2, ref.ref_hessian(x), rtol=2e-4, atol=2e-3)
+
+    def test_finalize_inverts(self):
+        _, x, _, _ = make_layer(8, 16, t=64)
+        h = ref.ref_hessian(x)
+        (hinv,) = L2.hessian_finalize(h, jnp.float32(0.01))
+        hd = np.asarray(ref.ref_hessian(x, gamma=0.01), dtype=np.float64)
+        assert_allclose(np.asarray(hinv, dtype=np.float64) @ hd, np.eye(16), atol=2e-2)
+
+
+class TestUnstructuredSM:
+    def test_matches_ref(self):
+        w, x, h, hinv = make_layer(16, 32, seed=1)
+        w_new, loss = L2.prune_unstructured_sm(w, hinv, k=16)
+        rw, rloss, _ = ref.ref_prune_unstructured_sm(w, hinv, 16)
+        assert_allclose(w_new, rw, rtol=2e-3, atol=2e-3)
+        assert_allclose(loss, rloss, rtol=2e-3)
+
+    def test_sparsity_exact(self):
+        w, x, h, hinv = make_layer(16, 64, seed=2)
+        w_new, _ = L2.prune_unstructured_sm(w, hinv, k=32)
+        zeros_per_row = (np.asarray(w_new) == 0.0).sum(axis=1)
+        assert (zeros_per_row >= 32).all()
+
+    def test_predicted_equals_achieved_loss(self):
+        # Eq. (12) == 1/2 dw H dw^T: the optimality identity.
+        w, x, h, hinv = make_layer(12, 24, seed=3)
+        w_new, loss = L2.prune_unstructured_sm(w, hinv, k=12)
+        hd = ref.ref_hessian(x, gamma=0.01)
+        achieved = ref.ref_quadratic_loss(w, w_new, hd)
+        assert_allclose(float(loss), float(achieved), rtol=5e-2)
+
+    def test_compensation_beats_plain_zeroing(self):
+        w, x, h, hinv = make_layer(12, 24, seed=4)
+        w_new, loss = L2.prune_unstructured_sm(w, hinv, k=12)
+        mask = (np.asarray(w_new) == 0.0) & (np.asarray(w) != 0.0)
+        hd = ref.ref_hessian(x, gamma=0.01)
+        zero_loss = ref.ref_zeroing_loss(w, jnp.asarray(mask.astype(np.float32)), hd)
+        assert float(loss) <= float(zero_loss) * (1 + 1e-4)
+
+
+class TestSemiStructured:
+    @pytest.mark.parametrize("fn", [L2.prune_24_sm, L2.prune_24_mm])
+    def test_24_structure(self, fn):
+        w, x, h, hinv = make_layer(16, 32, seed=5)
+        out = fn(w, hinv)
+        w_new = np.asarray(out[0])
+        per_group = (w_new.reshape(16, 8, 4) == 0.0).sum(axis=2)
+        assert (per_group >= 2).all()
+
+    def test_sm_matches_ref(self):
+        w, x, h, hinv = make_layer(8, 16, seed=6)
+        w_new, loss = L2.prune_24_sm(w, hinv)
+        rw, rloss, _ = ref.ref_prune_24_sm(w, hinv)
+        assert_allclose(w_new, rw, rtol=2e-3, atol=2e-3)
+
+    def test_mm_matches_ref(self):
+        w, x, h, hinv = make_layer(8, 16, seed=7)
+        w_new, loss = L2.prune_24_mm(w, hinv)
+        rw, rloss, _ = ref.ref_prune_24_mm(w, hinv)
+        assert_allclose(w_new, rw, rtol=2e-3, atol=2e-3)
+
+    def test_mm_mask_loss_leq_sm_mask_loss(self):
+        # The Eq. (12)-selected mask is optimal in the *group-local* metric
+        # (the paper's Sec. 4.2.1 per-group simplification: groups are
+        # scored by the 4x4 diagonal block of Hinv, so optimality holds in
+        # that metric; cross-group interactions may reorder the full loss,
+        # which is why Table 1 occasionally shows MS > SS).
+        from compile.kernels.mask24 import extract_diag_blocks4
+
+        for seed in range(5):
+            w, x, h, hinv = make_layer(8, 32, seed=20 + seed)
+            hb = np.asarray(extract_diag_blocks4(hinv))
+            wn = np.asarray(w)
+
+            def group_metric_loss(idx):
+                total = 0.0
+                for r in range(wn.shape[0]):
+                    cols = np.asarray(idx[r]).reshape(-1, 2)  # 2 per group
+                    for (ca, cb) in cols:
+                        g = ca // 4
+                        total += float(
+                            ref.ref_group_loss_2of4(
+                                wn[r, 4 * g:4 * g + 4], hb[g], ca % 4, cb % 4
+                            )
+                        )
+                return total
+
+            _, _, idx_mm = ref.ref_prune_24_mm(w, hinv)
+            _, _, idx_sm = ref.ref_prune_24_sm(w, hinv)
+            assert group_metric_loss(idx_mm) <= group_metric_loss(idx_sm) * (1 + 1e-6)
+
+
+class TestSequentialCompensation:
+    def test_matches_ref_sparsegpt(self):
+        w, x, h, hinv = make_layer(8, 16, seed=8)
+        mask = (RNG.random((8, 16)) < 0.5).astype(np.float32)
+        (w_new,) = L2.prune_seq_given_mask(w, jnp.asarray(mask), hinv)
+        rw = ref.ref_sparsegpt_compensate(w, jnp.asarray(mask), hinv)
+        assert_allclose(w_new, rw, rtol=5e-3, atol=5e-3)
+
+    def test_pruned_entries_zero(self):
+        w, x, h, hinv = make_layer(8, 16, seed=9)
+        mask = (RNG.random((8, 16)) < 0.3).astype(np.float32)
+        (w_new,) = L2.prune_seq_given_mask(w, jnp.asarray(mask), hinv)
+        assert (np.asarray(w_new)[mask > 0] == 0.0).all()
+
+    def test_mrp_beats_sequential_same_mask(self):
+        # Paper Sec 4.4: updating ALL unpruned weights (Solution M) achieves
+        # lower quadratic loss than sequential freezing (Solution S).
+        for seed in range(5):
+            w, x, h, hinv = make_layer(8, 24, seed=30 + seed)
+            hd = ref.ref_hessian(x, gamma=0.01)
+            k = 12
+            _, _, idx = ref.ref_prune_unstructured_sm(w, hinv, k)
+            mask = np.zeros((8, 24), dtype=np.float32)
+            np.put_along_axis(mask, np.asarray(idx), 1.0, axis=1)
+            w_m, loss_m = ref.ref_compensate(w, idx, hinv)[0], None
+            w_m2, pred = ref.ref_compensate(w, idx, hinv)
+            w_s = ref.ref_sparsegpt_compensate(w, jnp.asarray(mask), hinv)
+            am = float(ref.ref_quadratic_loss(w, w_m2, hd))
+            as_ = float(ref.ref_quadratic_loss(w, w_s, hd))
+            assert am <= as_ * (1 + 1e-3), (seed, am, as_)

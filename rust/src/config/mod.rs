@@ -1,0 +1,229 @@
+//! Experiment configuration: typed config resolved from defaults -> JSON
+//! config file -> `--key=value` CLI overrides (highest priority). This is
+//! the launcher-facing config system the table harness and CLI share.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::json::{self, Json};
+use crate::prune::{Method, PruneConfig, Sparsity};
+use crate::runtime::Engine;
+
+/// Everything one experiment run needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// "microllama" or "micromamba".
+    pub arch: String,
+    /// "small" | "medium" | "large".
+    pub size: String,
+    pub method: Method,
+    pub sparsity: Sparsity,
+    /// Column block size S; 0 = all.
+    pub block_size: usize,
+    pub gamma: f64,
+    pub n_calib: usize,
+    pub calib_seq_len: usize,
+    pub eval_seq_len: usize,
+    pub train_steps: usize,
+    pub seed: u64,
+    pub engine: Engine,
+    /// Calibration profile name ("c4" | "lambada" | ...).
+    pub calib_profile: String,
+    pub out_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            arch: "microllama".into(),
+            size: "small".into(),
+            method: Method::SM,
+            sparsity: Sparsity::Unstructured { rate: 0.5 },
+            block_size: 0,
+            gamma: 0.01,
+            n_calib: 32,
+            calib_seq_len: 64,
+            eval_seq_len: 128,
+            train_steps: 300,
+            seed: 42,
+            engine: Engine::Native,
+            calib_profile: "c4".into(),
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn prune_config(&self) -> PruneConfig {
+        PruneConfig::new(self.method, self.sparsity)
+            .with_block(if self.block_size == 0 { None } else { Some(self.block_size) })
+            .with_gamma(self.gamma)
+    }
+
+    /// Apply a single `key=value` override.
+    pub fn set(&mut self, key: &str, value: &str) -> Result<()> {
+        match key {
+            "arch" => self.arch = value.into(),
+            "size" => self.size = value.into(),
+            "method" => {
+                self.method = Method::from_name(value)
+                    .ok_or_else(|| anyhow!("unknown method '{value}'"))?
+            }
+            "sparsity" => self.sparsity = parse_sparsity(value)?,
+            "block_size" | "block" => self.block_size = value.parse()?,
+            "gamma" | "damp" => self.gamma = value.parse()?,
+            "n_calib" | "calib" => self.n_calib = value.parse()?,
+            "calib_seq_len" => self.calib_seq_len = value.parse()?,
+            "eval_seq_len" => self.eval_seq_len = value.parse()?,
+            "train_steps" | "steps" => self.train_steps = value.parse()?,
+            "seed" => self.seed = value.parse()?,
+            "engine" => {
+                self.engine = Engine::from_name(value)
+                    .ok_or_else(|| anyhow!("unknown engine '{value}'"))?
+            }
+            "calib_profile" => self.calib_profile = value.into(),
+            "out_dir" | "out" => self.out_dir = value.into(),
+            _ => bail!("unknown config key '{key}'"),
+        }
+        Ok(())
+    }
+
+    /// Load overrides from a JSON object file.
+    pub fn apply_file(&mut self, path: &Path) -> Result<()> {
+        let text = std::fs::read_to_string(path)?;
+        let root = json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let Json::Obj(map) = root else { bail!("config root must be an object") };
+        for (k, v) in &map {
+            let s = match v {
+                Json::Str(s) => s.clone(),
+                Json::Num(n) => {
+                    if n.fract() == 0.0 {
+                        format!("{}", *n as i64)
+                    } else {
+                        format!("{n}")
+                    }
+                }
+                Json::Bool(b) => b.to_string(),
+                _ => bail!("config value for '{k}' must be scalar"),
+            };
+            self.set(k, &s)?;
+        }
+        Ok(())
+    }
+
+    /// Apply `--key=value` style CLI args; returns non-config args.
+    pub fn apply_args<'a>(&mut self, args: &'a [String]) -> Result<Vec<&'a str>> {
+        let mut rest = Vec::new();
+        for a in args {
+            if let Some(kv) = a.strip_prefix("--") {
+                if let Some((k, v)) = kv.split_once('=') {
+                    self.set(k, v)?;
+                    continue;
+                }
+            }
+            rest.push(a.as_str());
+        }
+        Ok(rest)
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("arch", Json::Str(self.arch.clone()))
+            .set("size", Json::Str(self.size.clone()))
+            .set("method", Json::Str(self.method.name().into()))
+            .set("sparsity", Json::Str(self.sparsity.label()))
+            .set("block_size", Json::Num(self.block_size as f64))
+            .set("gamma", Json::Num(self.gamma))
+            .set("n_calib", Json::Num(self.n_calib as f64))
+            .set("train_steps", Json::Num(self.train_steps as f64))
+            .set("seed", Json::Num(self.seed as f64))
+            .set("calib_profile", Json::Str(self.calib_profile.clone()));
+        o
+    }
+}
+
+/// "50%" | "0.5" | "2:4".
+pub fn parse_sparsity(s: &str) -> Result<Sparsity> {
+    if let Some((n, m)) = s.split_once(':') {
+        let (n, m): (usize, usize) = (n.parse()?, m.parse()?);
+        if n >= m {
+            bail!("N:M needs n < m");
+        }
+        return Ok(Sparsity::SemiStructured { n, m });
+    }
+    let rate: f64 = if let Some(pct) = s.strip_suffix('%') {
+        pct.parse::<f64>()? / 100.0
+    } else {
+        s.parse()?
+    };
+    if !(0.0..1.0).contains(&rate) {
+        bail!("rate must be in [0,1)");
+    }
+    Ok(Sparsity::Unstructured { rate })
+}
+
+/// Key=value map of overrides collected from the environment (APT_CFG_*).
+pub fn env_overrides() -> BTreeMap<String, String> {
+    std::env::vars()
+        .filter_map(|(k, v)| {
+            k.strip_prefix("APT_CFG_").map(|s| (s.to_ascii_lowercase(), v))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.method, Method::SM);
+        assert!(c.prune_config().block_size.is_none());
+    }
+
+    #[test]
+    fn parse_sparsity_forms() {
+        assert_eq!(parse_sparsity("0.5").unwrap(), Sparsity::Unstructured { rate: 0.5 });
+        assert_eq!(parse_sparsity("70%").unwrap(), Sparsity::Unstructured { rate: 0.7 });
+        assert_eq!(parse_sparsity("2:4").unwrap(), Sparsity::SemiStructured { n: 2, m: 4 });
+        assert!(parse_sparsity("4:2").is_err());
+        assert!(parse_sparsity("1.5").is_err());
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let mut c = ExperimentConfig::default();
+        let args: Vec<String> = ["--method=mm", "--sparsity=2:4", "--block=128", "positional"]
+            .iter()
+            .map(|s| s.to_string())
+            .collect();
+        let rest = c.apply_args(&args).unwrap();
+        assert_eq!(c.method, Method::MM);
+        assert_eq!(c.sparsity, Sparsity::two_four());
+        assert_eq!(c.block_size, 128);
+        assert_eq!(rest, vec!["positional"]);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut c = ExperimentConfig::default();
+        assert!(c.set("bogus", "1").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let mut c = ExperimentConfig::default();
+        let dir = std::env::temp_dir().join("apt_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"method": "wanda", "gamma": 0.05, "n_calib": 64}"#).unwrap();
+        c.apply_file(&p).unwrap();
+        assert_eq!(c.method, Method::Wanda);
+        assert!((c.gamma - 0.05).abs() < 1e-12);
+        assert_eq!(c.n_calib, 64);
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,307 @@
+//! Synthetic corpora standing in for C4 / WikiText-2 / PTB / LAMBADA.
+//!
+//! Each profile shares one lexicon + tokenizer (so one model serves all
+//! evals) but differs in topic mixing, sentence geometry and noise — the
+//! same *kind* of distribution shift the paper's calibrate-on-C4 /
+//! evaluate-on-WT2+PTB setup measures. `LambadaLike` additionally plants a
+//! recurring target noun whose final occurrence is predictable only from
+//! long-range context (the paper's Sec. 5.3 sensitivity argument).
+
+use super::lexicon::Lexicon;
+use super::tokenizer::{Tokenizer, BOS, EOS};
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Profile {
+    /// Broad topic mixture, long documents (calibration-style data).
+    C4Like,
+    /// Narrow encyclopedic: few topics per doc, longer sentences.
+    Wt2Like,
+    /// Short newswire-ish sentences, heavier punctuation.
+    PtbLike,
+    /// Discourse passages whose final word is context-determined.
+    LambadaLike,
+}
+
+impl Profile {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Profile::C4Like => "synth-c4",
+            Profile::Wt2Like => "synth-wt2",
+            Profile::PtbLike => "synth-ptb",
+            Profile::LambadaLike => "synth-lambada",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Profile> {
+        match s {
+            "synth-c4" | "c4" => Some(Profile::C4Like),
+            "synth-wt2" | "wt2" | "wikitext2" => Some(Profile::Wt2Like),
+            "synth-ptb" | "ptb" => Some(Profile::PtbLike),
+            "synth-lambada" | "lambada" => Some(Profile::LambadaLike),
+            _ => None,
+        }
+    }
+}
+
+/// A tokenized corpus: flat stream plus document spans.
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub tokens: Vec<u32>,
+    pub doc_spans: Vec<(usize, usize)>,
+    pub profile: Profile,
+}
+
+/// Shared generation context (one lexicon/tokenizer per experiment).
+pub struct CorpusGen {
+    pub lexicon: Lexicon,
+    pub tokenizer: Tokenizer,
+}
+
+impl CorpusGen {
+    pub fn new(content_words: usize, n_topics: usize, seed: u64) -> CorpusGen {
+        let lexicon = Lexicon::generate(content_words, n_topics, seed);
+        let tokenizer = Tokenizer::from_lexicon(&lexicon);
+        CorpusGen { lexicon, tokenizer }
+    }
+
+    /// Default setup used across the repro: 480 content words, 8 topics
+    /// (vocab 512 with specials+punct+function words).
+    pub fn default_setup(seed: u64) -> CorpusGen {
+        CorpusGen::new(480, 8, seed)
+    }
+
+    fn sentence(&self, topic: usize, rng: &mut Rng, long: bool, out: &mut Vec<u32>) {
+        let lex = &self.lexicon;
+        let tk = &self.tokenizer;
+        let wt = |i: usize| tk.word_token(i);
+        out.push(wt(lex.det(rng)));
+        let n_adj = if long { rng.below(3) } else { rng.below(2) };
+        for _ in 0..n_adj {
+            out.push(wt(lex.adj(topic, rng)));
+        }
+        out.push(wt(lex.noun(topic, rng)));
+        out.push(wt(lex.verb(topic, rng)));
+        out.push(wt(lex.det(rng)));
+        if long && rng.uniform() < 0.5 {
+            out.push(wt(lex.adj(topic, rng)));
+        }
+        out.push(wt(lex.noun(topic, rng)));
+        if long && rng.uniform() < 0.6 {
+            out.push(wt(lex.prep(rng)));
+            out.push(wt(lex.det(rng)));
+            out.push(wt(lex.noun(topic, rng)));
+        }
+        if rng.uniform() < 0.25 {
+            out.push(tk.punct_token(","));
+            out.push(wt(lex.conj(rng)));
+            out.push(wt(lex.noun(topic, rng)));
+            out.push(wt(lex.verb(topic, rng)));
+        }
+        out.push(tk.punct_token("."));
+    }
+
+    /// One LAMBADA-style passage: a planted noun recurs, the passage's
+    /// final content token is that noun again.
+    fn lambada_passage(&self, rng: &mut Rng, out: &mut Vec<u32>) -> u32 {
+        let lex = &self.lexicon;
+        let tk = &self.tokenizer;
+        let topic = rng.below(lex.n_topics);
+        let target = lex.noun(topic, rng);
+        let wt = |i: usize| tk.word_token(i);
+        let n_sent = 3 + rng.below(3);
+        for _ in 0..n_sent {
+            // sentences referencing the target noun
+            out.push(wt(lex.det(rng)));
+            out.push(wt(target));
+            out.push(wt(lex.verb(topic, rng)));
+            out.push(wt(lex.det(rng)));
+            out.push(wt(lex.noun(topic, rng)));
+            out.push(tk.punct_token("."));
+            if rng.uniform() < 0.5 {
+                self.sentence(topic, rng, false, out);
+            }
+        }
+        // closing sentence ending in the target
+        out.push(wt(lex.det(rng)));
+        out.push(wt(lex.noun(topic, rng)));
+        out.push(wt(lex.verb(topic, rng)));
+        out.push(wt(lex.det(rng)));
+        out.push(wt(target));
+        tk.word_token(target)
+    }
+
+    /// Generate roughly `n_tokens` tokens of the given profile.
+    pub fn generate(&self, profile: Profile, n_tokens: usize, seed: u64) -> Dataset {
+        let mut rng = Rng::new(seed ^ 0xda7a);
+        let mut tokens = Vec::with_capacity(n_tokens + 64);
+        let mut doc_spans = Vec::new();
+        while tokens.len() < n_tokens {
+            let start = tokens.len();
+            tokens.push(BOS);
+            match profile {
+                Profile::C4Like => {
+                    let mut topic = rng.below(self.lexicon.n_topics);
+                    let n_sent = 8 + rng.below(12);
+                    for _ in 0..n_sent {
+                        if rng.uniform() < 0.3 {
+                            topic = rng.below(self.lexicon.n_topics);
+                        }
+                        let long = rng.uniform() < 0.5;
+                        self.sentence(topic, &mut rng, long, &mut tokens);
+                    }
+                }
+                Profile::Wt2Like => {
+                    let topic = rng.below(self.lexicon.n_topics);
+                    let n_sent = 12 + rng.below(10);
+                    for _ in 0..n_sent {
+                        // rare drift to an adjacent topic
+                        let t = if rng.uniform() < 0.08 {
+                            (topic + 1) % self.lexicon.n_topics
+                        } else {
+                            topic
+                        };
+                        self.sentence(t, &mut rng, true, &mut tokens);
+                    }
+                }
+                Profile::PtbLike => {
+                    let n_sent = 5 + rng.below(6);
+                    for _ in 0..n_sent {
+                        let topic = rng.below(self.lexicon.n_topics);
+                        self.sentence(topic, &mut rng, false, &mut tokens);
+                        if rng.uniform() < 0.3 {
+                            tokens.push(self.tokenizer.punct_token(";"));
+                        }
+                    }
+                }
+                Profile::LambadaLike => {
+                    self.lambada_passage(&mut rng, &mut tokens);
+                }
+            }
+            tokens.push(EOS);
+            doc_spans.push((start, tokens.len()));
+        }
+        tokens.truncate(n_tokens.max(doc_spans.last().map(|&(s, _)| s + 2).unwrap_or(0)));
+        if let Some(last) = doc_spans.last_mut() {
+            last.1 = last.1.min(tokens.len());
+        }
+        Dataset { tokens, doc_spans, profile }
+    }
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tokens.is_empty()
+    }
+
+    /// Non-overlapping evaluation windows of `seq_len` (the standard
+    /// strided perplexity protocol).
+    pub fn eval_windows(&self, seq_len: usize) -> Vec<&[u32]> {
+        self.tokens.chunks_exact(seq_len).collect()
+    }
+
+    /// Random calibration segments, `n` windows of `seq_len` tokens
+    /// (the paper: 128 segments x 2048 tokens from the first shard).
+    pub fn sample_calibration(&self, n: usize, seq_len: usize, rng: &mut Rng) -> Vec<Vec<u32>> {
+        assert!(self.tokens.len() > seq_len, "corpus smaller than seq_len");
+        (0..n)
+            .map(|_| {
+                let s = rng.below(self.tokens.len() - seq_len);
+                self.tokens[s..s + seq_len].to_vec()
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> CorpusGen {
+        CorpusGen::new(120, 4, 11)
+    }
+
+    #[test]
+    fn generates_requested_length() {
+        let g = gen();
+        for p in [Profile::C4Like, Profile::Wt2Like, Profile::PtbLike, Profile::LambadaLike] {
+            let d = g.generate(p, 5000, 1);
+            assert!(d.len() >= 5000, "{:?} {}", p, d.len());
+            assert!(!d.doc_spans.is_empty());
+        }
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = gen();
+        let a = g.generate(Profile::C4Like, 2000, 5);
+        let b = g.generate(Profile::C4Like, 2000, 5);
+        assert_eq!(a.tokens, b.tokens);
+        let c = g.generate(Profile::C4Like, 2000, 6);
+        assert_ne!(a.tokens, c.tokens);
+    }
+
+    #[test]
+    fn tokens_in_vocab() {
+        let g = gen();
+        let v = g.tokenizer.vocab_size() as u32;
+        let d = g.generate(Profile::Wt2Like, 3000, 2);
+        assert!(d.tokens.iter().all(|&t| t < v));
+    }
+
+    #[test]
+    fn profiles_have_distinct_statistics() {
+        let g = gen();
+        let stat = |p: Profile| {
+            let d = g.generate(p, 20_000, 3);
+            let dots = d
+                .tokens
+                .iter()
+                .filter(|&&t| t == g.tokenizer.punct_token("."))
+                .count();
+            dots as f64 / d.len() as f64
+        };
+        // PTB-like has a denser sentence boundary rate than WT2-like.
+        assert!(stat(Profile::PtbLike) > stat(Profile::Wt2Like));
+    }
+
+    #[test]
+    fn lambada_final_token_recur_in_context() {
+        let g = gen();
+        let d = g.generate(Profile::LambadaLike, 4000, 4);
+        let mut checked = 0;
+        for &(s, e) in &d.doc_spans {
+            if e - s < 8 || d.tokens[e - 1] != EOS {
+                continue;
+            }
+            let target = d.tokens[e - 2];
+            let occurrences =
+                d.tokens[s..e - 2].iter().filter(|&&t| t == target).count();
+            assert!(occurrences >= 2, "target must recur in context");
+            checked += 1;
+        }
+        assert!(checked > 3);
+    }
+
+    #[test]
+    fn calibration_windows_shape() {
+        let g = gen();
+        let d = g.generate(Profile::C4Like, 10_000, 7);
+        let mut rng = Rng::new(0);
+        let cal = d.sample_calibration(16, 128, &mut rng);
+        assert_eq!(cal.len(), 16);
+        assert!(cal.iter().all(|w| w.len() == 128));
+    }
+
+    #[test]
+    fn eval_windows_cover_stream() {
+        let g = gen();
+        let d = g.generate(Profile::PtbLike, 4096, 8);
+        let w = d.eval_windows(256);
+        assert_eq!(w.len(), d.len() / 256);
+    }
+}

@@ -1,0 +1,210 @@
+//! Deterministic pseudo-word lexicon + part-of-speech structure.
+//!
+//! Stands in for natural vocabularies (C4/WikiText/PTB are unavailable
+//! offline). Words are syllable-composed, partitioned into parts of speech
+//! and topic clusters, and drawn with Zipfian frequencies — enough
+//! statistical structure for a small LM to learn non-trivial second-order
+//! activation statistics, which is all the pruning math consumes.
+
+use crate::util::Rng;
+
+const ONSETS: [&str; 12] = ["b", "d", "f", "g", "k", "l", "m", "n", "p", "r", "s", "t"];
+const NUCLEI: [&str; 6] = ["a", "e", "i", "o", "u", "ai"];
+const CODAS: [&str; 6] = ["", "n", "r", "s", "l", "m"];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pos {
+    Noun,
+    Verb,
+    Adj,
+    Det,
+    Prep,
+    Conj,
+}
+
+/// A generated vocabulary with POS classes and topic affinities.
+#[derive(Clone, Debug)]
+pub struct Lexicon {
+    pub words: Vec<String>,
+    pub pos: Vec<Pos>,
+    /// topic id per word (function words get usize::MAX = all topics).
+    pub topic: Vec<usize>,
+    pub n_topics: usize,
+    nouns: Vec<Vec<usize>>, // per-topic noun ids
+    verbs: Vec<Vec<usize>>,
+    adjs: Vec<Vec<usize>>,
+    dets: Vec<usize>,
+    preps: Vec<usize>,
+    conjs: Vec<usize>,
+}
+
+fn make_word(rng: &mut Rng, syllables: usize) -> String {
+    let mut w = String::new();
+    for _ in 0..syllables {
+        w.push_str(ONSETS[rng.below(ONSETS.len())]);
+        w.push_str(NUCLEI[rng.below(NUCLEI.len())]);
+        w.push_str(CODAS[rng.below(CODAS.len())]);
+    }
+    w
+}
+
+impl Lexicon {
+    /// Build a lexicon of ~`content_words` content words over `n_topics`
+    /// topic clusters plus a fixed function-word inventory.
+    pub fn generate(content_words: usize, n_topics: usize, seed: u64) -> Lexicon {
+        let mut rng = Rng::new(seed);
+        let mut words = Vec::new();
+        let mut pos = Vec::new();
+        let mut topic = Vec::new();
+        let mut seen = std::collections::HashSet::new();
+
+        let push_unique = |rng: &mut Rng, p: Pos, t: usize, words: &mut Vec<String>,
+                               pos: &mut Vec<Pos>, topic: &mut Vec<usize>,
+                               seen: &mut std::collections::HashSet<String>| {
+            loop {
+                let syl = 1 + rng.below(3);
+                let w = make_word(rng, syl);
+                if seen.insert(w.clone()) {
+                    words.push(w);
+                    pos.push(p);
+                    topic.push(t);
+                    return words.len() - 1;
+                }
+            }
+        };
+
+        // Function words: shared across topics (usize::MAX).
+        let mut dets = Vec::new();
+        let mut preps = Vec::new();
+        let mut conjs = Vec::new();
+        for _ in 0..6 {
+            dets.push(push_unique(&mut rng, Pos::Det, usize::MAX, &mut words, &mut pos, &mut topic, &mut seen));
+        }
+        for _ in 0..8 {
+            preps.push(push_unique(&mut rng, Pos::Prep, usize::MAX, &mut words, &mut pos, &mut topic, &mut seen));
+        }
+        for _ in 0..4 {
+            conjs.push(push_unique(&mut rng, Pos::Conj, usize::MAX, &mut words, &mut pos, &mut topic, &mut seen));
+        }
+
+        // Content words split 50% nouns / 30% verbs / 20% adjectives,
+        // distributed round-robin over topics.
+        let mut nouns = vec![Vec::new(); n_topics];
+        let mut verbs = vec![Vec::new(); n_topics];
+        let mut adjs = vec![Vec::new(); n_topics];
+        let n_nouns = content_words / 2;
+        let n_verbs = content_words * 3 / 10;
+        let n_adjs = content_words - n_nouns - n_verbs;
+        for i in 0..n_nouns {
+            let t = i % n_topics;
+            nouns[t].push(push_unique(&mut rng, Pos::Noun, t, &mut words, &mut pos, &mut topic, &mut seen));
+        }
+        for i in 0..n_verbs {
+            let t = i % n_topics;
+            verbs[t].push(push_unique(&mut rng, Pos::Verb, t, &mut words, &mut pos, &mut topic, &mut seen));
+        }
+        for i in 0..n_adjs {
+            let t = i % n_topics;
+            adjs[t].push(push_unique(&mut rng, Pos::Adj, t, &mut words, &mut pos, &mut topic, &mut seen));
+        }
+
+        Lexicon { words, pos, topic, n_topics, nouns, verbs, adjs, dets, preps, conjs }
+    }
+
+    pub fn len(&self) -> usize {
+        self.words.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.is_empty()
+    }
+
+    /// Zipfian draw from a word class (rank r weight ~ 1/(r+1)).
+    fn zipf(ids: &[usize], rng: &mut Rng) -> usize {
+        debug_assert!(!ids.is_empty());
+        let n = ids.len();
+        // Inverse-CDF for 1/(r+1) weights via cached harmonic approximation.
+        let h = (n as f64 + 1.0).ln();
+        let u = rng.uniform() * h;
+        let r = (u.exp() - 1.0).floor() as usize;
+        ids[r.min(n - 1)]
+    }
+
+    pub fn noun(&self, t: usize, rng: &mut Rng) -> usize {
+        Self::zipf(&self.nouns[t % self.n_topics], rng)
+    }
+
+    pub fn verb(&self, t: usize, rng: &mut Rng) -> usize {
+        Self::zipf(&self.verbs[t % self.n_topics], rng)
+    }
+
+    pub fn adj(&self, t: usize, rng: &mut Rng) -> usize {
+        Self::zipf(&self.adjs[t % self.n_topics], rng)
+    }
+
+    pub fn det(&self, rng: &mut Rng) -> usize {
+        Self::zipf(&self.dets, rng)
+    }
+
+    pub fn prep(&self, rng: &mut Rng) -> usize {
+        Self::zipf(&self.preps, rng)
+    }
+
+    pub fn conj(&self, rng: &mut Rng) -> usize {
+        Self::zipf(&self.conjs, rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let a = Lexicon::generate(100, 4, 7);
+        let b = Lexicon::generate(100, 4, 7);
+        assert_eq!(a.words, b.words);
+    }
+
+    #[test]
+    fn unique_words() {
+        let lex = Lexicon::generate(300, 8, 1);
+        let set: std::collections::HashSet<_> = lex.words.iter().collect();
+        assert_eq!(set.len(), lex.words.len());
+    }
+
+    #[test]
+    fn topic_partition_covers_all_topics() {
+        let lex = Lexicon::generate(200, 5, 2);
+        for t in 0..5 {
+            assert!(!lex.nouns[t].is_empty());
+            assert!(!lex.verbs[t].is_empty());
+            assert!(!lex.adjs[t].is_empty());
+        }
+    }
+
+    #[test]
+    fn zipf_head_heavier_than_tail() {
+        let lex = Lexicon::generate(200, 2, 3);
+        let mut rng = Rng::new(9);
+        let mut counts = std::collections::HashMap::new();
+        for _ in 0..20_000 {
+            *counts.entry(lex.noun(0, &mut rng)).or_insert(0usize) += 1;
+        }
+        let head = lex.nouns[0][0];
+        let tail = *lex.nouns[0].last().unwrap();
+        assert!(counts.get(&head).copied().unwrap_or(0) > counts.get(&tail).copied().unwrap_or(0) * 2);
+    }
+
+    #[test]
+    fn pos_classes_disjoint() {
+        let lex = Lexicon::generate(100, 2, 4);
+        for (i, p) in lex.pos.iter().enumerate() {
+            match p {
+                Pos::Det => assert!(lex.dets.contains(&i)),
+                Pos::Prep => assert!(lex.preps.contains(&i)),
+                _ => {}
+            }
+        }
+    }
+}

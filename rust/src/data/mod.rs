@@ -1,0 +1,14 @@
+//! Synthetic data substrate: lexicon, tokenizer, corpora, zero-shot tasks.
+//!
+//! See DESIGN.md SS2 for why synthetic stand-ins preserve the behaviours
+//! the paper's evaluation measures.
+
+pub mod corpus;
+pub mod lexicon;
+pub mod tasks;
+pub mod tokenizer;
+
+pub use corpus::{CorpusGen, Dataset, Profile};
+pub use lexicon::Lexicon;
+pub use tasks::{ChoiceTask, LastWordTask, TaskGen, TaskKind};
+pub use tokenizer::Tokenizer;

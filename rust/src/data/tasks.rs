@@ -1,0 +1,204 @@
+//! Synthetic zero-shot tasks mirroring the paper's Table 3 suite.
+//!
+//! Candidate-selection tasks (HellaSwag-like 4-way, PIQA/WinoGrande-like
+//! 2-way, ARC-like 4-way) are scored by length-normalized model likelihood
+//! of each continuation; LAMBADA-like is last-token argmax prediction.
+//! Chance floors match the paper's analysis: 25% / 50% / 25% / ~0%.
+
+use super::corpus::CorpusGen;
+use super::tokenizer::BOS;
+use crate::util::Rng;
+
+#[derive(Clone, Debug)]
+pub struct ChoiceTask {
+    pub context: Vec<u32>,
+    pub candidates: Vec<Vec<u32>>,
+    pub answer: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct LastWordTask {
+    pub context: Vec<u32>,
+    pub answer: u32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum TaskKind {
+    HellaSwagLike, // 4-way topical continuation
+    PiqaLike,      // 2-way verb plausibility
+    ArcLike,       // 4-way noun association
+    WinoLike,      // 2-way referent consistency
+}
+
+impl TaskKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TaskKind::HellaSwagLike => "hellaswag-like",
+            TaskKind::PiqaLike => "piqa-like",
+            TaskKind::ArcLike => "arc-like",
+            TaskKind::WinoLike => "winogrande-like",
+        }
+    }
+
+    pub fn n_choices(&self) -> usize {
+        match self {
+            TaskKind::HellaSwagLike | TaskKind::ArcLike => 4,
+            TaskKind::PiqaLike | TaskKind::WinoLike => 2,
+        }
+    }
+}
+
+pub struct TaskGen<'a> {
+    gen: &'a CorpusGen,
+}
+
+impl<'a> TaskGen<'a> {
+    pub fn new(gen: &'a CorpusGen) -> TaskGen<'a> {
+        TaskGen { gen }
+    }
+
+    fn topical_sentence(&self, topic: usize, rng: &mut Rng) -> Vec<u32> {
+        let lex = &self.gen.lexicon;
+        let tk = &self.gen.tokenizer;
+        let wt = |i: usize| tk.word_token(i);
+        let mut s = vec![
+            wt(lex.det(rng)),
+            wt(lex.adj(topic, rng)),
+            wt(lex.noun(topic, rng)),
+            wt(lex.verb(topic, rng)),
+            wt(lex.det(rng)),
+            wt(lex.noun(topic, rng)),
+        ];
+        s.push(tk.punct_token("."));
+        s
+    }
+
+    /// The correct candidate continues the context's topic; distractors
+    /// come from other topics (model must have learned topic coherence).
+    pub fn choice_task(&self, kind: TaskKind, rng: &mut Rng) -> ChoiceTask {
+        let lex = &self.gen.lexicon;
+        let n_choices = kind.n_choices();
+        let topic = rng.below(lex.n_topics);
+
+        let mut context = vec![BOS];
+        let n_ctx = match kind {
+            TaskKind::HellaSwagLike => 3,
+            TaskKind::WinoLike => 2,
+            _ => 2,
+        };
+        for _ in 0..n_ctx {
+            context.extend(self.topical_sentence(topic, rng));
+        }
+
+        let mut candidates = Vec::with_capacity(n_choices);
+        let answer = rng.below(n_choices);
+        let mut distractor_topics: Vec<usize> =
+            (0..lex.n_topics).filter(|&t| t != topic).collect();
+        rng.shuffle(&mut distractor_topics);
+        for c in 0..n_choices {
+            let t = if c == answer {
+                topic
+            } else {
+                distractor_topics[c % distractor_topics.len()]
+            };
+            candidates.push(self.topical_sentence(t, rng));
+        }
+        ChoiceTask { context, candidates, answer }
+    }
+
+    /// LAMBADA-like: context plants a recurring noun; answer is its token.
+    pub fn lambada_task(&self, rng: &mut Rng) -> LastWordTask {
+        let lex = &self.gen.lexicon;
+        let tk = &self.gen.tokenizer;
+        let topic = rng.below(lex.n_topics);
+        let target = lex.noun(topic, rng);
+        let wt = |i: usize| tk.word_token(i);
+        let mut context = vec![BOS];
+        for _ in 0..3 {
+            context.push(wt(lex.det(rng)));
+            context.push(wt(target));
+            context.push(wt(lex.verb(topic, rng)));
+            context.push(wt(lex.det(rng)));
+            context.push(wt(lex.noun(topic, rng)));
+            context.push(tk.punct_token("."));
+        }
+        context.push(wt(lex.det(rng)));
+        context.push(wt(lex.noun(topic, rng)));
+        context.push(wt(lex.verb(topic, rng)));
+        context.push(wt(lex.det(rng)));
+        LastWordTask { context, answer: tk.word_token(target) }
+    }
+
+    pub fn choice_suite(&self, kind: TaskKind, n: usize, seed: u64) -> Vec<ChoiceTask> {
+        let mut rng = Rng::new(seed ^ 0x7a5c);
+        (0..n).map(|_| self.choice_task(kind, &mut rng)).collect()
+    }
+
+    pub fn lambada_suite(&self, n: usize, seed: u64) -> Vec<LastWordTask> {
+        let mut rng = Rng::new(seed ^ 0x1a3b);
+        (0..n).map(|_| self.lambada_task(&mut rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusGen;
+
+    fn setup() -> CorpusGen {
+        CorpusGen::new(120, 4, 21)
+    }
+
+    #[test]
+    fn choice_task_shapes() {
+        let g = setup();
+        let tg = TaskGen::new(&g);
+        for kind in [TaskKind::HellaSwagLike, TaskKind::PiqaLike, TaskKind::ArcLike, TaskKind::WinoLike] {
+            let suite = tg.choice_suite(kind, 20, 1);
+            assert_eq!(suite.len(), 20);
+            for t in &suite {
+                assert_eq!(t.candidates.len(), kind.n_choices());
+                assert!(t.answer < kind.n_choices());
+                assert!(!t.context.is_empty());
+                assert!(t.candidates.iter().all(|c| !c.is_empty()));
+            }
+        }
+    }
+
+    #[test]
+    fn answers_roughly_uniform() {
+        let g = setup();
+        let tg = TaskGen::new(&g);
+        let suite = tg.choice_suite(TaskKind::HellaSwagLike, 400, 2);
+        let mut counts = [0usize; 4];
+        for t in &suite {
+            counts[t.answer] += 1;
+        }
+        for c in counts {
+            assert!(c > 50, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn lambada_answer_recurs_in_context() {
+        let g = setup();
+        let tg = TaskGen::new(&g);
+        for t in tg.lambada_suite(50, 3) {
+            let occurrences = t.context.iter().filter(|&&x| x == t.answer).count();
+            assert!(occurrences >= 3);
+        }
+    }
+
+    #[test]
+    fn deterministic_suites() {
+        let g = setup();
+        let tg = TaskGen::new(&g);
+        let a = tg.choice_suite(TaskKind::PiqaLike, 10, 7);
+        let b = tg.choice_suite(TaskKind::PiqaLike, 10, 7);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.context, y.context);
+            assert_eq!(x.answer, y.answer);
+        }
+    }
+}

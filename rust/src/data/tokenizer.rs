@@ -1,0 +1,113 @@
+//! Word-level tokenizer over a fixed lexicon-derived vocabulary.
+//!
+//! The vocab layout is: [specials][punctuation][lexicon words]. Encoding of
+//! unknown words maps to `<unk>` (exercised by the distribution-shift
+//! evals where a profile uses rare vocabulary).
+
+use std::collections::HashMap;
+
+use super::lexicon::Lexicon;
+
+pub const BOS: u32 = 0;
+pub const EOS: u32 = 1;
+pub const UNK: u32 = 2;
+pub const PAD: u32 = 3;
+const SPECIALS: [&str; 4] = ["<bos>", "<eos>", "<unk>", "<pad>"];
+const PUNCT: [&str; 3] = [".", ",", ";"];
+
+#[derive(Clone, Debug)]
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Tokenizer {
+    pub fn from_lexicon(lex: &Lexicon) -> Tokenizer {
+        let mut vocab: Vec<String> =
+            SPECIALS.iter().chain(PUNCT.iter()).map(|s| s.to_string()).collect();
+        vocab.extend(lex.words.iter().cloned());
+        let index = vocab
+            .iter()
+            .enumerate()
+            .map(|(i, w)| (w.clone(), i as u32))
+            .collect();
+        Tokenizer { vocab, index }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Token id for a lexicon word id.
+    pub fn word_token(&self, lexicon_word_id: usize) -> u32 {
+        (SPECIALS.len() + PUNCT.len() + lexicon_word_id) as u32
+    }
+
+    pub fn punct_token(&self, p: &str) -> u32 {
+        self.index[p]
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        text.split_whitespace()
+            .map(|w| self.index.get(w).copied().unwrap_or(UNK))
+            .collect()
+    }
+
+    pub fn decode(&self, ids: &[u32]) -> String {
+        ids.iter()
+            .map(|&i| self.vocab.get(i as usize).map(|s| s.as_str()).unwrap_or("<bad>"))
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    pub fn token_str(&self, id: u32) -> &str {
+        &self.vocab[id as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tok() -> Tokenizer {
+        Tokenizer::from_lexicon(&Lexicon::generate(50, 2, 1))
+    }
+
+    #[test]
+    fn specials_have_fixed_ids() {
+        let t = tok();
+        assert_eq!(t.token_str(BOS), "<bos>");
+        assert_eq!(t.token_str(EOS), "<eos>");
+        assert_eq!(t.token_str(UNK), "<unk>");
+        assert_eq!(t.token_str(PAD), "<pad>");
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let t = tok();
+        let text = t.decode(&[7, 8, 9, 4]);
+        let ids = t.encode(&text);
+        assert_eq!(ids, vec![7, 8, 9, 4]);
+    }
+
+    #[test]
+    fn unknown_maps_to_unk() {
+        let t = tok();
+        assert_eq!(t.encode("zzzzz-not-a-word"), vec![UNK]);
+    }
+
+    #[test]
+    fn vocab_size_counts_everything() {
+        let lex = Lexicon::generate(50, 2, 1);
+        let t = Tokenizer::from_lexicon(&lex);
+        assert_eq!(t.vocab_size(), 4 + 3 + lex.len());
+    }
+
+    #[test]
+    fn word_token_maps_into_vocab() {
+        let lex = Lexicon::generate(50, 2, 1);
+        let t = Tokenizer::from_lexicon(&lex);
+        let id = t.word_token(10);
+        assert_eq!(t.token_str(id), lex.words[10]);
+    }
+}

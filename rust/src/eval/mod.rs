@@ -1,0 +1,102 @@
+//! Evaluation: strided perplexity and the zero-shot task suite (Table 3's
+//! metrics). Both parallelize over windows/tasks with scoped threads.
+
+pub mod zeroshot;
+
+pub use zeroshot::{choice_accuracy, lambada_accuracy, ZeroShotReport};
+
+use crate::data::Dataset;
+use crate::model::LanguageModel;
+use crate::util::num_threads;
+
+/// Strided perplexity: exp(mean NLL) over non-overlapping `seq_len`
+/// windows — the protocol SparseGPT/Wanda report (raw-WikiText2 style).
+pub fn perplexity(model: &dyn LanguageModel, data: &Dataset, seq_len: usize) -> f64 {
+    let windows = data.eval_windows(seq_len);
+    assert!(!windows.is_empty(), "dataset shorter than seq_len");
+    perplexity_windows(model, &windows)
+}
+
+/// Perplexity over explicit windows (used by calibration-overlap ablation).
+pub fn perplexity_windows(model: &dyn LanguageModel, windows: &[&[u32]]) -> f64 {
+    let nt = num_threads().min(windows.len().max(1));
+    let chunk = windows.len().div_ceil(nt);
+    let totals = std::sync::Mutex::new((0.0f64, 0usize));
+    std::thread::scope(|s| {
+        for ws in windows.chunks(chunk) {
+            let totals = &totals;
+            s.spawn(move || {
+                let mut nll = 0.0;
+                let mut n = 0usize;
+                for w in ws {
+                    let lp = model.next_token_logprobs(w, (1, w.len()));
+                    nll -= lp.iter().sum::<f64>();
+                    n += lp.len();
+                }
+                let mut t = totals.lock().unwrap();
+                t.0 += nll;
+                t.1 += n;
+            });
+        }
+    });
+    let (nll, n) = totals.into_inner().unwrap();
+    (nll / n.max(1) as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{CorpusGen, Profile};
+    use crate::model::{train, TrainConfig, Transformer, TransformerConfig};
+    use crate::util::Rng;
+
+    fn trained_setup() -> (CorpusGen, Dataset, Dataset, Transformer) {
+        let gen = CorpusGen::new(60, 2, 7);
+        let train_data = gen.generate(Profile::C4Like, 30_000, 1);
+        let eval_data = gen.generate(Profile::Wt2Like, 4_096, 2);
+        let vocab = gen.tokenizer.vocab_size();
+        let mut model = Transformer::init(
+            TransformerConfig { vocab, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 64 },
+            &mut Rng::new(3),
+        );
+        let cfg = TrainConfig { steps: 120, batch: 8, seq_len: 32, log_every: 40, ..Default::default() };
+        train(&mut model, &train_data, &cfg);
+        (gen, train_data, eval_data, model)
+    }
+
+    #[test]
+    fn perplexity_finite_and_better_than_uniform() {
+        let (gen, _tr, eval_data, model) = trained_setup();
+        let ppl = perplexity(&model, &eval_data, 64);
+        let uniform = gen.tokenizer.vocab_size() as f64;
+        assert!(ppl.is_finite() && ppl > 1.0);
+        assert!(ppl < uniform * 0.8, "trained ppl {ppl} should beat uniform {uniform}");
+    }
+
+    #[test]
+    fn perplexity_deterministic() {
+        let (_g, _tr, eval_data, model) = trained_setup();
+        let a = perplexity(&model, &eval_data, 64);
+        let b = perplexity(&model, &eval_data, 64);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn damaging_weights_increases_perplexity() {
+        let (_g, _tr, eval_data, mut model) = trained_setup();
+        let before = perplexity(&model, &eval_data, 64);
+        // zero half of every attention projection crudely
+        for b in 0..2 {
+            for name in ["wq", "wk", "wv", "wo", "w1", "w2", "w3"] {
+                let w = model.weight_mut(b, name);
+                for i in 0..w.data.len() {
+                    if i % 2 == 0 {
+                        w.data[i] = 0.0;
+                    }
+                }
+            }
+        }
+        let after = perplexity(&model, &eval_data, 64);
+        assert!(after > before, "{after} vs {before}");
+    }
+}

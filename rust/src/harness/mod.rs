@@ -1,0 +1,10 @@
+//! Experiment harness: model zoo, prune+eval suite, table regeneration.
+//! Shared by the CLI (`apt table ...`) and the `benches/` targets.
+
+pub mod suite;
+pub mod tables;
+pub mod zoo;
+
+pub use suite::{eval_ppl, format_table, origin_row, prune_and_eval, save_rows, Row, RunOpts};
+pub use tables::{run_table, ALL_TABLES};
+pub use zoo::{AnyModel, Zoo};

@@ -1,0 +1,217 @@
+//! Experiment engine shared by the CLI and the table benches: prune a
+//! fresh copy of a cached dense model with one method, evaluate perplexity
+//! on the eval profiles (+ optionally zero-shot), and return a typed row.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::coordinator::{prune_model, PipelineConfig};
+use crate::data::{Profile, TaskGen, TaskKind};
+use crate::eval::{choice_accuracy, lambada_accuracy, perplexity, ZeroShotReport};
+use crate::prune::{Method, PruneConfig, Sparsity};
+use crate::runtime::{Engine, Runtime};
+use crate::util::Timer;
+
+use super::zoo::{AnyModel, Zoo};
+
+pub const EVAL_TOKENS: usize = 8_192;
+pub const EVAL_SEQ: usize = 128;
+
+/// One experiment row: method x sparsity on one model.
+#[derive(Clone, Debug)]
+pub struct Row {
+    pub label: String,
+    pub method: Option<Method>,
+    pub sparsity_label: String,
+    pub ppl: BTreeMap<&'static str, f64>,
+    pub zeroshot: Option<ZeroShotReport>,
+    pub elapsed_s: f64,
+}
+
+/// Perplexity on the three eval profiles (paper's WT2/PTB/C4 columns).
+pub fn eval_ppl(model: &dyn crate::model::LanguageModel, zoo: &Zoo) -> BTreeMap<&'static str, f64> {
+    let mut out = BTreeMap::new();
+    for (name, profile) in [
+        ("wt2", Profile::Wt2Like),
+        ("ptb", Profile::PtbLike),
+        ("c4", Profile::C4Like),
+    ] {
+        let data = zoo.gen.generate(profile, EVAL_TOKENS, zoo.seed ^ 0xe7a1);
+        out.insert(name, perplexity(model, &data, EVAL_SEQ));
+    }
+    out
+}
+
+/// Perplexity on the LAMBADA-like profile only (Table 3's PPL column).
+pub fn eval_ppl_lambada(model: &dyn crate::model::LanguageModel, zoo: &Zoo) -> f64 {
+    let data = zoo.gen.generate(Profile::LambadaLike, EVAL_TOKENS, zoo.seed ^ 0xe7a2);
+    perplexity(model, &data, EVAL_SEQ)
+}
+
+/// The Table 3 zero-shot block.
+pub fn eval_zeroshot(model: &dyn crate::model::LanguageModel, zoo: &Zoo, n: usize) -> ZeroShotReport {
+    let tg = TaskGen::new(&zoo.gen);
+    ZeroShotReport {
+        lambada: lambada_accuracy(model, &tg.lambada_suite(n, zoo.seed ^ 10)),
+        hellaswag: choice_accuracy(model, &tg.choice_suite(TaskKind::HellaSwagLike, n, zoo.seed ^ 11)),
+        piqa: choice_accuracy(model, &tg.choice_suite(TaskKind::PiqaLike, n, zoo.seed ^ 12)),
+        arc: choice_accuracy(model, &tg.choice_suite(TaskKind::ArcLike, n, zoo.seed ^ 13)),
+        winogrande: choice_accuracy(model, &tg.choice_suite(TaskKind::WinoLike, n, zoo.seed ^ 14)),
+    }
+}
+
+/// Options for one prune+eval run.
+#[derive(Clone, Copy)]
+pub struct RunOpts {
+    pub method: Method,
+    pub sparsity: Sparsity,
+    pub block_size: Option<usize>,
+    pub gamma: f64,
+    pub n_calib: usize,
+    pub calib_seq: usize,
+    pub calib_profile: Profile,
+    pub engine: Engine,
+    pub zeroshot_n: usize, // 0 = skip
+}
+
+impl RunOpts {
+    pub fn new(method: Method, sparsity: Sparsity) -> RunOpts {
+        RunOpts {
+            method,
+            sparsity,
+            block_size: None,
+            gamma: 0.01,
+            n_calib: 32,
+            calib_seq: 64,
+            calib_profile: Profile::C4Like,
+            engine: Engine::Native,
+            zeroshot_n: 0,
+        }
+    }
+}
+
+/// Prune a fresh copy of `base` and evaluate it.
+pub fn prune_and_eval(
+    base: &AnyModel,
+    zoo: &Zoo,
+    opts: &RunOpts,
+    runtime: Option<&Runtime>,
+) -> Result<Row> {
+    let timer = Timer::start();
+    let mut model = base.duplicate();
+    let calib = zoo.calibration(opts.calib_profile, opts.n_calib, opts.calib_seq);
+    let prune_cfg = PruneConfig::new(opts.method, opts.sparsity)
+        .with_block(opts.block_size)
+        .with_gamma(opts.gamma);
+    let pipe_cfg = PipelineConfig::new(prune_cfg).with_engine(opts.engine);
+    prune_model(model.as_dyn_mut(), &calib, &pipe_cfg, runtime)?;
+
+    let ppl = eval_ppl(model.as_dyn(), zoo);
+    let zeroshot = if opts.zeroshot_n > 0 {
+        Some(eval_zeroshot(model.as_dyn(), zoo, opts.zeroshot_n))
+    } else {
+        None
+    };
+    Ok(Row {
+        label: opts.method.name().to_string(),
+        method: Some(opts.method),
+        sparsity_label: opts.sparsity.label(),
+        ppl,
+        zeroshot,
+        elapsed_s: timer.elapsed().as_secs_f64(),
+    })
+}
+
+/// The dense-model reference row ("Origin" in the paper's tables).
+pub fn origin_row(base: &AnyModel, zoo: &Zoo) -> Row {
+    let timer = Timer::start();
+    let ppl = eval_ppl(base.as_dyn(), zoo);
+    Row {
+        label: "original".into(),
+        method: None,
+        sparsity_label: "-".into(),
+        ppl,
+        zeroshot: None,
+        elapsed_s: timer.elapsed().as_secs_f64(),
+    }
+}
+
+/// Format rows as a GitHub-markdown table (the tables' printed form).
+pub fn format_table(title: &str, rows: &[Row]) -> String {
+    let mut s = format!("\n### {title}\n\n");
+    let has_zs = rows.iter().any(|r| r.zeroshot.is_some());
+    if has_zs {
+        s.push_str("| method | sparsity | ppl(lambada-ish c4) | lambada | hellaswag | piqa | arc | wino | avg |\n");
+        s.push_str("|---|---|---|---|---|---|---|---|---|\n");
+        for r in rows {
+            let z = r.zeroshot.clone().unwrap_or(ZeroShotReport {
+                lambada: f64::NAN,
+                hellaswag: f64::NAN,
+                piqa: f64::NAN,
+                arc: f64::NAN,
+                winogrande: f64::NAN,
+            });
+            s.push_str(&format!(
+                "| {} | {} | {:.3} | {:.1}% | {:.1}% | {:.1}% | {:.1}% | {:.1}% | {:.2}% |\n",
+                r.label,
+                r.sparsity_label,
+                r.ppl.get("c4").copied().unwrap_or(f64::NAN),
+                z.lambada * 100.0,
+                z.hellaswag * 100.0,
+                z.piqa * 100.0,
+                z.arc * 100.0,
+                z.winogrande * 100.0,
+                z.average() * 100.0,
+            ));
+        }
+    } else {
+        s.push_str("| method | sparsity | wt2 | ptb | c4 | time(s) |\n|---|---|---|---|---|---|\n");
+        for r in rows {
+            s.push_str(&format!(
+                "| {} | {} | {:.3} | {:.3} | {:.3} | {:.1} |\n",
+                r.label,
+                r.sparsity_label,
+                r.ppl.get("wt2").copied().unwrap_or(f64::NAN),
+                r.ppl.get("ptb").copied().unwrap_or(f64::NAN),
+                r.ppl.get("c4").copied().unwrap_or(f64::NAN),
+                r.elapsed_s,
+            ));
+        }
+    }
+    s
+}
+
+/// Dump rows as JSON into results/<name>.json.
+pub fn save_rows(name: &str, rows: &[Row]) -> Result<()> {
+    use crate::json::Json;
+    std::fs::create_dir_all("results").ok();
+    let mut arr = Vec::new();
+    for r in rows {
+        let mut o = Json::obj();
+        o.set("label", Json::Str(r.label.clone()))
+            .set("sparsity", Json::Str(r.sparsity_label.clone()))
+            .set("elapsed_s", Json::Num(r.elapsed_s));
+        let mut ppl = Json::obj();
+        for (k, v) in &r.ppl {
+            ppl.set(k, Json::Num(*v));
+        }
+        o.set("ppl", ppl);
+        if let Some(z) = &r.zeroshot {
+            let mut zo = Json::obj();
+            zo.set("lambada", Json::Num(z.lambada))
+                .set("hellaswag", Json::Num(z.hellaswag))
+                .set("piqa", Json::Num(z.piqa))
+                .set("arc", Json::Num(z.arc))
+                .set("winogrande", Json::Num(z.winogrande))
+                .set("average", Json::Num(z.average()));
+            o.set("zeroshot", zo);
+        }
+        arr.push(o);
+    }
+    std::fs::write(
+        format!("results/{name}.json"),
+        Json::Arr(arr).to_string_pretty(),
+    )?;
+    Ok(())
+}

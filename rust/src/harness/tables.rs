@@ -1,0 +1,258 @@
+//! Table/figure regeneration (DESIGN.md SS5 per-experiment index).
+//!
+//! Every public function reproduces one table or figure of the paper at
+//! the scaled-down substitute workload, prints the markdown form, and
+//! writes `results/<id>.{json,md}`. The *shape* of each table (method
+//! orderings, degradation trends) is what must match the paper; absolute
+//! perplexities are at micro-model scale.
+//!
+//! Set APT_FAST=1 to shrink model sizes/eval for smoke runs.
+
+use anyhow::Result;
+
+use crate::data::Profile;
+use crate::prune::{Method, Sparsity};
+use crate::runtime::Runtime;
+
+use super::suite::{
+    eval_ppl_lambada, eval_zeroshot, format_table, origin_row, prune_and_eval, save_rows, Row,
+    RunOpts,
+};
+use super::zoo::Zoo;
+
+fn fast() -> bool {
+    std::env::var("APT_FAST").map(|v| v == "1").unwrap_or(false)
+}
+
+fn train_steps() -> usize {
+    if fast() { 60 } else { 400 }
+}
+
+fn write_out(id: &str, text: &str, rows: &[Row]) -> Result<()> {
+    std::fs::create_dir_all("results").ok();
+    std::fs::write(format!("results/{id}.md"), text)?;
+    save_rows(id, rows)?;
+    Ok(())
+}
+
+/// Table 1: perplexity for transformer LLMs, 50% unstructured (SS vs SM)
+/// and 2:4 (SS/SM/MS/MM), across block sizes, calibration on C4.
+pub fn table1(zoo: &Zoo, runtime: Option<&Runtime>) -> Result<String> {
+    let mut out = String::new();
+    let mut all_rows = Vec::new();
+    let settings: &[(&str, &str, Option<usize>)] = if fast() {
+        &[("llama", "small", None)]
+    } else {
+        &[
+            ("llama", "small", Some(32)),
+            ("llama", "small", None),
+            ("llama", "medium", None),
+        ]
+    };
+    for &(family, size, block) in settings {
+        let base = zoo.model(family, size, train_steps())?;
+        let mut rows = vec![origin_row(&base, zoo)];
+        // 50% unstructured: SS vs SM
+        for method in [Method::SS, Method::SM] {
+            let mut o = RunOpts::new(method, Sparsity::Unstructured { rate: 0.5 });
+            o.block_size = block;
+            rows.push(prune_and_eval(&base, zoo, &o, runtime)?);
+        }
+        // 2:4: SS / SM / MS / MM
+        for method in [Method::SS, Method::SM, Method::MS, Method::MM] {
+            let mut o = RunOpts::new(method, Sparsity::two_four());
+            o.block_size = block;
+            let mut row = prune_and_eval(&base, zoo, &o, runtime)?;
+            row.label = format!("{} 2:4", row.label);
+            rows.push(row);
+        }
+        let s_label = block.map(|b| b.to_string()).unwrap_or_else(|| "all".into());
+        out.push_str(&format_table(
+            &format!("Table 1 — {family}-{size}, S={s_label} (calib: synth-c4)"),
+            &rows,
+        ));
+        all_rows.extend(rows);
+    }
+    write_out("table1", &out, &all_rows)?;
+    Ok(out)
+}
+
+/// Table 2 / A3: perplexity vs baselines at 70% / 80% sparsity.
+pub fn table2(zoo: &Zoo, runtime: Option<&Runtime>) -> Result<String> {
+    let mut out = String::new();
+    let mut all_rows = Vec::new();
+    let models: &[(&str, &str)] = if fast() {
+        &[("llama", "small")]
+    } else {
+        &[("llama", "small"), ("opt", "small"), ("mamba", "small")]
+    };
+    for &(family, size) in models {
+        let base = zoo.model(family, size, train_steps())?;
+        let mut rows = vec![origin_row(&base, zoo)];
+        for rate in [0.7, 0.8] {
+            for method in [Method::Magnitude, Method::Wanda, Method::SS, Method::SM] {
+                let o = RunOpts::new(method, Sparsity::Unstructured { rate });
+                let mut row = prune_and_eval(&base, zoo, &o, runtime)?;
+                row.label = format!("{} @{:.0}%", row.label, rate * 100.0);
+                rows.push(row);
+            }
+        }
+        out.push_str(&format_table(
+            &format!("Table 2/A3 — {family}-{size}, 70%/80% sparsity (calib: synth-c4)"),
+            &rows,
+        ));
+        all_rows.extend(rows);
+    }
+    write_out("table2", &out, &all_rows)?;
+    Ok(out)
+}
+
+/// Table 3: Mamba models — LAMBADA perplexity + zero-shot accuracy suite,
+/// calibration on the LAMBADA-like profile.
+pub fn table3(zoo: &Zoo, runtime: Option<&Runtime>) -> Result<String> {
+    let mut out = String::new();
+    let mut all_rows = Vec::new();
+    let models: &[(&str, f64)] = if fast() {
+        &[("small", 0.5)]
+    } else {
+        &[("small", 0.5), ("small", 0.7)]
+    };
+    let zs_n = if fast() { 40 } else { 150 };
+    for &(size, rate) in models {
+        let base = zoo.model("mamba", size, train_steps())?;
+        let mut rows: Vec<Row> = Vec::new();
+        // original reference
+        let mut orig = origin_row(&base, zoo);
+        orig.ppl.insert("lambada", eval_ppl_lambada(base.as_dyn(), zoo));
+        orig.zeroshot = Some(eval_zeroshot(base.as_dyn(), zoo, zs_n));
+        rows.push(orig);
+        for method in [Method::Magnitude, Method::Wanda, Method::SS, Method::SM] {
+            let mut o = RunOpts::new(method, Sparsity::Unstructured { rate });
+            o.calib_profile = Profile::LambadaLike;
+            o.zeroshot_n = zs_n;
+            let mut row = prune_and_eval(&base, zoo, &o, runtime)?;
+            // add the LAMBADA ppl column by re-pruning? row already has c4;
+            // evaluate lambada ppl on a fresh pruned copy for fidelity.
+            let mut m = base.duplicate();
+            let calib = zoo.calibration(Profile::LambadaLike, o.n_calib, o.calib_seq);
+            let cfg = crate::coordinator::PipelineConfig::new(
+                crate::prune::PruneConfig::new(method, Sparsity::Unstructured { rate }),
+            );
+            crate::coordinator::prune_model(m.as_dyn_mut(), &calib, &cfg, None)?;
+            row.ppl.insert("lambada", eval_ppl_lambada(m.as_dyn(), zoo));
+            rows.push(row);
+        }
+        out.push_str(&format!(
+            "\n### Table 3 — mamba-{size} @{:.0}% (calib: synth-lambada)\n\n",
+            rate * 100.0
+        ));
+        out.push_str("| method | ppl-lambada | lambada | hellaswag | piqa | arc | wino | avg |\n");
+        out.push_str("|---|---|---|---|---|---|---|---|\n");
+        for r in &rows {
+            let z = r.zeroshot.as_ref().expect("zero-shot block");
+            out.push_str(&format!(
+                "| {} | {:.3} | {:.1}% | {:.1}% | {:.1}% | {:.1}% | {:.1}% | {:.2}% |\n",
+                r.label,
+                r.ppl.get("lambada").copied().unwrap_or(f64::NAN),
+                z.lambada * 100.0,
+                z.hellaswag * 100.0,
+                z.piqa * 100.0,
+                z.arc * 100.0,
+                z.winogrande * 100.0,
+                z.average() * 100.0,
+            ));
+        }
+        all_rows.extend(rows);
+    }
+    write_out("table3", &out, &all_rows)?;
+    Ok(out)
+}
+
+/// Tables A1/A2: the OPT-like / BLOOM-like family across block sizes.
+pub fn table_family(zoo: &Zoo, family: &str, runtime: Option<&Runtime>) -> Result<String> {
+    let mut out = String::new();
+    let mut all_rows = Vec::new();
+    let settings: &[(&str, Option<usize>)] = if fast() {
+        &[("small", None)]
+    } else {
+        &[("small", Some(32)), ("small", None)]
+    };
+    for &(size, block) in settings {
+        let base = zoo.model(family, size, train_steps())?;
+        let mut rows = vec![origin_row(&base, zoo)];
+        for method in [Method::SS, Method::SM] {
+            let mut o = RunOpts::new(method, Sparsity::Unstructured { rate: 0.5 });
+            o.block_size = block;
+            rows.push(prune_and_eval(&base, zoo, &o, runtime)?);
+        }
+        for method in [Method::SS, Method::SM, Method::MS, Method::MM] {
+            let mut o = RunOpts::new(method, Sparsity::two_four());
+            o.block_size = block;
+            let mut row = prune_and_eval(&base, zoo, &o, runtime)?;
+            row.label = format!("{} 2:4", row.label);
+            rows.push(row);
+        }
+        let s_label = block.map(|b| b.to_string()).unwrap_or_else(|| "all".into());
+        out.push_str(&format_table(
+            &format!("Table {} — {family}-{size}, S={s_label}",
+                     if family == "opt" { "A1" } else { "A2" }),
+            &rows,
+        ));
+        all_rows.extend(rows);
+    }
+    let id = if family == "opt" { "table_a1" } else { "table_a2" };
+    write_out(id, &out, &all_rows)?;
+    Ok(out)
+}
+
+/// Figure A1: dampening-ratio and #calibration-samples ablations (SM).
+pub fn fig_a1(zoo: &Zoo, runtime: Option<&Runtime>) -> Result<String> {
+    let base = zoo.model("llama", "small", train_steps())?;
+    let mut out = String::from("\n### Figure A1 — ablations (llama-small, SM @50%)\n");
+    let mut all_rows = Vec::new();
+
+    out.push_str("\n#### (a) dampening ratio gamma (n_calib=32)\n\n| gamma | wt2 | c4 |\n|---|---|---|\n");
+    let gammas: &[f64] = if fast() { &[1e-2, 1e-1] } else { &[1e-4, 1e-3, 1e-2, 1e-1, 1.0] };
+    for &g in gammas {
+        let mut o = RunOpts::new(Method::SM, Sparsity::Unstructured { rate: 0.5 });
+        o.gamma = g;
+        let mut row = prune_and_eval(&base, zoo, &o, runtime)?;
+        row.label = format!("gamma={g:.0e}");
+        out.push_str(&format!(
+            "| {g:.0e} | {:.3} | {:.3} |\n",
+            row.ppl["wt2"], row.ppl["c4"]
+        ));
+        all_rows.push(row);
+    }
+
+    out.push_str("\n#### (b) number of calibration samples (gamma=0.01)\n\n| n_calib | wt2 | c4 |\n|---|---|---|\n");
+    let ns: &[usize] = if fast() { &[8, 32] } else { &[4, 8, 16, 32, 64, 128] };
+    for &n in ns {
+        let mut o = RunOpts::new(Method::SM, Sparsity::Unstructured { rate: 0.5 });
+        o.n_calib = n;
+        let mut row = prune_and_eval(&base, zoo, &o, runtime)?;
+        row.label = format!("n_calib={n}");
+        out.push_str(&format!(
+            "| {n} | {:.3} | {:.3} |\n",
+            row.ppl["wt2"], row.ppl["c4"]
+        ));
+        all_rows.push(row);
+    }
+    write_out("fig_a1", &out, &all_rows)?;
+    Ok(out)
+}
+
+/// Dispatch by table id.
+pub fn run_table(id: &str, zoo: &Zoo, runtime: Option<&Runtime>) -> Result<String> {
+    match id {
+        "table1" | "1" => table1(zoo, runtime),
+        "table2" | "2" | "table_a3" | "a3" => table2(zoo, runtime),
+        "table3" | "3" => table3(zoo, runtime),
+        "table_a1" | "a1" => table_family(zoo, "opt", runtime),
+        "table_a2" | "a2" => table_family(zoo, "bloom", runtime),
+        "fig_a1" | "fig" => fig_a1(zoo, runtime),
+        _ => anyhow::bail!("unknown table id '{id}' (table1|table2|table3|a1|a2|a3|fig_a1)"),
+    }
+}
+
+pub const ALL_TABLES: [&str; 6] = ["table1", "table2", "table3", "table_a1", "table_a2", "fig_a1"];

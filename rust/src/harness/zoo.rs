@@ -1,0 +1,189 @@
+//! Model zoo: builds, trains and disk-caches the stand-in model families.
+//!
+//! Families (DESIGN.md SS2 substitution table):
+//!   - "llama"  — microllama, SwiGLU ff=2d          (stands in for LLaMA2)
+//!   - "opt"    — microllama geometry with ff=4d    (stands in for OPT)
+//!   - "bloom"  — ff=4d, fewer/wider heads          (stands in for BLOOM)
+//!   - "mamba"  — micromamba                        (stands in for Mamba)
+//!
+//! Checkpoints are cached under `results/model_cache/` keyed by
+//! (family, size, steps, seed) so every table reuses the same dense model.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::data::{CorpusGen, Profile};
+use crate::model::{
+    train, LanguageModel, Mamba, MambaConfig, TrainConfig, Transformer, TransformerConfig,
+};
+use crate::util::Rng;
+
+/// Concrete model wrapper so table code can clone fresh copies per method.
+pub enum AnyModel {
+    Llama(Transformer),
+    Mamba(Mamba),
+}
+
+impl AnyModel {
+    pub fn as_dyn(&self) -> &dyn LanguageModel {
+        match self {
+            AnyModel::Llama(m) => m,
+            AnyModel::Mamba(m) => m,
+        }
+    }
+
+    pub fn as_dyn_mut(&mut self) -> &mut dyn LanguageModel {
+        match self {
+            AnyModel::Llama(m) => m,
+            AnyModel::Mamba(m) => m,
+        }
+    }
+
+    pub fn duplicate(&self) -> AnyModel {
+        match self {
+            AnyModel::Llama(m) => AnyModel::Llama(Transformer {
+                cfg: m.cfg,
+                params: m.params.clone(),
+            }),
+            AnyModel::Mamba(m) => AnyModel::Mamba(Mamba { cfg: m.cfg, params: m.params.clone() }),
+        }
+    }
+}
+
+pub struct Zoo {
+    pub gen: CorpusGen,
+    pub cache_dir: PathBuf,
+    pub seed: u64,
+    pub train_tokens: usize,
+}
+
+impl Zoo {
+    pub fn new(seed: u64) -> Zoo {
+        let cache_dir = PathBuf::from("results/model_cache");
+        std::fs::create_dir_all(&cache_dir).ok();
+        Zoo { gen: CorpusGen::default_setup(seed), cache_dir, seed, train_tokens: 120_000 }
+    }
+
+    pub fn vocab(&self) -> usize {
+        self.gen.tokenizer.vocab_size()
+    }
+
+    pub fn transformer_config(&self, family: &str, size: &str) -> TransformerConfig {
+        let v = self.vocab();
+        match (family, size) {
+            ("llama", "small") => TransformerConfig { vocab: v, d_model: 128, n_layers: 4, n_heads: 4, d_ff: 256, max_seq: 256 },
+            ("llama", "medium") => TransformerConfig { vocab: v, d_model: 256, n_layers: 6, n_heads: 8, d_ff: 512, max_seq: 256 },
+            ("llama", "large") => TransformerConfig { vocab: v, d_model: 384, n_layers: 8, n_heads: 8, d_ff: 768, max_seq: 256 },
+            ("opt", "small") => TransformerConfig { vocab: v, d_model: 96, n_layers: 4, n_heads: 4, d_ff: 384, max_seq: 256 },
+            ("opt", "medium") => TransformerConfig { vocab: v, d_model: 192, n_layers: 6, n_heads: 6, d_ff: 768, max_seq: 256 },
+            ("bloom", "small") => TransformerConfig { vocab: v, d_model: 112, n_layers: 4, n_heads: 2, d_ff: 448, max_seq: 256 },
+            ("bloom", "medium") => TransformerConfig { vocab: v, d_model: 224, n_layers: 5, n_heads: 4, d_ff: 896, max_seq: 256 },
+            _ => panic!("unknown transformer family/size {family}/{size}"),
+        }
+    }
+
+    pub fn mamba_config(&self, size: &str) -> MambaConfig {
+        let v = self.vocab();
+        match size {
+            "small" => MambaConfig { vocab: v, d_model: 128, d_inner: 256, n_layers: 4, max_seq: 256 },
+            "medium" => MambaConfig { vocab: v, d_model: 192, d_inner: 384, n_layers: 6, max_seq: 256 },
+            _ => panic!("unknown mamba size {size}"),
+        }
+    }
+
+    fn cache_path(&self, family: &str, size: &str, steps: usize) -> PathBuf {
+        self.cache_dir.join(format!("{family}_{size}_s{steps}_seed{}.ats", self.seed))
+    }
+
+    /// Build-or-load a trained dense model.
+    pub fn model(&self, family: &str, size: &str, steps: usize) -> Result<AnyModel> {
+        let path = self.cache_path(family, size, steps);
+        let train_cfg = TrainConfig {
+            steps,
+            batch: 8,
+            seq_len: 64,
+            log_every: (steps / 6).max(1),
+            seed: self.seed ^ 0xbeef,
+            ..Default::default()
+        };
+        if family == "mamba" {
+            let cfg = self.mamba_config(size);
+            if path.exists() {
+                return Ok(AnyModel::Mamba(Mamba::load(cfg, &path)?));
+            }
+            let mut m = Mamba::init(cfg, &mut Rng::new(self.seed));
+            let data = self.gen.generate(Profile::C4Like, self.train_tokens, self.seed ^ 1);
+            train(&mut m, &data, &train_cfg);
+            m.save(&path)?;
+            Ok(AnyModel::Mamba(m))
+        } else {
+            let cfg = self.transformer_config(family, size);
+            if path.exists() {
+                return Ok(AnyModel::Llama(Transformer::load(cfg, &path)?));
+            }
+            let mut m = Transformer::init(cfg, &mut Rng::new(self.seed));
+            let data = self.gen.generate(Profile::C4Like, self.train_tokens, self.seed ^ 1);
+            train(&mut m, &data, &train_cfg);
+            m.save(&path)?;
+            Ok(AnyModel::Llama(m))
+        }
+    }
+
+    /// Calibration sequences for a profile (the paper: random segments).
+    pub fn calibration(&self, profile: Profile, n: usize, seq_len: usize) -> Vec<Vec<u32>> {
+        let data = self.gen.generate(profile, (n * seq_len * 3).max(20_000), self.seed ^ 2);
+        let mut rng = Rng::new(self.seed ^ 3);
+        data.sample_calibration(n, seq_len, &mut rng)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_configs_distinct() {
+        let zoo = Zoo::new(1);
+        let llama = zoo.transformer_config("llama", "small");
+        let opt = zoo.transformer_config("opt", "small");
+        let bloom = zoo.transformer_config("bloom", "small");
+        assert!(opt.d_ff == 4 * opt.d_model);
+        assert!(llama.d_ff == 2 * llama.d_model);
+        assert_ne!(opt.d_model, bloom.d_model);
+    }
+
+    #[test]
+    fn model_cache_roundtrip() {
+        let mut zoo = Zoo::new(99);
+        zoo.cache_dir = std::env::temp_dir().join("apt_zoo_test");
+        std::fs::create_dir_all(&zoo.cache_dir).unwrap();
+        zoo.train_tokens = 8_000;
+        let m1 = zoo.model("llama", "small", 5).unwrap();
+        let path = zoo.cache_path("llama", "small", 5);
+        assert!(path.exists());
+        let m2 = zoo.model("llama", "small", 5).unwrap(); // from cache
+        let toks: Vec<u32> = (0..32).map(|i| (i % 50) as u32).collect();
+        assert_eq!(
+            m1.as_dyn().forward_loss(&toks, (1, 32)),
+            m2.as_dyn().forward_loss(&toks, (1, 32))
+        );
+        std::fs::remove_dir_all(&zoo.cache_dir).ok();
+    }
+
+    #[test]
+    fn duplicate_is_independent() {
+        let mut zoo = Zoo::new(100);
+        zoo.cache_dir = std::env::temp_dir().join("apt_zoo_test2");
+        std::fs::create_dir_all(&zoo.cache_dir).unwrap();
+        zoo.train_tokens = 8_000;
+        let base = zoo.model("mamba", "small", 2).unwrap();
+        let mut copy = base.duplicate();
+        copy.as_dyn_mut().block_weight_mut(0, "in_proj").data[0] += 1.0;
+        assert_ne!(
+            base.as_dyn().block_weight(0, "in_proj").data[0],
+            copy.as_dyn().block_weight(0, "in_proj").data[0]
+        );
+        std::fs::remove_dir_all(&zoo.cache_dir).ok();
+    }
+}

@@ -1,0 +1,167 @@
+//! Binary tensor store: the repo's checkpoint format ("ATS" — apt tensor
+//! store). Safetensors-like: a little-endian header with named f32 tensors,
+//! written/read without any external serialization crate.
+//!
+//! Layout:
+//!   magic  b"ATS1"
+//!   u32    n_entries
+//!   per entry: u32 name_len | name bytes | u32 rows | u32 cols | f32 data
+//! A `meta.json` sidecar (written by the model layer) carries configs.
+
+use std::collections::BTreeMap;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Mat;
+
+const MAGIC: &[u8; 4] = b"ATS1";
+
+/// Named tensor collection (deterministic iteration order).
+#[derive(Clone, Debug, Default)]
+pub struct TensorStore {
+    pub tensors: BTreeMap<String, Mat>,
+}
+
+impl TensorStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, name: &str, m: Mat) {
+        self.tensors.insert(name.to_string(), m);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Mat> {
+        self.tensors.get(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Mat> {
+        self.tensors.get_mut(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|m| m.data.len()).sum()
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, m) in &self.tensors {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            w.write_all(&(m.rows as u32).to_le_bytes())?;
+            w.write_all(&(m.cols as u32).to_le_bytes())?;
+            // bulk write the f32 payload
+            let bytes: Vec<u8> = m.data.iter().flat_map(|f| f.to_le_bytes()).collect();
+            w.write_all(&bytes)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<TensorStore> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("bad magic in {}", path.display());
+        }
+        let n = read_u32(&mut r)? as usize;
+        let mut store = TensorStore::new();
+        for _ in 0..n {
+            let name_len = read_u32(&mut r)? as usize;
+            if name_len > 4096 {
+                bail!("implausible name length {name_len}");
+            }
+            let mut name = vec![0u8; name_len];
+            r.read_exact(&mut name)?;
+            let rows = read_u32(&mut r)? as usize;
+            let cols = read_u32(&mut r)? as usize;
+            let mut bytes = vec![0u8; rows * cols * 4];
+            r.read_exact(&mut bytes)?;
+            let data: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            store.insert(
+                std::str::from_utf8(&name).context("tensor name not utf-8")?,
+                Mat::from_vec(rows, cols, data),
+            );
+        }
+        Ok(store)
+    }
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(1);
+        let mut s = TensorStore::new();
+        s.insert("layer0.wq", Mat::randn(8, 8, 1.0, &mut rng));
+        s.insert("layer0.wk", Mat::randn(4, 16, 0.5, &mut rng));
+        s.insert("embed", Mat::randn(32, 8, 0.02, &mut rng));
+        let dir = std::env::temp_dir().join("apt_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.ats");
+        s.save(&path).unwrap();
+        let loaded = TensorStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        for name in s.names() {
+            assert_eq!(s.get(name).unwrap(), loaded.get(name).unwrap(), "{name}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("apt_test_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.ats");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(TensorStore::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn missing_tensor_is_error() {
+        let s = TensorStore::new();
+        assert!(s.get("nope").is_err());
+    }
+
+    #[test]
+    fn total_params_counts() {
+        let mut rng = Rng::new(2);
+        let mut s = TensorStore::new();
+        s.insert("a", Mat::randn(3, 4, 1.0, &mut rng));
+        s.insert("b", Mat::randn(5, 2, 1.0, &mut rng));
+        assert_eq!(s.total_params(), 22);
+    }
+}

@@ -1,0 +1,25 @@
+//! APT-Repro: reproduction of "Pruning Foundation Models for High Accuracy
+//! without Retraining" (Zhao et al., EMNLP 2024 Findings) as a three-layer
+//! Rust + JAX + Pallas system. See DESIGN.md for the architecture and
+//! EXPERIMENTS.md for measured results.
+//!
+//! Layer map:
+//! - L3 (this crate): coordinator pipeline, pruning solvers, models, eval,
+//!   benches, CLI.
+//! - L2/L1 (python/compile): JAX prune graphs + Pallas kernels, AOT-lowered
+//!   to `artifacts/*.hlo.txt`, executed here via [`runtime`] (PJRT).
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod harness;
+pub mod io;
+pub mod json;
+pub mod linalg;
+pub mod model;
+pub mod prune;
+pub mod runtime;
+pub mod sparse;
+pub mod tensor;
+pub mod util;

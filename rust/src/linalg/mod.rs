@@ -1,0 +1,286 @@
+//! f64 symmetric linear algebra for the second-order pruning math:
+//! Cholesky factorization, triangular solves, SPD inverse.
+//!
+//! All Hessian-side computation runs in f64 (the paper works at fp16/fp32
+//! on GPU but relies on well-conditioned H; at our small calibration sizes
+//! f64 removes the conditioning confound entirely — DESIGN.md SS7).
+
+use crate::tensor::MatF64;
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+/// Returns None if A is not (numerically) positive definite.
+pub fn cholesky(a: &MatF64) -> Option<MatF64> {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    let mut l = MatF64::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a[(i, j)];
+            for k in 0..j {
+                s -= l[(i, k)] * l[(j, k)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                l[(i, j)] = s.sqrt();
+            } else {
+                l[(i, j)] = s / l[(j, j)];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// Solve L y = b for lower-triangular L.
+pub fn solve_lower(l: &MatF64, b: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut y = b.to_vec();
+    for i in 0..n {
+        let mut s = y[i];
+        let row = l.row(i);
+        for k in 0..i {
+            s -= row[k] * y[k];
+        }
+        y[i] = s / row[i];
+    }
+    y
+}
+
+/// Solve L^T x = y for lower-triangular L.
+pub fn solve_lower_t(l: &MatF64, y: &[f64]) -> Vec<f64> {
+    let n = l.rows;
+    let mut x = y.to_vec();
+    for i in (0..n).rev() {
+        let mut s = x[i];
+        for k in i + 1..n {
+            s -= l[(k, i)] * x[k];
+        }
+        x[i] = s / l[(i, i)];
+    }
+    x
+}
+
+/// Solve A x = b for SPD A via Cholesky.
+pub fn solve_spd(a: &MatF64, b: &[f64]) -> Option<Vec<f64>> {
+    let l = cholesky(a)?;
+    Some(solve_lower_t(&l, &solve_lower(&l, b)))
+}
+
+/// Solve A X = B column-wise for SPD A, B given as rows of a matrix
+/// (i.e. returns X with X.cols == B.cols). Reuses one factorization.
+pub fn solve_spd_multi(a: &MatF64, b: &MatF64) -> Option<MatF64> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    assert_eq!(b.rows, n);
+    let mut out = MatF64::zeros(n, b.cols);
+    let mut col = vec![0.0; n];
+    for j in 0..b.cols {
+        for i in 0..n {
+            col[i] = b[(i, j)];
+        }
+        let x = solve_lower_t(&l, &solve_lower(&l, &col));
+        for i in 0..n {
+            out[(i, j)] = x[i];
+        }
+    }
+    Some(out)
+}
+
+/// SPD inverse via Cholesky: A^-1 = L^-T L^-1.
+pub fn inv_spd(a: &MatF64) -> Option<MatF64> {
+    let l = cholesky(a)?;
+    let n = a.rows;
+    // Invert L (lower triangular) in place into linv.
+    let mut linv = MatF64::zeros(n, n);
+    for j in 0..n {
+        linv[(j, j)] = 1.0 / l[(j, j)];
+        for i in j + 1..n {
+            let mut s = 0.0;
+            for k in j..i {
+                s -= l[(i, k)] * linv[(k, j)];
+            }
+            linv[(i, j)] = s / l[(i, i)];
+        }
+    }
+    // A^-1 = L^-T L^-1 (only lower part computed, then mirrored).
+    let mut inv = MatF64::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = 0.0;
+            for k in i..n {
+                s += linv[(k, i)] * linv[(k, j)];
+            }
+            inv[(i, j)] = s;
+            inv[(j, i)] = s;
+        }
+    }
+    Some(inv)
+}
+
+/// Upper Cholesky factor U of A with A = U^T U (SparseGPT sweep wants the
+/// upper factor of Hinv). U = transpose of the lower factor.
+pub fn cholesky_upper(a: &MatF64) -> Option<MatF64> {
+    let l = cholesky(a)?;
+    let n = l.rows;
+    let mut u = MatF64::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            u[(j, i)] = l[(i, j)];
+        }
+    }
+    Some(u)
+}
+
+/// ||A x - b||_inf residual check helper.
+pub fn residual_inf(a: &MatF64, x: &[f64], b: &[f64]) -> f64 {
+    let n = a.rows;
+    let mut worst = 0.0f64;
+    for i in 0..n {
+        let mut s = 0.0;
+        let row = a.row(i);
+        for k in 0..n {
+            s += row[k] * x[k];
+        }
+        worst = worst.max((s - b[i]).abs());
+    }
+    worst
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check_msg;
+    use crate::util::Rng;
+
+    fn random_spd(n: usize, rng: &mut Rng) -> MatF64 {
+        // A = B B^T + n*I, well-conditioned by construction.
+        let mut b = MatF64::zeros(n, n);
+        for v in b.data.iter_mut() {
+            *v = rng.normal();
+        }
+        let mut a = MatF64::eye(n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = 0.0;
+                for k in 0..n {
+                    s += b[(i, k)] * b[(j, k)];
+                }
+                a[(i, j)] = s + if i == j { n as f64 } else { 0.0 };
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut r = Rng::new(10);
+        let a = random_spd(12, &mut r);
+        let l = cholesky(&a).unwrap();
+        for i in 0..12 {
+            for j in 0..12 {
+                let mut s = 0.0;
+                for k in 0..12 {
+                    s += l[(i, k)] * l[(j, k)];
+                }
+                assert!((s - a[(i, j)]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let mut a = MatF64::eye(3);
+        a[(1, 1)] = -2.0;
+        assert!(cholesky(&a).is_none());
+    }
+
+    #[test]
+    fn solve_spd_small_residual() {
+        let mut r = Rng::new(11);
+        let a = random_spd(20, &mut r);
+        let b: Vec<f64> = (0..20).map(|_| r.normal()).collect();
+        let x = solve_spd(&a, &b).unwrap();
+        assert!(residual_inf(&a, &x, &b) < 1e-8);
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let mut r = Rng::new(12);
+        let a = random_spd(16, &mut r);
+        let inv = inv_spd(&a).unwrap();
+        for i in 0..16 {
+            for j in 0..16 {
+                let mut s = 0.0;
+                for k in 0..16 {
+                    s += inv[(i, k)] * a[(k, j)];
+                }
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((s - expect).abs() < 1e-8, "({i},{j}) {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn upper_factor_matches() {
+        let mut r = Rng::new(13);
+        let a = random_spd(10, &mut r);
+        let u = cholesky_upper(&a).unwrap();
+        for i in 0..10 {
+            for j in 0..10 {
+                let mut s = 0.0;
+                for k in 0..10 {
+                    s += u[(k, i)] * u[(k, j)];
+                }
+                assert!((s - a[(i, j)]).abs() < 1e-9);
+            }
+        }
+        // strictly lower part is zero
+        for i in 1..10 {
+            for j in 0..i {
+                assert_eq!(u[(i, j)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn solve_multi_matches_single() {
+        let mut r = Rng::new(14);
+        let a = random_spd(8, &mut r);
+        let mut b = MatF64::zeros(8, 3);
+        for v in b.data.iter_mut() {
+            *v = r.normal();
+        }
+        let x = solve_spd_multi(&a, &b).unwrap();
+        for j in 0..3 {
+            let col: Vec<f64> = (0..8).map(|i| b[(i, j)]).collect();
+            let xj = solve_spd(&a, &col).unwrap();
+            for i in 0..8 {
+                assert!((x[(i, j)] - xj[i]).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn prop_solve_random_spd() {
+        prop_check_msg(
+            "solve-spd-residual",
+            24,
+            |r| {
+                let n = r.range(1, 24);
+                let a = random_spd(n, r);
+                let b: Vec<f64> = (0..n).map(|_| r.normal() * 10.0).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                let x = solve_spd(a, b).ok_or("not SPD?")?;
+                let res = residual_inf(a, &x, b);
+                if res < 1e-7 {
+                    Ok(())
+                } else {
+                    Err(format!("residual {res}"))
+                }
+            },
+        );
+    }
+}

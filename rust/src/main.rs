@@ -1,0 +1,299 @@
+//! `apt` — launcher CLI for the APT-Repro pruning system.
+//!
+//! Subcommands (hand-rolled parser; clap is unavailable offline):
+//!   train      train a dense stand-in model and cache the checkpoint
+//!   prune      prune a cached model with one method and save it
+//!   eval       perplexity + zero-shot of a checkpoint
+//!   pipeline   end-to-end: train -> prune (all methods) -> eval table
+//!   table      regenerate a paper table/figure (table1|table2|table3|a1|a2|fig_a1|all)
+//!   artifacts  verify every AOT artifact loads + executes via PJRT
+//!
+//! Config overrides: any `--key=value` from config::ExperimentConfig,
+//! plus `--config=<file.json>`.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use apt::config::ExperimentConfig;
+use apt::coordinator::{prune_model, PipelineConfig};
+use apt::data::Profile;
+use apt::harness::{self, Zoo};
+use apt::prune::Method;
+use apt::runtime::{Engine, Runtime};
+use apt::util::profile_report;
+
+struct SimpleLogger;
+
+impl log::Log for SimpleLogger {
+    fn enabled(&self, _: &log::Metadata) -> bool {
+        true
+    }
+    fn log(&self, record: &log::Record) {
+        eprintln!("[{}] {}", record.level(), record.args());
+    }
+    fn flush(&self) {}
+}
+
+static LOGGER: SimpleLogger = SimpleLogger;
+
+fn main() -> Result<()> {
+    log::set_logger(&LOGGER).ok();
+    log::set_max_level(log::LevelFilter::Info);
+
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut cfg = ExperimentConfig::default();
+    for a in &args {
+        if let Some(path) = a.strip_prefix("--config=") {
+            cfg.apply_file(Path::new(path))?;
+        }
+    }
+    let rest: Vec<String> = args
+        .iter()
+        .filter(|a| !a.starts_with("--config="))
+        .cloned()
+        .collect();
+    let positional: Vec<String> = {
+        let refs = cfg.apply_args(&rest)?;
+        refs.into_iter().map(|s| s.to_string()).collect()
+    };
+
+    let cmd = positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "train" => cmd_train(&cfg),
+        "prune" => cmd_prune(&cfg),
+        "eval" => cmd_eval(&cfg),
+        "pipeline" => cmd_pipeline(&cfg),
+        "table" => cmd_table(&cfg, positional.get(1).map(|s| s.as_str())),
+        "artifacts" => cmd_artifacts(),
+        _ => {
+            print_help();
+            Ok(())
+        }
+    }
+}
+
+fn print_help() {
+    println!(
+        "apt — 'Pruning Foundation Models for High Accuracy without Retraining' repro
+
+USAGE: apt <command> [--key=value ...]
+
+COMMANDS:
+  train                train + cache a dense model (--arch --size --steps)
+  prune                prune the cached model (--method --sparsity --block)
+  eval                 perplexity + zero-shot of the cached dense model
+  pipeline             end-to-end: train -> all methods -> comparison table
+  table <id>           regenerate a paper table: table1 table2 table3 a1 a2 fig_a1 all
+  artifacts            check all AOT HLO artifacts load + run via PJRT
+
+CONFIG KEYS (as --key=value):
+  arch=microllama|micromamba  size=small|medium  method=magnitude|wanda|ss|sm|ms|mm
+  sparsity=0.5|70%|2:4        block=0(all)|128   gamma=0.01   n_calib=32
+  engine=native|hlo           steps=400          seed=42      out=results"
+    );
+}
+
+fn family_of(cfg: &ExperimentConfig) -> &'static str {
+    if cfg.arch.contains("mamba") {
+        "mamba"
+    } else if cfg.arch.contains("opt") {
+        "opt"
+    } else if cfg.arch.contains("bloom") {
+        "bloom"
+    } else {
+        "llama"
+    }
+}
+
+fn load_runtime(cfg: &ExperimentConfig) -> Option<Runtime> {
+    if cfg.engine != Engine::Hlo {
+        return None;
+    }
+    match Runtime::load(Path::new("artifacts")) {
+        Ok(rt) => {
+            log::info!("PJRT runtime up: {} ({} artifacts)", rt.platform(), rt.entries().len());
+            Some(rt)
+        }
+        Err(e) => {
+            log::warn!("HLO engine requested but runtime failed ({e}); falling back to native");
+            None
+        }
+    }
+}
+
+fn cmd_train(cfg: &ExperimentConfig) -> Result<()> {
+    let zoo = Zoo::new(cfg.seed);
+    let model = zoo.model(family_of(cfg), &cfg.size, cfg.train_steps)?;
+    println!(
+        "trained {} {} ({} params) — cached in results/model_cache/",
+        cfg.arch,
+        cfg.size,
+        model.as_dyn().n_params()
+    );
+    Ok(())
+}
+
+fn cmd_prune(cfg: &ExperimentConfig) -> Result<()> {
+    let zoo = Zoo::new(cfg.seed);
+    let runtime = load_runtime(cfg);
+    let mut model = zoo.model(family_of(cfg), &cfg.size, cfg.train_steps)?;
+    let calib_profile = Profile::from_name(&cfg.calib_profile).unwrap_or(Profile::C4Like);
+    let calib = zoo.calibration(calib_profile, cfg.n_calib, cfg.calib_seq_len);
+    let pipe = PipelineConfig::new(cfg.prune_config()).with_engine(cfg.engine);
+    let report = prune_model(model.as_dyn_mut(), &calib, &pipe, runtime.as_ref())?;
+    println!(
+        "pruned {} linears to {:.1}% sparsity in {:.1}s (calib {:.1}s, prune {:.1}s, propagate {:.1}s; hlo {:.0}%)",
+        report.linears.len(),
+        report.overall_sparsity() * 100.0,
+        report.total_ms / 1e3,
+        report.calib_ms / 1e3,
+        report.prune_ms / 1e3,
+        report.propagate_ms / 1e3,
+        report.hlo_fraction() * 100.0
+    );
+    std::fs::create_dir_all(&cfg.out_dir).ok();
+    let out = Path::new(&cfg.out_dir).join(format!(
+        "{}_{}_{}_{}.ats",
+        family_of(cfg),
+        cfg.size,
+        cfg.method.name().replace(['(', ')'], "_"),
+        cfg.sparsity.label().replace([':', '%'], "_")
+    ));
+    match &model {
+        harness::AnyModel::Llama(m) => m.save(&out)?,
+        harness::AnyModel::Mamba(m) => m.save(&out)?,
+    }
+    println!("saved pruned checkpoint to {}", out.display());
+    println!("\n{}", profile_report());
+    Ok(())
+}
+
+fn cmd_eval(cfg: &ExperimentConfig) -> Result<()> {
+    let zoo = Zoo::new(cfg.seed);
+    let model = zoo.model(family_of(cfg), &cfg.size, cfg.train_steps)?;
+    let ppl = harness::eval_ppl(model.as_dyn(), &zoo);
+    println!("perplexity: {ppl:?}");
+    let zs = harness::suite::eval_zeroshot(model.as_dyn(), &zoo, 100);
+    println!(
+        "zero-shot: lambada {:.1}% hellaswag {:.1}% piqa {:.1}% arc {:.1}% wino {:.1}% avg {:.2}%",
+        zs.lambada * 100.0,
+        zs.hellaswag * 100.0,
+        zs.piqa * 100.0,
+        zs.arc * 100.0,
+        zs.winogrande * 100.0,
+        zs.average() * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_pipeline(cfg: &ExperimentConfig) -> Result<()> {
+    use apt::harness::{format_table, origin_row, prune_and_eval, RunOpts};
+    let zoo = Zoo::new(cfg.seed);
+    let runtime = load_runtime(cfg);
+    let base = zoo.model(family_of(cfg), &cfg.size, cfg.train_steps)?;
+    println!("dense {} {}: {} params", cfg.arch, cfg.size, base.as_dyn().n_params());
+    let mut rows = vec![origin_row(&base, &zoo)];
+    let methods: &[Method] = if matches!(cfg.sparsity, apt::prune::Sparsity::SemiStructured { .. })
+    {
+        &[Method::Magnitude, Method::Wanda, Method::SS, Method::SM, Method::MS, Method::MM]
+    } else {
+        &[Method::Magnitude, Method::Wanda, Method::SS, Method::SM]
+    };
+    for &m in methods {
+        let mut o = RunOpts::new(m, cfg.sparsity);
+        o.block_size = if cfg.block_size == 0 { None } else { Some(cfg.block_size) };
+        o.gamma = cfg.gamma;
+        o.n_calib = cfg.n_calib;
+        o.engine = cfg.engine;
+        rows.push(prune_and_eval(&base, &zoo, &o, runtime.as_ref())?);
+    }
+    let table = format_table(
+        &format!("pipeline — {} {} @ {}", cfg.arch, cfg.size, cfg.sparsity.label()),
+        &rows,
+    );
+    println!("{table}");
+    harness::save_rows("pipeline", &rows)?;
+    println!("{}", profile_report());
+    Ok(())
+}
+
+fn cmd_table(cfg: &ExperimentConfig, id: Option<&str>) -> Result<()> {
+    let zoo = Zoo::new(cfg.seed);
+    let runtime = load_runtime(cfg);
+    match id {
+        Some("all") | None => {
+            for id in harness::ALL_TABLES {
+                let out = harness::run_table(id, &zoo, runtime.as_ref())?;
+                println!("{out}");
+            }
+        }
+        Some(id) => {
+            let out = harness::run_table(id, &zoo, runtime.as_ref())?;
+            println!("{out}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let rt = Runtime::load(Path::new("artifacts"))?;
+    println!("platform: {}, {} artifacts", rt.platform(), rt.entries().len());
+    let mut ok = 0usize;
+    let mut failed = 0usize;
+    for e in rt.entries().to_vec() {
+        let run = || -> Result<()> {
+            use apt::tensor::Mat;
+            let mut rng = apt::util::Rng::new(7);
+            match e.name.as_str() {
+                "hessian_update" => {
+                    let x = Mat::randn(e.t, e.m, 1.0, &mut rng);
+                    let h = Mat::zeros(e.m, e.m);
+                    rt.exec(&e, &[&x, &h], &[], &[e.m])?;
+                }
+                "hessian_finalize" => {
+                    let x = Mat::randn(4 * e.m, e.m, 1.0, &mut rng);
+                    let mut acc = apt::prune::HessianAccumulator::new(e.m);
+                    acc.add_chunk(&x);
+                    let h = acc.h.to_f32();
+                    rt.exec(&e, &[&h], &[0.01], &[e.m])?;
+                }
+                "prune_seq" => {
+                    let w = Mat::randn(e.n, e.m, 1.0, &mut rng);
+                    let mask = Mat::zeros(e.n, e.m);
+                    let hinv = spd(e.m, &mut rng);
+                    rt.exec(&e, &[&w, &mask, &hinv], &[], &[e.n])?;
+                }
+                _ => {
+                    let w = Mat::randn(e.n, e.m, 1.0, &mut rng);
+                    let hinv = spd(e.m, &mut rng);
+                    rt.exec_prune(&e, &w, &hinv)?;
+                }
+            }
+            Ok(())
+        };
+        match run() {
+            Ok(()) => {
+                ok += 1;
+                println!("  ok   {}", e.file);
+            }
+            Err(err) => {
+                failed += 1;
+                println!("  FAIL {}: {err}", e.file);
+            }
+        }
+    }
+    println!("{ok} ok, {failed} failed");
+    if failed > 0 {
+        anyhow::bail!("{failed} artifacts failed");
+    }
+    Ok(())
+}
+
+fn spd(m: usize, rng: &mut apt::util::Rng) -> apt::tensor::Mat {
+    let x = apt::tensor::Mat::randn(2 * m, m, 1.0, rng);
+    let mut acc = apt::prune::HessianAccumulator::new(m);
+    acc.add_chunk(&x);
+    let (_hd, hinv) = acc.finalize(0.01);
+    hinv.to_f32()
+}

@@ -1,0 +1,476 @@
+//! `micromamba`: a selective-SSM (Mamba-style) decoder with manual
+//! forward/backward — the stand-in for the paper's Mamba-130M…2.8B rows.
+//!
+//! Mamba-lite block (DESIGN.md SS2 substitution table):
+//!     n   = rmsnorm(x)
+//!     u,z = split(n @ Win^T)                 (in_proj, prunable)
+//!     u'  = silu(causal_depthwise_conv3(u))
+//!     a   = sigmoid(u' @ Wdt^T)              (dt_proj, prunable; the
+//!                                             input-*selective* gate)
+//!     h_t = a_t . h_{t-1} + (1-a_t) . u'_t   (selective scan, state=1)
+//!     y   = h . silu(z)
+//!     out = x + y @ Wout^T                   (out_proj, prunable)
+//!
+//! The pruning surface (in/dt/out projections) mirrors real Mamba's
+//! in_proj/x_proj/dt_proj/out_proj — the layers the paper prunes. The scan
+//! itself is weight-free, exactly as in the paper's setting.
+
+use anyhow::Result;
+
+use crate::io::TensorStore;
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MambaConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub d_inner: usize,
+    pub n_layers: usize,
+    pub max_seq: usize,
+}
+
+impl MambaConfig {
+    pub fn small(vocab: usize) -> Self {
+        MambaConfig { vocab, d_model: 128, d_inner: 256, n_layers: 4, max_seq: 256 }
+    }
+
+    pub fn medium(vocab: usize) -> Self {
+        MambaConfig { vocab, d_model: 256, d_inner: 512, n_layers: 6, max_seq: 256 }
+    }
+}
+
+pub const MAMBA_LINEARS: [&str; 3] = ["in_proj", "dt_proj", "out_proj"];
+const CONV_K: usize = 3;
+
+pub struct Mamba {
+    pub cfg: MambaConfig,
+    pub params: TensorStore,
+}
+
+fn key(b: usize, name: &str) -> String {
+    format!("blocks.{b}.{name}")
+}
+
+impl Mamba {
+    pub fn init(cfg: MambaConfig, rng: &mut Rng) -> Mamba {
+        let mut p = TensorStore::new();
+        let (d, e) = (cfg.d_model, cfg.d_inner);
+        let sigma = 0.02f32;
+        p.insert("embed", Mat::randn(cfg.vocab, d, sigma, rng));
+        p.insert("final_norm", Mat::from_vec(1, d, vec![1.0; d]));
+        for b in 0..cfg.n_layers {
+            p.insert(&key(b, "norm"), Mat::from_vec(1, d, vec![1.0; d]));
+            p.insert(&key(b, "in_proj"), Mat::randn(2 * e, d, sigma, rng));
+            p.insert(&key(b, "dt_proj"), Mat::randn(e, e, sigma, rng));
+            p.insert(
+                &key(b, "out_proj"),
+                Mat::randn(d, e, sigma / (2.0 * cfg.n_layers as f32).sqrt(), rng),
+            );
+            // depthwise conv: (CONV_K, e) weights + (1, e) bias
+            p.insert(&key(b, "conv_w"), Mat::randn(CONV_K, e, 0.2, rng));
+            p.insert(&key(b, "conv_b"), Mat::zeros(1, e));
+        }
+        Mamba { cfg, params: p }
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.params.total_params()
+    }
+
+    pub fn weight(&self, b: usize, name: &str) -> &Mat {
+        self.params.get(&key(b, name)).expect("weight")
+    }
+
+    pub fn weight_mut(&mut self, b: usize, name: &str) -> &mut Mat {
+        self.params.get_mut(&key(b, name)).expect("weight")
+    }
+
+    pub fn embed(&self, tokens: &[u32]) -> Mat {
+        let e = self.params.get("embed").unwrap();
+        let mut x = Mat::zeros(tokens.len(), self.cfg.d_model);
+        for (i, &t) in tokens.iter().enumerate() {
+            x.row_mut(i).copy_from_slice(e.row(t as usize));
+        }
+        x
+    }
+
+    pub fn block_forward(&self, b: usize, x: &Mat, bt: (usize, usize)) -> Mat {
+        self.block_impl(b, x, bt, None, &mut |_, _| {})
+    }
+
+    pub fn block_forward_collect(
+        &self,
+        b: usize,
+        x: &Mat,
+        bt: (usize, usize),
+        sink: &mut dyn FnMut(&str, &Mat),
+    ) -> Mat {
+        self.block_impl(b, x, bt, None, sink)
+    }
+
+    fn block_impl(
+        &self,
+        b: usize,
+        x: &Mat,
+        (bsz, t): (usize, usize),
+        mut cache: Option<&mut MambaCache>,
+        sink: &mut dyn FnMut(&str, &Mat),
+    ) -> Mat {
+        let e = self.cfg.d_inner;
+        let norm_g = self.params.get(&key(b, "norm")).unwrap().row(0);
+        let n = super::transformer_rmsnorm(x, norm_g);
+        sink("in_proj", &n.y);
+        let xz = n.y.matmul_tb(self.weight(b, "in_proj")); // (nrow, 2e)
+        let (mut u, mut z) = (Mat::zeros(x.rows, e), Mat::zeros(x.rows, e));
+        for r in 0..x.rows {
+            u.row_mut(r).copy_from_slice(&xz.row(r)[..e]);
+            z.row_mut(r).copy_from_slice(&xz.row(r)[e..]);
+        }
+        // causal depthwise conv + silu
+        let cw = self.weight(b, "conv_w");
+        let cb = self.weight(b, "conv_b");
+        let mut pre = Mat::zeros(x.rows, e);
+        for s in 0..bsz {
+            for pos in 0..t {
+                let dst = s * t + pos;
+                for c in 0..e {
+                    let mut acc = cb[(0, c)];
+                    for kk in 0..CONV_K {
+                        if pos >= kk {
+                            acc += cw[(kk, c)] * u[(s * t + pos - kk, c)];
+                        }
+                    }
+                    pre[(dst, c)] = acc;
+                }
+            }
+        }
+        let mut up = Mat::zeros(x.rows, e);
+        for i in 0..pre.data.len() {
+            up.data[i] = silu(pre.data[i]);
+        }
+        sink("dt_proj", &up);
+        let dt = up.matmul_tb(self.weight(b, "dt_proj"));
+        let mut alpha = Mat::zeros(x.rows, e);
+        for i in 0..dt.data.len() {
+            alpha.data[i] = sigmoid(dt.data[i]);
+        }
+        // selective scan
+        let mut h = Mat::zeros(x.rows, e);
+        for s in 0..bsz {
+            for pos in 0..t {
+                let r = s * t + pos;
+                for c in 0..e {
+                    let prev = if pos == 0 { 0.0 } else { h[(r - 1, c)] };
+                    let a = alpha[(r, c)];
+                    h[(r, c)] = a * prev + (1.0 - a) * up[(r, c)];
+                }
+            }
+        }
+        // gate + out proj + residual
+        let mut y = Mat::zeros(x.rows, e);
+        for i in 0..y.data.len() {
+            y.data[i] = h.data[i] * silu(z.data[i]);
+        }
+        sink("out_proj", &y);
+        let proj = y.matmul_tb(self.weight(b, "out_proj"));
+        let mut out = x.clone();
+        out.add_assign(&proj);
+
+        if let Some(c) = cache.as_deref_mut() {
+            *c = MambaCache { x_in: x.clone(), n, u, z, pre, up, alpha, h, y };
+        }
+        out
+    }
+
+    pub fn logits(&self, x: &Mat) -> Mat {
+        let n = super::transformer_rmsnorm(x, self.params.get("final_norm").unwrap().row(0));
+        n.y.matmul_tb(self.params.get("embed").unwrap())
+    }
+
+    pub fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64 {
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            x = self.block_forward(b, &x, bt);
+        }
+        let logits = self.logits(&x);
+        super::ce_loss(&logits, tokens, bt)
+    }
+
+    pub fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore) {
+        let cfg = &self.cfg;
+        let mut caches = Vec::with_capacity(cfg.n_layers);
+        let mut x = self.embed(tokens);
+        for b in 0..cfg.n_layers {
+            let mut c = MambaCache::empty();
+            x = self.block_impl(b, &x, bt, Some(&mut c), &mut |_, _| {});
+            caches.push(c);
+        }
+        let fg = self.params.get("final_norm").unwrap().row(0);
+        let nfin = super::transformer_rmsnorm(&x, fg);
+        let embed = self.params.get("embed").unwrap();
+        let logits = nfin.y.matmul_tb(embed);
+        let (loss, dlogits) = super::ce_loss_and_grad(&logits, tokens, bt);
+
+        let mut grads = TensorStore::new();
+        let mut d_embed = dlogits.t().matmul(&nfin.y);
+        let dnfin = dlogits.matmul(embed);
+        let (mut dx, d_fn) = super::transformer_rmsnorm_backward(&x, fg, &nfin, &dnfin);
+        grads.insert("final_norm", d_fn);
+
+        for b in (0..cfg.n_layers).rev() {
+            dx = self.block_backward(b, &caches[b], &dx, bt, &mut grads);
+        }
+        for (i, &tok) in tokens.iter().enumerate() {
+            let dst = d_embed.row_mut(tok as usize);
+            for (d, &v) in dst.iter_mut().zip(dx.row(i)) {
+                *d += v;
+            }
+        }
+        grads.insert("embed", d_embed);
+        (loss, grads)
+    }
+
+    fn block_backward(
+        &self,
+        b: usize,
+        c: &MambaCache,
+        dout: &Mat,
+        (bsz, t): (usize, usize),
+        grads: &mut TensorStore,
+    ) -> Mat {
+        let e = self.cfg.d_inner;
+        let nrow = dout.rows;
+
+        // out = x + y @ Wout^T
+        let dy = dout.matmul(self.weight(b, "out_proj")); // (n, e)
+        let d_wout = dout.t().matmul(&c.y);
+        grads.insert(&key(b, "out_proj"), d_wout);
+
+        // y = h . silu(z)
+        let mut dh = Mat::zeros(nrow, e);
+        let mut dz = Mat::zeros(nrow, e);
+        for i in 0..dy.data.len() {
+            let zv = c.z.data[i];
+            let s = sigmoid(zv);
+            dh.data[i] = dy.data[i] * zv * s;
+            dz.data[i] = dy.data[i] * c.h.data[i] * (s * (1.0 + zv * (1.0 - s)));
+        }
+
+        // scan backward: gh_t = dh_t + gh_{t+1} * a_{t+1}
+        let mut dalpha = Mat::zeros(nrow, e);
+        let mut dup = Mat::zeros(nrow, e);
+        for s in 0..bsz {
+            let mut gh = vec![0.0f32; e];
+            for pos in (0..t).rev() {
+                let r = s * t + pos;
+                for cch in 0..e {
+                    let g = dh[(r, cch)] + gh[cch];
+                    let a = c.alpha[(r, cch)];
+                    let prev = if pos == 0 { 0.0 } else { c.h[(r - 1, cch)] };
+                    dalpha[(r, cch)] = g * (prev - c.up[(r, cch)]);
+                    dup[(r, cch)] = g * (1.0 - a);
+                    gh[cch] = g * a;
+                }
+            }
+        }
+
+        // alpha = sigmoid(dt); dt = up @ Wdt^T
+        let mut ddt = Mat::zeros(nrow, e);
+        for i in 0..ddt.data.len() {
+            let a = c.alpha.data[i];
+            ddt.data[i] = dalpha.data[i] * a * (1.0 - a);
+        }
+        let d_wdt = ddt.t().matmul(&c.up);
+        grads.insert(&key(b, "dt_proj"), d_wdt);
+        dup.add_assign(&ddt.matmul(self.weight(b, "dt_proj")));
+
+        // up = silu(pre)
+        let mut dpre = Mat::zeros(nrow, e);
+        for i in 0..dpre.data.len() {
+            let p = c.pre.data[i];
+            let s = sigmoid(p);
+            dpre.data[i] = dup.data[i] * (s * (1.0 + p * (1.0 - s)));
+        }
+
+        // conv backward
+        let cw = self.weight(b, "conv_w");
+        let mut du = Mat::zeros(nrow, e);
+        let mut d_cw = Mat::zeros(CONV_K, e);
+        let mut d_cb = Mat::zeros(1, e);
+        for s in 0..bsz {
+            for pos in 0..t {
+                let r = s * t + pos;
+                for cch in 0..e {
+                    let dp = dpre[(r, cch)];
+                    d_cb[(0, cch)] += dp;
+                    for kk in 0..CONV_K {
+                        if pos >= kk {
+                            du[(r - kk, cch)] += dp * cw[(kk, cch)];
+                            d_cw[(kk, cch)] += dp * c.u[(r - kk, cch)];
+                        }
+                    }
+                }
+            }
+        }
+        grads.insert(&key(b, "conv_w"), d_cw);
+        grads.insert(&key(b, "conv_b"), d_cb);
+
+        // xz split backward -> in_proj
+        let mut dxz = Mat::zeros(nrow, 2 * e);
+        for r in 0..nrow {
+            dxz.row_mut(r)[..e].copy_from_slice(du.row(r));
+            dxz.row_mut(r)[e..].copy_from_slice(dz.row(r));
+        }
+        let d_win = dxz.t().matmul(&c.n.y);
+        grads.insert(&key(b, "in_proj"), d_win);
+        let dn = dxz.matmul(self.weight(b, "in_proj"));
+        let norm_g = self.params.get(&key(b, "norm")).unwrap().row(0);
+        let (dx_from_norm, d_norm) =
+            super::transformer_rmsnorm_backward(&c.x_in, norm_g, &c.n, &dn);
+        grads.insert(&key(b, "norm"), d_norm);
+
+        let mut dx = dout.clone();
+        dx.add_assign(&dx_from_norm);
+        dx
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        self.params.save(path)
+    }
+
+    pub fn load(cfg: MambaConfig, path: &std::path::Path) -> Result<Mamba> {
+        Ok(Mamba { cfg, params: TensorStore::load(path)? })
+    }
+}
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+#[inline]
+fn silu(x: f32) -> f32 {
+    x * sigmoid(x)
+}
+
+pub struct MambaCache {
+    x_in: Mat,
+    n: super::NormCachePub,
+    u: Mat,
+    z: Mat,
+    pre: Mat,
+    up: Mat,
+    alpha: Mat,
+    h: Mat,
+    y: Mat,
+}
+
+impl MambaCache {
+    fn empty() -> MambaCache {
+        let z = || Mat::zeros(0, 0);
+        MambaCache {
+            x_in: z(),
+            n: super::NormCachePub { y: Mat::zeros(0, 0), rinv: vec![] },
+            u: z(),
+            z: z(),
+            pre: z(),
+            up: z(),
+            alpha: z(),
+            h: z(),
+            y: z(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_cfg() -> MambaConfig {
+        MambaConfig { vocab: 29, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 16 }
+    }
+
+    fn tiny(seed: u64) -> Mamba {
+        Mamba::init(tiny_cfg(), &mut Rng::new(seed))
+    }
+
+    fn rand_tokens(n: usize, vocab: usize, seed: u64) -> Vec<u32> {
+        let mut r = Rng::new(seed);
+        (0..n).map(|_| r.below(vocab) as u32).collect()
+    }
+
+    #[test]
+    fn forward_shapes_and_loss() {
+        let m = tiny(1);
+        let toks = rand_tokens(2 * 8, 29, 2);
+        let loss = m.forward_loss(&toks, (2, 8));
+        assert!(loss.is_finite());
+        assert!((loss - (29f64).ln()).abs() < 0.6, "{loss}");
+    }
+
+    #[test]
+    fn collect_hits_every_linear() {
+        let m = tiny(3);
+        let toks = rand_tokens(8, 29, 4);
+        let x = m.embed(&toks);
+        let mut seen = std::collections::HashSet::new();
+        m.block_forward_collect(0, &x, (1, 8), &mut |name, _| {
+            seen.insert(name.to_string());
+        });
+        for l in MAMBA_LINEARS {
+            assert!(seen.contains(l), "{l}");
+        }
+    }
+
+    #[test]
+    fn causality_future_token_does_not_affect_past() {
+        let m = tiny(5);
+        let mut toks = rand_tokens(8, 29, 6);
+        let run = |toks: &[u32]| {
+            let mut x = m.embed(toks);
+            for b in 0..2 {
+                x = m.block_forward(b, &x, (1, 8));
+            }
+            m.logits(&x)
+        };
+        let l1 = run(&toks);
+        toks[7] = (toks[7] + 1) % 29;
+        let l2 = run(&toks);
+        for i in 0..7 {
+            for j in 0..29 {
+                assert!((l1[(i, j)] - l2[(i, j)]).abs() < 1e-6, "pos {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn gradcheck_all_param_kinds() {
+        let mut m = tiny(7);
+        let toks = rand_tokens(2 * 6, 29, 8);
+        let bt = (2, 6);
+        let (_, grads) = m.loss_and_grads(&toks, bt);
+        let eps = 2e-3f32;
+        let names: Vec<String> = m.params.names().iter().map(|s| s.to_string()).collect();
+        for name in names {
+            let g = grads.get(&name).unwrap().clone();
+            let len = g.data.len();
+            for &fracidx in &[0usize, len / 2, len - 1] {
+                let idx = fracidx.min(len - 1);
+                let orig = m.params.get(&name).unwrap().data[idx];
+                m.params.get_mut(&name).unwrap().data[idx] = orig + eps;
+                let lp = m.forward_loss(&toks, bt);
+                m.params.get_mut(&name).unwrap().data[idx] = orig - eps;
+                let lm = m.forward_loss(&toks, bt);
+                m.params.get_mut(&name).unwrap().data[idx] = orig;
+                let fd = (lp - lm) / (2.0 * eps as f64);
+                let an = g.data[idx] as f64;
+                let denom = fd.abs().max(an.abs()).max(1e-4);
+                assert!(
+                    ((fd - an) / denom).abs() < 0.08,
+                    "{name}[{idx}]: fd={fd:.6} analytic={an:.6}"
+                );
+            }
+        }
+    }
+}

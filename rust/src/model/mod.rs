@@ -1,0 +1,346 @@
+//! Model substrate: microllama (transformer) + micromamba (SSM), a common
+//! `LanguageModel` trait consumed by the coordinator/eval layers, shared
+//! functional pieces (RMSNorm, cross-entropy), and the AdamW trainer.
+
+pub mod mamba;
+pub mod train;
+pub mod transformer;
+
+pub use mamba::{Mamba, MambaConfig, MAMBA_LINEARS};
+pub use train::{train, TrainConfig};
+pub use transformer::{Transformer, TransformerConfig, BLOCK_LINEARS};
+
+use crate::io::TensorStore;
+use crate::tensor::Mat;
+
+// ---------------------------------------------------------------------------
+// shared functional pieces (used by both architectures)
+// ---------------------------------------------------------------------------
+
+pub struct NormCachePub {
+    pub y: Mat,
+    pub rinv: Vec<f32>,
+}
+
+const NORM_EPS: f32 = 1e-5;
+
+pub fn transformer_rmsnorm(x: &Mat, gain: &[f32]) -> NormCachePub {
+    let mut y = Mat::zeros(x.rows, x.cols);
+    let mut rinv = vec![0.0f32; x.rows];
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let ri = 1.0 / (ms + NORM_EPS).sqrt();
+        rinv[r] = ri;
+        let yrow = y.row_mut(r);
+        for j in 0..x.cols {
+            yrow[j] = row[j] * ri * gain[j];
+        }
+    }
+    NormCachePub { y, rinv }
+}
+
+pub fn transformer_rmsnorm_backward(
+    x: &Mat,
+    gain: &[f32],
+    cache: &NormCachePub,
+    dy: &Mat,
+) -> (Mat, Mat) {
+    let d = x.cols;
+    let mut dx = Mat::zeros(x.rows, d);
+    let mut dgain = Mat::zeros(1, d);
+    for r in 0..x.rows {
+        let xrow = x.row(r);
+        let dyrow = dy.row(r);
+        let ri = cache.rinv[r];
+        for j in 0..d {
+            dgain.row_mut(0)[j] += dyrow[j] * xrow[j] * ri;
+        }
+        let mut dot = 0.0f32;
+        for j in 0..d {
+            dot += gain[j] * dyrow[j] * xrow[j];
+        }
+        let c = ri * ri * ri * dot / d as f32;
+        let dxrow = dx.row_mut(r);
+        for j in 0..d {
+            dxrow[j] = gain[j] * dyrow[j] * ri - xrow[j] * c;
+        }
+    }
+    (dx, dgain)
+}
+
+/// Mean next-token cross-entropy (no grad).
+pub fn ce_loss(logits: &Mat, tokens: &[u32], bt: (usize, usize)) -> f64 {
+    ce_impl(logits, tokens, bt, false).0
+}
+
+/// Mean next-token cross-entropy + logits gradient.
+pub fn ce_loss_and_grad(logits: &Mat, tokens: &[u32], bt: (usize, usize)) -> (f64, Mat) {
+    let (l, g) = ce_impl(logits, tokens, bt, true);
+    (l, g.unwrap())
+}
+
+fn ce_impl(
+    logits: &Mat,
+    tokens: &[u32],
+    (bsz, t): (usize, usize),
+    want_grad: bool,
+) -> (f64, Option<Mat>) {
+    let v = logits.cols;
+    let n_pred = bsz * (t - 1);
+    let mut loss = 0.0f64;
+    let mut grad = if want_grad { Some(Mat::zeros(logits.rows, v)) } else { None };
+    for s in 0..bsz {
+        for i in 0..t - 1 {
+            let r = s * t + i;
+            let target = tokens[s * t + i + 1] as usize;
+            let row = logits.row(r);
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+            let sum: f64 = row.iter().map(|&x| ((x as f64) - mx).exp()).sum();
+            let lse = sum.ln() + mx;
+            loss += lse - row[target] as f64;
+            if let Some(g) = grad.as_mut() {
+                let grow = g.row_mut(r);
+                let inv = (1.0 / n_pred as f64) as f32;
+                for j in 0..v {
+                    let p = ((row[j] as f64 - mx).exp() / sum) as f32;
+                    grow[j] = p * inv;
+                }
+                grow[target] -= inv;
+            }
+        }
+    }
+    (loss / n_pred as f64, grad)
+}
+
+// ---------------------------------------------------------------------------
+// the trait the coordinator/eval layers consume
+// ---------------------------------------------------------------------------
+
+/// Architecture-independent view of a decoder LM: block-streamable forward
+/// (the coordinator prunes block-by-block) plus training/eval entry points.
+pub trait LanguageModel: Send + Sync {
+    fn arch(&self) -> &'static str;
+    fn vocab(&self) -> usize;
+    fn n_blocks(&self) -> usize;
+    /// Names of prunable linear weights within each block.
+    fn linear_names(&self) -> &'static [&'static str];
+    fn n_params(&self) -> usize;
+
+    fn params(&self) -> &TensorStore;
+    fn params_mut(&mut self) -> &mut TensorStore;
+
+    fn embed_tokens(&self, tokens: &[u32]) -> Mat;
+    fn forward_block(&self, b: usize, x: &Mat, bt: (usize, usize)) -> Mat;
+    fn forward_block_collect(
+        &self,
+        b: usize,
+        x: &Mat,
+        bt: (usize, usize),
+        sink: &mut dyn FnMut(&str, &Mat),
+    ) -> Mat;
+    fn logits(&self, x: &Mat) -> Mat;
+
+    fn block_weight(&self, b: usize, name: &str) -> &Mat;
+    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut Mat;
+
+    fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64;
+    fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore);
+
+    /// Log-prob of each next token over a window (perplexity eval).
+    fn next_token_logprobs(&self, tokens: &[u32], bt: (usize, usize)) -> Vec<f64> {
+        let mut x = self.embed_tokens(tokens);
+        for b in 0..self.n_blocks() {
+            x = self.forward_block(b, &x, bt);
+        }
+        let logits = self.logits(&x);
+        let (bsz, t) = bt;
+        let mut out = Vec::new();
+        for s in 0..bsz {
+            for i in 0..t - 1 {
+                let row = logits.row(s * t + i);
+                let target = tokens[s * t + i + 1] as usize;
+                let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+                let lse: f64 =
+                    row.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
+                out.push(row[target] as f64 - lse);
+            }
+        }
+        out
+    }
+
+    /// Sum log-prob of a continuation given a context (zero-shot choice).
+    fn continuation_logprob(&self, context: &[u32], continuation: &[u32]) -> f64 {
+        let mut toks = context.to_vec();
+        toks.extend_from_slice(continuation);
+        let lp = self.next_token_logprobs(&toks, (1, toks.len()));
+        // predictions for continuation tokens start at index |ctx|-1
+        lp[context.len() - 1..].iter().sum()
+    }
+
+    /// Argmax next token after a context (LAMBADA eval).
+    fn predict_last(&self, context: &[u32]) -> u32 {
+        let mut x = self.embed_tokens(context);
+        for b in 0..self.n_blocks() {
+            x = self.forward_block(b, &x, (1, context.len()));
+        }
+        let logits = self.logits(&x);
+        let row = logits.row(context.len() - 1);
+        let mut best = 0usize;
+        for (i, &v) in row.iter().enumerate() {
+            if v > row[best] {
+                best = i;
+            }
+        }
+        best as u32
+    }
+}
+
+impl LanguageModel for Transformer {
+    fn arch(&self) -> &'static str {
+        "microllama"
+    }
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+    fn n_blocks(&self) -> usize {
+        self.cfg.n_layers
+    }
+    fn linear_names(&self) -> &'static [&'static str] {
+        &BLOCK_LINEARS
+    }
+    fn n_params(&self) -> usize {
+        Transformer::n_params(self)
+    }
+    fn params(&self) -> &TensorStore {
+        &self.params
+    }
+    fn params_mut(&mut self) -> &mut TensorStore {
+        &mut self.params
+    }
+    fn embed_tokens(&self, tokens: &[u32]) -> Mat {
+        self.embed(tokens)
+    }
+    fn forward_block(&self, b: usize, x: &Mat, bt: (usize, usize)) -> Mat {
+        self.block_forward(b, x, bt)
+    }
+    fn forward_block_collect(
+        &self,
+        b: usize,
+        x: &Mat,
+        bt: (usize, usize),
+        sink: &mut dyn FnMut(&str, &Mat),
+    ) -> Mat {
+        self.block_forward_collect(b, x, bt, sink)
+    }
+    fn logits(&self, x: &Mat) -> Mat {
+        Transformer::logits(self, x)
+    }
+    fn block_weight(&self, b: usize, name: &str) -> &Mat {
+        self.weight(b, name)
+    }
+    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut Mat {
+        self.weight_mut(b, name)
+    }
+    fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64 {
+        Transformer::forward_loss(self, tokens, bt)
+    }
+    fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore) {
+        Transformer::loss_and_grads(self, tokens, bt)
+    }
+}
+
+impl LanguageModel for Mamba {
+    fn arch(&self) -> &'static str {
+        "micromamba"
+    }
+    fn vocab(&self) -> usize {
+        self.cfg.vocab
+    }
+    fn n_blocks(&self) -> usize {
+        self.cfg.n_layers
+    }
+    fn linear_names(&self) -> &'static [&'static str] {
+        &MAMBA_LINEARS
+    }
+    fn n_params(&self) -> usize {
+        Mamba::n_params(self)
+    }
+    fn params(&self) -> &TensorStore {
+        &self.params
+    }
+    fn params_mut(&mut self) -> &mut TensorStore {
+        &mut self.params
+    }
+    fn embed_tokens(&self, tokens: &[u32]) -> Mat {
+        self.embed(tokens)
+    }
+    fn forward_block(&self, b: usize, x: &Mat, bt: (usize, usize)) -> Mat {
+        self.block_forward(b, x, bt)
+    }
+    fn forward_block_collect(
+        &self,
+        b: usize,
+        x: &Mat,
+        bt: (usize, usize),
+        sink: &mut dyn FnMut(&str, &Mat),
+    ) -> Mat {
+        self.block_forward_collect(b, x, bt, sink)
+    }
+    fn logits(&self, x: &Mat) -> Mat {
+        Mamba::logits(self, x)
+    }
+    fn block_weight(&self, b: usize, name: &str) -> &Mat {
+        self.weight(b, name)
+    }
+    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut Mat {
+        self.weight_mut(b, name)
+    }
+    fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64 {
+        Mamba::forward_loss(self, tokens, bt)
+    }
+    fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore) {
+        Mamba::loss_and_grads(self, tokens, bt)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn trait_objects_work_for_both_archs() {
+        let mut rng = Rng::new(1);
+        let t = Transformer::init(
+            TransformerConfig { vocab: 17, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 12, max_seq: 8 },
+            &mut rng,
+        );
+        let m = Mamba::init(
+            MambaConfig { vocab: 17, d_model: 8, d_inner: 12, n_layers: 1, max_seq: 8 },
+            &mut rng,
+        );
+        let models: Vec<Box<dyn LanguageModel>> = vec![Box::new(t), Box::new(m)];
+        let toks: Vec<u32> = (0..8).map(|i| (i * 3 % 17) as u32).collect();
+        for model in &models {
+            let loss = model.forward_loss(&toks, (1, 8));
+            assert!(loss.is_finite(), "{}", model.arch());
+            let lp = model.next_token_logprobs(&toks, (1, 8));
+            assert_eq!(lp.len(), 7);
+            assert!(lp.iter().all(|v| *v <= 0.0));
+            let pred = model.predict_last(&toks);
+            assert!((pred as usize) < 17);
+        }
+    }
+
+    #[test]
+    fn continuation_logprob_finite() {
+        let mut rng = Rng::new(2);
+        let t = Transformer::init(
+            TransformerConfig { vocab: 17, d_model: 8, n_layers: 1, n_heads: 2, d_ff: 12, max_seq: 16 },
+            &mut rng,
+        );
+        let lp = t.continuation_logprob(&[1, 2, 3, 4], &[5, 6]);
+        assert!(lp < 0.0 && lp.is_finite());
+    }
+}

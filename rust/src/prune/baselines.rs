@@ -1,0 +1,141 @@
+//! Heuristic baselines: Magnitude (Zhu & Gupta 2017) and Wanda (Sun et al.
+//! 2023), implemented as the paper's comparison points. Neither updates
+//! the surviving weights.
+
+use crate::tensor::Mat;
+
+use super::mask::{Mask, Sparsity};
+
+/// Magnitude pruning: global-per-layer smallest |w| (unstructured) or
+/// per-group smallest |w| (N:M). Returns the mask; `w` is zeroed in place.
+pub fn magnitude_prune(w: &mut Mat, sparsity: Sparsity) -> Mask {
+    let mask = match sparsity {
+        Sparsity::Unstructured { rate } => {
+            let mut entries: Vec<(f32, u32, u32)> = Vec::with_capacity(w.rows * w.cols);
+            for r in 0..w.rows {
+                for (c, &v) in w.row(r).iter().enumerate() {
+                    entries.push((v.abs(), r as u32, c as u32));
+                }
+            }
+            let k = ((entries.len() as f64) * rate).round() as usize;
+            let mut mask = Mask::new(w.rows, w.cols);
+            if k > 0 {
+                let k = k.min(entries.len());
+                entries.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+                for &(_, r, c) in &entries[..k] {
+                    mask.set(r as usize, c as usize, true);
+                }
+            }
+            mask
+        }
+        Sparsity::SemiStructured { n, m } => nm_mask_by(w, n, m, |w, r, c| w[(r, c)].abs() as f64),
+    };
+    apply(w, &mask);
+    mask
+}
+
+/// Wanda: score = |w_ij| * ||X_:,j||_2 with per-output-row comparison
+/// groups (the Wanda paper's prescription), no weight update.
+/// `col_norms` come from the shared Hessian accumulator diag (hessian.rs).
+pub fn wanda_prune(w: &mut Mat, col_norms: &[f64], sparsity: Sparsity) -> Mask {
+    assert_eq!(col_norms.len(), w.cols);
+    let score = |w: &Mat, r: usize, c: usize| (w[(r, c)].abs() as f64) * col_norms[c];
+    let mask = match sparsity {
+        Sparsity::Unstructured { rate } => {
+            // per-row selection: prune `rate` fraction of each row
+            let k = ((w.cols as f64) * rate).round() as usize;
+            let mut mask = Mask::new(w.rows, w.cols);
+            for r in 0..w.rows {
+                let mut idx: Vec<usize> = (0..w.cols).collect();
+                idx.sort_by(|&a, &b| {
+                    score(w, r, a).partial_cmp(&score(w, r, b)).unwrap()
+                });
+                for &c in &idx[..k.min(w.cols)] {
+                    mask.set(r, c, true);
+                }
+            }
+            mask
+        }
+        Sparsity::SemiStructured { n, m } => nm_mask_by(w, n, m, score),
+    };
+    apply(w, &mask);
+    mask
+}
+
+/// Build an N:M mask by pruning the n smallest-scoring entries per group.
+fn nm_mask_by(w: &Mat, n: usize, m: usize, score: impl Fn(&Mat, usize, usize) -> f64) -> Mask {
+    assert_eq!(w.cols % m, 0, "cols must divide into {m}-groups");
+    let mut mask = Mask::new(w.rows, w.cols);
+    for r in 0..w.rows {
+        for g0 in (0..w.cols).step_by(m) {
+            let mut idx: Vec<usize> = (0..m).collect();
+            idx.sort_by(|&a, &b| {
+                score(w, r, g0 + a).partial_cmp(&score(w, r, g0 + b)).unwrap()
+            });
+            for &i in &idx[..n] {
+                mask.set(r, g0 + i, true);
+            }
+        }
+    }
+    mask
+}
+
+fn apply(w: &mut Mat, mask: &Mask) {
+    for r in 0..w.rows {
+        let row = w.row_mut(r);
+        for c in 0..row.len() {
+            if mask.get(r, c) {
+                row[c] = 0.0;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn magnitude_prunes_smallest() {
+        let mut w = Mat::from_vec(1, 4, vec![0.1, -5.0, 0.2, 3.0]);
+        let mask = magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.5 });
+        assert!(mask.get(0, 0) && mask.get(0, 2));
+        assert_eq!(w.row(0), &[0.0, -5.0, 0.0, 3.0]);
+    }
+
+    #[test]
+    fn magnitude_24_structure() {
+        let mut w = Mat::randn(8, 32, 1.0, &mut Rng::new(1));
+        let mask = magnitude_prune(&mut w, Sparsity::two_four());
+        assert!(mask.check_nm(2, 4));
+    }
+
+    #[test]
+    fn wanda_uses_activation_norms() {
+        // big activation norm on column 0 protects a small weight there
+        let mut w = Mat::from_vec(1, 4, vec![0.1, 0.2, 0.3, 0.4]);
+        let norms = vec![100.0, 1.0, 1.0, 1.0];
+        let mask = wanda_prune(&mut w, &norms, Sparsity::Unstructured { rate: 0.5 });
+        assert!(!mask.get(0, 0), "column 0 must survive (Wanda signal)");
+        assert!(mask.get(0, 1) && mask.get(0, 2));
+    }
+
+    #[test]
+    fn wanda_per_row_rate() {
+        let mut w = Mat::randn(6, 16, 1.0, &mut Rng::new(2));
+        let norms = vec![1.0; 16];
+        let mask = wanda_prune(&mut w, &norms, Sparsity::Unstructured { rate: 0.5 });
+        for r in 0..6 {
+            assert_eq!(mask.row_indices(r).len(), 8, "row {r}");
+        }
+    }
+
+    #[test]
+    fn wanda_24_structure() {
+        let mut w = Mat::randn(4, 16, 1.0, &mut Rng::new(3));
+        let norms: Vec<f64> = (0..16).map(|i| 1.0 + i as f64).collect();
+        let mask = wanda_prune(&mut w, &norms, Sparsity::two_four());
+        assert!(mask.check_nm(2, 4));
+    }
+}

@@ -1,0 +1,192 @@
+//! Streaming layer-Hessian accumulation: H = 2 Σ X_c^T X_c (+ dampening).
+//!
+//! The calibration pipeline feeds activation chunks X:(T, m) one at a
+//! time (the paper's "load one block at a time" memory bound); we never
+//! materialize the full (n_calib*T, m) activation matrix. All accumulation
+//! is f64 (DESIGN.md SS7). Mirrors the L1 `hessian.py` kernel, which the
+//! runtime path uses instead when an artifact for the shape exists.
+
+use crate::linalg::{cholesky, inv_spd};
+use crate::tensor::{Mat, MatF64};
+
+#[derive(Clone, Debug)]
+pub struct HessianAccumulator {
+    pub h: MatF64,
+    pub n_rows: usize,
+}
+
+impl HessianAccumulator {
+    pub fn new(m: usize) -> Self {
+        HessianAccumulator { h: MatF64::zeros(m, m), n_rows: 0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.h.rows
+    }
+
+    /// Accumulate one activation chunk X:(T, m): H += 2 X^T X.
+    ///
+    /// SSPerf iteration 2 (EXPERIMENTS.md): rows are converted to f64 once
+    /// up front so the inner axpy has no cvtss2sd on the critical path —
+    /// 2.9x over the in-loop-convert variant (kept below for the ablation).
+    pub fn add_chunk(&mut self, x: &Mat) {
+        assert_eq!(x.cols, self.dim(), "activation width mismatch");
+        let rows64: Vec<Vec<f64>> = (0..x.rows)
+            .map(|r| x.row(r).iter().map(|&v| v as f64).collect())
+            .collect();
+        self.h.syrk_add_2xtx_f64(&rows64);
+        self.n_rows += x.rows;
+    }
+
+    /// Pre-iteration-2 variant (converts f32->f64 inside the inner loop);
+    /// kept for the SSPerf ablation bench.
+    pub fn add_chunk_convert_in_loop(&mut self, x: &Mat) {
+        assert_eq!(x.cols, self.dim(), "activation width mismatch");
+        let rows: Vec<&[f32]> = (0..x.rows).map(|r| x.row(r)).collect();
+        self.h.syrk_add_2xtx(&rows);
+        self.n_rows += x.rows;
+    }
+
+    /// Merge another accumulator (parallel calibration workers).
+    pub fn merge(&mut self, other: &HessianAccumulator) {
+        assert_eq!(self.dim(), other.dim());
+        for (a, &b) in self.h.data.iter_mut().zip(&other.h.data) {
+            *a += b;
+        }
+        self.n_rows += other.n_rows;
+    }
+
+    /// Remark 4.1 dampening: H + gamma * mean(diag(H)) * I.
+    pub fn damped(&self, gamma: f64) -> MatF64 {
+        let m = self.dim();
+        let mean_diag = self.h.diag().iter().sum::<f64>() / m as f64;
+        // Dead-input guard: if a column never activates, mean-diag damping
+        // still regularizes it.
+        let damp = gamma * mean_diag.max(1e-8);
+        let mut hd = self.h.clone();
+        for i in 0..m {
+            hd[(i, i)] += damp;
+        }
+        hd
+    }
+
+    /// Damped H and its inverse (one Cholesky per layer — the paper's
+    /// Limitations-section cost center). Escalates dampening if the
+    /// calibration sample left H near-singular.
+    pub fn finalize(&self, gamma: f64) -> (MatF64, MatF64) {
+        let mut g = gamma;
+        for _ in 0..8 {
+            let hd = self.damped(g);
+            if cholesky(&hd).is_some() {
+                let hinv = inv_spd(&hd).expect("cholesky ok implies invertible");
+                return (hd, hinv);
+            }
+            g = if g == 0.0 { 1e-4 } else { g * 10.0 };
+        }
+        panic!("hessian not invertible even with heavy dampening");
+    }
+}
+
+/// Column l2 norms of the calibration activations, ||X_.j||_2 = sqrt(H_jj/2)
+/// — the Wanda statistic, recovered from the same accumulator.
+pub fn column_norms(acc: &HessianAccumulator) -> Vec<f64> {
+    acc.h.diag().iter().map(|&d| (d / 2.0).max(0.0).sqrt()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn chunk(t: usize, m: usize, seed: u64) -> Mat {
+        Mat::randn(t, m, 1.0, &mut Rng::new(seed))
+    }
+
+    #[test]
+    fn accumulation_matches_explicit() {
+        let m = 8;
+        let (a, b) = (chunk(10, m, 1), chunk(6, m, 2));
+        let mut acc = HessianAccumulator::new(m);
+        acc.add_chunk(&a);
+        acc.add_chunk(&b);
+        assert_eq!(acc.n_rows, 16);
+        for i in 0..m {
+            for j in 0..m {
+                let mut s = 0.0f64;
+                for r in 0..10 {
+                    s += a[(r, i)] as f64 * a[(r, j)] as f64;
+                }
+                for r in 0..6 {
+                    s += b[(r, i)] as f64 * b[(r, j)] as f64;
+                }
+                assert!((acc.h[(i, j)] - 2.0 * s).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn merge_equals_sequential() {
+        let m = 6;
+        let (a, b) = (chunk(7, m, 3), chunk(9, m, 4));
+        let mut seq = HessianAccumulator::new(m);
+        seq.add_chunk(&a);
+        seq.add_chunk(&b);
+        let mut p1 = HessianAccumulator::new(m);
+        p1.add_chunk(&a);
+        let mut p2 = HessianAccumulator::new(m);
+        p2.add_chunk(&b);
+        p1.merge(&p2);
+        assert!(seq.h.max_abs_diff(&p1.h) < 1e-9);
+        assert_eq!(seq.n_rows, p1.n_rows);
+    }
+
+    #[test]
+    fn damped_adds_scaled_identity() {
+        let mut acc = HessianAccumulator::new(4);
+        acc.add_chunk(&chunk(12, 4, 5));
+        let hd = acc.damped(0.01);
+        let mean_diag = acc.h.diag().iter().sum::<f64>() / 4.0;
+        for i in 0..4 {
+            assert!((hd[(i, i)] - acc.h[(i, i)] - 0.01 * mean_diag).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn finalize_produces_inverse() {
+        let mut acc = HessianAccumulator::new(8);
+        acc.add_chunk(&chunk(32, 8, 6));
+        let (hd, hinv) = acc.finalize(0.01);
+        for i in 0..8 {
+            for j in 0..8 {
+                let mut s = 0.0;
+                for k in 0..8 {
+                    s += hd[(i, k)] * hinv[(k, j)];
+                }
+                let e = if i == j { 1.0 } else { 0.0 };
+                assert!((s - e).abs() < 1e-7, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn finalize_escalates_damp_on_rank_deficiency() {
+        // Fewer calibration rows than columns -> rank-deficient H.
+        let mut acc = HessianAccumulator::new(16);
+        acc.add_chunk(&chunk(3, 16, 7));
+        let (_, hinv) = acc.finalize(0.0); // must not panic
+        assert!(hinv.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn column_norms_match_direct() {
+        let x = chunk(20, 5, 8);
+        let mut acc = HessianAccumulator::new(5);
+        acc.add_chunk(&x);
+        let norms = column_norms(&acc);
+        for j in 0..5 {
+            let direct: f64 =
+                (0..20).map(|r| (x[(r, j)] as f64).powi(2)).sum::<f64>().sqrt();
+            assert!((norms[j] - direct).abs() < 1e-6);
+        }
+    }
+}

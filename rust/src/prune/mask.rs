@@ -1,0 +1,156 @@
+//! Pruning-mask representation, sparsity patterns and block partitions.
+
+/// Target sparsity pattern.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Sparsity {
+    /// Prune `rate` fraction of each column-block (paper Sec. 4.3.1).
+    Unstructured { rate: f64 },
+    /// N:M — prune `n` weights in every group of `m` consecutive columns.
+    SemiStructured { n: usize, m: usize },
+}
+
+impl Sparsity {
+    pub fn two_four() -> Sparsity {
+        Sparsity::SemiStructured { n: 2, m: 4 }
+    }
+
+    pub fn rate(&self) -> f64 {
+        match self {
+            Sparsity::Unstructured { rate } => *rate,
+            Sparsity::SemiStructured { n, m } => *n as f64 / *m as f64,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match self {
+            Sparsity::Unstructured { rate } => format!("{:.0}%", rate * 100.0),
+            Sparsity::SemiStructured { n, m } => format!("{n}:{m}"),
+        }
+    }
+}
+
+/// Row-major boolean mask; `true` = pruned (paper's M with 1 = prune).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mask {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: Vec<bool>,
+}
+
+impl Mask {
+    pub fn new(rows: usize, cols: usize) -> Mask {
+        Mask { rows, cols, bits: vec![false; rows * cols] }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, c: usize) -> bool {
+        self.bits[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: bool) {
+        self.bits[r * self.cols + c] = v;
+    }
+
+    pub fn count(&self) -> usize {
+        self.bits.iter().filter(|&&b| b).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        self.count() as f64 / self.bits.len() as f64
+    }
+
+    /// Pruned column indices of row r (ascending).
+    pub fn row_indices(&self, r: usize) -> Vec<usize> {
+        (0..self.cols).filter(|&c| self.get(r, c)).collect()
+    }
+
+    /// Merge another mask in (logical or).
+    pub fn or_with(&mut self, other: &Mask) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        for (a, &b) in self.bits.iter_mut().zip(&other.bits) {
+            *a |= b;
+        }
+    }
+
+    /// Check every m-group has exactly n pruned entries.
+    pub fn check_nm(&self, n: usize, m: usize) -> bool {
+        if self.cols % m != 0 {
+            return false;
+        }
+        for r in 0..self.rows {
+            for g in 0..self.cols / m {
+                let cnt = (0..m).filter(|&i| self.get(r, g * m + i)).count();
+                if cnt != n {
+                    return false;
+                }
+            }
+        }
+        true
+    }
+}
+
+/// Column-block partition [c0, c1) for block pruning; `size=None` = S=all.
+pub fn column_blocks(cols: usize, size: Option<usize>) -> Vec<(usize, usize)> {
+    match size {
+        None => vec![(0, cols)],
+        Some(s) => {
+            let s = s.max(1);
+            (0..cols.div_ceil(s))
+                .map(|i| (i * s, ((i + 1) * s).min(cols)))
+                .collect()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sparsity_labels() {
+        assert_eq!(Sparsity::Unstructured { rate: 0.5 }.label(), "50%");
+        assert_eq!(Sparsity::two_four().label(), "2:4");
+        assert!((Sparsity::two_four().rate() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mask_basics() {
+        let mut m = Mask::new(2, 4);
+        m.set(0, 1, true);
+        m.set(1, 3, true);
+        assert_eq!(m.count(), 2);
+        assert_eq!(m.row_indices(0), vec![1]);
+        assert!((m.sparsity() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn or_accumulates() {
+        let mut a = Mask::new(1, 4);
+        a.set(0, 0, true);
+        let mut b = Mask::new(1, 4);
+        b.set(0, 2, true);
+        a.or_with(&b);
+        assert_eq!(a.row_indices(0), vec![0, 2]);
+    }
+
+    #[test]
+    fn nm_check() {
+        let mut m = Mask::new(1, 8);
+        for c in [0, 1, 4, 6] {
+            m.set(0, c, true);
+        }
+        assert!(m.check_nm(2, 4));
+        m.set(0, 2, true);
+        assert!(!m.check_nm(2, 4));
+    }
+
+    #[test]
+    fn blocks_partition_exactly() {
+        assert_eq!(column_blocks(10, None), vec![(0, 10)]);
+        assert_eq!(column_blocks(10, Some(4)), vec![(0, 4), (4, 8), (8, 10)]);
+        let blocks = column_blocks(512, Some(128));
+        assert_eq!(blocks.len(), 4);
+        assert_eq!(blocks.iter().map(|(a, b)| b - a).sum::<usize>(), 512);
+    }
+}

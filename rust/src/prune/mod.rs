@@ -1,0 +1,331 @@
+//! Post-training pruning core: the paper's MRP solver, the SparseGPT
+//! baseline, heuristic baselines, Hessian accumulation and mask types.
+//!
+//! Method naming follows the paper (Sec. 4.3): a method "XY" uses Solution
+//! X for the pruning mask and Solution Y for the compensation;
+//! SS == SparseGPT, SM/MS/MM are the paper's contributions. Magnitude and
+//! Wanda are the heuristic baselines of Tables 2/3.
+
+pub mod baselines;
+pub mod hessian;
+pub mod mask;
+pub mod mrp;
+pub mod sparsegpt;
+
+pub use baselines::{magnitude_prune, wanda_prune};
+pub use hessian::{column_norms, HessianAccumulator};
+pub use mask::{column_blocks, Mask, Sparsity};
+pub use mrp::{compensate_m, quadratic_loss, select_24_m, select_24_s, select_unstructured_s};
+pub use sparsegpt::{compensate_sequential, sparsegpt_prune};
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Mat;
+use crate::util::{profile, Timer};
+
+/// Pruning method (paper Sec. 4.3 + baselines).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Magnitude,
+    Wanda,
+    /// Solution-S mask + sequential Solution-S compensation (= SparseGPT).
+    SS,
+    /// Solution-S mask + optimal Solution-M compensation (ours).
+    SM,
+    /// Eq. 12 Solution-M mask + sequential compensation (ours, 2:4 only).
+    MS,
+    /// Eq. 12 Solution-M mask + optimal compensation (ours, 2:4 only).
+    MM,
+}
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Magnitude => "magnitude",
+            Method::Wanda => "wanda",
+            Method::SS => "SS(sparsegpt)",
+            Method::SM => "SM(ours)",
+            Method::MS => "MS(ours)",
+            Method::MM => "MM(ours)",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "magnitude" | "mag" => Some(Method::Magnitude),
+            "wanda" => Some(Method::Wanda),
+            "ss" | "sparsegpt" => Some(Method::SS),
+            "sm" => Some(Method::SM),
+            "ms" => Some(Method::MS),
+            "mm" => Some(Method::MM),
+            _ => None,
+        }
+    }
+
+    /// Does this method need the full Hessian (vs only diag / nothing)?
+    pub fn needs_hessian(&self) -> bool {
+        !matches!(self, Method::Magnitude)
+    }
+
+    pub fn all() -> [Method; 6] {
+        [Method::Magnitude, Method::Wanda, Method::SS, Method::SM, Method::MS, Method::MM]
+    }
+}
+
+/// Configuration for pruning one layer (or a whole model).
+#[derive(Clone, Copy, Debug)]
+pub struct PruneConfig {
+    pub method: Method,
+    pub sparsity: Sparsity,
+    /// Column block size S (None = "S=all").
+    pub block_size: Option<usize>,
+    /// Dampening ratio gamma (Remark 4.1; paper default 0.01).
+    pub gamma: f64,
+}
+
+impl PruneConfig {
+    pub fn new(method: Method, sparsity: Sparsity) -> Self {
+        PruneConfig { method, sparsity, block_size: None, gamma: 0.01 }
+    }
+
+    pub fn with_block(mut self, s: Option<usize>) -> Self {
+        self.block_size = s;
+        self
+    }
+
+    pub fn with_gamma(mut self, g: f64) -> Self {
+        self.gamma = g;
+        self
+    }
+}
+
+/// Outcome of pruning one layer.
+#[derive(Clone, Debug)]
+pub struct LayerPruneResult {
+    pub mask: Mask,
+    /// Eq. (12) predicted loss (MRP compensation only; else NaN).
+    pub pred_loss: f64,
+    pub elapsed_ms: f64,
+}
+
+/// Prune one linear layer in place (native Rust path). `acc` holds the
+/// calibration Hessian for this layer's inputs.
+pub fn prune_layer(
+    w: &mut Mat,
+    acc: &HessianAccumulator,
+    cfg: &PruneConfig,
+) -> Result<LayerPruneResult> {
+    if acc.dim() != w.cols {
+        bail!("hessian dim {} != layer in-dim {}", acc.dim(), w.cols);
+    }
+    if let Sparsity::SemiStructured { n, m } = cfg.sparsity {
+        if (n, m) != (2, 4) {
+            bail!("only 2:4 semi-structured sparsity is wired up");
+        }
+        if w.cols % 4 != 0 {
+            bail!("2:4 needs cols % 4 == 0, got {}", w.cols);
+        }
+    }
+    if matches!(cfg.method, Method::MS | Method::MM)
+        && matches!(cfg.sparsity, Sparsity::Unstructured { .. })
+    {
+        bail!("M-mask is only defined for N:M sparsity (paper Sec. 4.2.1)");
+    }
+
+    let timer = Timer::start();
+    let mut pred_loss = f64::NAN;
+    let mask = match cfg.method {
+        Method::Magnitude => magnitude_prune(w, cfg.sparsity),
+        Method::Wanda => {
+            let norms = column_norms(acc);
+            wanda_prune(w, &norms, cfg.sparsity)
+        }
+        Method::SS => {
+            let (_hd, hinv) = profile("hessian.finalize", || acc.finalize(cfg.gamma));
+            profile("prune.ss", || {
+                sparsegpt_prune(w, &hinv, cfg.sparsity, cfg.block_size, false)
+            })
+        }
+        Method::MS => {
+            let (_hd, hinv) = profile("hessian.finalize", || acc.finalize(cfg.gamma));
+            profile("prune.ms", || {
+                sparsegpt_prune(w, &hinv, cfg.sparsity, cfg.block_size, true)
+            })
+        }
+        Method::SM | Method::MM => {
+            let (_hd, hinv) = profile("hessian.finalize", || acc.finalize(cfg.gamma));
+            let diag = hinv.diag();
+            let mut cum = Mask::new(w.rows, w.cols);
+            let mut loss_total = 0.0;
+            for (c0, c1) in column_blocks(w.cols, cfg.block_size) {
+                let block_mask = match (cfg.method, cfg.sparsity) {
+                    (Method::SM, Sparsity::Unstructured { rate }) => {
+                        select_unstructured_s(w, &diag, c0, c1, rate)
+                    }
+                    (Method::SM, Sparsity::SemiStructured { .. }) => {
+                        select_24_s(w, &diag, c0, c1)
+                    }
+                    (Method::MM, _) => select_24_m(w, &hinv, c0, c1).0,
+                    _ => unreachable!(),
+                };
+                cum.or_with(&block_mask);
+                loss_total = profile("prune.compensate_m", || {
+                    compensate_m(w, &cum, &hinv)
+                });
+            }
+            pred_loss = loss_total;
+            cum
+        }
+    };
+    Ok(LayerPruneResult { mask, pred_loss, elapsed_ms: timer.elapsed_ms() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn setup(n: usize, m: usize, seed: u64) -> (Mat, HessianAccumulator) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::randn(n, m, 1.0, &mut rng);
+        let x = Mat::randn(4 * m, m, 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(m);
+        acc.add_chunk(&x);
+        (w, acc)
+    }
+
+    #[test]
+    fn all_methods_produce_target_sparsity_unstructured() {
+        for method in [Method::Magnitude, Method::Wanda, Method::SS, Method::SM] {
+            let (mut w, acc) = setup(16, 32, 1);
+            let cfg = PruneConfig::new(method, Sparsity::Unstructured { rate: 0.5 });
+            let res = prune_layer(&mut w, &acc, &cfg).unwrap();
+            assert!(
+                (res.mask.sparsity() - 0.5).abs() < 0.02,
+                "{method:?}: {}",
+                res.mask.sparsity()
+            );
+            assert!((w.sparsity() - 0.5).abs() < 0.02, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn all_methods_produce_24_structure() {
+        for method in [Method::Magnitude, Method::Wanda, Method::SS, Method::SM, Method::MS, Method::MM] {
+            let (mut w, acc) = setup(8, 32, 2);
+            let cfg = PruneConfig::new(method, Sparsity::two_four());
+            let res = prune_layer(&mut w, &acc, &cfg).unwrap();
+            assert!(res.mask.check_nm(2, 4), "{method:?}");
+        }
+    }
+
+    #[test]
+    fn m_mask_rejected_for_unstructured() {
+        let (mut w, acc) = setup(4, 16, 3);
+        for method in [Method::MS, Method::MM] {
+            let cfg = PruneConfig::new(method, Sparsity::Unstructured { rate: 0.5 });
+            assert!(prune_layer(&mut w, &acc, &cfg).is_err());
+        }
+    }
+
+    #[test]
+    fn loss_ordering_matches_paper_claims() {
+        // Achieved quadratic loss: SM <= SS and both beat magnitude,
+        // repeated over seeds (the paper's Table 1 ordering at layer level).
+        let mut sm_wins = 0;
+        for seed in 0..6 {
+            let (w0, acc) = setup(12, 48, 100 + seed);
+            let hd = acc.damped(0.01);
+            let mut losses = std::collections::HashMap::new();
+            for method in [Method::Magnitude, Method::SS, Method::SM] {
+                let mut w = w0.clone();
+                let cfg = PruneConfig::new(method, Sparsity::Unstructured { rate: 0.5 })
+                    .with_block(Some(16));
+                prune_layer(&mut w, &acc, &cfg).unwrap();
+                losses.insert(method.name(), quadratic_loss(&w0, &w, &hd));
+            }
+            let (mag, ss, sm) = (
+                losses["magnitude"],
+                losses["SS(sparsegpt)"],
+                losses["SM(ours)"],
+            );
+            assert!(ss < mag, "seed {seed}: SS {ss} vs mag {mag}");
+            assert!(sm < mag, "seed {seed}: SM {sm} vs mag {mag}");
+            if sm <= ss * 1.001 {
+                sm_wins += 1;
+            }
+        }
+        // Masks differ slightly blockwise; require SM to win in most seeds.
+        assert!(sm_wins >= 5, "SM should beat SS nearly always: {sm_wins}/6");
+    }
+
+    #[test]
+    fn two_four_ordering_mm_best_group_metric() {
+        // The Eq. 12 M-mask is optimal in the *group-local* metric (the
+        // paper's per-group simplification; cross-group interactions can
+        // reorder the full loss — Table 1's occasional MS > SS rows).
+        use super::mrp::group_loss_2;
+        for seed in 0..4 {
+            let (w0, acc) = setup(8, 32, 200 + seed);
+            let (_hd, hinv) = acc.finalize(0.01);
+            let diag = hinv.diag();
+            let s_mask = select_24_s(&w0, &diag, 0, 32);
+            let (m_mask, _) = select_24_m(&w0, &hinv, 0, 32);
+            let group_total = |mask: &Mask| -> f64 {
+                let mut total = 0.0;
+                for r in 0..w0.rows {
+                    for g0 in (0..w0.cols).step_by(4) {
+                        let cols: Vec<usize> =
+                            (g0..g0 + 4).filter(|&c| mask.get(r, c)).collect();
+                        total += group_loss_2(
+                            w0[(r, cols[0])] as f64,
+                            w0[(r, cols[1])] as f64,
+                            hinv[(cols[0], cols[0])],
+                            hinv[(cols[0], cols[1])],
+                            hinv[(cols[1], cols[1])],
+                        );
+                    }
+                }
+                total
+            };
+            let (lm, ls) = (group_total(&m_mask), group_total(&s_mask));
+            assert!(lm <= ls * (1.0 + 1e-9), "seed {seed}: {lm} vs {ls}");
+        }
+    }
+
+    #[test]
+    fn dampening_changes_result_smoothly() {
+        let (w0, acc) = setup(6, 24, 5);
+        let hd = acc.damped(0.01);
+        let mut prev = f64::INFINITY;
+        // larger gamma = cruder approximation = (weakly) worse loss, on avg
+        let mut losses = Vec::new();
+        for gamma in [1e-4, 1e-2, 1e0] {
+            let mut w = w0.clone();
+            let cfg =
+                PruneConfig::new(Method::SM, Sparsity::Unstructured { rate: 0.5 }).with_gamma(gamma);
+            prune_layer(&mut w, &acc, &cfg).unwrap();
+            losses.push(quadratic_loss(&w0, &w, &hd));
+        }
+        assert!(losses[0] <= losses[2], "{losses:?}");
+        let _ = prev;
+        prev = losses[0];
+        let _ = prev;
+    }
+
+    #[test]
+    fn method_name_roundtrip() {
+        for m in Method::all() {
+            let s = match m {
+                Method::Magnitude => "magnitude",
+                Method::Wanda => "wanda",
+                Method::SS => "ss",
+                Method::SM => "sm",
+                Method::MS => "ms",
+                Method::MM => "mm",
+            };
+            assert_eq!(Method::from_name(s), Some(m));
+        }
+        assert_eq!(Method::from_name("nope"), None);
+    }
+}

@@ -1,0 +1,373 @@
+//! The paper's contribution: the Multiple Removal Problem solver.
+//!
+//! Mask rules (Sec. 4.2.1):
+//!   S — Eq. (14) diagonal scores  w_ij^2 / (2*Hinv_jj)
+//!   M — Eq. (12) full-interaction group loss, enumerated per N:M group
+//!       (implemented for 2:4; unstructured M-mask is combinatorial and not
+//!        implemented, exactly as the paper states).
+//!
+//! Compensation rule M (Sec. 4.2.2, Eq. 13):
+//!   dw[r, :] = -w[r,P] . inv(Hinv[P,P]) . Hinv[P, :]
+//! computed per row with a cumulative pruned set P. Blockwise processing
+//! (Algorithm 1) re-solves with the union mask; rows already zeroed stay
+//! zero because their rhs entries are zero, so earlier constraints remain
+//! satisfied exactly.
+
+use crate::linalg::solve_spd;
+use crate::tensor::{Mat, MatF64};
+use crate::util::num_threads;
+
+use super::mask::Mask;
+
+/// Eq. (14) score of one weight.
+#[inline]
+pub fn score_s(w: f32, hinv_diag: f64) -> f64 {
+    (w as f64) * (w as f64) / (2.0 * hinv_diag)
+}
+
+/// Eq. (12) loss for pruning {a, b} (global col indices) of row weights,
+/// using the closed-form 2x2 inverse of the Hinv sub-block.
+#[inline]
+pub fn group_loss_2(wa: f64, wb: f64, saa: f64, sab: f64, sbb: f64) -> f64 {
+    let det = saa * sbb - sab * sab;
+    0.5 * (wa * wa * sbb - 2.0 * wa * wb * sab + wb * wb * saa) / det
+}
+
+/// Solution-S unstructured mask for columns [c0, c1): the `rate` fraction
+/// of smallest Eq. (14) scores across the whole block (paper Sec. 4.3.1 —
+/// all blocks share the same pruning rate).
+pub fn select_unstructured_s(
+    w: &Mat,
+    hinv_diag: &[f64],
+    c0: usize,
+    c1: usize,
+    rate: f64,
+) -> Mask {
+    let mut entries: Vec<(f64, u32, u32)> = Vec::with_capacity(w.rows * (c1 - c0));
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for c in c0..c1 {
+            entries.push((score_s(row[c], hinv_diag[c]), r as u32, c as u32));
+        }
+    }
+    let k = ((entries.len() as f64) * rate).round() as usize;
+    let mut mask = Mask::new(w.rows, w.cols);
+    if k == 0 {
+        return mask;
+    }
+    let k = k.min(entries.len());
+    entries.select_nth_unstable_by(k - 1, |a, b| a.0.partial_cmp(&b.0).unwrap());
+    for &(_, r, c) in &entries[..k] {
+        mask.set(r as usize, c as usize, true);
+    }
+    mask
+}
+
+/// Solution-S 2:4 mask for columns [c0, c1): 2 smallest Eq. (14) scores in
+/// every 4-group of every row.
+pub fn select_24_s(w: &Mat, hinv_diag: &[f64], c0: usize, c1: usize) -> Mask {
+    assert_eq!((c1 - c0) % 4, 0, "2:4 block must align to groups of 4");
+    let mut mask = Mask::new(w.rows, w.cols);
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for g0 in (c0..c1).step_by(4) {
+            let mut idx = [0usize, 1, 2, 3];
+            let sc: Vec<f64> =
+                (0..4).map(|i| score_s(row[g0 + i], hinv_diag[g0 + i])).collect();
+            idx.sort_by(|&a, &b| sc[a].partial_cmp(&sc[b]).unwrap());
+            mask.set(r, g0 + idx[0], true);
+            mask.set(r, g0 + idx[1], true);
+        }
+    }
+    mask
+}
+
+/// Solution-M 2:4 mask (Eq. 12, 6-combo enumeration per group). Returns
+/// (mask, total group-metric loss).
+pub fn select_24_m(w: &Mat, hinv: &MatF64, c0: usize, c1: usize) -> (Mask, f64) {
+    assert_eq!((c1 - c0) % 4, 0);
+    const COMBOS: [(usize, usize); 6] = [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)];
+    let mut mask = Mask::new(w.rows, w.cols);
+    let mut total = 0.0;
+    for r in 0..w.rows {
+        let row = w.row(r);
+        for g0 in (c0..c1).step_by(4) {
+            let mut best = f64::INFINITY;
+            let mut best_c = (0usize, 1usize);
+            for &(a, b) in &COMBOS {
+                let (ca, cb) = (g0 + a, g0 + b);
+                let l = group_loss_2(
+                    row[ca] as f64,
+                    row[cb] as f64,
+                    hinv[(ca, ca)],
+                    hinv[(ca, cb)],
+                    hinv[(cb, cb)],
+                );
+                if l < best {
+                    best = l;
+                    best_c = (ca, cb);
+                }
+            }
+            mask.set(r, best_c.0, true);
+            mask.set(r, best_c.1, true);
+            total += best;
+        }
+    }
+    (mask, total)
+}
+
+/// Eq. (13) Solution-M compensation, parallel over rows: for each row,
+/// solve the |P|x|P| SPD system on the Hinv sub-matrix and update the
+/// whole row. Pruned entries end exactly zero. Returns the Eq. (12)
+/// predicted loss total.
+pub fn compensate_m(w: &mut Mat, mask: &Mask, hinv: &MatF64) -> f64 {
+    let (n, m) = (w.rows, w.cols);
+    assert_eq!((mask.rows, mask.cols), (n, m));
+    assert_eq!((hinv.rows, hinv.cols), (m, m));
+    let nt = num_threads().min(n.max(1));
+    let chunk = n.div_ceil(nt);
+    let losses = std::sync::Mutex::new(0.0f64);
+
+    std::thread::scope(|s| {
+        for (ci, wrows) in w.data.chunks_mut(chunk * m).enumerate() {
+            let r0 = ci * chunk;
+            let losses = &losses;
+            s.spawn(move || {
+                let mut local = 0.0f64;
+                let mut frow = vec![0.0f64; m];
+                for (ri, wrow) in wrows.chunks_mut(m).enumerate() {
+                    let r = r0 + ri;
+                    let p = mask.row_indices(r);
+                    if p.is_empty() {
+                        continue;
+                    }
+                    let sub = hinv.sub(&p, &p);
+                    let rhs: Vec<f64> = p.iter().map(|&c| wrow[c] as f64).collect();
+                    let lam = solve_spd(&sub, &rhs)
+                        .expect("Hinv principal submatrix must be SPD");
+                    local += 0.5 * lam.iter().zip(&rhs).map(|(l, r)| l * r).sum::<f64>();
+                    // row update in f64: w_r -= lam @ Hinv[P, :]
+                    for (fi, wv) in frow.iter_mut().zip(wrow.iter()) {
+                        *fi = *wv as f64;
+                    }
+                    for (li, &pi) in lam.iter().zip(&p) {
+                        let hrow = hinv.row(pi);
+                        for (f, &h) in frow.iter_mut().zip(hrow) {
+                            *f -= li * h;
+                        }
+                    }
+                    for (wv, &f) in wrow.iter_mut().zip(frow.iter()) {
+                        *wv = f as f32;
+                    }
+                    for &c in &p {
+                        wrow[c] = 0.0; // exact zeros
+                    }
+                }
+                *losses.lock().unwrap() += local;
+            });
+        }
+    });
+    losses.into_inner().unwrap()
+}
+
+/// Achieved quadratic loss 1/2 sum_rows dw H dw^T (for tests/benches).
+pub fn quadratic_loss(before: &Mat, after: &Mat, h: &MatF64) -> f64 {
+    assert_eq!(before.shape(), after.shape());
+    let m = before.cols;
+    let mut total = 0.0;
+    let mut dw = vec![0.0f64; m];
+    for r in 0..before.rows {
+        let (b, a) = (before.row(r), after.row(r));
+        for j in 0..m {
+            dw[j] = a[j] as f64 - b[j] as f64;
+        }
+        for i in 0..m {
+            if dw[i] == 0.0 {
+                continue;
+            }
+            let hrow = h.row(i);
+            let mut s = 0.0;
+            for j in 0..m {
+                s += hrow[j] * dw[j];
+            }
+            total += dw[i] * s;
+        }
+    }
+    0.5 * total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::inv_spd;
+    use crate::prune::hessian::HessianAccumulator;
+    use crate::util::prop::prop_check_msg;
+    use crate::util::Rng;
+
+    pub(crate) fn setup(n: usize, m: usize, seed: u64) -> (Mat, MatF64, MatF64) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::randn(n, m, 1.0, &mut rng);
+        let x = Mat::randn(4 * m, m, 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(m);
+        acc.add_chunk(&x);
+        let hd = acc.damped(0.01);
+        let hinv = inv_spd(&hd).unwrap();
+        (w, hd, hinv)
+    }
+
+    #[test]
+    fn compensation_constraint_exact() {
+        let (mut w, _hd, hinv) = setup(6, 16, 1);
+        let mask = select_unstructured_s(&w, &hinv.diag(), 0, 16, 0.5);
+        compensate_m(&mut w, &mask, &hinv);
+        for r in 0..6 {
+            for &c in &mask.row_indices(r) {
+                assert_eq!(w[(r, c)], 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn predicted_loss_equals_achieved() {
+        let (w0, hd, hinv) = setup(5, 12, 2);
+        let mut w = w0.clone();
+        let mask = select_unstructured_s(&w, &hinv.diag(), 0, 12, 0.5);
+        let pred = compensate_m(&mut w, &mask, &hinv);
+        let achieved = quadratic_loss(&w0, &w, &hd);
+        assert!(
+            ((pred - achieved) / achieved.max(1e-9)).abs() < 1e-6,
+            "pred {pred} achieved {achieved}"
+        );
+    }
+
+    #[test]
+    fn compensation_beats_plain_zeroing() {
+        let (w0, hd, hinv) = setup(8, 20, 3);
+        let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 20, 0.5);
+        let mut w = w0.clone();
+        let pred = compensate_m(&mut w, &mask, &hinv);
+        // plain zeroing with the SAME mask
+        let mut wz = w0.clone();
+        for r in 0..8 {
+            for &c in &mask.row_indices(r) {
+                wz[(r, c)] = 0.0;
+            }
+        }
+        let zero_loss = quadratic_loss(&w0, &wz, &hd);
+        assert!(pred <= zero_loss * (1.0 + 1e-9), "{pred} vs {zero_loss}");
+    }
+
+    #[test]
+    fn unstructured_rate_respected() {
+        let (w, _, hinv) = setup(16, 32, 4);
+        for rate in [0.25, 0.5, 0.7] {
+            let mask = select_unstructured_s(&w, &hinv.diag(), 0, 32, rate);
+            let expect = (16.0 * 32.0 * rate).round() as usize;
+            assert_eq!(mask.count(), expect, "rate {rate}");
+        }
+    }
+
+    #[test]
+    fn blockwise_selection_local() {
+        let (w, _, hinv) = setup(4, 16, 5);
+        let mask = select_unstructured_s(&w, &hinv.diag(), 8, 16, 0.5);
+        // nothing pruned outside the block
+        for r in 0..4 {
+            for c in 0..8 {
+                assert!(!mask.get(r, c));
+            }
+        }
+        assert_eq!(mask.count(), 16);
+    }
+
+    #[test]
+    fn mask_24_rules_valid() {
+        let (w, _, hinv) = setup(8, 24, 6);
+        let s_mask = select_24_s(&w, &hinv.diag(), 0, 24);
+        assert!(s_mask.check_nm(2, 4));
+        let (m_mask, _) = select_24_m(&w, &hinv, 0, 24);
+        assert!(m_mask.check_nm(2, 4));
+    }
+
+    #[test]
+    fn m_mask_optimal_in_group_metric() {
+        // For every row/group, the Eq. 12 loss of the M-mask choice is <=
+        // the loss of the S-mask choice (both measured by Eq. 12).
+        let (w, _, hinv) = setup(6, 16, 7);
+        let s_mask = select_24_s(&w, &hinv.diag(), 0, 16);
+        let (m_mask, _) = select_24_m(&w, &hinv, 0, 16);
+        let loss_of = |mask: &Mask, r: usize, g0: usize| {
+            let cols: Vec<usize> =
+                (g0..g0 + 4).filter(|&c| mask.get(r, c)).collect();
+            group_loss_2(
+                w[(r, cols[0])] as f64,
+                w[(r, cols[1])] as f64,
+                hinv[(cols[0], cols[0])],
+                hinv[(cols[0], cols[1])],
+                hinv[(cols[1], cols[1])],
+            )
+        };
+        for r in 0..6 {
+            for g in 0..4 {
+                let (lm, ls) = (loss_of(&m_mask, r, g * 4), loss_of(&s_mask, r, g * 4));
+                assert!(lm <= ls * (1.0 + 1e-12), "row {r} group {g}: {lm} vs {ls}");
+            }
+        }
+    }
+
+    #[test]
+    fn cumulative_blockwise_keeps_earlier_zeros() {
+        let (mut w, _, hinv) = setup(4, 16, 8);
+        let d = hinv.diag();
+        let mut cum = Mask::new(4, 16);
+        for (c0, c1) in [(0, 8), (8, 16)] {
+            let mask = select_unstructured_s(&w, &d, c0, c1, 0.5);
+            cum.or_with(&mask);
+            compensate_m(&mut w, &cum, &hinv);
+        }
+        // all pruned positions from BOTH blocks are zero
+        for r in 0..4 {
+            for &c in &cum.row_indices(r) {
+                assert_eq!(w[(r, c)], 0.0, "row {r} col {c}");
+            }
+        }
+        assert_eq!(cum.count(), 32);
+    }
+
+    #[test]
+    fn prop_compensation_optimality_vs_random_feasible() {
+        // MRP solution is optimal among feasible dw: any random feasible
+        // perturbation on top of it cannot reduce the quadratic loss.
+        prop_check_msg(
+            "mrp-kkt-optimality",
+            12,
+            |r| {
+                let n = 2 + r.below(3);
+                let m = 8 + 4 * r.below(3);
+                (setup(n, m, r.next_u64()), r.next_u64())
+            },
+            |((w0, hd, hinv), seed)| {
+                let mut w = w0.clone();
+                let mask = select_unstructured_s(&w, &hinv.diag(), 0, w.cols, 0.5);
+                let pred = compensate_m(&mut w, &mask, &hinv);
+                let mut rng = Rng::new(*seed);
+                for _ in 0..5 {
+                    // random feasible perturbation (zero at pruned entries)
+                    let mut w2 = w.clone();
+                    for r in 0..w2.rows {
+                        for c in 0..w2.cols {
+                            if !mask.get(r, c) {
+                                w2[(r, c)] += rng.normal_f32(0.0, 0.05);
+                            }
+                        }
+                    }
+                    let loss2 = quadratic_loss(w0, &w2, hd);
+                    if loss2 < pred * (1.0 - 1e-9) {
+                        return Err(format!("found better feasible point: {loss2} < {pred}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

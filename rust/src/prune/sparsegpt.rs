@@ -1,0 +1,230 @@
+//! SparseGPT (Frantar & Alistarh 2023) — the paper's primary baseline and
+//! its Solution-S compensation rule.
+//!
+//! Faithful sequential sweep: columns are processed left to right with the
+//! upper Cholesky factor U of Hinv (Hinv = U^T U); everything left of the
+//! cursor is frozen (the paper's Sec. 2.3.2 critique). The per-column OBS
+//! update with freezing is
+//!     w[:, j:] -= (w[:,j] . mask_j / U_jj)  (x)  U[j, j:]
+//! which zeroes column j's pruned entries exactly and compensates only
+//! columns to the right.
+
+use crate::linalg::cholesky_upper;
+use crate::tensor::{Mat, MatF64};
+use crate::util::num_threads;
+
+use super::mask::{column_blocks, Mask, Sparsity};
+use super::mrp::{select_24_m, select_24_s, select_unstructured_s};
+
+/// Sequential Solution-S compensation for a *given* mask (used by the SS
+/// and MS method variants). Sweeps all columns once.
+pub fn compensate_sequential(w: &mut Mat, mask: &Mask, u: &MatF64) {
+    let (n, m) = (w.rows, w.cols);
+    assert_eq!((u.rows, u.cols), (m, m));
+    // Parallel over row-chunks: each row's sweep is independent.
+    let nt = num_threads().min(n.max(1));
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, wrows) in w.data.chunks_mut(chunk * m).enumerate() {
+            let r0 = ci * chunk;
+            s.spawn(move || {
+                let mut frow = vec![0.0f64; m];
+                for (ri, wrow) in wrows.chunks_mut(m).enumerate() {
+                    let r = r0 + ri;
+                    for (f, &v) in frow.iter_mut().zip(wrow.iter()) {
+                        *f = v as f64;
+                    }
+                    for j in 0..m {
+                        if !mask.get(r, j) {
+                            continue;
+                        }
+                        let urow = u.row(j);
+                        let err = frow[j] / urow[j];
+                        for c in j..m {
+                            frow[c] -= err * urow[c];
+                        }
+                        frow[j] = 0.0; // exact zero
+                    }
+                    for (v, &f) in wrow.iter_mut().zip(frow.iter()) {
+                        *v = f as f32;
+                    }
+                }
+            });
+        }
+    });
+}
+
+/// Full SparseGPT-style pruning of one layer: blockwise mask selection
+/// (Solution S scores on the *current* weights) + sequential compensation.
+/// `m_mask_24` switches the 2:4 mask rule to Eq. 12 (the paper's MS).
+pub fn sparsegpt_prune(
+    w: &mut Mat,
+    hinv: &MatF64,
+    sparsity: Sparsity,
+    block_size: Option<usize>,
+    m_mask_24: bool,
+) -> Mask {
+    let u = cholesky_upper(hinv).expect("Hinv must be SPD");
+    let diag = hinv.diag();
+    let mut cum = Mask::new(w.rows, w.cols);
+    for (c0, c1) in column_blocks(w.cols, block_size) {
+        let mask = match sparsity {
+            Sparsity::Unstructured { rate } => {
+                select_unstructured_s(w, &diag, c0, c1, rate)
+            }
+            Sparsity::SemiStructured { n: 2, m: 4 } => {
+                if m_mask_24 {
+                    select_24_m(w, hinv, c0, c1).0
+                } else {
+                    select_24_s(w, &diag, c0, c1)
+                }
+            }
+            Sparsity::SemiStructured { .. } => {
+                unimplemented!("only 2:4 semi-structured wired up")
+            }
+        };
+        // Sweep only this block's columns (they are the newly pruned set);
+        // the update itself reaches all columns to the right.
+        compensate_sequential_range(w, &mask, &u, c0, c1);
+        cum.or_with(&mask);
+    }
+    cum
+}
+
+/// Like `compensate_sequential` but only sweeps columns [c0, c1).
+pub fn compensate_sequential_range(w: &mut Mat, mask: &Mask, u: &MatF64, c0: usize, c1: usize) {
+    let (n, m) = (w.rows, w.cols);
+    let nt = num_threads().min(n.max(1));
+    let chunk = n.div_ceil(nt);
+    std::thread::scope(|s| {
+        for (ci, wrows) in w.data.chunks_mut(chunk * m).enumerate() {
+            let r0 = ci * chunk;
+            s.spawn(move || {
+                let mut frow = vec![0.0f64; m];
+                for (ri, wrow) in wrows.chunks_mut(m).enumerate() {
+                    let r = r0 + ri;
+                    for (f, &v) in frow.iter_mut().zip(wrow.iter()) {
+                        *f = v as f64;
+                    }
+                    for j in c0..c1 {
+                        if !mask.get(r, j) {
+                            continue;
+                        }
+                        let urow = u.row(j);
+                        let err = frow[j] / urow[j];
+                        for c in j..m {
+                            frow[c] -= err * urow[c];
+                        }
+                        frow[j] = 0.0;
+                    }
+                    for (v, &f) in wrow.iter_mut().zip(frow.iter()) {
+                        *v = f as f32;
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::inv_spd;
+    use crate::prune::hessian::HessianAccumulator;
+    use crate::prune::mrp::{compensate_m, quadratic_loss, select_unstructured_s};
+    use crate::tensor::Mat;
+    use crate::util::Rng;
+
+    fn setup(n: usize, m: usize, seed: u64) -> (Mat, MatF64, MatF64) {
+        let mut rng = Rng::new(seed);
+        let w = Mat::randn(n, m, 1.0, &mut rng);
+        let x = Mat::randn(4 * m, m, 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(m);
+        acc.add_chunk(&x);
+        let hd = acc.damped(0.01);
+        let hinv = inv_spd(&hd).unwrap();
+        (w, hd, hinv)
+    }
+
+    #[test]
+    fn pruned_entries_exactly_zero() {
+        let (mut w, _, hinv) = setup(6, 16, 1);
+        let mask = sparsegpt_prune(&mut w, &hinv, Sparsity::Unstructured { rate: 0.5 }, Some(8), false);
+        for r in 0..6 {
+            for &c in &mask.row_indices(r) {
+                assert_eq!(w[(r, c)], 0.0);
+            }
+        }
+        assert!((mask.sparsity() - 0.5).abs() < 0.05);
+    }
+
+    #[test]
+    fn sequential_beats_plain_zeroing() {
+        let (w0, hd, hinv) = setup(8, 20, 2);
+        let u = cholesky_upper(&hinv).unwrap();
+        let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 20, 0.5);
+        let mut w = w0.clone();
+        compensate_sequential(&mut w, &mask, &u);
+        let seq_loss = quadratic_loss(&w0, &w, &hd);
+        let mut wz = w0.clone();
+        for r in 0..8 {
+            for &c in &mask.row_indices(r) {
+                wz[(r, c)] = 0.0;
+            }
+        }
+        let zero_loss = quadratic_loss(&w0, &wz, &hd);
+        assert!(seq_loss <= zero_loss * (1.0 + 1e-9), "{seq_loss} vs {zero_loss}");
+    }
+
+    #[test]
+    fn mrp_beats_sequential_same_mask() {
+        // The paper's Sec. 4.4 claim, on the native implementations.
+        for seed in 0..5 {
+            let (w0, hd, hinv) = setup(8, 24, 100 + seed);
+            let u = cholesky_upper(&hinv).unwrap();
+            let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 24, 0.5);
+            let mut ws = w0.clone();
+            compensate_sequential(&mut ws, &mask, &u);
+            let mut wm = w0.clone();
+            compensate_m(&mut wm, &mask, &hinv);
+            let ls = quadratic_loss(&w0, &ws, &hd);
+            let lm = quadratic_loss(&w0, &wm, &hd);
+            assert!(lm <= ls * (1.0 + 1e-9), "seed {seed}: MRP {lm} vs seq {ls}");
+        }
+    }
+
+    #[test]
+    fn two_four_structure_preserved() {
+        let (mut w, _, hinv) = setup(8, 32, 3);
+        let mask = sparsegpt_prune(&mut w, &hinv, Sparsity::two_four(), None, false);
+        assert!(mask.check_nm(2, 4));
+        // matrix itself is 2:4: count zeros per group
+        for r in 0..8 {
+            for g in 0..8 {
+                let zeros = (0..4).filter(|i| w[(r, g * 4 + i)] == 0.0).count();
+                assert!(zeros >= 2, "row {r} group {g}");
+            }
+        }
+    }
+
+    #[test]
+    fn ms_variant_uses_m_mask() {
+        let (mut w_s, _, hinv) = setup(8, 32, 4);
+        let mut w_m = w_s.clone();
+        let mask_s = sparsegpt_prune(&mut w_s, &hinv, Sparsity::two_four(), None, false);
+        let mask_m = sparsegpt_prune(&mut w_m, &hinv, Sparsity::two_four(), None, true);
+        assert!(mask_m.check_nm(2, 4));
+        assert_ne!(mask_s, mask_m, "M-mask should differ from S-mask");
+    }
+
+    #[test]
+    fn blockwise_equals_global_when_single_block() {
+        let (w0, _, hinv) = setup(4, 16, 5);
+        let mut wa = w0.clone();
+        let mut wb = w0.clone();
+        let ma = sparsegpt_prune(&mut wa, &hinv, Sparsity::Unstructured { rate: 0.5 }, None, false);
+        let mb = sparsegpt_prune(&mut wb, &hinv, Sparsity::Unstructured { rate: 0.5 }, Some(16), false);
+        assert_eq!(ma, mb);
+        assert!(wa.max_abs_diff(&wb) < 1e-6);
+    }
+}

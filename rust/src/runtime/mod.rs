@@ -1,0 +1,261 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` + manifest)
+//! produced by `python/compile/aot.py` and executes them on the CPU PJRT
+//! client. This is the only place the L3 coordinator touches XLA; Python
+//! never runs at request time.
+//!
+//! Executables are compiled lazily and memoized per artifact file. Shapes
+//! not covered by the manifest fall back to the native Rust solvers (the
+//! coordinator decides; see `Engine`).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::json::{self, Json};
+use crate::tensor::Mat;
+
+/// Which implementation the coordinator uses for the pruning math.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Engine {
+    /// Pure-Rust solvers (any shape).
+    Native,
+    /// AOT HLO executables via PJRT where a matching artifact exists,
+    /// native fallback otherwise.
+    Hlo,
+}
+
+impl Engine {
+    pub fn from_name(s: &str) -> Option<Engine> {
+        match s.to_ascii_lowercase().as_str() {
+            "native" => Some(Engine::Native),
+            "hlo" | "pjrt" | "xla" => Some(Engine::Hlo),
+            _ => None,
+        }
+    }
+}
+
+/// One manifest entry (mirrors aot.py's shape_sig output).
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: String,
+    pub n: usize,
+    pub m: usize,
+    pub t: usize,
+    pub k: usize,
+}
+
+pub struct Runtime {
+    dir: PathBuf,
+    client: xla::PjRtClient,
+    entries: Vec<ArtifactEntry>,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Load the manifest and connect the CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
+        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        if root.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
+            bail!("unsupported manifest format");
+        }
+        let mut entries = Vec::new();
+        for e in root.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+            entries.push(ArtifactEntry {
+                name: e.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+                file: e.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+                n: e.get("n").and_then(Json::as_usize).unwrap_or(0),
+                m: e.get("m").and_then(Json::as_usize).unwrap_or(0),
+                t: e.get("t").and_then(Json::as_usize).unwrap_or(0),
+                k: e.get("k").and_then(Json::as_usize).unwrap_or(0),
+            });
+        }
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { dir: dir.to_path_buf(), client, entries, cache: Mutex::new(HashMap::new()) })
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Find the artifact for a graph name + layer shape.
+    pub fn find(&self, name: &str, n: usize, m: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name && e.n == n && e.m == m)
+    }
+
+    /// Find by name + input-width only (hessian graphs ignore n).
+    pub fn find_m(&self, name: &str, m: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name && e.m == m)
+    }
+
+    fn executable(
+        &self,
+        entry: &ArtifactEntry,
+    ) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        let mut cache = self.cache.lock().unwrap();
+        if let Some(exe) = cache.get(&entry.file) {
+            return Ok(exe.clone());
+        }
+        let path = self.dir.join(&entry.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .map_err(|e| anyhow!("parse hlo {}: {e:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {}: {e:?}", entry.file))?;
+        let exe = std::sync::Arc::new(exe);
+        cache.insert(entry.file.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact on f32 matrix inputs (+ optional trailing f32
+    /// scalars), returning the tuple outputs as matrices with the given
+    /// row counts (cols inferred).
+    pub fn exec(
+        &self,
+        entry: &ArtifactEntry,
+        mats: &[&Mat],
+        scalars: &[f32],
+        out_rows: &[usize],
+    ) -> Result<Vec<Mat>> {
+        let exe = self.executable(entry)?;
+        let mut inputs = Vec::with_capacity(mats.len() + scalars.len());
+        for m in mats {
+            let lit = xla::Literal::vec1(&m.data)
+                .reshape(&[m.rows as i64, m.cols as i64])
+                .map_err(|e| anyhow!("reshape literal: {e:?}"))?;
+            inputs.push(lit);
+        }
+        for &s in scalars {
+            inputs.push(xla::Literal::scalar(s));
+        }
+        let result = exe
+            .execute::<xla::Literal>(&inputs)
+            .map_err(|e| anyhow!("execute {}: {e:?}", entry.file))?;
+        let first = result
+            .into_iter()
+            .next()
+            .and_then(|d| d.into_iter().next())
+            .context("no output buffer")?;
+        let lit = first
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let parts = lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        let mut out = Vec::with_capacity(parts.len());
+        for (i, p) in parts.into_iter().enumerate() {
+            let data: Vec<f32> = p.to_vec().map_err(|e| anyhow!("to_vec: {e:?}"))?;
+            let rows = out_rows.get(i).copied().unwrap_or(1).max(1);
+            let cols = if data.is_empty() { 0 } else { (data.len() / rows).max(1) };
+            out.push(Mat::from_vec(rows.min(data.len().max(1)), cols, data));
+        }
+        Ok(out)
+    }
+
+    /// Convenience: run a `prune_*` artifact on (w, hinv) -> (pruned w,
+    /// Eq. 12 predicted loss where the graph emits one).
+    pub fn exec_prune(&self, entry: &ArtifactEntry, w: &Mat, hinv: &Mat) -> Result<(Mat, f64)> {
+        let outs = self.exec(entry, &[w, hinv], &[], &[w.rows, 1])?;
+        let w_new = outs.first().context("missing w output")?.clone();
+        if w_new.shape() != w.shape() {
+            bail!("artifact returned shape {:?}, want {:?}", w_new.shape(), w.shape());
+        }
+        let loss = outs.get(1).and_then(|m| m.data.first()).copied().unwrap_or(f32::NAN);
+        Ok((w_new, loss as f64))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn runtime() -> Option<Runtime> {
+        let dir = artifacts_dir();
+        if dir.join("manifest.json").exists() {
+            Some(Runtime::load(&dir).expect("runtime load"))
+        } else {
+            eprintln!("artifacts missing; run `make artifacts` (test skipped)");
+            None
+        }
+    }
+
+    #[test]
+    fn manifest_loads_and_lists_entries() {
+        let Some(rt) = runtime() else { return };
+        assert!(!rt.entries().is_empty());
+        assert!(rt.find("prune_24_sm", 64, 64).is_some());
+        assert!(rt.find("prune_24_sm", 63, 63).is_none());
+        assert_eq!(rt.platform(), "cpu");
+    }
+
+    #[test]
+    fn hessian_update_roundtrip_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let entry = rt.find_m("hessian_update", 64).expect("artifact").clone();
+        let mut rng = crate::util::Rng::new(1);
+        let x = Mat::randn(entry.t, 64, 1.0, &mut rng);
+        let h0 = Mat::zeros(64, 64);
+        let outs = rt.exec(&entry, &[&x, &h0], &[], &[64]).unwrap();
+        let h = &outs[0];
+        let mut acc = crate::prune::HessianAccumulator::new(64);
+        acc.add_chunk(&x);
+        let native = acc.h.to_f32();
+        assert!(h.max_abs_diff(&native) < 1e-1, "{}", h.max_abs_diff(&native));
+    }
+
+    #[test]
+    fn prune_sm_artifact_produces_sparse_rows() {
+        let Some(rt) = runtime() else { return };
+        let entry = rt.find("prune_sm", 64, 64).expect("artifact").clone();
+        let mut rng = crate::util::Rng::new(2);
+        let w = Mat::randn(64, 64, 1.0, &mut rng);
+        let x = Mat::randn(256, 64, 1.0, &mut rng);
+        let mut acc = crate::prune::HessianAccumulator::new(64);
+        acc.add_chunk(&x);
+        let (_hd, hinv) = acc.finalize(0.01);
+        let hinv32 = hinv.to_f32();
+        let (w_new, loss) = rt.exec_prune(&entry, &w, &hinv32).unwrap();
+        for r in 0..64 {
+            let zeros = w_new.row(r).iter().filter(|&&v| v == 0.0).count();
+            assert!(zeros >= 32, "row {r}: {zeros}");
+        }
+        assert!(loss.is_finite() && loss > 0.0);
+    }
+
+    #[test]
+    fn prune_24_artifacts_match_native_structure() {
+        let Some(rt) = runtime() else { return };
+        for name in ["prune_24_sm", "prune_24_mm", "prune_24_ms"] {
+            let entry = rt.find(name, 64, 64).expect("artifact").clone();
+            let mut rng = crate::util::Rng::new(3);
+            let w = Mat::randn(64, 64, 1.0, &mut rng);
+            let x = Mat::randn(256, 64, 1.0, &mut rng);
+            let mut acc = crate::prune::HessianAccumulator::new(64);
+            acc.add_chunk(&x);
+            let (_hd, hinv) = acc.finalize(0.01);
+            let (w_new, _) = rt.exec_prune(&entry, &w, &hinv.to_f32()).unwrap();
+            for r in 0..64 {
+                for g in 0..16 {
+                    let zeros =
+                        (0..4).filter(|&i| w_new[(r, g * 4 + i)] == 0.0).count();
+                    assert!(zeros >= 2, "{name} row {r} group {g}");
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,551 @@
+//! Dense row-major f32 matrices with threaded blocked GEMM, plus an f64
+//! twin used by the second-order pruning math (Hessian work needs the
+//! extra mantissa; see DESIGN.md).
+//!
+//! No BLAS is available offline; `matmul` is a cache-blocked, row-parallel
+//! kernel tuned in the perf pass (EXPERIMENTS.md §Perf).
+
+use crate::util::{num_threads, Rng};
+
+/// Row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn randn(rows: usize, cols: usize, sigma: f32, rng: &mut Rng) -> Mat {
+        let mut m = Mat::zeros(rows, cols);
+        rng.fill_normal(&mut m.data, sigma);
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn t(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// C = A @ B  (threaded over row-chunks of A).
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.rows, "matmul shape {:?}x{:?}", self.shape(), b.shape());
+        let mut out = Mat::zeros(self.rows, b.cols);
+        matmul_into(self, b, &mut out);
+        out
+    }
+
+    /// C = A @ B^T (avoids materializing the transpose).
+    pub fn matmul_tb(&self, b: &Mat) -> Mat {
+        assert_eq!(self.cols, b.cols, "matmul_tb shape {:?}x{:?}", self.shape(), b.shape());
+        let (n, k, m) = (self.rows, self.cols, b.rows);
+        let mut out = Mat::zeros(n, m);
+        let nt = num_threads().min(n.max(1));
+        let chunk = n.div_ceil(nt);
+        let a = &self.data;
+        let bd = &b.data;
+        std::thread::scope(|s| {
+            for (ci, orows) in out.data.chunks_mut(chunk * m).enumerate() {
+                let r0 = ci * chunk;
+                s.spawn(move || {
+                    for (ri, orow) in orows.chunks_mut(m).enumerate() {
+                        let arow = &a[(r0 + ri) * k..(r0 + ri + 1) * k];
+                        for (j, o) in orow.iter_mut().enumerate() {
+                            let brow = &bd[j * k..(j + 1) * k];
+                            *o = dot(arow, brow);
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
+
+    pub fn add_assign(&mut self, b: &Mat) {
+        assert_eq!(self.shape(), b.shape());
+        for (a, &x) in self.data.iter_mut().zip(&b.data) {
+            *a += x;
+        }
+    }
+
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.data.len() as f64
+    }
+
+    /// Columns [c0, c1) as a new matrix (block pruning operates on these).
+    pub fn slice_cols(&self, c0: usize, c1: usize) -> Mat {
+        assert!(c0 <= c1 && c1 <= self.cols);
+        let w = c1 - c0;
+        let mut out = Mat::zeros(self.rows, w);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.row(r)[c0..c1]);
+        }
+        out
+    }
+
+    pub fn set_cols(&mut self, c0: usize, block: &Mat) {
+        assert_eq!(block.rows, self.rows);
+        assert!(c0 + block.cols <= self.cols);
+        for r in 0..self.rows {
+            self.row_mut(r)[c0..c0 + block.cols].copy_from_slice(block.row(r));
+        }
+    }
+
+    pub fn to_f64(&self) -> MatF64 {
+        MatF64 {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn max_abs_diff(&self, b: &Mat) -> f32 {
+        assert_eq!(self.shape(), b.shape());
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f32;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f32 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[inline]
+fn dot(a: &[f32], b: &[f32]) -> f32 {
+    // 4-lane unrolled accumulation: keeps independent dependency chains so
+    // LLVM vectorizes; measured in benches/perf notes.
+    let n = a.len().min(b.len());
+    let mut acc = [0f32; 4];
+    let chunks = n / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// C = A @ B written into `out` (must be zeroed or pre-filled; we add).
+/// i-k-j loop order: each A element broadcasts over a contiguous B row,
+/// so the inner loop is a SIMD-friendly axpy.
+pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (n, k, m) = (a.rows, a.cols, b.cols);
+    assert_eq!(out.shape(), (n, m));
+    let nt = num_threads().min(n.max(1));
+    let chunk = n.div_ceil(nt);
+    let ad = &a.data;
+    let bd = &b.data;
+    std::thread::scope(|s| {
+        for (ci, orows) in out.data.chunks_mut(chunk * m).enumerate() {
+            let r0 = ci * chunk;
+            s.spawn(move || {
+                for (ri, orow) in orows.chunks_mut(m).enumerate() {
+                    let arow = &ad[(r0 + ri) * k..(r0 + ri + 1) * k];
+                    for (kk, &av) in arow.iter().enumerate() {
+                        if av == 0.0 {
+                            continue; // pruned-weight fast path
+                        }
+                        let brow = &bd[kk * m..(kk + 1) * m];
+                        axpy(av, brow, orow);
+                    }
+                }
+            });
+        }
+    });
+}
+
+#[inline]
+fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    for (yi, &xi) in y.iter_mut().zip(x) {
+        *yi += a * xi;
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f64 twin (pruning math)
+// ---------------------------------------------------------------------------
+
+/// Row-major f64 matrix for second-order computations.
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatF64 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl MatF64 {
+    pub fn zeros(rows: usize, cols: usize) -> MatF64 {
+        MatF64 { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn eye(n: usize) -> MatF64 {
+        let mut m = MatF64::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn shape(&self) -> (usize, usize) {
+        (self.rows, self.cols)
+    }
+
+    pub fn to_f32(&self) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x as f32).collect(),
+        }
+    }
+
+    pub fn diag(&self) -> Vec<f64> {
+        (0..self.rows.min(self.cols)).map(|i| self[(i, i)]).collect()
+    }
+
+    /// Symmetric rank-T update: self += 2 * X^T X for X:(t, m) f32 rows.
+    /// This is the Hessian accumulation hot path (threaded over columns).
+    ///
+    /// §Perf iteration 1 (EXPERIMENTS.md): accumulate only the lower
+    /// triangle (row i touches columns 0..=i) and mirror once at the end —
+    /// halves the FLOPs vs the naive full-matrix update. Threads are given
+    /// interleaved rows (stride = nt) so the triangular work stays
+    /// balanced across the pool.
+    pub fn syrk_add_2xtx(&mut self, x_rows: &[&[f32]]) {
+        let m = self.cols;
+        assert_eq!(self.rows, m);
+        let nt = num_threads().min(m.max(1));
+        let data = &mut self.data;
+        // Interleaved row ownership via unsafe-free trick: each worker
+        // owns rows where (row % nt == worker); rows are disjoint slices,
+        // carved out of one mutable pass.
+        let base = data.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            for worker in 0..nt {
+                s.spawn(move || {
+                    let mut i = worker;
+                    while i < m {
+                        // SAFETY: rows are disjoint across workers
+                        // (i % nt == worker) and live for the scope.
+                        let hrow: &mut [f64] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (base as *mut f64).add(i * m),
+                                i + 1,
+                            )
+                        };
+                        for xr in x_rows {
+                            let xi = 2.0 * xr[i] as f64;
+                            if xi == 0.0 {
+                                continue;
+                            }
+                            for (j, h) in hrow.iter_mut().enumerate() {
+                                *h += xi * xr[j] as f64;
+                            }
+                        }
+                        i += nt;
+                    }
+                });
+            }
+        });
+        // mirror the triangle
+        for i in 0..m {
+            for j in i + 1..m {
+                self.data[i * m + j] = self.data[j * m + i];
+            }
+        }
+    }
+
+    /// f64-input variant of `syrk_add_2xtx` (SSPerf iteration 2).
+    pub fn syrk_add_2xtx_f64(&mut self, x_rows: &[Vec<f64>]) {
+        let m = self.cols;
+        assert_eq!(self.rows, m);
+        let nt = num_threads().min(m.max(1));
+        let base = self.data.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            for worker in 0..nt {
+                s.spawn(move || {
+                    let mut i = worker;
+                    while i < m {
+                        // SAFETY: rows disjoint across workers (i % nt).
+                        let hrow: &mut [f64] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (base as *mut f64).add(i * m),
+                                i + 1,
+                            )
+                        };
+                        for xr in x_rows {
+                            let xi = 2.0 * xr[i];
+                            if xi == 0.0 {
+                                continue;
+                            }
+                            for (h, &xj) in hrow.iter_mut().zip(xr.iter()) {
+                                *h += xi * xj;
+                            }
+                        }
+                        i += nt;
+                    }
+                });
+            }
+        });
+        for i in 0..m {
+            for j in i + 1..m {
+                self.data[i * m + j] = self.data[j * m + i];
+            }
+        }
+    }
+
+    pub fn sub(&self, rows: &[usize], cols: &[usize]) -> MatF64 {
+        let mut out = MatF64::zeros(rows.len(), cols.len());
+        for (i, &r) in rows.iter().enumerate() {
+            for (j, &c) in cols.iter().enumerate() {
+                out[(i, j)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    pub fn max_abs_diff(&self, b: &MatF64) -> f64 {
+        assert_eq!(self.shape(), b.shape());
+        self.data
+            .iter()
+            .zip(&b.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for MatF64 {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for MatF64 {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::prop_check;
+
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for j in 0..b.cols {
+                let mut s = 0f64;
+                for k in 0..a.cols {
+                    s += a[(i, k)] as f64 * b[(k, j)] as f64;
+                }
+                c[(i, j)] = s as f32;
+            }
+        }
+        c
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut r = Rng::new(1);
+        let a = Mat::randn(7, 5, 1.0, &mut r);
+        assert_eq!(a.matmul(&Mat::eye(5)), a);
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut r = Rng::new(2);
+        for &(n, k, m) in &[(3, 4, 5), (16, 16, 16), (33, 17, 9), (1, 64, 1)] {
+            let a = Mat::randn(n, k, 1.0, &mut r);
+            let b = Mat::randn(k, m, 1.0, &mut r);
+            assert!(a.matmul(&b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_tb_matches_transpose() {
+        let mut r = Rng::new(3);
+        let a = Mat::randn(9, 12, 1.0, &mut r);
+        let b = Mat::randn(7, 12, 1.0, &mut r);
+        assert!(a.matmul_tb(&b).max_abs_diff(&a.matmul(&b.t())) < 1e-4);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut r = Rng::new(4);
+        let a = Mat::randn(6, 11, 1.0, &mut r);
+        assert_eq!(a.t().t(), a);
+    }
+
+    #[test]
+    fn slice_set_cols_roundtrip() {
+        let mut r = Rng::new(5);
+        let a = Mat::randn(5, 10, 1.0, &mut r);
+        let block = a.slice_cols(3, 7);
+        assert_eq!(block.shape(), (5, 4));
+        let mut b = Mat::zeros(5, 10);
+        b.set_cols(3, &block);
+        assert_eq!(b.slice_cols(3, 7), block);
+        assert_eq!(b[(0, 0)], 0.0);
+    }
+
+    #[test]
+    fn syrk_matches_explicit() {
+        let mut r = Rng::new(6);
+        let x = Mat::randn(20, 8, 1.0, &mut r);
+        let mut h = MatF64::zeros(8, 8);
+        let rows: Vec<&[f32]> = (0..20).map(|i| x.row(i)).collect();
+        h.syrk_add_2xtx(&rows);
+        let explicit = x.t().matmul(&x); // X^T X in f32
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!(
+                    (h[(i, j)] - 2.0 * explicit[(i, j)] as f64).abs() < 1e-2,
+                    "({i},{j})"
+                );
+            }
+        }
+        // symmetry
+        for i in 0..8 {
+            for j in 0..8 {
+                assert!((h[(i, j)] - h[(j, i)]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn sparsity_and_nnz() {
+        let mut m = Mat::zeros(4, 4);
+        m[(0, 0)] = 1.0;
+        m[(3, 3)] = -2.0;
+        assert_eq!(m.nnz(), 2);
+        assert!((m.sparsity() - 14.0 / 16.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn prop_matmul_linear_in_a() {
+        prop_check(
+            "matmul-linearity",
+            16,
+            |r| {
+                let n = r.range(1, 12);
+                let k = r.range(1, 12);
+                let m = r.range(1, 12);
+                let a = Mat::randn(n, k, 1.0, r);
+                let b = Mat::randn(k, m, 1.0, r);
+                (a, b)
+            },
+            |(a, b)| {
+                let mut a2 = a.clone();
+                a2.scale(2.0);
+                let mut lhs = a.matmul(b);
+                lhs.scale(2.0);
+                a2.matmul(b).max_abs_diff(&lhs) < 1e-3
+            },
+        );
+    }
+
+    #[test]
+    fn prop_submatrix_consistent() {
+        prop_check(
+            "f64-submatrix",
+            16,
+            |r| {
+                let n = r.range(2, 10);
+                let mut m = MatF64::zeros(n, n);
+                for v in m.data.iter_mut() {
+                    *v = r.normal();
+                }
+                let i = r.below(n);
+                let j = r.below(n);
+                (m, i, j)
+            },
+            |(m, i, j)| {
+                let s = m.sub(&[*i], &[*j]);
+                s[(0, 0)] == m[(*i, *j)]
+            },
+        );
+    }
+}

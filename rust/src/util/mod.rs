@@ -1,0 +1,24 @@
+//! Shared utilities: PRNG, statistics, timing, property testing.
+
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod time;
+
+pub use rng::Rng;
+pub use stats::{Quantiles, Welford};
+pub use time::{profile, profile_report, profile_reset, Timer};
+
+/// Number of worker threads used by threaded kernels (half the cores,
+/// overridable via APT_THREADS).
+pub fn num_threads() -> usize {
+    static N: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *N.get_or_init(|| {
+        if let Ok(v) = std::env::var("APT_THREADS") {
+            if let Ok(n) = v.parse::<usize>() {
+                return n.max(1);
+            }
+        }
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+    })
+}

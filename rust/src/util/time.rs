@@ -1,0 +1,82 @@
+//! Wall-clock timers and a tiny scoped-section profiler for the perf pass.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// RAII stopwatch.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed().as_secs_f64() * 1e3
+    }
+}
+
+/// Global named-section accumulator: `profile("hessian", || ...)`.
+/// Dumped by `profile_report()` at the end of pipeline runs.
+static SECTIONS: Mutex<BTreeMap<&'static str, (u64, Duration)>> = Mutex::new(BTreeMap::new());
+
+pub fn profile<T>(name: &'static str, f: impl FnOnce() -> T) -> T {
+    let t = Instant::now();
+    let out = f();
+    let dt = t.elapsed();
+    let mut map = SECTIONS.lock().unwrap();
+    let e = map.entry(name).or_insert((0, Duration::ZERO));
+    e.0 += 1;
+    e.1 += dt;
+    out
+}
+
+/// Formatted per-section totals (count, total ms, mean ms), sorted by total.
+pub fn profile_report() -> String {
+    let map = SECTIONS.lock().unwrap();
+    let mut rows: Vec<_> = map.iter().map(|(k, v)| (*k, v.0, v.1)).collect();
+    rows.sort_by(|a, b| b.2.cmp(&a.2));
+    let mut s = String::from("section                          calls   total_ms    mean_ms\n");
+    for (name, calls, total) in rows {
+        let tms = total.as_secs_f64() * 1e3;
+        s.push_str(&format!(
+            "{name:<32} {calls:>5} {tms:>10.2} {:>10.3}\n",
+            tms / calls.max(1) as f64
+        ));
+    }
+    s
+}
+
+pub fn profile_reset() {
+    SECTIONS.lock().unwrap().clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_measures_something() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.elapsed_ms() >= 4.0);
+    }
+
+    #[test]
+    fn profile_accumulates() {
+        profile_reset();
+        for _ in 0..3 {
+            profile("unit-test-section", || std::thread::sleep(Duration::from_millis(1)));
+        }
+        let rep = profile_report();
+        assert!(rep.contains("unit-test-section"), "{rep}");
+        assert!(rep.contains("    3"), "{rep}");
+    }
+}

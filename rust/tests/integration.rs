@@ -1,0 +1,186 @@
+//! Integration tests across the whole stack: pipeline end-to-end, engine
+//! parity (native vs AOT/PJRT), checkpoint round-trips, sparse packing of
+//! pipeline output, and failure injection.
+
+use apt::coordinator::{prune_model, PipelineConfig};
+use apt::data::{CorpusGen, Profile};
+use apt::eval::perplexity;
+use apt::model::{train, LanguageModel, TrainConfig, Transformer, TransformerConfig};
+use apt::prune::{Method, PruneConfig, Sparsity};
+use apt::runtime::{Engine, Runtime};
+use apt::sparse::{Csr, Packed24};
+use apt::util::Rng;
+
+fn trained_model(gen: &CorpusGen, d: usize, layers: usize, steps: usize) -> Transformer {
+    let vocab = gen.tokenizer.vocab_size();
+    let mut model = Transformer::init(
+        TransformerConfig {
+            vocab,
+            d_model: d,
+            n_layers: layers,
+            n_heads: 2,
+            d_ff: 2 * d,
+            max_seq: 64,
+        },
+        &mut Rng::new(7),
+    );
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    train(
+        &mut model,
+        &data,
+        &TrainConfig { steps, batch: 4, seq_len: 32, log_every: steps, ..Default::default() },
+    );
+    model
+}
+
+#[test]
+fn full_stack_prune_then_eval_then_pack() {
+    let gen = CorpusGen::new(60, 2, 31);
+    let model = trained_model(&gen, 32, 2, 60);
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    let calib = data.sample_calibration(8, 32, &mut Rng::new(2));
+
+    let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
+    let cfg = PipelineConfig::new(PruneConfig::new(Method::SM, Sparsity::two_four()));
+    let report = prune_model(&mut pruned, &calib, &cfg, None).unwrap();
+    assert_eq!(report.linears.len(), 14);
+    assert!((report.overall_sparsity() - 0.5).abs() < 0.01);
+
+    // every pruned linear must pack into the hardware 2:4 format
+    for b in 0..2 {
+        for name in ["wq", "wk", "wv", "wo", "w1", "w2", "w3"] {
+            let w = pruned.weight(b, name);
+            let packed = Packed24::from_dense(w)
+                .unwrap_or_else(|e| panic!("block {b} {name}: {e}"));
+            assert_eq!(&packed.to_dense(), w);
+        }
+    }
+
+    // eval still runs and returns finite ppl
+    let eval_data = gen.generate(Profile::Wt2Like, 2_048, 3);
+    let ppl = perplexity(&pruned, &eval_data, 64);
+    assert!(ppl.is_finite() && ppl > 1.0);
+}
+
+#[test]
+fn engine_parity_native_vs_hlo() {
+    // When artifacts exist, the HLO engine must produce a valid 2:4 model
+    // with quality close to native (same math, f32 vs f64 accumulation).
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("artifacts missing; skipping parity test");
+        return;
+    }
+    let rt = Runtime::load(dir).unwrap();
+    let gen = CorpusGen::new(60, 2, 32);
+    // d=128 so the (128,128)/(256,128)/(128,256) artifacts cover all linears
+    let model = trained_model(&gen, 128, 1, 30);
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    let calib = data.sample_calibration(8, 32, &mut Rng::new(4));
+    let eval_data = gen.generate(Profile::Wt2Like, 2_048, 5);
+
+    let run = |engine: Engine| -> (f64, f64) {
+        let mut m = Transformer { cfg: model.cfg, params: model.params.clone() };
+        let cfg = PipelineConfig::new(PruneConfig::new(Method::SM, Sparsity::two_four()))
+            .with_engine(engine);
+        let rep = prune_model(&mut m, &calib, &cfg, Some(&rt)).unwrap();
+        (perplexity(&m, &eval_data, 64), rep.hlo_fraction())
+    };
+    let (ppl_native, frac_native) = run(Engine::Native);
+    let (ppl_hlo, frac_hlo) = run(Engine::Hlo);
+    assert_eq!(frac_native, 0.0);
+    assert!(frac_hlo > 0.9, "hlo engine should cover the layers: {frac_hlo}");
+    let rel = (ppl_hlo - ppl_native).abs() / ppl_native;
+    assert!(rel < 0.05, "native {ppl_native} vs hlo {ppl_hlo}");
+}
+
+#[test]
+fn pruned_checkpoint_roundtrip() {
+    let gen = CorpusGen::new(60, 2, 33);
+    let model = trained_model(&gen, 32, 2, 20);
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    let calib = data.sample_calibration(4, 32, &mut Rng::new(6));
+    let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
+    let cfg = PipelineConfig::new(PruneConfig::new(
+        Method::SS,
+        Sparsity::Unstructured { rate: 0.7 },
+    ));
+    prune_model(&mut pruned, &calib, &cfg, None).unwrap();
+
+    let dir = std::env::temp_dir().join("apt_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("pruned.ats");
+    pruned.save(&path).unwrap();
+    let loaded = Transformer::load(pruned.cfg, &path).unwrap();
+    // sparsity and behaviour survive the round-trip exactly
+    for name in loaded.params.names() {
+        assert_eq!(loaded.params.get(name).unwrap(), pruned.params.get(name).unwrap());
+    }
+    let toks: Vec<u32> = (0..32).map(|i| (i % 50) as u32).collect();
+    assert_eq!(
+        pruned.forward_loss(&toks, (1, 32)),
+        loaded.forward_loss(&toks, (1, 32))
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn csr_fast_path_matches_dense_forward() {
+    let gen = CorpusGen::new(60, 2, 34);
+    let model = trained_model(&gen, 32, 1, 20);
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    let calib = data.sample_calibration(4, 32, &mut Rng::new(8));
+    let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
+    let cfg = PipelineConfig::new(PruneConfig::new(
+        Method::SM,
+        Sparsity::Unstructured { rate: 0.8 },
+    ));
+    prune_model(&mut pruned, &calib, &cfg, None).unwrap();
+
+    let w = pruned.weight(0, "w1");
+    let csr = Csr::from_dense(w);
+    let x = apt::tensor::Mat::randn(8, w.cols, 1.0, &mut Rng::new(9));
+    let dense = x.matmul_tb(w);
+    let sparse = csr.matmul_tb(&x);
+    assert!(dense.max_abs_diff(&sparse) < 1e-4);
+    assert!(csr.sparsity() > 0.75);
+}
+
+#[test]
+fn failure_injection_bad_calibration() {
+    // Degenerate calibration (constant tokens -> rank-1 activations) must
+    // not crash: dampening escalation handles the singular Hessian.
+    let gen = CorpusGen::new(60, 2, 35);
+    let model = trained_model(&gen, 32, 1, 10);
+    let calib: Vec<Vec<u32>> = (0..4).map(|_| vec![5u32; 32]).collect();
+    let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
+    let cfg = PipelineConfig::new(PruneConfig::new(
+        Method::SM,
+        Sparsity::Unstructured { rate: 0.5 },
+    ));
+    let report = prune_model(&mut pruned, &calib, &cfg, None).unwrap();
+    assert!((report.overall_sparsity() - 0.5).abs() < 0.03);
+    for l in &report.linears {
+        assert!(l.pred_loss.is_finite());
+    }
+}
+
+#[test]
+fn mismatched_runtime_shapes_fall_back_to_native() {
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return;
+    }
+    let rt = Runtime::load(dir).unwrap();
+    let gen = CorpusGen::new(60, 2, 36);
+    // d=40: no artifact covers these shapes -> native fallback everywhere
+    let model = trained_model(&gen, 40, 1, 10);
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    let calib = data.sample_calibration(4, 32, &mut Rng::new(10));
+    let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
+    let cfg = PipelineConfig::new(PruneConfig::new(Method::SM, Sparsity::two_four()))
+        .with_engine(Engine::Hlo);
+    let report = prune_model(&mut pruned, &calib, &cfg, Some(&rt)).unwrap();
+    assert_eq!(report.hlo_fraction(), 0.0);
+    assert!((report.overall_sparsity() - 0.5).abs() < 0.02);
+}
