@@ -1,35 +1,153 @@
 //! Perf microbenchmarks for the hot paths (criterion is unavailable
 //! offline; this is a hand-rolled warmup+repeat harness with median/p90).
-//! Used by the EXPERIMENTS.md §Perf iteration log.
+//! Used by the PERF.md iteration log.
 //!
-//!     cargo bench --bench perf [filter]
+//!     cargo bench --bench perf [filter]        # or scripts/bench.sh
+//!
+//! Every run writes `BENCH_perf.json` at the repo root (median/p90 per
+//! kernel + derived speedups + one end-to-end pipeline report) and prints
+//! a delta table against the previous JSON if one exists. A filtered run
+//! only re-measures matching kernels and keeps the previous numbers for
+//! the rest.
 
-use apt::linalg::inv_spd;
+use std::collections::BTreeMap;
+
+use apt::coordinator::{prune_model, PipelineConfig};
+use apt::data::{CorpusGen, Profile};
+use apt::json::{self, Json};
+use apt::linalg::{cholesky_blocked, cholesky_unblocked, cholesky_upper, inv_spd};
+use apt::model::{train, TrainConfig, Transformer, TransformerConfig};
 use apt::prune::{
-    compensate_m, compensate_sequential, select_24_m, select_unstructured_s, sparsegpt_prune,
-    HessianAccumulator, Mask, Sparsity,
+    column_blocks, compensate_m, compensate_sequential, select_24_m, select_unstructured_s,
+    sparsegpt_prune, HessianAccumulator, IncrementalMrp, Mask, Method, PruneConfig, Sparsity,
 };
-use apt::linalg::cholesky_upper;
 use apt::tensor::{Mat, MatF64};
-use apt::util::{Quantiles, Rng, Timer};
+use apt::util::{num_threads, Quantiles, Rng, Timer};
 
-fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) {
-    // warmup
-    for _ in 0..2 {
-        f();
+const OUT_PATH: &str = "BENCH_perf.json";
+
+#[derive(Clone, Copy)]
+struct Stats {
+    median: f64,
+    p90: f64,
+    iters: usize,
+}
+
+struct Recorder {
+    kernels: BTreeMap<String, Stats>,
+    derived: BTreeMap<String, f64>,
+    pipeline: Option<Json>,
+    /// Kernels actually measured in this run (vs carried over from the
+    /// previous JSON on a filtered run) — the delta table's row set.
+    measured: Vec<String>,
+}
+
+impl Recorder {
+    fn new() -> Recorder {
+        Recorder {
+            kernels: BTreeMap::new(),
+            derived: BTreeMap::new(),
+            pipeline: None,
+            measured: Vec::new(),
+        }
     }
-    let mut q = Quantiles::new();
-    for _ in 0..iters {
-        let t = Timer::start();
-        f();
-        q.push(t.elapsed_ms());
+
+    /// Warmup twice, run `iters` times, record + print median/p90.
+    /// Returns the median (ms) so callers can derive speedups.
+    fn bench<F: FnMut()>(&mut self, name: &str, iters: usize, mut f: F) -> f64 {
+        for _ in 0..2 {
+            f();
+        }
+        let mut q = Quantiles::new();
+        for _ in 0..iters {
+            let t = Timer::start();
+            f();
+            q.push(t.elapsed_ms());
+        }
+        let (median, p90) = (q.median(), q.quantile(0.9));
+        println!("{name:<52} median {median:>9.3} ms   p90 {p90:>9.3} ms   n={}", q.len());
+        self.kernels.insert(name.to_string(), Stats { median, p90, iters: q.len() });
+        self.measured.push(name.to_string());
+        median
     }
-    println!(
-        "{name:<44} median {:>9.3} ms   p90 {:>9.3} ms   n={}",
-        q.median(),
-        q.quantile(0.9),
-        q.len()
-    );
+
+    fn to_json(&self) -> Json {
+        let mut kernels = Json::obj();
+        for (name, s) in &self.kernels {
+            let mut e = Json::obj();
+            e.set("median_ms", Json::Num(s.median))
+                .set("p90_ms", Json::Num(s.p90))
+                .set("iters", Json::Num(s.iters as f64));
+            kernels.set(name, e);
+        }
+        let mut derived = Json::obj();
+        for (name, v) in &self.derived {
+            derived.set(name, Json::Num(*v));
+        }
+        let mut root = Json::obj();
+        root.set("schema", Json::Str("bench-perf-v1".into()))
+            .set("threads", Json::Num(num_threads() as f64))
+            .set("kernels", kernels)
+            .set("derived", derived);
+        if let Some(p) = &self.pipeline {
+            root.set("pipeline", p.clone());
+        }
+        root
+    }
+}
+
+/// Fold kernels from a previous run into the recorder (filtered runs keep
+/// unmeasured kernels' last numbers) and return the previous medians for
+/// the delta table.
+fn load_previous(rec: &mut Recorder) -> BTreeMap<String, f64> {
+    let mut prev_medians = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(OUT_PATH) else {
+        return prev_medians;
+    };
+    let Ok(root) = json::parse(&text) else {
+        eprintln!("(previous {OUT_PATH} unparseable; ignoring)");
+        return prev_medians;
+    };
+    if let Some(Json::Obj(kernels)) = root.get("kernels") {
+        for (name, entry) in kernels {
+            let median = entry.get("median_ms").and_then(Json::as_f64);
+            let p90 = entry.get("p90_ms").and_then(Json::as_f64);
+            let iters = entry.get("iters").and_then(Json::as_f64).unwrap_or(0.0);
+            if let (Some(median), Some(p90)) = (median, p90) {
+                prev_medians.insert(name.clone(), median);
+                rec.kernels
+                    .insert(name.clone(), Stats { median, p90, iters: iters as usize });
+            }
+        }
+    }
+    if let Some(Json::Obj(derived)) = root.get("derived") {
+        for (name, v) in derived {
+            if let Some(v) = v.as_f64() {
+                rec.derived.insert(name.clone(), v);
+            }
+        }
+    }
+    if let Some(p) = root.get("pipeline") {
+        rec.pipeline = Some(p.clone());
+    }
+    prev_medians
+}
+
+fn print_delta(prev: &BTreeMap<String, f64>, rec: &Recorder) {
+    if prev.is_empty() {
+        return;
+    }
+    println!("\n== delta vs previous {OUT_PATH} ==");
+    for name in &rec.measured {
+        let (Some(&old), Some(new)) = (prev.get(name), rec.kernels.get(name)) else {
+            continue;
+        };
+        if old <= 0.0 {
+            continue;
+        }
+        let pct = (new.median / old - 1.0) * 100.0;
+        println!("{name:<52} {old:>9.3} -> {:>9.3} ms  ({pct:>+6.1}%)", new.median);
+    }
 }
 
 fn setup(n: usize, m: usize, seed: u64) -> (Mat, MatF64, MatF64) {
@@ -43,9 +161,105 @@ fn setup(n: usize, m: usize, seed: u64) -> (Mat, MatF64, MatF64) {
     (w, hd, hinv)
 }
 
+/// Blockwise SM/MM compensation: reference (re-factor cumulative set per
+/// block) vs incremental (growing per-row factors). Masks are recorded
+/// once from the real selection flow so both solvers replay the identical
+/// schedule; equivalence is asserted before timing.
+fn bench_mrp_blockwise(rec: &mut Recorder) {
+    let n = 512;
+    let s = 16;
+    for (label, two_four) in [("SM 0.5", false), ("MM 2:4", true)] {
+        let (w0, _hd, hinv) = setup(n, n, if two_four { 13 } else { 12 });
+        let diag = hinv.diag();
+        // Record the per-block masks (+ cumulative snapshots for the
+        // reference path) from one incremental pass over the real flow.
+        let mut blocks: Vec<Mask> = Vec::new();
+        let mut cums: Vec<Mask> = Vec::new();
+        let w_inc = {
+            let mut w = w0.clone();
+            let mut inc = IncrementalMrp::new(&hinv, n);
+            let mut cum = Mask::new(n, n);
+            for (c0, c1) in column_blocks(n, Some(s)) {
+                let bm = if two_four {
+                    select_24_m(&w, &hinv, c0, c1).0
+                } else {
+                    select_unstructured_s(&w, &diag, c0, c1, 0.5)
+                };
+                cum.or_with(&bm);
+                inc.compensate_block(&mut w, &bm);
+                blocks.push(bm);
+                cums.push(cum.clone());
+            }
+            w
+        };
+        // One reference replay to assert the solvers agree on this shape.
+        {
+            let mut w = w0.clone();
+            for cum in &cums {
+                compensate_m(&mut w, cum, &hinv);
+            }
+            let d = w.max_abs_diff(&w_inc);
+            assert!(d < 1e-5, "solver divergence {d} on {label}");
+            println!("mrp {label}: incremental vs reference max |dw| = {d:.2e}");
+        }
+        let name_ref = format!("mrp blockwise {label} S={s} {n}x{n} (reference)");
+        let name_inc = format!("mrp blockwise {label} S={s} {n}x{n} (incremental)");
+        let med_ref = rec.bench(&name_ref, 3, || {
+            let mut w = w0.clone();
+            for cum in &cums {
+                std::hint::black_box(compensate_m(&mut w, cum, &hinv));
+            }
+        });
+        let med_inc = rec.bench(&name_inc, 5, || {
+            let mut w = w0.clone();
+            let mut inc = IncrementalMrp::new(&hinv, n);
+            for bm in &blocks {
+                std::hint::black_box(inc.compensate_block(&mut w, bm));
+            }
+        });
+        let speedup = med_ref / med_inc.max(1e-9);
+        let key = if two_four { "mrp_mm_24_speedup" } else { "mrp_sm_unstructured_speedup" };
+        rec.derived.insert(key.to_string(), speedup);
+        println!("  -> {label} incremental speedup: {speedup:.2}x (median)");
+    }
+}
+
+/// End-to-end coordinator run (calibrate -> prune -> propagate) on a
+/// small trained transformer, so every future PR has a pipeline-level
+/// trajectory, not just kernel medians.
+fn bench_pipeline(rec: &mut Recorder) {
+    let gen = CorpusGen::new(60, 2, 17);
+    let data = gen.generate(Profile::C4Like, 30_000, 1);
+    let vocab = gen.tokenizer.vocab_size();
+    let mut model = Transformer::init(
+        TransformerConfig { vocab, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 96, max_seq: 64 },
+        &mut Rng::new(3),
+    );
+    train(
+        &mut model,
+        &data,
+        &TrainConfig { steps: 60, batch: 8, seq_len: 32, log_every: 1000, ..Default::default() },
+    );
+    let calib = data.sample_calibration(16, 32, &mut Rng::new(9));
+    let cfg = PipelineConfig::new(
+        PruneConfig::new(Method::SM, Sparsity::Unstructured { rate: 0.5 }).with_block(Some(16)),
+    );
+    rec.bench("pipeline SM 0.5 S=16 transformer d64 L2", 3, || {
+        let mut m = Transformer { cfg: model.cfg, params: model.params.clone() };
+        std::hint::black_box(prune_model(&mut m, &calib, &cfg, None).unwrap());
+    });
+    // Keep one full stage-timing report for the JSON trajectory.
+    let mut m = Transformer { cfg: model.cfg, params: model.params.clone() };
+    let report = prune_model(&mut m, &calib, &cfg, None).unwrap();
+    rec.pipeline = Some(report.to_json());
+}
+
 fn main() {
     let filter = std::env::args().skip(1).find(|a| !a.starts_with('-')).unwrap_or_default();
     let run = |name: &str| filter.is_empty() || name.contains(&filter);
+
+    let mut rec = Recorder::new();
+    let prev = load_previous(&mut rec);
 
     println!("== L3 hot paths (native) ==");
 
@@ -53,10 +267,10 @@ fn main() {
         let mut rng = Rng::new(1);
         let a = Mat::randn(512, 512, 1.0, &mut rng);
         let b = Mat::randn(512, 512, 1.0, &mut rng);
-        bench("gemm 512x512x512", 10, || {
+        rec.bench("gemm 512x512x512", 10, || {
             std::hint::black_box(a.matmul(&b));
         });
-        bench("gemm_tb 512x512x512", 10, || {
+        rec.bench("gemm_tb 512x512x512", 10, || {
             std::hint::black_box(a.matmul_tb(&b));
         });
     }
@@ -64,12 +278,12 @@ fn main() {
     if run("hessian") {
         let mut rng = Rng::new(2);
         let x = Mat::randn(512, 256, 1.0, &mut rng);
-        bench("hessian accumulate 2XtX (512x256)", 10, || {
+        rec.bench("hessian accumulate 2XtX (512x256)", 10, || {
             let mut acc = HessianAccumulator::new(256);
             acc.add_chunk(&x);
             std::hint::black_box(acc);
         });
-        bench("hessian accumulate (convert-in-loop)", 10, || {
+        rec.bench("hessian accumulate (convert-in-loop)", 10, || {
             let mut acc = HessianAccumulator::new(256);
             acc.add_chunk_convert_in_loop(&x);
             std::hint::black_box(acc);
@@ -77,28 +291,58 @@ fn main() {
     }
 
     if run("finalize") {
-        let (_w, _hd, _hinv) = setup(8, 256, 3);
         let mut rng = Rng::new(3);
         let x = Mat::randn(512, 256, 1.0, &mut rng);
         let mut acc = HessianAccumulator::new(256);
         acc.add_chunk(&x);
-        bench("hessian finalize (chol+inv, m=256)", 8, || {
+        rec.bench("hessian finalize (chol+inv, m=256)", 8, || {
             std::hint::black_box(acc.finalize(0.01));
+        });
+    }
+
+    if run("cholesky") {
+        let mut rng = Rng::new(14);
+        let x = Mat::randn(768, 384, 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(384);
+        acc.add_chunk(&x);
+        let hd = acc.damped(0.01);
+        rec.bench("cholesky unblocked m=384", 8, || {
+            std::hint::black_box(cholesky_unblocked(&hd).unwrap());
+        });
+        rec.bench("cholesky blocked-parallel m=384", 8, || {
+            std::hint::black_box(cholesky_blocked(&hd, 64).unwrap());
         });
     }
 
     if run("compensate") {
         let (w0, _hd, hinv) = setup(256, 256, 4);
         let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 256, 0.5);
-        bench("compensate_m n=256 m=256 k=128", 6, || {
+        rec.bench("compensate_m n=256 m=256 k=128", 6, || {
             let mut w = w0.clone();
             std::hint::black_box(compensate_m(&mut w, &mask, &hinv));
         });
         let (w0l, _hd, hinvl) = setup(256, 512, 5);
         let maskl = select_unstructured_s(&w0l, &hinvl.diag(), 0, 512, 0.5);
-        bench("compensate_m n=256 m=512 k=256", 4, || {
+        rec.bench("compensate_m n=256 m=512 k=256", 4, || {
             let mut w = w0l.clone();
             std::hint::black_box(compensate_m(&mut w, &maskl, &hinvl));
+        });
+    }
+
+    if run("mrp") {
+        bench_mrp_blockwise(&mut rec);
+    }
+
+    if run("select") {
+        let (w, _hd, hinv) = setup(512, 512, 15);
+        let diag = hinv.diag();
+        rec.bench("select_unstructured_s 512x512 (flat)", 20, || {
+            std::hint::black_box(select_unstructured_s(&w, &diag, 0, 512, 0.5));
+        });
+        rec.bench("select_unstructured_s 512x512 (tuple ref)", 20, || {
+            std::hint::black_box(apt::prune::mrp::select_unstructured_s_reference(
+                &w, &diag, 0, 512, 0.5,
+            ));
         });
     }
 
@@ -106,13 +350,13 @@ fn main() {
         let (w0, _hd, hinv) = setup(256, 256, 6);
         let u = cholesky_upper(&hinv).unwrap();
         let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 256, 0.5);
-        bench("sparsegpt sweep n=256 m=256", 6, || {
+        rec.bench("sparsegpt sweep n=256 m=256", 6, || {
             let mut w = w0.clone();
             compensate_sequential(&mut w, &mask, &u);
             std::hint::black_box(w);
         });
         let (w0b, _hd, hinvb) = setup(256, 256, 7);
-        bench("sparsegpt full (mask+sweep) S=64", 6, || {
+        rec.bench("sparsegpt full (mask+sweep) S=64", 6, || {
             let mut w = w0b.clone();
             std::hint::black_box(sparsegpt_prune(
                 &mut w,
@@ -126,7 +370,7 @@ fn main() {
 
     if run("mask24") {
         let (w, _hd, hinv) = setup(512, 512, 8);
-        bench("select_24_m (Eq12 6-combo) 512x512", 10, || {
+        rec.bench("select_24_m (Eq12 6-combo) 512x512", 10, || {
             std::hint::black_box(select_24_m(&w, &hinv, 0, 512));
         });
     }
@@ -137,12 +381,16 @@ fn main() {
         apt::prune::magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.8 });
         let csr = apt::sparse::Csr::from_dense(&w);
         let x = Mat::randn(64, 512, 1.0, &mut rng);
-        bench("dense matmul_tb 64x512 @ (256,512)", 20, || {
+        rec.bench("dense matmul_tb 64x512 @ (256,512)", 20, || {
             std::hint::black_box(x.matmul_tb(&w));
         });
-        bench("csr matmul_tb @80% sparsity", 20, || {
+        rec.bench("csr matmul_tb @80% sparsity", 20, || {
             std::hint::black_box(csr.matmul_tb(&x));
         });
+    }
+
+    if run("pipeline") {
+        bench_pipeline(&mut rec);
     }
 
     if run("hlo") {
@@ -153,7 +401,7 @@ fn main() {
                 let hinv32 = hinv.to_f32();
                 // include one warm compile, then measure steady-state exec
                 let _ = rt.exec_prune(&entry, &w, &hinv32);
-                bench("hlo prune_24_mm 256x256 (PJRT exec)", 6, || {
+                rec.bench("hlo prune_24_mm 256x256 (PJRT exec)", 6, || {
                     std::hint::black_box(rt.exec_prune(&entry, &w, &hinv32).unwrap());
                 });
             }
@@ -163,12 +411,20 @@ fn main() {
                 let x = Mat::randn(entry.t, 256, 1.0, &mut rng);
                 let h = Mat::zeros(256, 256);
                 let _ = rt.exec(&entry, &[&x, &h], &[], &[256]);
-                bench("hlo hessian_update 128x256 (PJRT exec)", 10, || {
+                rec.bench("hlo hessian_update 128x256 (PJRT exec)", 10, || {
                     std::hint::black_box(rt.exec(&entry, &[&x, &h], &[], &[256]).unwrap());
                 });
             }
         } else {
-            println!("(artifacts missing; hlo benches skipped)");
+            println!("(artifacts missing or pjrt feature off; hlo benches skipped)");
         }
+    }
+
+    print_delta(&prev, &rec);
+
+    let body = rec.to_json().to_string_pretty();
+    match std::fs::write(OUT_PATH, body + "\n") {
+        Ok(()) => println!("\nwrote {OUT_PATH} ({} kernels)", rec.kernels.len()),
+        Err(e) => eprintln!("failed to write {OUT_PATH}: {e}"),
     }
 }

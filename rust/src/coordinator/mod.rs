@@ -24,6 +24,7 @@ use std::sync::Mutex;
 
 use anyhow::Result;
 
+use crate::json::Json;
 use crate::model::LanguageModel;
 use crate::prune::{
     prune_layer, HessianAccumulator, LayerPruneResult, Mask, PruneConfig, Sparsity,
@@ -90,6 +91,42 @@ impl PipelineReport {
     pub fn hlo_fraction(&self) -> f64 {
         let hlo = self.linears.iter().filter(|l| l.engine == "hlo").count();
         hlo as f64 / self.linears.len().max(1) as f64
+    }
+
+    /// Machine-readable form (BENCH_perf.json's `pipeline` section and any
+    /// external tooling): stage timings plus one record per linear.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("total_ms", Json::Num(self.total_ms))
+            .set("calib_ms", Json::Num(self.calib_ms))
+            .set("prune_ms", Json::Num(self.prune_ms))
+            .set("propagate_ms", Json::Num(self.propagate_ms))
+            .set("n_calib_tokens", Json::Num(self.n_calib_tokens as f64))
+            .set("overall_sparsity", Json::Num(self.overall_sparsity()))
+            .set("hlo_fraction", Json::Num(self.hlo_fraction()));
+        let linears: Vec<Json> = self
+            .linears
+            .iter()
+            .map(|l| {
+                let mut e = Json::obj();
+                e.set("block", Json::Num(l.block as f64))
+                    .set("name", Json::Str(l.name.clone()))
+                    .set("rows", Json::Num(l.shape.0 as f64))
+                    .set("cols", Json::Num(l.shape.1 as f64))
+                    .set("sparsity", Json::Num(l.sparsity))
+                    // NaN marks "no Eq. 12 prediction" (non-MRP methods);
+                    // it has no JSON literal, so map it to null.
+                    .set(
+                        "pred_loss",
+                        if l.pred_loss.is_finite() { Json::Num(l.pred_loss) } else { Json::Null },
+                    )
+                    .set("elapsed_ms", Json::Num(l.elapsed_ms))
+                    .set("engine", Json::Str(l.engine.to_string()));
+                e
+            })
+            .collect();
+        o.set("linears", Json::Arr(linears));
+        o
     }
 }
 
@@ -382,6 +419,14 @@ mod tests {
         for l in &report.linears {
             assert!((l.sparsity - 0.5).abs() < 0.05, "{l:?}");
         }
+        // machine-readable form round-trips through the JSON writer/parser
+        let j = report.to_json();
+        let parsed = crate::json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(
+            parsed.get("linears").and_then(crate::json::Json::as_arr).unwrap().len(),
+            2 * 7
+        );
+        assert!(parsed.get("total_ms").and_then(crate::json::Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]

@@ -1,15 +1,39 @@
 //! f64 symmetric linear algebra for the second-order pruning math:
-//! Cholesky factorization, triangular solves, SPD inverse.
+//! Cholesky factorization (unblocked, blocked-parallel, and incremental),
+//! triangular solves, SPD inverse.
 //!
 //! All Hessian-side computation runs in f64 (the paper works at fp16/fp32
 //! on GPU but relies on well-conditioned H; at our small calibration sizes
 //! f64 removes the conditioning confound entirely — DESIGN.md SS7).
+//!
+//! The incremental pieces ([`GrowingCholesky`], [`cholesky_append`]) exist
+//! for the MRP hot path: blockwise pruning only ever *adds* columns to a
+//! row's pruned set, so the factor of `Hinv[P, P]` can be rank-extended in
+//! O(|ΔP|·|P|²) instead of re-factored from scratch in O(|P|³) per block
+//! (see PERF.md for the math and measurements).
 
 use crate::tensor::MatF64;
+use crate::util::num_threads;
+
+/// Size at which [`cholesky`] switches to the blocked-parallel kernel.
+const CHOLESKY_BLOCK_THRESHOLD: usize = 128;
+/// Panel width of the blocked kernel.
+const CHOLESKY_BLOCK: usize = 64;
 
 /// Lower-triangular Cholesky factor L with A = L L^T.
 /// Returns None if A is not (numerically) positive definite.
+/// Dispatches to the blocked-parallel kernel for large matrices.
 pub fn cholesky(a: &MatF64) -> Option<MatF64> {
+    if a.rows >= CHOLESKY_BLOCK_THRESHOLD {
+        cholesky_blocked(a, CHOLESKY_BLOCK)
+    } else {
+        cholesky_unblocked(a)
+    }
+}
+
+/// Scalar three-loop Cholesky (the reference kernel; right size for the
+/// small per-row systems of the pruning math).
+pub fn cholesky_unblocked(a: &MatF64) -> Option<MatF64> {
     let n = a.rows;
     assert_eq!(a.rows, a.cols);
     let mut l = MatF64::zeros(n, n);
@@ -30,6 +54,276 @@ pub fn cholesky(a: &MatF64) -> Option<MatF64> {
         }
     }
     Some(l)
+}
+
+/// Blocked right-looking Cholesky with a thread-parallel panel solve and
+/// trailing update. Same result as [`cholesky_unblocked`] up to rounding;
+/// the trailing update is where ~all the FLOPs are, and it parallelizes
+/// over row chunks.
+pub fn cholesky_blocked(a: &MatF64, block: usize) -> Option<MatF64> {
+    let n = a.rows;
+    assert_eq!(a.rows, a.cols);
+    let b = block.max(8);
+    let mut l = a.clone();
+    let nt = num_threads();
+    let mut k0 = 0;
+    while k0 < n {
+        let k1 = (k0 + b).min(n);
+        let bw = k1 - k0;
+        // 1) unblocked factor of the diagonal block, in place. Earlier
+        //    panels' contributions were already subtracted by trailing
+        //    updates, so only columns [k0, k1) participate.
+        for i in k0..k1 {
+            for j in k0..=i {
+                let ri = i * n + k0;
+                let rj = j * n + k0;
+                let mut s = l.data[ri + (j - k0)];
+                for t in 0..(j - k0) {
+                    s -= l.data[ri + t] * l.data[rj + t];
+                }
+                if i == j {
+                    if s <= 0.0 || !s.is_finite() {
+                        return None;
+                    }
+                    l.data[ri + (j - k0)] = s.sqrt();
+                } else {
+                    l.data[ri + (j - k0)] = s / l.data[rj + (j - k0)];
+                }
+            }
+        }
+        if k1 < n {
+            // Snapshot the factored diagonal block so worker threads can
+            // read it while mutating their own rows.
+            let mut diag = vec![0.0f64; bw * bw];
+            for i in 0..bw {
+                for j in 0..bw {
+                    diag[i * bw + j] = l.data[(k0 + i) * n + k0 + j];
+                }
+            }
+            let diag = &diag;
+            let rows_below = n - k1;
+            let chunk = rows_below.div_ceil(nt.min(rows_below));
+            // 2) panel solve: L[i, k0..k1] = A'[i, k0..k1] · L_kk^{-T},
+            //    row-parallel (each row only reads `diag` + itself).
+            {
+                let trailing = &mut l.data[k1 * n..];
+                std::thread::scope(|s| {
+                    for rows in trailing.chunks_mut(chunk * n) {
+                        s.spawn(move || {
+                            for row in rows.chunks_mut(n) {
+                                for j in 0..bw {
+                                    let mut v = row[k0 + j];
+                                    for t in 0..j {
+                                        v -= row[k0 + t] * diag[j * bw + t];
+                                    }
+                                    row[k0 + j] = v / diag[j * bw + j];
+                                }
+                            }
+                        });
+                    }
+                });
+            }
+            // 3) trailing update A'[i, j] -= Σ_t L[i, t] L[j, t] over the
+            //    lower triangle j ≤ i, t ∈ [k0, k1). Workers write only
+            //    their own rows and read the shared panel snapshot.
+            let mut panel = vec![0.0f64; rows_below * bw];
+            for (pi, i) in (k1..n).enumerate() {
+                panel[pi * bw..(pi + 1) * bw]
+                    .copy_from_slice(&l.data[i * n + k0..i * n + k1]);
+            }
+            let panel = &panel;
+            let trailing = &mut l.data[k1 * n..];
+            std::thread::scope(|s| {
+                for (ci, rows) in trailing.chunks_mut(chunk * n).enumerate() {
+                    s.spawn(move || {
+                        for (ri, row) in rows.chunks_mut(n).enumerate() {
+                            let gi = ci * chunk + ri; // row k1+gi of the matrix
+                            let prow = &panel[gi * bw..(gi + 1) * bw];
+                            for gj in 0..=gi {
+                                let pj = &panel[gj * bw..(gj + 1) * bw];
+                                let mut s2 = 0.0;
+                                for t in 0..bw {
+                                    s2 = prow[t].mul_add(pj[t], s2);
+                                }
+                                row[k1 + gj] -= s2;
+                            }
+                        }
+                    });
+                }
+            });
+        }
+        k0 = k1;
+    }
+    // The algorithm only maintains the lower triangle; zero the rest.
+    for i in 0..n {
+        for j in i + 1..n {
+            l.data[i * n + j] = 0.0;
+        }
+    }
+    Some(l)
+}
+
+/// Given the lower factor `l` of SPD A (n×n) and the bordering blocks of
+/// the extended matrix
+///     A' = [[A, B], [Bᵀ, C]]    (B: n×k, C: k×k),
+/// return the lower factor of A' in O(k·n² + k²·n + k³) instead of
+/// re-factoring from scratch in O((n+k)³):
+///     L' = [[L, 0], [Y, L22]],  Y = Bᵀ L^{-T},  L22 = chol(C - Y Yᵀ).
+/// Returns None if the extension is not positive definite.
+pub fn cholesky_append(l: &MatF64, b: &MatF64, c: &MatF64) -> Option<MatF64> {
+    let n = l.rows;
+    let k = c.rows;
+    assert_eq!(l.cols, n);
+    assert_eq!((b.rows, b.cols), (n, k));
+    assert_eq!(c.cols, k);
+    let mut out = MatF64::zeros(n + k, n + k);
+    for i in 0..n {
+        out.row_mut(i)[..=i].copy_from_slice(&l.row(i)[..=i]);
+    }
+    // Rows of Y: forward-substitute each column of B through L.
+    for j in 0..k {
+        for i in 0..n {
+            let mut s = b[(i, j)];
+            let lrow = l.row(i);
+            for t in 0..i {
+                s -= lrow[t] * out[(n + j, t)];
+            }
+            out[(n + j, i)] = s / lrow[i];
+        }
+    }
+    // Factor the Schur complement C - Y Yᵀ into the bottom-right corner.
+    for i in 0..k {
+        for j in 0..=i {
+            let mut s = c[(i, j)];
+            for t in 0..n {
+                s -= out[(n + i, t)] * out[(n + j, t)];
+            }
+            for t in 0..j {
+                s -= out[(n + i, n + t)] * out[(n + j, n + t)];
+            }
+            if i == j {
+                if s <= 0.0 || !s.is_finite() {
+                    return None;
+                }
+                out[(n + i, n + i)] = s.sqrt();
+            } else {
+                out[(n + i, n + j)] = s / out[(n + j, n + j)];
+            }
+        }
+    }
+    Some(out)
+}
+
+/// Incrementally grown Cholesky factor, packed row-major lower-triangular
+/// (row i occupies `i+1` entries at offset `i(i+1)/2`).
+///
+/// This is the MRP solver's per-row state: each blockwise pruning step
+/// appends the block's newly pruned columns via [`GrowingCholesky::push`]
+/// (O(n²) each), so factoring a row's final pruned set across all blocks
+/// costs one O(|P|³/3) total instead of O(blocks · |P|³/3).
+#[derive(Clone, Debug, Default)]
+pub struct GrowingCholesky {
+    l: Vec<f64>,
+    n: usize,
+}
+
+impl GrowingCholesky {
+    pub fn new() -> Self {
+        GrowingCholesky { l: Vec::new(), n: 0 }
+    }
+
+    /// Pre-allocate for an expected final dimension.
+    pub fn with_capacity(dim: usize) -> Self {
+        GrowingCholesky { l: Vec::with_capacity(dim * (dim + 1) / 2), n: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// Row i of the factor (length i+1).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        let off = i * (i + 1) / 2;
+        &self.l[off..off + i + 1]
+    }
+
+    /// Extend the factored matrix by one row/column: `a_row[k]` must hold
+    /// A[new, k] against the `len()` existing indices, `a_diag` = A[new, new].
+    /// Returns None (leaving the factor unchanged) if the extension is not
+    /// positive definite.
+    pub fn push(&mut self, a_row: &[f64], a_diag: f64) -> Option<()> {
+        let n = self.n;
+        assert_eq!(a_row.len(), n);
+        let off = self.l.len();
+        debug_assert_eq!(off, n * (n + 1) / 2);
+        // Forward-substitute y = L⁻¹ a_row in place at the tail.
+        self.l.extend_from_slice(a_row);
+        for i in 0..n {
+            let (head, tail) = self.l.split_at_mut(off);
+            let roff = i * (i + 1) / 2;
+            let lrow = &head[roff..roff + i + 1];
+            let mut s = tail[i];
+            for (k, &lik) in lrow[..i].iter().enumerate() {
+                s -= lik * tail[k];
+            }
+            tail[i] = s / lrow[i];
+        }
+        let mut d = a_diag;
+        for &y in &self.l[off..] {
+            d -= y * y;
+        }
+        if d <= 0.0 || !d.is_finite() {
+            self.l.truncate(off);
+            return None;
+        }
+        self.l.push(d.sqrt());
+        self.n = n + 1;
+        Some(())
+    }
+
+    /// Solve (L Lᵀ) x = rhs into `out`.
+    pub fn solve_into(&self, rhs: &[f64], out: &mut Vec<f64>) {
+        self.solve_prefix_sparse(rhs, 0, out);
+    }
+
+    /// Solve (L Lᵀ) x = rhs where `rhs[..zero_prefix]` is exactly zero.
+    ///
+    /// Forward substitution then provably yields y[..zero_prefix] == 0
+    /// (y₀ = 0 and inductively yᵢ = (0 - Σ Lᵢₖ·0)/Lᵢᵢ = 0), so the forward
+    /// pass skips the prefix entirely: O(|Δ|·n) instead of O(n²), where
+    /// |Δ| = n - zero_prefix. The backward pass is dense, O(n²).
+    pub fn solve_prefix_sparse(&self, rhs: &[f64], zero_prefix: usize, out: &mut Vec<f64>) {
+        let n = self.n;
+        assert_eq!(rhs.len(), n);
+        let z = zero_prefix.min(n);
+        debug_assert!(rhs[..z].iter().all(|&v| v == 0.0), "prefix must be exactly zero");
+        out.clear();
+        out.extend_from_slice(rhs);
+        for i in z..n {
+            let row = self.row(i);
+            let mut s = out[i];
+            for k in z..i {
+                s -= row[k] * out[k];
+            }
+            out[i] = s / row[i];
+        }
+        for i in (0..n).rev() {
+            let mut s = out[i];
+            // Column i of L below the diagonal: L[k, i] for k > i lives at
+            // packed offset k(k+1)/2 + i; consecutive k differ by k+1.
+            let mut idx = (i + 1) * (i + 2) / 2 + i;
+            for k in i + 1..n {
+                s -= self.l[idx] * out[k];
+                idx += k + 1;
+            }
+            out[i] = s / self.row(i)[i];
+        }
+    }
 }
 
 /// Solve L y = b for lower-triangular L.
@@ -62,8 +356,12 @@ pub fn solve_lower_t(l: &MatF64, y: &[f64]) -> Vec<f64> {
 }
 
 /// Solve A x = b for SPD A via Cholesky.
+///
+/// Always uses the serial kernel: this runs per-row inside the pruning
+/// solvers' already-parallel worker pools, where the blocked kernel's
+/// nested `thread::scope` spawns would oversubscribe the machine.
 pub fn solve_spd(a: &MatF64, b: &[f64]) -> Option<Vec<f64>> {
-    let l = cholesky(a)?;
+    let l = cholesky_unblocked(a)?;
     Some(solve_lower_t(&l, &solve_lower(&l, b)))
 }
 
@@ -258,6 +556,119 @@ mod tests {
             for i in 0..8 {
                 assert!((x[(i, j)] - xj[i]).abs() < 1e-10);
             }
+        }
+    }
+
+    #[test]
+    fn blocked_matches_unblocked() {
+        let mut r = Rng::new(15);
+        // Deliberately not a multiple of the panel width, and large enough
+        // to cross several panels.
+        for n in [1, 7, 100, 150] {
+            let a = random_spd(n, &mut r);
+            let lu = cholesky_unblocked(&a).unwrap();
+            let lb = cholesky_blocked(&a, 32).unwrap();
+            assert!(lu.max_abs_diff(&lb) < 1e-8, "n={n}: {}", lu.max_abs_diff(&lb));
+        }
+    }
+
+    #[test]
+    fn blocked_rejects_indefinite() {
+        let mut r = Rng::new(16);
+        let mut a = random_spd(40, &mut r);
+        a[(25, 25)] = -1.0;
+        assert!(cholesky_blocked(&a, 16).is_none());
+    }
+
+    #[test]
+    fn dispatcher_uses_blocked_above_threshold() {
+        let mut r = Rng::new(17);
+        let a = random_spd(CHOLESKY_BLOCK_THRESHOLD + 5, &mut r);
+        let l = cholesky(&a).unwrap();
+        let lu = cholesky_unblocked(&a).unwrap();
+        assert!(l.max_abs_diff(&lu) < 1e-8);
+    }
+
+    #[test]
+    fn append_matches_full_factor() {
+        let mut r = Rng::new(18);
+        let a = random_spd(20, &mut r);
+        let (n0, k) = (14, 6);
+        let idx: Vec<usize> = (0..n0).collect();
+        let l0 = cholesky_unblocked(&a.sub(&idx, &idx)).unwrap();
+        let mut b = MatF64::zeros(n0, k);
+        let mut c = MatF64::zeros(k, k);
+        for i in 0..n0 {
+            for j in 0..k {
+                b[(i, j)] = a[(i, n0 + j)];
+            }
+        }
+        for i in 0..k {
+            for j in 0..k {
+                c[(i, j)] = a[(n0 + i, n0 + j)];
+            }
+        }
+        let lx = cholesky_append(&l0, &b, &c).unwrap();
+        let lf = cholesky_unblocked(&a).unwrap();
+        assert!(lx.max_abs_diff(&lf) < 1e-9, "{}", lx.max_abs_diff(&lf));
+    }
+
+    #[test]
+    fn growing_factor_matches_batch() {
+        let mut r = Rng::new(19);
+        let a = random_spd(24, &mut r);
+        let mut g = GrowingCholesky::with_capacity(24);
+        for i in 0..24 {
+            let row: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            g.push(&row, a[(i, i)]).expect("SPD extension");
+        }
+        assert_eq!(g.len(), 24);
+        let l = cholesky_unblocked(&a).unwrap();
+        for i in 0..24 {
+            for (j, &v) in g.row(i).iter().enumerate() {
+                assert!((v - l[(i, j)]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn growing_push_rejects_indefinite_and_recovers() {
+        let mut g = GrowingCholesky::new();
+        g.push(&[], 4.0).unwrap();
+        // A = [[4, 4], [4, 1]] has det < 0: must be rejected...
+        assert!(g.push(&[4.0], 1.0).is_none());
+        assert_eq!(g.len(), 1);
+        // ...while leaving the factor usable for a valid extension.
+        g.push(&[1.0], 9.0).unwrap();
+        assert_eq!(g.len(), 2);
+        let mut out = Vec::new();
+        g.solve_into(&[4.0, 9.25], &mut out);
+        // A = [[4, 1], [1, 9]]; x = A⁻¹ b with b = (4, 9.25) -> x = (0.75, 1.0)... check residual instead
+        let (r0, r1) = (4.0 * out[0] + 1.0 * out[1] - 4.0, 1.0 * out[0] + 9.0 * out[1] - 9.25);
+        assert!(r0.abs() < 1e-12 && r1.abs() < 1e-12, "{out:?}");
+    }
+
+    #[test]
+    fn growing_solve_matches_solve_spd_with_zero_prefix() {
+        let mut r = Rng::new(20);
+        let a = random_spd(16, &mut r);
+        let mut g = GrowingCholesky::new();
+        for i in 0..16 {
+            let row: Vec<f64> = (0..i).map(|j| a[(i, j)]).collect();
+            g.push(&row, a[(i, i)]).unwrap();
+        }
+        let mut b: Vec<f64> = (0..16).map(|_| r.normal()).collect();
+        for v in b.iter_mut().take(10) {
+            *v = 0.0;
+        }
+        let mut fast = Vec::new();
+        g.solve_prefix_sparse(&b, 10, &mut fast);
+        let mut dense = Vec::new();
+        g.solve_into(&b, &mut dense);
+        let reference = solve_spd(&a, &b).unwrap();
+        for i in 0..16 {
+            assert!((fast[i] - dense[i]).abs() < 1e-12, "sparse vs dense at {i}");
+            assert!((fast[i] - reference[i]).abs() < 1e-9, "vs solve_spd at {i}");
         }
     }
 

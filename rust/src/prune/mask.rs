@@ -60,9 +60,30 @@ impl Mask {
         self.count() as f64 / self.bits.len() as f64
     }
 
+    /// Row r as a slice (hot loops index this instead of calling `get`
+    /// per element).
+    #[inline]
+    pub fn row(&self, r: usize) -> &[bool] {
+        &self.bits[r * self.cols..(r + 1) * self.cols]
+    }
+
     /// Pruned column indices of row r (ascending).
     pub fn row_indices(&self, r: usize) -> Vec<usize> {
-        (0..self.cols).filter(|&c| self.get(r, c)).collect()
+        let mut v = Vec::new();
+        self.row_indices_into(r, &mut v);
+        v
+    }
+
+    /// Fill `out` with row r's pruned column indices (ascending) without
+    /// allocating — the hot-loop variant of [`Mask::row_indices`], which
+    /// would otherwise allocate a fresh Vec per row per block.
+    pub fn row_indices_into(&self, r: usize, out: &mut Vec<usize>) {
+        out.clear();
+        for (c, &b) in self.row(r).iter().enumerate() {
+            if b {
+                out.push(c);
+            }
+        }
     }
 
     /// Merge another mask in (logical or).
@@ -122,6 +143,26 @@ mod tests {
         assert_eq!(m.count(), 2);
         assert_eq!(m.row_indices(0), vec![1]);
         assert!((m.sparsity() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_accessors_agree() {
+        let mut m = Mask::new(3, 5);
+        for (r, c) in [(0, 0), (0, 4), (1, 2), (2, 1), (2, 2), (2, 3)] {
+            m.set(r, c, true);
+        }
+        let mut buf = vec![99usize; 8]; // stale contents must be cleared
+        for r in 0..3 {
+            m.row_indices_into(r, &mut buf);
+            assert_eq!(buf, m.row_indices(r), "row {r}");
+            let from_slice: Vec<usize> = m
+                .row(r)
+                .iter()
+                .enumerate()
+                .filter_map(|(c, &b)| b.then_some(c))
+                .collect();
+            assert_eq!(buf, from_slice, "row {r}");
+        }
     }
 
     #[test]

@@ -10,48 +10,18 @@
 //! columns to the right.
 
 use crate::linalg::cholesky_upper;
-use crate::tensor::{Mat, MatF64};
+use crate::tensor::{axpy_f64, Mat, MatF64};
 use crate::util::num_threads;
 
 use super::mask::{column_blocks, Mask, Sparsity};
 use super::mrp::{select_24_m, select_24_s, select_unstructured_s};
 
 /// Sequential Solution-S compensation for a *given* mask (used by the SS
-/// and MS method variants). Sweeps all columns once.
+/// and MS method variants). Sweeps all columns once, entirely in f64 (a
+/// single full-range sweep has no f32 round-trips between columns).
 pub fn compensate_sequential(w: &mut Mat, mask: &Mask, u: &MatF64) {
-    let (n, m) = (w.rows, w.cols);
-    assert_eq!((u.rows, u.cols), (m, m));
-    // Parallel over row-chunks: each row's sweep is independent.
-    let nt = num_threads().min(n.max(1));
-    let chunk = n.div_ceil(nt);
-    std::thread::scope(|s| {
-        for (ci, wrows) in w.data.chunks_mut(chunk * m).enumerate() {
-            let r0 = ci * chunk;
-            s.spawn(move || {
-                let mut frow = vec![0.0f64; m];
-                for (ri, wrow) in wrows.chunks_mut(m).enumerate() {
-                    let r = r0 + ri;
-                    for (f, &v) in frow.iter_mut().zip(wrow.iter()) {
-                        *f = v as f64;
-                    }
-                    for j in 0..m {
-                        if !mask.get(r, j) {
-                            continue;
-                        }
-                        let urow = u.row(j);
-                        let err = frow[j] / urow[j];
-                        for c in j..m {
-                            frow[c] -= err * urow[c];
-                        }
-                        frow[j] = 0.0; // exact zero
-                    }
-                    for (v, &f) in wrow.iter_mut().zip(frow.iter()) {
-                        *v = f as f32;
-                    }
-                }
-            });
-        }
-    });
+    let m = w.cols;
+    compensate_sequential_range(w, mask, u, 0, m);
 }
 
 /// Full SparseGPT-style pruning of one layer: blockwise mask selection
@@ -91,9 +61,14 @@ pub fn sparsegpt_prune(
     cum
 }
 
-/// Like `compensate_sequential` but only sweeps columns [c0, c1).
+/// Sequential Solution-S sweep over columns [c0, c1) only (the update
+/// itself still reaches every column to the right). `compensate_sequential`
+/// is the [0, m) special case.
 pub fn compensate_sequential_range(w: &mut Mat, mask: &Mask, u: &MatF64, c0: usize, c1: usize) {
     let (n, m) = (w.rows, w.cols);
+    assert_eq!((u.rows, u.cols), (m, m));
+    assert!(c0 <= c1 && c1 <= m);
+    // Parallel over row-chunks: each row's sweep is independent.
     let nt = num_threads().min(n.max(1));
     let chunk = n.div_ceil(nt);
     std::thread::scope(|s| {
@@ -102,20 +77,20 @@ pub fn compensate_sequential_range(w: &mut Mat, mask: &Mask, u: &MatF64, c0: usi
             s.spawn(move || {
                 let mut frow = vec![0.0f64; m];
                 for (ri, wrow) in wrows.chunks_mut(m).enumerate() {
-                    let r = r0 + ri;
+                    let mrow = mask.row(r0 + ri);
                     for (f, &v) in frow.iter_mut().zip(wrow.iter()) {
                         *f = v as f64;
                     }
                     for j in c0..c1 {
-                        if !mask.get(r, j) {
+                        if !mrow[j] {
                             continue;
                         }
                         let urow = u.row(j);
                         let err = frow[j] / urow[j];
-                        for c in j..m {
-                            frow[c] -= err * urow[c];
-                        }
-                        frow[j] = 0.0;
+                        // axpy over the frozen-prefix-free suffix: the
+                        // chunks_exact + mul_add kernel autovectorizes.
+                        axpy_f64(-err, &urow[j..], &mut frow[j..]);
+                        frow[j] = 0.0; // exact zero
                     }
                     for (v, &f) in wrow.iter_mut().zip(frow.iter()) {
                         *v = f as f32;
@@ -215,6 +190,33 @@ mod tests {
         let mask_m = sparsegpt_prune(&mut w_m, &hinv, Sparsity::two_four(), None, true);
         assert!(mask_m.check_nm(2, 4));
         assert_ne!(mask_s, mask_m, "M-mask should differ from S-mask");
+    }
+
+    #[test]
+    fn range_sweeps_compose_to_full_sweep() {
+        // Sweeping consecutive ranges must equal one full sweep; the only
+        // divergence is the f64->f32 round-trip at range boundaries, so
+        // the tolerance is a few f32 ulps — not exact equality.
+        for seed in [9, 10, 11] {
+            let (w0, _, hinv) = setup(8, 24, seed);
+            let u = cholesky_upper(&hinv).unwrap();
+            let mask = select_unstructured_s(&w0, &hinv.diag(), 0, 24, 0.5);
+            let mut wa = w0.clone();
+            compensate_sequential(&mut wa, &mask, &u);
+            let mut wb = w0.clone();
+            for (c0, c1) in [(0, 8), (8, 16), (16, 24)] {
+                compensate_sequential_range(&mut wb, &mask, &u, c0, c1);
+            }
+            let d = wa.max_abs_diff(&wb);
+            assert!(d < 1e-4, "seed {seed}: composed ranges diverged by {d}");
+            // pruned entries are exact zeros on both paths
+            for r in 0..8 {
+                for &c in &mask.row_indices(r) {
+                    assert_eq!(wa[(r, c)], 0.0);
+                    assert_eq!(wb[(r, c)], 0.0);
+                }
+            }
+        }
     }
 
     #[test]

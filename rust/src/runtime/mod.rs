@@ -6,12 +6,24 @@
 //! Executables are compiled lazily and memoized per artifact file. Shapes
 //! not covered by the manifest fall back to the native Rust solvers (the
 //! coordinator decides; see `Engine`).
+//!
+//! The `xla` crate is unavailable in the offline build, so everything
+//! touching PJRT is gated behind the `pjrt` cargo feature. Without it,
+//! [`Runtime::load`] returns an error and every caller falls back to the
+//! native solvers (manifest parsing still works, so configs stay
+//! checkable offline).
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
+use std::path::Path;
+#[cfg(feature = "pjrt")]
+use std::path::PathBuf;
+#[cfg(feature = "pjrt")]
 use std::sync::Mutex;
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+use anyhow::{anyhow, Context};
+use anyhow::{bail, Result};
 
 use crate::json::{self, Json};
 use crate::tensor::Mat;
@@ -47,6 +59,31 @@ pub struct ArtifactEntry {
     pub k: usize,
 }
 
+/// Parse `manifest.json` into artifact entries (feature-independent).
+pub fn parse_manifest(dir: &Path) -> Result<Vec<ArtifactEntry>> {
+    let manifest_path = dir.join("manifest.json");
+    let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+        anyhow::anyhow!("read {} (run `make artifacts`): {e}", manifest_path.display())
+    })?;
+    let root = json::parse(&text).map_err(|e| anyhow::anyhow!("manifest parse: {e}"))?;
+    if root.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
+        bail!("unsupported manifest format");
+    }
+    let mut entries = Vec::new();
+    for e in root.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
+        entries.push(ArtifactEntry {
+            name: e.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
+            file: e.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
+            n: e.get("n").and_then(Json::as_usize).unwrap_or(0),
+            m: e.get("m").and_then(Json::as_usize).unwrap_or(0),
+            t: e.get("t").and_then(Json::as_usize).unwrap_or(0),
+            k: e.get("k").and_then(Json::as_usize).unwrap_or(0),
+        });
+    }
+    Ok(entries)
+}
+
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     dir: PathBuf,
     client: xla::PjRtClient,
@@ -54,27 +91,62 @@ pub struct Runtime {
     cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+/// Feature-off stub: construction always fails, so the methods below are
+/// unreachable at runtime but keep every call site compiling.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    entries: Vec<ArtifactEntry>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Always fails: executing artifacts needs the `pjrt` feature (and the
+    /// external `xla` crate). The manifest is still validated first so a
+    /// broken manifest is reported over a missing feature.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let entries = parse_manifest(dir)?;
+        let _ = entries;
+        bail!("built without the `pjrt` feature: HLO engine unavailable (native solvers still run)")
+    }
+
+    pub fn entries(&self) -> &[ArtifactEntry] {
+        &self.entries
+    }
+
+    pub fn platform(&self) -> String {
+        "pjrt-disabled".to_string()
+    }
+
+    /// Find the artifact for a graph name + layer shape.
+    pub fn find(&self, name: &str, n: usize, m: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name && e.n == n && e.m == m)
+    }
+
+    /// Find by name + input-width only (hessian graphs ignore n).
+    pub fn find_m(&self, name: &str, m: usize) -> Option<&ArtifactEntry> {
+        self.entries.iter().find(|e| e.name == name && e.m == m)
+    }
+
+    pub fn exec(
+        &self,
+        _entry: &ArtifactEntry,
+        _mats: &[&Mat],
+        _scalars: &[f32],
+        _out_rows: &[usize],
+    ) -> Result<Vec<Mat>> {
+        bail!("built without the `pjrt` feature")
+    }
+
+    pub fn exec_prune(&self, _entry: &ArtifactEntry, _w: &Mat, _hinv: &Mat) -> Result<(Mat, f64)> {
+        bail!("built without the `pjrt` feature")
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load the manifest and connect the CPU PJRT client.
     pub fn load(dir: &Path) -> Result<Runtime> {
-        let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("read {} (run `make artifacts`)", manifest_path.display()))?;
-        let root = json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
-        if root.get("format").and_then(Json::as_str) != Some("hlo-text-v1") {
-            bail!("unsupported manifest format");
-        }
-        let mut entries = Vec::new();
-        for e in root.get("entries").and_then(Json::as_arr).unwrap_or(&[]) {
-            entries.push(ArtifactEntry {
-                name: e.get("name").and_then(Json::as_str).unwrap_or_default().to_string(),
-                file: e.get("file").and_then(Json::as_str).unwrap_or_default().to_string(),
-                n: e.get("n").and_then(Json::as_usize).unwrap_or(0),
-                m: e.get("m").and_then(Json::as_usize).unwrap_or(0),
-                t: e.get("t").and_then(Json::as_usize).unwrap_or(0),
-                k: e.get("k").and_then(Json::as_usize).unwrap_or(0),
-            });
-        }
+        let entries = parse_manifest(dir)?;
         let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
         Ok(Runtime { dir: dir.to_path_buf(), client, entries, cache: Mutex::new(HashMap::new()) })
     }
@@ -179,12 +251,17 @@ impl Runtime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
     fn runtime() -> Option<Runtime> {
+        if cfg!(not(feature = "pjrt")) {
+            eprintln!("pjrt feature off; runtime tests skipped");
+            return None;
+        }
         let dir = artifacts_dir();
         if dir.join("manifest.json").exists() {
             Some(Runtime::load(&dir).expect("runtime load"))

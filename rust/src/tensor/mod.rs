@@ -176,21 +176,22 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
 
 #[inline]
 fn dot(a: &[f32], b: &[f32]) -> f32 {
-    // 4-lane unrolled accumulation: keeps independent dependency chains so
-    // LLVM vectorizes; measured in benches/perf notes.
+    // 4 independent fma chains over exact chunks: no bounds checks in the
+    // body, and with target-cpu=native (see .cargo/config.toml) mul_add
+    // lowers to vfmadd, which LLVM then widens to full vector width.
     let n = a.len().min(b.len());
     let mut acc = [0f32; 4];
-    let chunks = n / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
+    let (ac, ar) = a[..n].split_at(n - n % 4);
+    let (bc, br) = b[..n].split_at(n - n % 4);
+    for (ak, bk) in ac.chunks_exact(4).zip(bc.chunks_exact(4)) {
+        acc[0] = ak[0].mul_add(bk[0], acc[0]);
+        acc[1] = ak[1].mul_add(bk[1], acc[1]);
+        acc[2] = ak[2].mul_add(bk[2], acc[2]);
+        acc[3] = ak[3].mul_add(bk[3], acc[3]);
     }
     let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
+    for (&x, &y) in ar.iter().zip(br) {
+        s = x.mul_add(y, s);
     }
     s
 }
@@ -224,10 +225,46 @@ pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
     });
 }
 
+/// y += a·x (f32), vectorization-friendly: exact 8-wide chunks with fused
+/// multiply-adds, scalar tail.
 #[inline]
-fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
-    for (yi, &xi) in y.iter_mut().zip(x) {
-        *yi += a * xi;
+pub fn axpy(a: f32, x: &[f32], y: &mut [f32]) {
+    let n = x.len().min(y.len());
+    let split = n - n % 8;
+    let (xc, xr) = x[..n].split_at(split);
+    let (yc, yr) = y[..n].split_at_mut(split);
+    for (yk, xk) in yc.chunks_exact_mut(8).zip(xc.chunks_exact(8)) {
+        yk[0] = xk[0].mul_add(a, yk[0]);
+        yk[1] = xk[1].mul_add(a, yk[1]);
+        yk[2] = xk[2].mul_add(a, yk[2]);
+        yk[3] = xk[3].mul_add(a, yk[3]);
+        yk[4] = xk[4].mul_add(a, yk[4]);
+        yk[5] = xk[5].mul_add(a, yk[5]);
+        yk[6] = xk[6].mul_add(a, yk[6]);
+        yk[7] = xk[7].mul_add(a, yk[7]);
+    }
+    for (yi, &xi) in yr.iter_mut().zip(xr) {
+        *yi = xi.mul_add(a, *yi);
+    }
+}
+
+/// y += a·x (f64) over the common prefix — the axpy behind the MRP row
+/// updates and the SparseGPT sweep. Same chunks_exact + mul_add shape as
+/// the f32 variant.
+#[inline]
+pub fn axpy_f64(a: f64, x: &[f64], y: &mut [f64]) {
+    let n = x.len().min(y.len());
+    let split = n - n % 4;
+    let (xc, xr) = x[..n].split_at(split);
+    let (yc, yr) = y[..n].split_at_mut(split);
+    for (yk, xk) in yc.chunks_exact_mut(4).zip(xc.chunks_exact(4)) {
+        yk[0] = xk[0].mul_add(a, yk[0]);
+        yk[1] = xk[1].mul_add(a, yk[1]);
+        yk[2] = xk[2].mul_add(a, yk[2]);
+        yk[3] = xk[3].mul_add(a, yk[3]);
+    }
+    for (yi, &xi) in yr.iter_mut().zip(xr) {
+        *yi = xi.mul_add(a, *yi);
     }
 }
 
@@ -317,8 +354,21 @@ impl MatF64 {
                             if xi == 0.0 {
                                 continue;
                             }
-                            for (j, h) in hrow.iter_mut().enumerate() {
-                                *h += xi * xr[j] as f64;
+                            // chunks_exact + mul_add keeps the f32->f64
+                            // widening off the dependency chain and lets
+                            // LLVM vectorize the row update.
+                            let cols = hrow.len();
+                            let split = cols - cols % 4;
+                            let (hc, hr) = hrow.split_at_mut(split);
+                            let (xc, xtail) = xr[..cols].split_at(split);
+                            for (hk, xk) in hc.chunks_exact_mut(4).zip(xc.chunks_exact(4)) {
+                                hk[0] = (xk[0] as f64).mul_add(xi, hk[0]);
+                                hk[1] = (xk[1] as f64).mul_add(xi, hk[1]);
+                                hk[2] = (xk[2] as f64).mul_add(xi, hk[2]);
+                                hk[3] = (xk[3] as f64).mul_add(xi, hk[3]);
+                            }
+                            for (h, &xj) in hr.iter_mut().zip(xtail) {
+                                *h = (xj as f64).mul_add(xi, *h);
                             }
                         }
                         i += nt;
@@ -357,9 +407,7 @@ impl MatF64 {
                             if xi == 0.0 {
                                 continue;
                             }
-                            for (h, &xj) in hrow.iter_mut().zip(xr.iter()) {
-                                *h += xi * xj;
-                            }
+                            axpy_f64(xi, xr, hrow);
                         }
                         i += nt;
                     }

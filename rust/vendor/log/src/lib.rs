@@ -1,0 +1,175 @@
+//! Minimal offline stand-in for the `log` crate facade.
+//!
+//! Implements the subset this repository uses: the [`Log`] trait,
+//! [`Record`]/[`Metadata`], [`set_logger`]/[`set_max_level`], and the
+//! five level macros. Semantics match the real facade for that subset:
+//! records above the max level are dropped, and nothing is emitted until
+//! a logger is installed.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    Off = 0,
+    Error,
+    Warn,
+    Info,
+    Debug,
+    Trace,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct Metadata {
+    level: Level,
+}
+
+impl Metadata {
+    pub fn level(&self) -> Level {
+        self.level
+    }
+}
+
+pub struct Record<'a> {
+    metadata: Metadata,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    pub fn metadata(&self) -> &Metadata {
+        &self.metadata
+    }
+
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+pub trait Log: Send + Sync {
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    fn log(&self, record: &Record);
+    fn flush(&self);
+}
+
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("logger already installed")
+    }
+}
+
+static LOGGER: OnceLock<&'static (dyn Log + 'static)> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(LevelFilter::Trace as usize);
+
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+pub fn max_level() -> usize {
+    MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+#[doc(hidden)]
+pub fn __private_log(level: Level, args: fmt::Arguments) {
+    if (level as usize) > max_level() {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let record = Record { metadata: Metadata { level }, args };
+        if logger.enabled(&record.metadata) {
+            logger.log(&record);
+        }
+    }
+}
+
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Error, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Warn, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Info, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Debug, format_args!($($arg)+)) };
+}
+
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::__private_log($crate::Level::Trace, format_args!($($arg)+)) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    static SEEN: AtomicUsize = AtomicUsize::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, _: &Metadata) -> bool {
+            true
+        }
+        fn log(&self, record: &Record) {
+            // Exercise the accessors the downstream logger uses.
+            let _ = format!("[{}] {}", record.level(), record.args());
+            SEEN.fetch_add(1, Ordering::Relaxed);
+        }
+        fn flush(&self) {}
+    }
+
+    static C: Counter = Counter;
+
+    #[test]
+    fn filtering_and_dispatch() {
+        set_logger(&C).ok();
+        set_max_level(LevelFilter::Info);
+        crate::info!("hello {}", 1);
+        crate::debug!("dropped");
+        crate::warn!("kept");
+        assert_eq!(SEEN.load(Ordering::Relaxed), 2);
+        // second install attempt fails but is harmless
+        assert!(set_logger(&C).is_err());
+    }
+}

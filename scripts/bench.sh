@@ -1,0 +1,16 @@
+#!/usr/bin/env bash
+# Run the perf microbenchmarks and refresh the perf trajectory file.
+#
+#   scripts/bench.sh [filter]
+#
+# The bench binary itself writes BENCH_perf.json at the repo root and
+# prints a delta table against the previous run (a filtered run keeps the
+# previous numbers for kernels it didn't re-measure), so this wrapper only
+# pins the working directory and forwards arguments.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+cargo bench --bench perf -- "$@"
+
+echo
+echo "perf trajectory: $(pwd)/BENCH_perf.json"
