@@ -224,6 +224,130 @@ fn bench_mrp_blockwise(rec: &mut Recorder) {
     }
 }
 
+/// Sparse-vs-dense `matmul_tb` across formats and batch shapes; records
+/// the realized kernel speedups and compression ratios under `derived`.
+fn bench_sparse_kernels(rec: &mut Recorder) {
+    use apt::sparse::{Csr, Packed24};
+    let mut rng = Rng::new(9);
+
+    // unstructured 80% -> CSR
+    let mut w = Mat::randn(256, 512, 1.0, &mut rng);
+    apt::prune::magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.8 });
+    let csr = Csr::from_dense(&w);
+    let x = Mat::randn(64, 512, 1.0, &mut rng);
+    let d = rec.bench("dense matmul_tb 64x512 @ (256,512)", 20, || {
+        std::hint::black_box(x.matmul_tb(&w));
+    });
+    let c = rec.bench("csr matmul_tb @80% sparsity", 20, || {
+        std::hint::black_box(csr.matmul_tb(&x));
+    });
+    rec.derived.insert("csr_matmul_speedup_80".into(), d / c.max(1e-9));
+    rec.derived
+        .insert("csr_compression_80".into(), csr.dense_bytes() as f64 / csr.bytes() as f64);
+
+    // 2:4 -> packed layout, executed without densifying
+    let mut w24 = Mat::randn(256, 512, 1.0, &mut rng);
+    apt::prune::magnitude_prune(&mut w24, Sparsity::two_four());
+    let packed = Packed24::from_dense(&w24).unwrap();
+    let d24 = rec.bench("dense matmul_tb 64x512 @ 2:4", 20, || {
+        std::hint::black_box(x.matmul_tb(&w24));
+    });
+    let p24 = rec.bench("packed24 matmul_tb 64x512", 20, || {
+        std::hint::black_box(packed.matmul_tb(&x));
+    });
+    rec.derived.insert("packed24_matmul_speedup".into(), d24 / p24.max(1e-9));
+    rec.derived.insert(
+        "packed24_compression".into(),
+        packed.dense_bytes() as f64 / packed.bytes() as f64,
+    );
+
+    // single-token decode shape (t = 1): the serving hot path
+    let x1 = Mat::randn(1, 512, 1.0, &mut rng);
+    let d1 = rec.bench("dense matmul_tb 1x512 @ (256,512)", 50, || {
+        std::hint::black_box(x1.matmul_tb(&w));
+    });
+    let c1 = rec.bench("csr matmul_tb 1x512 @80%", 50, || {
+        std::hint::black_box(csr.matmul_tb(&x1));
+    });
+    let p1 = rec.bench("packed24 matmul_tb 1x512", 50, || {
+        std::hint::black_box(packed.matmul_tb(&x1));
+    });
+    rec.derived.insert("csr_decode_speedup_80".into(), d1 / c1.max(1e-9));
+    rec.derived.insert("packed24_decode_speedup".into(), d1 / p1.max(1e-9));
+}
+
+/// End-to-end pruned-model decode: the same magnitude-2:4 / 80%-CSR
+/// transformer run dense vs from its packed `WeightStore` layouts, plus
+/// the whole-checkpoint compression ratio.
+fn bench_pruned_decode(rec: &mut Recorder) {
+    use apt::model::BLOCK_LINEARS;
+    use apt::sparse::WeightStore;
+
+    let cfg = TransformerConfig {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq: 64,
+    };
+    let mut model = Transformer::init(cfg, &mut Rng::new(31));
+    for b in 0..cfg.n_layers {
+        for name in BLOCK_LINEARS {
+            apt::prune::magnitude_prune(
+                model.weight_mut(b, name).dense_mut(),
+                Sparsity::two_four(),
+            );
+        }
+    }
+    let pack_as = |model: &Transformer, sp: Sparsity| -> Transformer {
+        let mut out = Transformer { cfg: model.cfg, params: model.params.clone() };
+        for b in 0..cfg.n_layers {
+            for name in BLOCK_LINEARS {
+                let w = out.weight(b, name).to_dense();
+                *out.weight_mut(b, name) = WeightStore::pack(&w, sp);
+            }
+        }
+        out
+    };
+    let packed = pack_as(&model, Sparsity::two_four());
+    let toks: Vec<u32> = (0..48).map(|i| (i * 7 % 512) as u32).collect();
+    let d = rec.bench("decode 48tok d128 L4 (dense 2:4 weights)", 10, || {
+        std::hint::black_box(model.predict_last(&toks));
+    });
+    let p = rec.bench("decode 48tok d128 L4 (packed24 stores)", 10, || {
+        std::hint::black_box(packed.predict_last(&toks));
+    });
+    rec.derived.insert("decode_packed24_speedup".into(), d / p.max(1e-9));
+    rec.derived.insert(
+        "model_compression_24".into(),
+        packed.params.dense_bytes() as f64 / packed.params.bytes() as f64,
+    );
+
+    // 80% unstructured variant of the same geometry -> CSR stores
+    let mut m80 = Transformer::init(cfg, &mut Rng::new(32));
+    for b in 0..cfg.n_layers {
+        for name in BLOCK_LINEARS {
+            apt::prune::magnitude_prune(
+                m80.weight_mut(b, name).dense_mut(),
+                Sparsity::Unstructured { rate: 0.8 },
+            );
+        }
+    }
+    let csr80 = pack_as(&m80, Sparsity::Unstructured { rate: 0.8 });
+    let d80 = rec.bench("decode 48tok d128 L4 (dense 80% weights)", 10, || {
+        std::hint::black_box(m80.predict_last(&toks));
+    });
+    let c80 = rec.bench("decode 48tok d128 L4 (csr stores)", 10, || {
+        std::hint::black_box(csr80.predict_last(&toks));
+    });
+    rec.derived.insert("decode_csr_speedup_80".into(), d80 / c80.max(1e-9));
+    rec.derived.insert(
+        "model_compression_csr_80".into(),
+        csr80.params.dense_bytes() as f64 / csr80.params.bytes() as f64,
+    );
+}
+
 /// End-to-end coordinator run (calibrate -> prune -> propagate) on a
 /// small trained transformer, so every future PR has a pipeline-level
 /// trajectory, not just kernel medians.
@@ -376,17 +500,11 @@ fn main() {
     }
 
     if run("sparse") {
-        let mut rng = Rng::new(9);
-        let mut w = Mat::randn(256, 512, 1.0, &mut rng);
-        apt::prune::magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.8 });
-        let csr = apt::sparse::Csr::from_dense(&w);
-        let x = Mat::randn(64, 512, 1.0, &mut rng);
-        rec.bench("dense matmul_tb 64x512 @ (256,512)", 20, || {
-            std::hint::black_box(x.matmul_tb(&w));
-        });
-        rec.bench("csr matmul_tb @80% sparsity", 20, || {
-            std::hint::black_box(csr.matmul_tb(&x));
-        });
+        bench_sparse_kernels(&mut rec);
+    }
+
+    if run("decode") {
+        bench_pruned_decode(&mut rec);
     }
 
     if run("pipeline") {

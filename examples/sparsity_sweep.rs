@@ -11,7 +11,6 @@ use apt::eval::perplexity;
 use apt::harness::Zoo;
 use apt::model::Transformer;
 use apt::prune::{Method, PruneConfig, Sparsity};
-use apt::sparse::Csr;
 
 fn main() -> anyhow::Result<()> {
     let zoo = Zoo::new(42);
@@ -41,21 +40,27 @@ fn main() -> anyhow::Result<()> {
         println!();
     }
 
-    // demonstrate sparse packing of an SM-pruned model
+    // the pipeline leaves an SM-pruned model packed in the sparse formats
     let mut pruned = Transformer { cfg: base.cfg, params: base.params.clone() };
     let cfg = PipelineConfig::new(PruneConfig::new(
         Method::SM,
         Sparsity::Unstructured { rate: 0.8 },
     ));
-    prune_model(&mut pruned, &calib, &cfg, None)?;
+    let report = prune_model(&mut pruned, &calib, &cfg, None)?;
     let w = pruned.weight(0, "w1");
-    let csr = Csr::from_dense(w);
     println!(
-        "\nblock0.w1 @80%: dense {} B -> CSR {} B ({:.1}x smaller), nnz={}",
-        w.data.len() * 4,
-        csr.bytes(),
-        (w.data.len() * 4) as f64 / csr.bytes() as f64,
-        csr.nnz()
+        "\nblock0.w1 @80%: dense {} B -> {} {} B ({:.1}x smaller), nnz={}",
+        w.dense_bytes(),
+        w.format(),
+        w.bytes(),
+        w.dense_bytes() as f64 / w.bytes() as f64,
+        w.nnz()
+    );
+    println!(
+        "whole model: pruned linears {} B -> {} B ({:.2}x), eval runs the sparse kernels",
+        report.dense_bytes(),
+        report.packed_bytes(),
+        report.compression_ratio()
     );
     println!("\nExpected shape (paper Table 2): at 80% SS/wanda blow up or");
     println!("collapse; SM degrades most gracefully (smallest ppl).");

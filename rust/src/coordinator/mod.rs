@@ -10,7 +10,14 @@
 //!   2. *Prune*: each linear of the block is an independent job — the
 //!      worker pool solves them concurrently (native solver or AOT HLO via
 //!      the PJRT runtime, per `Engine`).
-//!   3. *Propagate*: re-run the batches through the now-pruned block to
+//!   3. *Pack*: each pruned linear is swapped, in place, into the
+//!      [`WeightStore`] layout matching its sparsity pattern (CSR for
+//!      unstructured, packed 2:4 for semi-structured; kept dense below
+//!      the byte break-even), so every later stage — propagation below,
+//!      perplexity/zero-shot eval, serving — executes the sparse
+//!      kernels and the realized compression is reported per linear in
+//!      [`PipelineReport`].
+//!   4. *Propagate*: re-run the batches through the now-pruned block to
 //!      produce the next block's inputs. A bounded channel applies
 //!      backpressure so at most `queue_cap` activation batches are ever
 //!      in flight.
@@ -30,6 +37,7 @@ use crate::prune::{
     prune_layer, HessianAccumulator, LayerPruneResult, Mask, PruneConfig, Sparsity,
 };
 use crate::runtime::{Engine, Runtime};
+use crate::sparse::WeightStore;
 use crate::tensor::Mat;
 use crate::util::{num_threads, profile, Timer};
 
@@ -55,7 +63,8 @@ impl PipelineConfig {
     }
 }
 
-/// Per-linear outcome + which engine actually solved it.
+/// Per-linear outcome + which engine actually solved it + the packed
+/// layout it was left in.
 #[derive(Clone, Debug)]
 pub struct LinearReport {
     pub block: usize,
@@ -65,6 +74,13 @@ pub struct LinearReport {
     pub pred_loss: f64,
     pub elapsed_ms: f64,
     pub engine: &'static str,
+    /// Layout the linear was packed into ("csr" / "packed24", or
+    /// "dense" when packing would not have shrunk it).
+    pub format: &'static str,
+    /// Actual bytes of the packed layout.
+    pub bytes: usize,
+    /// Bytes the same weights would occupy densely.
+    pub dense_bytes: usize,
 }
 
 #[derive(Debug, Default)]
@@ -93,6 +109,21 @@ impl PipelineReport {
         hlo as f64 / self.linears.len().max(1) as f64
     }
 
+    /// Total bytes of the packed pruned linears.
+    pub fn packed_bytes(&self) -> usize {
+        self.linears.iter().map(|l| l.bytes).sum()
+    }
+
+    /// Bytes the same linears would occupy densely.
+    pub fn dense_bytes(&self) -> usize {
+        self.linears.iter().map(|l| l.dense_bytes).sum()
+    }
+
+    /// dense / packed across all pruned linears (>1 = compression win).
+    pub fn compression_ratio(&self) -> f64 {
+        self.dense_bytes() as f64 / self.packed_bytes().max(1) as f64
+    }
+
     /// Machine-readable form (BENCH_perf.json's `pipeline` section and any
     /// external tooling): stage timings plus one record per linear.
     pub fn to_json(&self) -> Json {
@@ -103,7 +134,10 @@ impl PipelineReport {
             .set("propagate_ms", Json::Num(self.propagate_ms))
             .set("n_calib_tokens", Json::Num(self.n_calib_tokens as f64))
             .set("overall_sparsity", Json::Num(self.overall_sparsity()))
-            .set("hlo_fraction", Json::Num(self.hlo_fraction()));
+            .set("hlo_fraction", Json::Num(self.hlo_fraction()))
+            .set("packed_bytes", Json::Num(self.packed_bytes() as f64))
+            .set("dense_bytes", Json::Num(self.dense_bytes() as f64))
+            .set("compression_ratio", Json::Num(self.compression_ratio()));
         let linears: Vec<Json> = self
             .linears
             .iter()
@@ -121,7 +155,10 @@ impl PipelineReport {
                         if l.pred_loss.is_finite() { Json::Num(l.pred_loss) } else { Json::Null },
                     )
                     .set("elapsed_ms", Json::Num(l.elapsed_ms))
-                    .set("engine", Json::Str(l.engine.to_string()));
+                    .set("engine", Json::Str(l.engine.to_string()))
+                    .set("format", Json::Str(l.format.to_string()))
+                    .set("bytes", Json::Num(l.bytes as f64))
+                    .set("dense_bytes", Json::Num(l.dense_bytes as f64));
                 e
             })
             .collect();
@@ -172,7 +209,7 @@ pub fn prune_model(
         let jobs: Vec<(usize, &'static str, Mat, &HessianAccumulator)> = linear_names
             .iter()
             .map(|&name| {
-                let w = model.block_weight(b, name).clone();
+                let w = model.block_weight(b, name).to_dense();
                 let acc = accs.get(name).expect("hessian for linear");
                 (b, name, w, acc)
             })
@@ -180,6 +217,10 @@ pub fn prune_model(
         let results: Vec<(&'static str, Mat, LayerPruneResult, &'static str)> =
             profile("pipeline.prune", || run_prune_jobs(jobs, cfg, runtime));
         for (name, w_new, res, engine) in results {
+            // Pack into the layout matching the sparsity pattern; the
+            // propagate stage below (and every later eval) runs the
+            // sparse kernels directly from this layout.
+            let store = WeightStore::pack(&w_new, cfg.prune.sparsity);
             report.linears.push(LinearReport {
                 block: b,
                 name: name.to_string(),
@@ -188,8 +229,11 @@ pub fn prune_model(
                 pred_loss: res.pred_loss,
                 elapsed_ms: res.elapsed_ms,
                 engine,
+                format: store.format(),
+                bytes: store.bytes(),
+                dense_bytes: store.dense_bytes(),
             });
-            *model.block_weight_mut(b, name) = w_new;
+            *model.block_weight_mut(b, name) = store;
             let _ = res.mask;
         }
         report.prune_ms += prune_timer.elapsed_ms();
@@ -472,6 +516,52 @@ mod tests {
         let report = prune_model(&mut model, &calib, &cfg, None).unwrap();
         assert_eq!(report.linears.len(), 2 * 3);
         assert!((report.overall_sparsity() - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn pipeline_packs_linears_and_reports_compression() {
+        // 2:4 → every linear ends up in the packed24 layout (9/16 of the
+        // dense bytes) and the compression shows up in the JSON report.
+        let (_gen, data, mut model) = setup_transformer();
+        let calib = data.sample_calibration(8, 32, &mut Rng::new(21));
+        let cfg = PipelineConfig::new(PruneConfig::new(Method::SM, Sparsity::two_four()));
+        let report = prune_model(&mut model, &calib, &cfg, None).unwrap();
+        for l in &report.linears {
+            assert_eq!(l.format, "packed24", "{l:?}");
+            assert_eq!(l.bytes * 16, l.dense_bytes * 9, "{l:?}");
+            let stored = model.weight(l.block, &l.name);
+            assert_eq!(stored.format(), "packed24");
+            assert_eq!(stored.bytes(), l.bytes);
+        }
+        assert!((report.compression_ratio() - 16.0 / 9.0).abs() < 1e-9);
+        let parsed = crate::json::parse(&report.to_json().to_string_pretty()).unwrap();
+        assert!(
+            parsed.get("compression_ratio").and_then(crate::json::Json::as_f64).unwrap() > 1.7
+        );
+        assert_eq!(
+            parsed.get("linears").and_then(crate::json::Json::as_arr).unwrap()[0]
+                .get("format")
+                .and_then(crate::json::Json::as_str)
+                .unwrap(),
+            "packed24"
+        );
+        // the packed model still evaluates
+        let toks: Vec<u32> = (0..32).map(|i| (i % 50) as u32).collect();
+        assert!(model.forward_loss(&toks, (1, 32)).is_finite());
+
+        // unstructured → CSR layout
+        let (_gen2, data2, mut model2) = setup_transformer();
+        let calib2 = data2.sample_calibration(8, 32, &mut Rng::new(22));
+        let cfg2 = PipelineConfig::new(PruneConfig::new(
+            Method::SM,
+            Sparsity::Unstructured { rate: 0.7 },
+        ));
+        let report2 = prune_model(&mut model2, &calib2, &cfg2, None).unwrap();
+        for l in &report2.linears {
+            assert_eq!(l.format, "csr", "{l:?}");
+            assert!(l.bytes < l.dense_bytes, "{l:?}");
+        }
+        assert!(report2.compression_ratio() > 1.2);
     }
 
     #[test]

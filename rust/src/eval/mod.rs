@@ -88,7 +88,7 @@ mod tests {
         // zero half of every attention projection crudely
         for b in 0..2 {
             for name in ["wq", "wk", "wv", "wo", "w1", "w2", "w3"] {
-                let w = model.weight_mut(b, name);
+                let w = model.weight_mut(b, name).dense_mut();
                 for i in 0..w.data.len() {
                     if i % 2 == 0 {
                         w.data[i] = 0.0;

@@ -179,10 +179,10 @@ mod tests {
         zoo.train_tokens = 8_000;
         let base = zoo.model("mamba", "small", 2).unwrap();
         let mut copy = base.duplicate();
-        copy.as_dyn_mut().block_weight_mut(0, "in_proj").data[0] += 1.0;
+        copy.as_dyn_mut().block_weight_mut(0, "in_proj").dense_mut().data[0] += 1.0;
         assert_ne!(
-            base.as_dyn().block_weight(0, "in_proj").data[0],
-            copy.as_dyn().block_weight(0, "in_proj").data[0]
+            base.as_dyn().block_weight(0, "in_proj").as_dense().unwrap().data[0],
+            copy.as_dyn().block_weight(0, "in_proj").as_dense().unwrap().data[0]
         );
         std::fs::remove_dir_all(&zoo.cache_dir).ok();
     }

@@ -1,11 +1,27 @@
-//! Binary tensor store: the repo's checkpoint format ("ATS" — apt tensor
-//! store). Safetensors-like: a little-endian header with named f32 tensors,
-//! written/read without any external serialization crate.
+//! Binary tensor stores: the repo's checkpoint formats.
 //!
-//! Layout:
+//! [`TensorStore`] ("ATS1") is the dense-only store — safetensors-like:
+//! a little-endian header with named f32 tensors, written/read without
+//! any external serialization crate. It remains the gradient container.
+//!
 //!   magic  b"ATS1"
 //!   u32    n_entries
 //!   per entry: u32 name_len | name bytes | u32 rows | u32 cols | f32 data
+//!
+//! [`ParamStore`] ("ATS2") is the model-parameter store: each entry is a
+//! [`WeightStore`] and the on-disk format is *layout-preserving*, so a
+//! pruned checkpoint keeps its CSR / packed-2:4 compression on disk and
+//! loads straight back into the sparse serving path:
+//!
+//!   magic  b"ATS2"
+//!   u32    n_entries
+//!   per entry: u32 name_len | name | u8 fmt | u32 rows | u32 cols | payload
+//!     fmt 0 dense:    f32 data (rows*cols)
+//!     fmt 1 csr:      u32 nnz | u32 indptr (rows+1) | u32 indices | f32 values
+//!     fmt 2 packed24: f32 values (rows*cols/2) | u8 meta (rows*cols/4)
+//!
+//! `ParamStore::load` also accepts ATS1 files (all-dense), so pre-existing
+//! checkpoints and model caches keep working.
 //! A `meta.json` sidecar (written by the model layer) carries configs.
 
 use std::collections::BTreeMap;
@@ -15,9 +31,11 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::sparse::{Csr, Packed24, WeightStore};
 use crate::tensor::Mat;
 
 const MAGIC: &[u8; 4] = b"ATS1";
+const MAGIC_V2: &[u8; 4] = b"ATS2";
 
 /// Named tensor collection (deterministic iteration order).
 #[derive(Clone, Debug, Default)]
@@ -84,36 +102,293 @@ impl TensorStore {
         if &magic != MAGIC {
             bail!("bad magic in {}", path.display());
         }
-        let n = read_u32(&mut r)? as usize;
         let mut store = TensorStore::new();
-        for _ in 0..n {
-            let name_len = read_u32(&mut r)? as usize;
-            if name_len > 4096 {
-                bail!("implausible name length {name_len}");
-            }
-            let mut name = vec![0u8; name_len];
-            r.read_exact(&mut name)?;
-            let rows = read_u32(&mut r)? as usize;
-            let cols = read_u32(&mut r)? as usize;
-            let mut bytes = vec![0u8; rows * cols * 4];
-            r.read_exact(&mut bytes)?;
-            let data: Vec<f32> = bytes
-                .chunks_exact(4)
-                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
-                .collect();
-            store.insert(
-                std::str::from_utf8(&name).context("tensor name not utf-8")?,
-                Mat::from_vec(rows, cols, data),
-            );
+        for (name, m) in load_ats1_body(&mut r)? {
+            store.tensors.insert(name, m);
         }
         Ok(store)
     }
+}
+
+/// Upper bound on plausible tensor elements / dimensions (2^28 f32 =
+/// 1 GiB): a corrupt header fails with a clean Err instead of aborting
+/// the process on a huge allocation (or overflowing the byte count).
+const MAX_TENSOR_ELEMS: usize = 1 << 28;
+
+fn check_shape(name: &str, rows: usize, cols: usize) -> Result<()> {
+    if rows > MAX_TENSOR_ELEMS
+        || cols > MAX_TENSOR_ELEMS
+        || rows.saturating_mul(cols) > MAX_TENSOR_ELEMS
+    {
+        bail!("implausible tensor shape {rows}x{cols} in '{name}'");
+    }
+    Ok(())
+}
+
+/// Parse an ATS1 body (everything after the magic): dense named tensors.
+fn load_ats1_body(r: &mut impl Read) -> Result<Vec<(String, Mat)>> {
+    let n = read_u32(r)? as usize;
+    let mut out = Vec::with_capacity(n.min(65_536));
+    for _ in 0..n {
+        let name = read_name(r)?;
+        let rows = read_u32(r)? as usize;
+        let cols = read_u32(r)? as usize;
+        check_shape(&name, rows, cols)?;
+        let data = read_f32s(r, rows * cols)?;
+        out.push((name, Mat::from_vec(rows, cols, data)));
+    }
+    Ok(out)
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {
     let mut b = [0u8; 4];
     r.read_exact(&mut b)?;
     Ok(u32::from_le_bytes(b))
+}
+
+fn read_name(r: &mut impl Read) -> Result<String> {
+    let name_len = read_u32(r)? as usize;
+    if name_len > 4096 {
+        bail!("implausible name length {name_len}");
+    }
+    let mut name = vec![0u8; name_len];
+    r.read_exact(&mut name)?;
+    String::from_utf8(name).context("tensor name not utf-8")
+}
+
+fn read_f32s(r: &mut impl Read, n: usize) -> Result<Vec<f32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(4)
+        .map(|b| u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+        .collect())
+}
+
+fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn write_u32s(w: &mut impl Write, data: &[u32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// ParamStore: named WeightStore collection (model parameters)
+// ---------------------------------------------------------------------------
+
+/// Named [`WeightStore`] collection with deterministic iteration order —
+/// the model layer's parameter container. Dense at init; the coordinator
+/// swaps pruned linears to their packed layouts in place.
+#[derive(Clone, Debug, Default)]
+pub struct ParamStore {
+    pub tensors: BTreeMap<String, WeightStore>,
+}
+
+impl ParamStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Insert a dense tensor (the init/training entry point).
+    pub fn insert(&mut self, name: &str, m: Mat) {
+        self.tensors.insert(name.to_string(), WeightStore::Dense(m));
+    }
+
+    /// Insert a tensor in an explicit layout.
+    pub fn insert_store(&mut self, name: &str, ws: WeightStore) {
+        self.tensors.insert(name.to_string(), ws);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&WeightStore> {
+        self.tensors.get(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut WeightStore> {
+        self.tensors.get_mut(name).with_context(|| format!("tensor '{name}' missing"))
+    }
+
+    /// Borrow a tensor that must be dense (embeddings, norms, conv) —
+    /// errors rather than silently densifying, because these are never
+    /// packed and a sparse layout here means a wiring bug.
+    pub fn dense(&self, name: &str) -> Result<&Mat> {
+        match self.get(name)? {
+            WeightStore::Dense(m) => Ok(m),
+            other => bail!("tensor '{name}' stored as {}, expected dense", other.format()),
+        }
+    }
+
+    /// Mutable dense access, densifying a packed layout in place — the
+    /// trainer's "densify on demand" entry point.
+    pub fn dense_mut(&mut self, name: &str) -> Result<&mut Mat> {
+        Ok(self.get_mut(name)?.dense_mut())
+    }
+
+    pub fn len(&self) -> usize {
+        self.tensors.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tensors.is_empty()
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Logical parameter count (rows · cols per tensor, layout-blind).
+    pub fn total_params(&self) -> usize {
+        self.tensors.values().map(|ws| ws.n_params()).sum()
+    }
+
+    /// Actual bytes across all layouts.
+    pub fn bytes(&self) -> usize {
+        self.tensors.values().map(|ws| ws.bytes()).sum()
+    }
+
+    /// Bytes the same parameters would occupy densely.
+    pub fn dense_bytes(&self) -> usize {
+        self.tensors.values().map(|ws| ws.dense_bytes()).sum()
+    }
+
+    /// All-dense copy (the baseline side of sparse-vs-dense comparisons).
+    pub fn densified(&self) -> ParamStore {
+        let mut out = ParamStore::new();
+        for (name, ws) in &self.tensors {
+            out.insert(name, ws.to_dense());
+        }
+        out
+    }
+
+    /// Layout-preserving save (ATS2).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(MAGIC_V2)?;
+        w.write_all(&(self.tensors.len() as u32).to_le_bytes())?;
+        for (name, ws) in &self.tensors {
+            let nb = name.as_bytes();
+            w.write_all(&(nb.len() as u32).to_le_bytes())?;
+            w.write_all(nb)?;
+            let (rows, cols) = ws.shape();
+            let fmt: u8 = match ws {
+                WeightStore::Dense(_) => 0,
+                WeightStore::Csr(_) => 1,
+                WeightStore::Packed24(_) => 2,
+            };
+            w.write_all(&[fmt])?;
+            w.write_all(&(rows as u32).to_le_bytes())?;
+            w.write_all(&(cols as u32).to_le_bytes())?;
+            match ws {
+                WeightStore::Dense(m) => write_f32s(&mut w, &m.data)?,
+                WeightStore::Csr(c) => {
+                    w.write_all(&(c.nnz() as u32).to_le_bytes())?;
+                    write_u32s(&mut w, &c.indptr)?;
+                    write_u32s(&mut w, &c.indices)?;
+                    write_f32s(&mut w, &c.values)?;
+                }
+                WeightStore::Packed24(p) => {
+                    write_f32s(&mut w, &p.values)?;
+                    w.write_all(&p.meta)?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Load an ATS2 file, or an ATS1 file as all-dense (back-compat with
+    /// pre-WeightStore checkpoints and model caches).
+    pub fn load(path: &Path) -> Result<ParamStore> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {}", path.display()))?,
+        );
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        let mut store = ParamStore::new();
+        if &magic == MAGIC {
+            for (name, m) in load_ats1_body(&mut r)? {
+                store.tensors.insert(name, WeightStore::Dense(m));
+            }
+            return Ok(store);
+        }
+        if &magic != MAGIC_V2 {
+            bail!("bad magic in {}", path.display());
+        }
+        let n = read_u32(&mut r)? as usize;
+        for _ in 0..n {
+            let name = read_name(&mut r)?;
+            let mut fmt = [0u8; 1];
+            r.read_exact(&mut fmt)?;
+            let rows = read_u32(&mut r)? as usize;
+            let cols = read_u32(&mut r)? as usize;
+            check_shape(&name, rows, cols)?;
+            let ws = match fmt[0] {
+                0 => WeightStore::Dense(Mat::from_vec(rows, cols, read_f32s(&mut r, rows * cols)?)),
+                1 => {
+                    let nnz = read_u32(&mut r)? as usize;
+                    if nnz > rows * cols {
+                        bail!("implausible nnz {nnz} for {rows}x{cols} '{name}'");
+                    }
+                    let indptr = read_u32s(&mut r, rows + 1)?;
+                    // indptr must start at 0, be non-decreasing, and end
+                    // at nnz — otherwise row slicing panics (or silently
+                    // mis-assigns weights) at first use instead of
+                    // failing loudly here.
+                    if indptr.first().copied().unwrap_or(1) != 0
+                        || indptr.windows(2).any(|p| p[0] > p[1])
+                        || indptr.last().copied().unwrap_or(0) as usize != nnz
+                    {
+                        bail!("csr indptr malformed in '{name}'");
+                    }
+                    let indices = read_u32s(&mut r, nnz)?;
+                    // Per row: in range and strictly increasing (the
+                    // writer emits ascending unique columns). Duplicates
+                    // would make matmul_tb sum entries that to_dense
+                    // last-write-wins drops — silent divergence.
+                    for row in 0..rows {
+                        let seg = &indices[indptr[row] as usize..indptr[row + 1] as usize];
+                        if seg.iter().any(|&c| c as usize >= cols)
+                            || seg.windows(2).any(|p| p[0] >= p[1])
+                        {
+                            bail!("csr indices malformed in '{name}' row {row}");
+                        }
+                    }
+                    let values = read_f32s(&mut r, nnz)?;
+                    WeightStore::Csr(Csr { rows, cols, indptr, indices, values })
+                }
+                2 => {
+                    if cols % 4 != 0 {
+                        bail!("packed24 cols {cols} not divisible by 4 in '{name}'");
+                    }
+                    let values = read_f32s(&mut r, rows * cols / 2)?;
+                    let mut meta = vec![0u8; rows * cols / 4];
+                    r.read_exact(&mut meta)?;
+                    // Each meta byte is (i1 << 2) | i0 with distinct
+                    // 2-bit indices; equal indices would make matmul_tb
+                    // and to_dense disagree, like CSR duplicates.
+                    if meta.iter().any(|&b| b >> 4 != 0 || b & 3 == (b >> 2) & 3) {
+                        bail!("packed24 meta malformed in '{name}'");
+                    }
+                    WeightStore::Packed24(Packed24 { rows, cols, values, meta })
+                }
+                f => bail!("unknown weight format tag {f} in '{name}'"),
+            };
+            store.tensors.insert(name, ws);
+        }
+        Ok(store)
+    }
 }
 
 #[cfg(test)]
@@ -163,5 +438,125 @@ mod tests {
         s.insert("a", Mat::randn(3, 4, 1.0, &mut rng));
         s.insert("b", Mat::randn(5, 2, 1.0, &mut rng));
         assert_eq!(s.total_params(), 22);
+    }
+
+    #[test]
+    fn param_store_roundtrips_every_layout() {
+        use crate::prune::{magnitude_prune, Sparsity};
+        let mut rng = Rng::new(3);
+        let mut s = ParamStore::new();
+        s.insert("dense", Mat::randn(5, 8, 1.0, &mut rng));
+        let mut wu = Mat::randn(6, 12, 1.0, &mut rng);
+        magnitude_prune(&mut wu, Sparsity::Unstructured { rate: 0.7 });
+        s.insert_store("csr", WeightStore::Csr(Csr::from_dense(&wu)));
+        let mut w24 = Mat::randn(4, 16, 1.0, &mut rng);
+        magnitude_prune(&mut w24, Sparsity::two_four());
+        s.insert_store("packed", WeightStore::Packed24(Packed24::from_dense(&w24).unwrap()));
+
+        let dir = std::env::temp_dir().join("apt_test_param_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("roundtrip.ats");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 3);
+        for name in s.names() {
+            assert_eq!(s.get(name).unwrap(), loaded.get(name).unwrap(), "{name}");
+        }
+        // layouts survive, and so do the byte counts
+        assert_eq!(loaded.get("csr").unwrap().format(), "csr");
+        assert_eq!(loaded.get("packed").unwrap().format(), "packed24");
+        assert_eq!(loaded.bytes(), s.bytes());
+        assert!(loaded.bytes() < loaded.dense_bytes());
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn param_store_loads_ats1_checkpoints() {
+        let mut rng = Rng::new(4);
+        let mut old = TensorStore::new();
+        old.insert("embed", Mat::randn(16, 8, 0.5, &mut rng));
+        old.insert("blocks.0.wq", Mat::randn(8, 8, 1.0, &mut rng));
+        let dir = std::env::temp_dir().join("apt_test_param_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("ats1_compat.ats");
+        old.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        assert_eq!(loaded.len(), 2);
+        for name in old.names() {
+            assert_eq!(loaded.get(name).unwrap().format(), "dense");
+            assert_eq!(loaded.dense(name).unwrap(), old.get(name).unwrap(), "{name}");
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Hand-build one ATS2 CSR entry named "w" from raw parts.
+    fn ats2_csr_bytes(rows: u32, cols: u32, indptr: &[u32], indices: &[u32]) -> Vec<u8> {
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"ATS2");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // n_entries
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // name_len
+        bytes.push(b'w');
+        bytes.push(1u8); // fmt = csr
+        bytes.extend_from_slice(&rows.to_le_bytes());
+        bytes.extend_from_slice(&cols.to_le_bytes());
+        bytes.extend_from_slice(&(indices.len() as u32).to_le_bytes()); // nnz
+        for v in indptr {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in indices {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for _ in indices {
+            bytes.extend_from_slice(&1.0f32.to_le_bytes()); // values
+        }
+        bytes
+    }
+
+    fn load_bytes(file: &str, bytes: &[u8]) -> Result<ParamStore> {
+        let dir = std::env::temp_dir().join("apt_test_param_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(file);
+        std::fs::write(&path, bytes).unwrap();
+        let res = ParamStore::load(&path);
+        std::fs::remove_file(path).ok();
+        res
+    }
+
+    #[test]
+    fn param_store_rejects_malformed_csr() {
+        // Non-monotonic indptr that still passes the nnz/last-entry
+        // checks: load must fail, not defer the blow-up (or silent
+        // weight shift) to the first forward.
+        let err = load_bytes("bad_indptr.ats", &ats2_csr_bytes(2, 2, &[0, 2, 1], &[0]))
+            .unwrap_err();
+        assert!(err.to_string().contains("indptr"), "{err}");
+        // Duplicate column indices within a row: matmul_tb would sum
+        // both entries while to_dense keeps only the last — reject.
+        let err = load_bytes("dup_idx.ats", &ats2_csr_bytes(1, 4, &[0, 2], &[1, 1]))
+            .unwrap_err();
+        assert!(err.to_string().contains("indices"), "{err}");
+        // Implausible header shape: clean error, not a huge allocation.
+        let err = load_bytes(
+            "huge_shape.ats",
+            &ats2_csr_bytes(u32::MAX, u32::MAX, &[0], &[]),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn param_store_dense_accessors() {
+        let mut rng = Rng::new(5);
+        let mut s = ParamStore::new();
+        let mut w = Mat::randn(4, 8, 1.0, &mut rng);
+        crate::prune::magnitude_prune(&mut w, crate::prune::Sparsity::Unstructured { rate: 0.5 });
+        s.insert_store("w", WeightStore::Csr(Csr::from_dense(&w)));
+        // dense() refuses a packed layout...
+        assert!(s.dense("w").is_err());
+        // ...while dense_mut densifies on demand
+        assert_eq!(s.dense_mut("w").unwrap(), &w);
+        assert_eq!(s.get("w").unwrap().format(), "dense");
+        assert!(s.dense("w").is_ok());
+        assert_eq!(s.total_params(), 32);
     }
 }

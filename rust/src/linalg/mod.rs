@@ -126,6 +126,10 @@ pub fn cholesky_blocked(a: &MatF64, block: usize) -> Option<MatF64> {
             // 3) trailing update A'[i, j] -= Σ_t L[i, t] L[j, t] over the
             //    lower triangle j ≤ i, t ∈ [k0, k1). Workers write only
             //    their own rows and read the shared panel snapshot.
+            //    Row gi costs gi+1 dot products, so contiguous chunks
+            //    would leave the last worker ~2× the average work;
+            //    interleaved ownership (gi % nw == worker, the
+            //    `syrk_add_2xtx` idiom) keeps the triangle balanced.
             let mut panel = vec![0.0f64; rows_below * bw];
             for (pi, i) in (k1..n).enumerate() {
                 panel[pi * bw..(pi + 1) * bw]
@@ -133,11 +137,22 @@ pub fn cholesky_blocked(a: &MatF64, block: usize) -> Option<MatF64> {
             }
             let panel = &panel;
             let trailing = &mut l.data[k1 * n..];
+            let nw = nt.min(rows_below);
+            let base = trailing.as_mut_ptr() as usize;
             std::thread::scope(|s| {
-                for (ci, rows) in trailing.chunks_mut(chunk * n).enumerate() {
+                for worker in 0..nw {
                     s.spawn(move || {
-                        for (ri, row) in rows.chunks_mut(n).enumerate() {
-                            let gi = ci * chunk + ri; // row k1+gi of the matrix
+                        let mut gi = worker;
+                        while gi < rows_below {
+                            // SAFETY: trailing rows are disjoint across
+                            // workers (gi % nw == worker) and live for
+                            // the scope.
+                            let row: &mut [f64] = unsafe {
+                                std::slice::from_raw_parts_mut(
+                                    (base as *mut f64).add(gi * n),
+                                    n,
+                                )
+                            };
                             let prow = &panel[gi * bw..(gi + 1) * bw];
                             for gj in 0..=gi {
                                 let pj = &panel[gj * bw..(gj + 1) * bw];
@@ -147,6 +162,7 @@ pub fn cholesky_blocked(a: &MatF64, block: usize) -> Option<MatF64> {
                                 }
                                 row[k1 + gj] -= s2;
                             }
+                            gi += nw;
                         }
                     });
                 }

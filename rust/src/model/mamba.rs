@@ -15,9 +15,12 @@
 //! in_proj/x_proj/dt_proj/out_proj — the layers the paper prunes. The scan
 //! itself is weight-free, exactly as in the paper's setting.
 
+use std::borrow::Cow;
+
 use anyhow::Result;
 
-use crate::io::TensorStore;
+use crate::io::{ParamStore, TensorStore};
+use crate::sparse::WeightStore;
 use crate::tensor::Mat;
 use crate::util::Rng;
 
@@ -45,7 +48,7 @@ const CONV_K: usize = 3;
 
 pub struct Mamba {
     pub cfg: MambaConfig,
-    pub params: TensorStore,
+    pub params: ParamStore,
 }
 
 fn key(b: usize, name: &str) -> String {
@@ -54,7 +57,7 @@ fn key(b: usize, name: &str) -> String {
 
 impl Mamba {
     pub fn init(cfg: MambaConfig, rng: &mut Rng) -> Mamba {
-        let mut p = TensorStore::new();
+        let mut p = ParamStore::new();
         let (d, e) = (cfg.d_model, cfg.d_inner);
         let sigma = 0.02f32;
         p.insert("embed", Mat::randn(cfg.vocab, d, sigma, rng));
@@ -78,16 +81,21 @@ impl Mamba {
         self.params.total_params()
     }
 
-    pub fn weight(&self, b: usize, name: &str) -> &Mat {
+    pub fn weight(&self, b: usize, name: &str) -> &WeightStore {
         self.params.get(&key(b, name)).expect("weight")
     }
 
-    pub fn weight_mut(&mut self, b: usize, name: &str) -> &mut Mat {
+    pub fn weight_mut(&mut self, b: usize, name: &str) -> &mut WeightStore {
         self.params.get_mut(&key(b, name)).expect("weight")
     }
 
+    /// Dense view of a block linear for the backward path.
+    fn wdense(&self, b: usize, name: &str) -> Cow<'_, Mat> {
+        self.weight(b, name).dense_view()
+    }
+
     pub fn embed(&self, tokens: &[u32]) -> Mat {
-        let e = self.params.get("embed").unwrap();
+        let e = self.params.dense("embed").expect("embed is dense");
         let mut x = Mat::zeros(tokens.len(), self.cfg.d_model);
         for (i, &t) in tokens.iter().enumerate() {
             x.row_mut(i).copy_from_slice(e.row(t as usize));
@@ -118,18 +126,18 @@ impl Mamba {
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
         let e = self.cfg.d_inner;
-        let norm_g = self.params.get(&key(b, "norm")).unwrap().row(0);
+        let norm_g = self.params.dense(&key(b, "norm")).unwrap().row(0);
         let n = super::transformer_rmsnorm(x, norm_g);
         sink("in_proj", &n.y);
-        let xz = n.y.matmul_tb(self.weight(b, "in_proj")); // (nrow, 2e)
+        let xz = self.weight(b, "in_proj").matmul_tb(&n.y); // (nrow, 2e)
         let (mut u, mut z) = (Mat::zeros(x.rows, e), Mat::zeros(x.rows, e));
         for r in 0..x.rows {
             u.row_mut(r).copy_from_slice(&xz.row(r)[..e]);
             z.row_mut(r).copy_from_slice(&xz.row(r)[e..]);
         }
-        // causal depthwise conv + silu
-        let cw = self.weight(b, "conv_w");
-        let cb = self.weight(b, "conv_b");
+        // causal depthwise conv + silu (never pruned; always dense)
+        let cw = self.params.dense(&key(b, "conv_w")).unwrap();
+        let cb = self.params.dense(&key(b, "conv_b")).unwrap();
         let mut pre = Mat::zeros(x.rows, e);
         for s in 0..bsz {
             for pos in 0..t {
@@ -150,7 +158,7 @@ impl Mamba {
             up.data[i] = silu(pre.data[i]);
         }
         sink("dt_proj", &up);
-        let dt = up.matmul_tb(self.weight(b, "dt_proj"));
+        let dt = self.weight(b, "dt_proj").matmul_tb(&up);
         let mut alpha = Mat::zeros(x.rows, e);
         for i in 0..dt.data.len() {
             alpha.data[i] = sigmoid(dt.data[i]);
@@ -173,7 +181,7 @@ impl Mamba {
             y.data[i] = h.data[i] * silu(z.data[i]);
         }
         sink("out_proj", &y);
-        let proj = y.matmul_tb(self.weight(b, "out_proj"));
+        let proj = self.weight(b, "out_proj").matmul_tb(&y);
         let mut out = x.clone();
         out.add_assign(&proj);
 
@@ -184,8 +192,8 @@ impl Mamba {
     }
 
     pub fn logits(&self, x: &Mat) -> Mat {
-        let n = super::transformer_rmsnorm(x, self.params.get("final_norm").unwrap().row(0));
-        n.y.matmul_tb(self.params.get("embed").unwrap())
+        let n = super::transformer_rmsnorm(x, self.params.dense("final_norm").unwrap().row(0));
+        n.y.matmul_tb(self.params.dense("embed").unwrap())
     }
 
     pub fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64 {
@@ -206,9 +214,9 @@ impl Mamba {
             x = self.block_impl(b, &x, bt, Some(&mut c), &mut |_, _| {});
             caches.push(c);
         }
-        let fg = self.params.get("final_norm").unwrap().row(0);
+        let fg = self.params.dense("final_norm").unwrap().row(0);
         let nfin = super::transformer_rmsnorm(&x, fg);
-        let embed = self.params.get("embed").unwrap();
+        let embed = self.params.dense("embed").unwrap();
         let logits = nfin.y.matmul_tb(embed);
         let (loss, dlogits) = super::ce_loss_and_grad(&logits, tokens, bt);
 
@@ -242,8 +250,9 @@ impl Mamba {
         let e = self.cfg.d_inner;
         let nrow = dout.rows;
 
-        // out = x + y @ Wout^T
-        let dy = dout.matmul(self.weight(b, "out_proj")); // (n, e)
+        // out = x + y @ Wout^T (dense views: the backward path densifies
+        // packed layouts on demand)
+        let dy = dout.matmul(&self.wdense(b, "out_proj")); // (n, e)
         let d_wout = dout.t().matmul(&c.y);
         grads.insert(&key(b, "out_proj"), d_wout);
 
@@ -283,7 +292,7 @@ impl Mamba {
         }
         let d_wdt = ddt.t().matmul(&c.up);
         grads.insert(&key(b, "dt_proj"), d_wdt);
-        dup.add_assign(&ddt.matmul(self.weight(b, "dt_proj")));
+        dup.add_assign(&ddt.matmul(&self.wdense(b, "dt_proj")));
 
         // up = silu(pre)
         let mut dpre = Mat::zeros(nrow, e);
@@ -294,7 +303,7 @@ impl Mamba {
         }
 
         // conv backward
-        let cw = self.weight(b, "conv_w");
+        let cw = self.params.dense(&key(b, "conv_w")).unwrap();
         let mut du = Mat::zeros(nrow, e);
         let mut d_cw = Mat::zeros(CONV_K, e);
         let mut d_cb = Mat::zeros(1, e);
@@ -324,8 +333,8 @@ impl Mamba {
         }
         let d_win = dxz.t().matmul(&c.n.y);
         grads.insert(&key(b, "in_proj"), d_win);
-        let dn = dxz.matmul(self.weight(b, "in_proj"));
-        let norm_g = self.params.get(&key(b, "norm")).unwrap().row(0);
+        let dn = dxz.matmul(&self.wdense(b, "in_proj"));
+        let norm_g = self.params.dense(&key(b, "norm")).unwrap().row(0);
         let (dx_from_norm, d_norm) =
             super::transformer_rmsnorm_backward(&c.x_in, norm_g, &c.n, &dn);
         grads.insert(&key(b, "norm"), d_norm);
@@ -340,7 +349,7 @@ impl Mamba {
     }
 
     pub fn load(cfg: MambaConfig, path: &std::path::Path) -> Result<Mamba> {
-        Ok(Mamba { cfg, params: TensorStore::load(path)? })
+        Ok(Mamba { cfg, params: ParamStore::load(path)? })
     }
 }
 
@@ -457,12 +466,12 @@ mod tests {
             let len = g.data.len();
             for &fracidx in &[0usize, len / 2, len - 1] {
                 let idx = fracidx.min(len - 1);
-                let orig = m.params.get(&name).unwrap().data[idx];
-                m.params.get_mut(&name).unwrap().data[idx] = orig + eps;
+                let orig = m.params.dense(&name).unwrap().data[idx];
+                m.params.dense_mut(&name).unwrap().data[idx] = orig + eps;
                 let lp = m.forward_loss(&toks, bt);
-                m.params.get_mut(&name).unwrap().data[idx] = orig - eps;
+                m.params.dense_mut(&name).unwrap().data[idx] = orig - eps;
                 let lm = m.forward_loss(&toks, bt);
-                m.params.get_mut(&name).unwrap().data[idx] = orig;
+                m.params.dense_mut(&name).unwrap().data[idx] = orig;
                 let fd = (lp - lm) / (2.0 * eps as f64);
                 let an = g.data[idx] as f64;
                 let denom = fd.abs().max(an.abs()).max(1e-4);
@@ -471,6 +480,32 @@ mod tests {
                     "{name}[{idx}]: fd={fd:.6} analytic={an:.6}"
                 );
             }
+        }
+    }
+
+    #[test]
+    fn sparse_stores_match_dense_forward() {
+        use crate::prune::{magnitude_prune, Sparsity};
+        for sparsity in [Sparsity::Unstructured { rate: 0.6 }, Sparsity::two_four()] {
+            let mut dense = tiny(9);
+            for b in 0..dense.cfg.n_layers {
+                for name in MAMBA_LINEARS {
+                    magnitude_prune(dense.weight_mut(b, name).dense_mut(), sparsity);
+                }
+            }
+            let mut packed = Mamba { cfg: dense.cfg, params: dense.params.clone() };
+            for b in 0..dense.cfg.n_layers {
+                for name in MAMBA_LINEARS {
+                    let w = packed.weight(b, name).to_dense();
+                    *packed.weight_mut(b, name) = crate::sparse::WeightStore::pack(&w, sparsity);
+                    assert_eq!(packed.weight(b, name).to_dense(), w);
+                    assert_ne!(packed.weight(b, name).format(), "dense");
+                }
+            }
+            let toks = rand_tokens(2 * 8, 29, 10);
+            let a = dense.forward_loss(&toks, (2, 8));
+            let b = packed.forward_loss(&toks, (2, 8));
+            assert!((a - b).abs() < 1e-5, "{sparsity:?}: {a} vs {b}");
         }
     }
 }

@@ -10,7 +10,8 @@ pub use mamba::{Mamba, MambaConfig, MAMBA_LINEARS};
 pub use train::{train, TrainConfig};
 pub use transformer::{Transformer, TransformerConfig, BLOCK_LINEARS};
 
-use crate::io::TensorStore;
+use crate::io::{ParamStore, TensorStore};
+use crate::sparse::WeightStore;
 use crate::tensor::Mat;
 
 // ---------------------------------------------------------------------------
@@ -119,6 +120,9 @@ fn ce_impl(
 
 /// Architecture-independent view of a decoder LM: block-streamable forward
 /// (the coordinator prunes block-by-block) plus training/eval entry points.
+/// Block weights are exposed as [`WeightStore`]s, so the coordinator can
+/// swap a pruned linear's layout (dense → CSR / packed 2:4) in place and
+/// every eval path executes the sparse kernels transparently.
 pub trait LanguageModel: Send + Sync {
     fn arch(&self) -> &'static str;
     fn vocab(&self) -> usize;
@@ -127,8 +131,8 @@ pub trait LanguageModel: Send + Sync {
     fn linear_names(&self) -> &'static [&'static str];
     fn n_params(&self) -> usize;
 
-    fn params(&self) -> &TensorStore;
-    fn params_mut(&mut self) -> &mut TensorStore;
+    fn params(&self) -> &ParamStore;
+    fn params_mut(&mut self) -> &mut ParamStore;
 
     fn embed_tokens(&self, tokens: &[u32]) -> Mat;
     fn forward_block(&self, b: usize, x: &Mat, bt: (usize, usize)) -> Mat;
@@ -141,8 +145,8 @@ pub trait LanguageModel: Send + Sync {
     ) -> Mat;
     fn logits(&self, x: &Mat) -> Mat;
 
-    fn block_weight(&self, b: usize, name: &str) -> &Mat;
-    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut Mat;
+    fn block_weight(&self, b: usize, name: &str) -> &WeightStore;
+    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut WeightStore;
 
     fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64;
     fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore);
@@ -212,10 +216,10 @@ impl LanguageModel for Transformer {
     fn n_params(&self) -> usize {
         Transformer::n_params(self)
     }
-    fn params(&self) -> &TensorStore {
+    fn params(&self) -> &ParamStore {
         &self.params
     }
-    fn params_mut(&mut self) -> &mut TensorStore {
+    fn params_mut(&mut self) -> &mut ParamStore {
         &mut self.params
     }
     fn embed_tokens(&self, tokens: &[u32]) -> Mat {
@@ -236,10 +240,10 @@ impl LanguageModel for Transformer {
     fn logits(&self, x: &Mat) -> Mat {
         Transformer::logits(self, x)
     }
-    fn block_weight(&self, b: usize, name: &str) -> &Mat {
+    fn block_weight(&self, b: usize, name: &str) -> &WeightStore {
         self.weight(b, name)
     }
-    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut Mat {
+    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut WeightStore {
         self.weight_mut(b, name)
     }
     fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64 {
@@ -266,10 +270,10 @@ impl LanguageModel for Mamba {
     fn n_params(&self) -> usize {
         Mamba::n_params(self)
     }
-    fn params(&self) -> &TensorStore {
+    fn params(&self) -> &ParamStore {
         &self.params
     }
-    fn params_mut(&mut self) -> &mut TensorStore {
+    fn params_mut(&mut self) -> &mut ParamStore {
         &mut self.params
     }
     fn embed_tokens(&self, tokens: &[u32]) -> Mat {
@@ -290,10 +294,10 @@ impl LanguageModel for Mamba {
     fn logits(&self, x: &Mat) -> Mat {
         Mamba::logits(self, x)
     }
-    fn block_weight(&self, b: usize, name: &str) -> &Mat {
+    fn block_weight(&self, b: usize, name: &str) -> &WeightStore {
         self.weight(b, name)
     }
-    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut Mat {
+    fn block_weight_mut(&mut self, b: usize, name: &str) -> &mut WeightStore {
         self.weight_mut(b, name)
     }
     fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64 {

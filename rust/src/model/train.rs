@@ -7,7 +7,7 @@
 use std::collections::BTreeMap;
 
 use crate::data::Dataset;
-use crate::io::TensorStore;
+use crate::io::{ParamStore, TensorStore};
 use crate::model::LanguageModel;
 use crate::tensor::Mat;
 use crate::util::{Rng, Timer};
@@ -103,7 +103,7 @@ pub fn train(model: &mut dyn LanguageModel, data: &Dataset, cfg: &TrainConfig) -
 
 #[allow(clippy::too_many_arguments)]
 fn apply_adamw(
-    params: &mut TensorStore,
+    params: &mut ParamStore,
     grads: &TensorStore,
     adam: &mut AdamState,
     lr: f64,
@@ -116,8 +116,11 @@ fn apply_adamw(
     clip_scale: f64,
 ) {
     for (name, g) in grads.tensors.iter() {
+        // Densify on demand: training a packed checkpoint converts the
+        // touched tensors back to dense (the paper's setting never does
+        // this — post-training pruning — but the trainer must not crash).
         let p: &mut Mat = match params.tensors.get_mut(name) {
-            Some(p) => p,
+            Some(ws) => ws.dense_mut(),
             None => continue,
         };
         let m = adam.m.entry(name.clone()).or_insert_with(|| vec![0.0; g.data.len()]);

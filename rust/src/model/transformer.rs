@@ -7,11 +7,18 @@
 //! w1/w2/w3 per block — exactly the set SparseGPT and the paper prune.
 //! `block_forward_collect` exposes each projection's *input* activations,
 //! which is what the layer-wise Hessian accumulation consumes.
+//!
+//! Parameters live in a [`ParamStore`] of [`WeightStore`]s: every linear
+//! executes its forward `matmul_tb` through whichever layout it holds
+//! (dense, CSR or packed 2:4 — the sparse serving path), while the
+//! backward/training path takes dense views and densifies on demand.
 
+use std::borrow::Cow;
 
 use anyhow::Result;
 
-use crate::io::TensorStore;
+use crate::io::{ParamStore, TensorStore};
+use crate::sparse::WeightStore;
 use crate::tensor::Mat;
 use crate::util::Rng;
 
@@ -56,7 +63,7 @@ pub const BLOCK_LINEARS: [&str; 7] = ["wq", "wk", "wv", "wo", "w1", "w2", "w3"];
 /// `y = x @ W^T` via `matmul_tb`, matching the paper's w x convention.
 pub struct Transformer {
     pub cfg: TransformerConfig,
-    pub params: TensorStore,
+    pub params: ParamStore,
 }
 
 fn key(block: usize, name: &str) -> String {
@@ -65,7 +72,7 @@ fn key(block: usize, name: &str) -> String {
 
 impl Transformer {
     pub fn init(cfg: TransformerConfig, rng: &mut Rng) -> Transformer {
-        let mut p = TensorStore::new();
+        let mut p = ParamStore::new();
         let d = cfg.d_model;
         let sigma = 0.02f32;
         p.insert("embed", Mat::randn(cfg.vocab, d, sigma, rng));
@@ -89,19 +96,25 @@ impl Transformer {
         self.params.total_params()
     }
 
-    pub fn weight(&self, block: usize, name: &str) -> &Mat {
+    pub fn weight(&self, block: usize, name: &str) -> &WeightStore {
         self.params.get(&key(block, name)).expect("weight")
     }
 
-    pub fn weight_mut(&mut self, block: usize, name: &str) -> &mut Mat {
+    pub fn weight_mut(&mut self, block: usize, name: &str) -> &mut WeightStore {
         self.params.get_mut(&key(block, name)).expect("weight")
+    }
+
+    /// Dense view of a block linear for the backward path (borrowed in
+    /// the common dense case, materialized for packed layouts).
+    fn wdense(&self, block: usize, name: &str) -> Cow<'_, Mat> {
+        self.weight(block, name).dense_view()
     }
 
     // ------------------------------------------------------------- forward
 
     /// Token embedding lookup: (B*T, d).
     pub fn embed(&self, tokens: &[u32]) -> Mat {
-        let e = self.params.get("embed").unwrap();
+        let e = self.params.dense("embed").expect("embed is dense");
         let d = self.cfg.d_model;
         let mut x = Mat::zeros(tokens.len(), d);
         for (i, &t) in tokens.iter().enumerate() {
@@ -144,9 +157,9 @@ impl Transformer {
         sink("wq", &n1.y);
         sink("wk", &n1.y);
         sink("wv", &n1.y);
-        let q0 = n1.y.matmul_tb(self.weight(b, "wq"));
-        let k0 = n1.y.matmul_tb(self.weight(b, "wk"));
-        let v = n1.y.matmul_tb(self.weight(b, "wv"));
+        let q0 = self.weight(b, "wq").matmul_tb(&n1.y);
+        let k0 = self.weight(b, "wk").matmul_tb(&n1.y);
+        let v = self.weight(b, "wv").matmul_tb(&n1.y);
         let mut q = q0;
         let mut k = k0;
         rope(&mut q, bsz, t, h, dh, false);
@@ -171,7 +184,7 @@ impl Transformer {
             }
         }
         sink("wo", &attn_out);
-        let proj = attn_out.matmul_tb(self.weight(b, "wo"));
+        let proj = self.weight(b, "wo").matmul_tb(&attn_out);
         let mut x2 = x.clone();
         x2.add_assign(&proj);
 
@@ -179,14 +192,14 @@ impl Transformer {
         let n2 = rmsnorm(&x2, self.weight_norm(b, "norm2"));
         sink("w1", &n2.y);
         sink("w3", &n2.y);
-        let u = n2.y.matmul_tb(self.weight(b, "w1"));
-        let g = n2.y.matmul_tb(self.weight(b, "w3"));
+        let u = self.weight(b, "w1").matmul_tb(&n2.y);
+        let g = self.weight(b, "w3").matmul_tb(&n2.y);
         let mut a = Mat::zeros(u.rows, u.cols);
         for i in 0..u.data.len() {
             a.data[i] = silu(u.data[i]) * g.data[i];
         }
         sink("w2", &a);
-        let mlp = a.matmul_tb(self.weight(b, "w2"));
+        let mlp = self.weight(b, "w2").matmul_tb(&a);
         let mut out = x2.clone();
         out.add_assign(&mlp);
 
@@ -210,13 +223,13 @@ impl Transformer {
     }
 
     fn weight_norm(&self, b: usize, name: &str) -> &[f32] {
-        self.params.get(&key(b, name)).unwrap().row(0)
+        self.params.dense(&key(b, name)).unwrap().row(0)
     }
 
     /// Final norm + tied logits: (B*T, V).
     pub fn logits(&self, x: &Mat) -> Mat {
-        let n = rmsnorm(x, self.params.get("final_norm").unwrap().row(0));
-        n.y.matmul_tb(self.params.get("embed").unwrap())
+        let n = rmsnorm(x, self.params.dense("final_norm").unwrap().row(0));
+        n.y.matmul_tb(self.params.dense("embed").unwrap())
     }
 
     /// Full forward (no caches): mean next-token cross-entropy on (B,T).
@@ -278,9 +291,9 @@ impl Transformer {
             x = self.block_forward_impl(b, &x, bt, Some(&mut c), &mut |_, _| {});
             caches.push(c);
         }
-        let final_g = self.params.get("final_norm").unwrap().row(0);
+        let final_g = self.params.dense("final_norm").unwrap().row(0);
         let nfin = rmsnorm(&x, final_g);
-        let embed = self.params.get("embed").unwrap();
+        let embed = self.params.dense("embed").unwrap();
         let logits = nfin.y.matmul_tb(embed);
 
         let (loss, dlogits) = ce_loss_and_grad(&logits, tokens, bt);
@@ -319,8 +332,9 @@ impl Transformer {
         let (h, dh) = (cfg.n_heads, cfg.head_dim());
         let scale = 1.0 / (dh as f32).sqrt();
 
-        // ---- mlp backward: out = x2 + a @ W2^T
-        let da = dout.matmul(self.weight(b, "w2")); // (n, d_ff)
+        // ---- mlp backward: out = x2 + a @ W2^T (dense views: the
+        // backward path densifies packed layouts on demand)
+        let da = dout.matmul(&self.wdense(b, "w2")); // (n, d_ff)
         let d_w2 = dout.t().matmul(&c.a);
         let mut du = Mat::zeros(da.rows, da.cols);
         let mut dg = Mat::zeros(da.rows, da.cols);
@@ -333,8 +347,8 @@ impl Transformer {
         }
         let d_w1 = du.t().matmul(&c.n2.y);
         let d_w3 = dg.t().matmul(&c.n2.y);
-        let mut dn2 = du.matmul(self.weight(b, "w1"));
-        dn2.add_assign(&dg.matmul(self.weight(b, "w3")));
+        let mut dn2 = du.matmul(&self.wdense(b, "w1"));
+        dn2.add_assign(&dg.matmul(&self.wdense(b, "w3")));
         let (dx2_from_norm, d_norm2) =
             rmsnorm_backward(&c.x2, self.weight_norm(b, "norm2"), &c.n2, &dn2);
         grads.insert(&key(b, "w1"), d_w1);
@@ -346,7 +360,7 @@ impl Transformer {
         dx2.add_assign(&dx2_from_norm);
 
         // ---- attention backward: x2 = x_in + attn_out @ Wo^T
-        let d_attn_out = dx2.matmul(self.weight(b, "wo"));
+        let d_attn_out = dx2.matmul(&self.wdense(b, "wo"));
         let d_wo = dx2.t().matmul(&c.attn_out);
         grads.insert(&key(b, "wo"), d_wo);
 
@@ -388,9 +402,9 @@ impl Transformer {
         let d_wq = dq.t().matmul(&c.n1.y);
         let d_wk = dk.t().matmul(&c.n1.y);
         let d_wv = dv.t().matmul(&c.n1.y);
-        let mut dn1 = dq.matmul(self.weight(b, "wq"));
-        dn1.add_assign(&dk.matmul(self.weight(b, "wk")));
-        dn1.add_assign(&dv.matmul(self.weight(b, "wv")));
+        let mut dn1 = dq.matmul(&self.wdense(b, "wq"));
+        dn1.add_assign(&dk.matmul(&self.wdense(b, "wk")));
+        dn1.add_assign(&dv.matmul(&self.wdense(b, "wv")));
         let (dx_from_norm, d_norm1) =
             rmsnorm_backward(&c.x_in, self.weight_norm(b, "norm1"), &c.n1, &dn1);
         grads.insert(&key(b, "wq"), d_wq);
@@ -408,7 +422,7 @@ impl Transformer {
     }
 
     pub fn load(cfg: TransformerConfig, path: &std::path::Path) -> Result<Transformer> {
-        let params = TensorStore::load(path)?;
+        let params = ParamStore::load(path)?;
         Ok(Transformer { cfg, params })
     }
 }
@@ -667,12 +681,12 @@ mod tests {
             let len = g.data.len();
             for &frac in &[0usize, len / 2, len - 1] {
                 let idx = frac.min(len - 1);
-                let orig = m.params.get(&name).unwrap().data[idx];
-                m.params.get_mut(&name).unwrap().data[idx] = orig + eps;
+                let orig = m.params.dense(&name).unwrap().data[idx];
+                m.params.dense_mut(&name).unwrap().data[idx] = orig + eps;
                 let lp = m.forward_loss(&toks, bt);
-                m.params.get_mut(&name).unwrap().data[idx] = orig - eps;
+                m.params.dense_mut(&name).unwrap().data[idx] = orig - eps;
                 let lm = m.forward_loss(&toks, bt);
-                m.params.get_mut(&name).unwrap().data[idx] = orig;
+                m.params.dense_mut(&name).unwrap().data[idx] = orig;
                 let fd = (lp - lm) / (2.0 * eps as f64);
                 let an = g.data[idx] as f64;
                 let denom = fd.abs().max(an.abs()).max(1e-4);
@@ -695,5 +709,34 @@ mod tests {
         let toks = rand_tokens(8, 31, 16);
         assert_eq!(m.forward_loss(&toks, (1, 8)), l.forward_loss(&toks, (1, 8)));
         std::fs::remove_file(p).ok();
+    }
+
+    #[test]
+    fn sparse_stores_match_dense_forward() {
+        use crate::prune::{magnitude_prune, Sparsity};
+        for sparsity in [Sparsity::Unstructured { rate: 0.6 }, Sparsity::two_four()] {
+            let mut dense = tiny_model(17);
+            for b in 0..dense.cfg.n_layers {
+                for name in BLOCK_LINEARS {
+                    magnitude_prune(dense.weight_mut(b, name).dense_mut(), sparsity);
+                }
+            }
+            let mut packed = Transformer { cfg: dense.cfg, params: dense.params.clone() };
+            for b in 0..dense.cfg.n_layers {
+                for name in BLOCK_LINEARS {
+                    let w = packed.weight(b, name).to_dense();
+                    *packed.weight_mut(b, name) = crate::sparse::WeightStore::pack(&w, sparsity);
+                    // mask bit-for-bit
+                    assert_eq!(packed.weight(b, name).to_dense(), w);
+                    assert_ne!(packed.weight(b, name).format(), "dense");
+                }
+            }
+            let toks = rand_tokens(2 * 8, 31, 18);
+            let a = dense.next_token_logprobs(&toks, (2, 8));
+            let b = packed.next_token_logprobs(&toks, (2, 8));
+            for (x, y) in a.iter().zip(&b) {
+                assert!((x - y).abs() < 1e-5, "{sparsity:?}: {x} vs {y}");
+            }
+        }
     }
 }

@@ -1,10 +1,21 @@
 //! Sparse weight formats + kernels: CSR for unstructured masks, a packed
 //! 2:4 layout for semi-structured masks, and sparse x dense products. The
-//! coordinator packs pruned checkpoints into these formats and the eval
-//! layer can run the sparse fast path (`csr_matmul_tb`) to realize the
-//! inference speedup the paper motivates.
+//! coordinator packs pruned checkpoints into these formats (behind the
+//! [`WeightStore`] abstraction) and the model forward path executes the
+//! sparse kernels directly, realizing the inference speedup and memory
+//! saving the paper motivates.
+//!
+//! Both `matmul_tb` kernels parallelize over chunks of W rows with the
+//! repo's scoped worker-pool idiom (each worker owns a disjoint column
+//! range of every output row) and run a 4-chain FMA inner loop like the
+//! dense `tensor::dot`.
+
+pub mod store;
+
+pub use store::WeightStore;
 
 use crate::tensor::Mat;
+use crate::util::num_threads;
 
 /// Compressed sparse rows over f32 (row-major origin).
 #[derive(Clone, Debug, PartialEq)]
@@ -58,25 +69,77 @@ impl Csr {
         self.values.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 4
     }
 
+    /// Dense-equivalent bytes for the compression-ratio stat.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
     /// y = x @ W^T for sparse W (n_out, m): the pruned-linear fast path.
     /// x: (t, m) dense -> (t, n_out).
+    ///
+    /// Parallelized over chunks of W rows — not over x rows — so the
+    /// single-token decode shape (t = 1) still uses the whole pool. Each
+    /// worker owns the output columns of its W-row chunk across every
+    /// output row; the inner loop is a 4-chain FMA gather-dot.
     pub fn matmul_tb(&self, x: &Mat) -> Mat {
-        assert_eq!(x.cols, self.cols);
-        let mut out = Mat::zeros(x.rows, self.rows);
-        for t in 0..x.rows {
-            let xrow = x.row(t);
-            let orow = out.row_mut(t);
-            for r in 0..self.rows {
-                let (s, e) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
-                let mut acc = 0.0f32;
-                for i in s..e {
-                    acc += self.values[i] * xrow[self.indices[i] as usize];
+        assert_eq!(x.cols, self.cols, "csr matmul_tb: x cols {} != W cols {}", x.cols, self.cols);
+        let (t, n) = (x.rows, self.rows);
+        let mut out = Mat::zeros(t, n);
+        let nt = num_threads().min(n.max(1));
+        let chunk = n.div_ceil(nt.max(1)).max(1);
+        let base = out.data.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            for w in 0..nt {
+                let (r0, r1) = (w * chunk, ((w + 1) * chunk).min(n));
+                if r0 >= r1 {
+                    break;
                 }
-                orow[r] = acc;
+                s.spawn(move || {
+                    for ti in 0..t {
+                        let xrow = x.row(ti);
+                        // SAFETY: workers write disjoint column ranges
+                        // [r0, r1) of each output row; `out` outlives the
+                        // scope and is not otherwise touched inside it.
+                        let orow: &mut [f32] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (base as *mut f32).add(ti * n + r0),
+                                r1 - r0,
+                            )
+                        };
+                        for (o, r) in orow.iter_mut().zip(r0..r1) {
+                            let (s0, e0) =
+                                (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+                            *o = gather_dot(&self.values[s0..e0], &self.indices[s0..e0], xrow);
+                        }
+                    }
+                });
             }
-        }
+        });
         out
     }
+}
+
+/// Σ values[i] · x[indices[i]] with 4 independent FMA chains (same shape
+/// as `tensor::dot`; the gathers bound throughput, the chains keep the
+/// FMAs off the dependency critical path).
+#[inline]
+fn gather_dot(values: &[f32], indices: &[u32], x: &[f32]) -> f32 {
+    let n = values.len().min(indices.len());
+    let split = n - n % 4;
+    let (vc, vr) = values[..n].split_at(split);
+    let (ic, ir) = indices[..n].split_at(split);
+    let mut acc = [0.0f32; 4];
+    for (vk, ik) in vc.chunks_exact(4).zip(ic.chunks_exact(4)) {
+        acc[0] = vk[0].mul_add(x[ik[0] as usize], acc[0]);
+        acc[1] = vk[1].mul_add(x[ik[1] as usize], acc[1]);
+        acc[2] = vk[2].mul_add(x[ik[2] as usize], acc[2]);
+        acc[3] = vk[3].mul_add(x[ik[3] as usize], acc[3]);
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (&v, &i) in vr.iter().zip(ir) {
+        s = v.mul_add(x[i as usize], s);
+    }
+    s
 }
 
 /// Packed 2:4: per 4-group, 2 values + 2x 2-bit indices (byte-packed).
@@ -86,14 +149,31 @@ impl Csr {
 pub struct Packed24 {
     pub rows: usize,
     pub cols: usize,
-    /// 2 survivors per group, row-major: rows * cols/2 values.
+    /// 2 survivors per group, row-major: rows * cols/2 values. Groups
+    /// with fewer than 2 nonzeros carry 0.0 in the filler slots.
     pub values: Vec<f32>,
-    /// packed indices: one byte per group = (i1 << 2) | i0, i0 < i1.
+    /// packed indices: one byte per group = (i1 << 2) | i0. The two
+    /// indices are always distinct; i0 < i1 except in the
+    /// lone-nonzero-at-index-3 filler case (see [`Packed24::from_dense`]).
     pub meta: Vec<u8>,
 }
 
 impl Packed24 {
     /// Pack a dense 2:4 matrix. Errors if any group has >2 nonzeros.
+    ///
+    /// Filler-index convention: the layout always stores exactly two
+    /// (value, index) slots per 4-group, so groups with 0–1 nonzeros are
+    /// padded with *filler* slots that point at zero-valued positions:
+    ///
+    /// - 0 nonzeros: `i0 = 0`, `i1 = 3`, both values 0.0;
+    /// - 1 nonzero at index `i`: `i0 = i`, and `i1 = 3` unless `i == 3`,
+    ///   in which case `i1 = 2`. In that one case `i0 > i1` — decoders
+    ///   must not assume the indices are sorted, only that they are
+    ///   distinct;
+    /// - 2 nonzeros at `i0 < i1`: stored in ascending order.
+    ///
+    /// Because filler values are exactly 0.0, `to_dense` and `matmul_tb`
+    /// are exact no matter which zero position a filler points at.
     pub fn from_dense(m: &Mat) -> Result<Packed24, String> {
         if m.cols % 4 != 0 {
             return Err(format!("cols {} not divisible by 4", m.cols));
@@ -142,6 +222,69 @@ impl Packed24 {
     pub fn dense_bytes(&self) -> usize {
         self.rows * self.cols * 4
     }
+
+    /// Stored nonzeros (filler slots hold exactly 0.0 and don't count).
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols).max(1) as f64
+    }
+
+    /// y = x @ W^T executed directly from the packed layout — no
+    /// densify. Per 4-group: two FMAs against the two survivors, i.e.
+    /// half the dense FLOPs. Filler slots hold 0.0 and contribute
+    /// nothing even though their index points at a live x element.
+    /// Same worker-pool partitioning as [`Csr::matmul_tb`].
+    pub fn matmul_tb(&self, x: &Mat) -> Mat {
+        assert_eq!(
+            x.cols, self.cols,
+            "packed24 matmul_tb: x cols {} != W cols {}",
+            x.cols, self.cols
+        );
+        let (t, n, g) = (x.rows, self.rows, self.cols / 4);
+        let mut out = Mat::zeros(t, n);
+        let nt = num_threads().min(n.max(1));
+        let chunk = n.div_ceil(nt.max(1)).max(1);
+        let base = out.data.as_mut_ptr() as usize;
+        std::thread::scope(|s| {
+            for w in 0..nt {
+                let (r0, r1) = (w * chunk, ((w + 1) * chunk).min(n));
+                if r0 >= r1 {
+                    break;
+                }
+                s.spawn(move || {
+                    for ti in 0..t {
+                        let xrow = x.row(ti);
+                        // SAFETY: workers write disjoint column ranges
+                        // [r0, r1) of each output row; `out` outlives the
+                        // scope and is not otherwise touched inside it.
+                        let orow: &mut [f32] = unsafe {
+                            std::slice::from_raw_parts_mut(
+                                (base as *mut f32).add(ti * n + r0),
+                                r1 - r0,
+                            )
+                        };
+                        for (o, r) in orow.iter_mut().zip(r0..r1) {
+                            let vals = &self.values[r * g * 2..(r + 1) * g * 2];
+                            let meta = &self.meta[r * g..(r + 1) * g];
+                            let (mut a0, mut a1) = (0.0f32, 0.0f32);
+                            for (gi, (&m, vk)) in
+                                meta.iter().zip(vals.chunks_exact(2)).enumerate()
+                            {
+                                let xg = &xrow[gi * 4..gi * 4 + 4];
+                                a0 = vk[0].mul_add(xg[(m & 3) as usize], a0);
+                                a1 = vk[1].mul_add(xg[((m >> 2) & 3) as usize], a1);
+                            }
+                            *o = a0 + a1;
+                        }
+                    }
+                });
+            }
+        });
+        out
+    }
 }
 
 #[cfg(test)]
@@ -189,6 +332,102 @@ mod tests {
     fn packed24_rejects_dense_groups() {
         let m = Mat::from_vec(1, 4, vec![1.0, 2.0, 3.0, 0.0]);
         assert!(Packed24::from_dense(&m).is_err());
+    }
+
+    #[test]
+    fn packed24_matmul_matches_dense() {
+        let mut rng = Rng::new(21);
+        let mut w = Mat::randn(37, 64, 1.0, &mut rng);
+        magnitude_prune(&mut w, Sparsity::two_four());
+        let packed = Packed24::from_dense(&w).unwrap();
+        for t in [1usize, 5, 16] {
+            let x = Mat::randn(t, 64, 1.0, &mut rng);
+            let dense = x.matmul_tb(&w);
+            let sparse = packed.matmul_tb(&x);
+            assert!(dense.max_abs_diff(&sparse) < 1e-5, "t={t}");
+        }
+    }
+
+    #[test]
+    fn csr_matmul_single_row_and_empty_rows() {
+        // Decode shape (t = 1) plus all-zero W rows: the parallel kernel
+        // must still produce exact zeros there and match dense elsewhere.
+        let mut rng = Rng::new(22);
+        let mut w = Mat::randn(19, 24, 1.0, &mut rng);
+        magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.7 });
+        for r in [0usize, 7, 18] {
+            for v in w.row_mut(r) {
+                *v = 0.0;
+            }
+        }
+        let csr = Csr::from_dense(&w);
+        let x = Mat::randn(1, 24, 1.0, &mut rng);
+        let dense = x.matmul_tb(&w);
+        let sparse = csr.matmul_tb(&x);
+        assert!(dense.max_abs_diff(&sparse) < 1e-5);
+        for r in [0usize, 7, 18] {
+            assert_eq!(sparse[(0, r)], 0.0);
+        }
+    }
+
+    #[test]
+    fn packed24_edge_groups_roundtrip() {
+        // Groups with 0 and 1 nonzeros, including the lone nonzero at
+        // index 3 whose filler index wraps downward (i0 > i1).
+        #[rustfmt::skip]
+        let m = Mat::from_vec(2, 8, vec![
+            0.0, 0.0, 0.0, 0.0,   0.0, 0.0, 0.0, 7.0,
+            5.0, 0.0, 0.0, 0.0,   0.0, 2.0, 3.0, 0.0,
+        ]);
+        let p = Packed24::from_dense(&m).unwrap();
+        assert_eq!(p.to_dense(), m);
+        assert_eq!(p.nnz(), 4);
+        // the two indices of every group are distinct
+        for &b in &p.meta {
+            assert_ne!(b & 3, (b >> 2) & 3);
+        }
+        // empty group: (i0, i1) = (0, 3)
+        assert_eq!((p.meta[0] & 3, (p.meta[0] >> 2) & 3), (0, 3));
+        // lone nonzero at 3: i0 = 3, filler i1 = 2 (unsorted pair)
+        assert_eq!((p.meta[1] & 3, (p.meta[1] >> 2) & 3), (3, 2));
+        // lone nonzero at 0: i0 = 0, filler i1 = 3
+        assert_eq!((p.meta[2] & 3, (p.meta[2] >> 2) & 3), (0, 3));
+        // matmul agrees on the edge groups too
+        let mut rng = Rng::new(23);
+        let x = Mat::randn(3, 8, 1.0, &mut rng);
+        assert!(p.matmul_tb(&x).max_abs_diff(&x.matmul_tb(&m)) < 1e-6);
+    }
+
+    #[test]
+    fn prop_packed24_roundtrip_sparse_groups() {
+        // Random occupancy 0..=2 per group (the from_dense legal range),
+        // with the nonzero positions drawn uniformly — exercises every
+        // filler combination, not just magnitude-pruned 2:4 masks.
+        prop_check(
+            "packed24-roundtrip-edge-groups",
+            32,
+            |r| {
+                let rows = r.range(1, 6);
+                let groups = r.range(1, 6);
+                let mut m = Mat::zeros(rows, groups * 4);
+                for row in 0..rows {
+                    for g in 0..groups {
+                        let k = r.below(3); // 0, 1 or 2 nonzeros
+                        let mut cols: Vec<usize> = (0..4).collect();
+                        for i in 0..k {
+                            let j = i + r.below(4 - i);
+                            cols.swap(i, j);
+                            m[(row, g * 4 + cols[i])] = r.normal_f32(3.0, 1.0);
+                        }
+                    }
+                }
+                m
+            },
+            |m| {
+                let p = Packed24::from_dense(m).expect("legal 2:4");
+                p.to_dense() == *m
+            },
+        );
     }
 
     #[test]

@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Tier-1 verification + hygiene gate. Run locally before pushing, and by
+# .github/workflows/ci.yml on every push/PR:
+#
+#   scripts/ci.sh
+#
+# Tier-1 (ROADMAP.md): cargo build --release && cargo test -q
+# Hygiene: rustfmt drift check (requires the rustfmt component).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: build (release) =="
+cargo build --release
+
+echo "== tier-1: tests =="
+cargo test -q
+
+echo "== hygiene: rustfmt check =="
+cargo fmt --all -- --check
+
+echo "ci.sh: all checks passed"
