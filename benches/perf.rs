@@ -16,7 +16,10 @@ use apt::coordinator::{prune_model, PipelineConfig};
 use apt::data::{CorpusGen, Profile};
 use apt::json::{self, Json};
 use apt::linalg::{cholesky_blocked, cholesky_unblocked, cholesky_upper, inv_spd};
-use apt::model::{train, TrainConfig, Transformer, TransformerConfig};
+use apt::model::{
+    train, DecodeSession, LanguageModel, Mamba, MambaConfig, TrainConfig, Transformer,
+    TransformerConfig,
+};
 use apt::prune::{
     column_blocks, compensate_m, compensate_sequential, select_24_m, select_unstructured_s,
     sparsegpt_prune, HessianAccumulator, IncrementalMrp, Mask, Method, PruneConfig, Sparsity,
@@ -313,10 +316,10 @@ fn bench_pruned_decode(rec: &mut Recorder) {
     let packed = pack_as(&model, Sparsity::two_four());
     let toks: Vec<u32> = (0..48).map(|i| (i * 7 % 512) as u32).collect();
     let d = rec.bench("decode 48tok d128 L4 (dense 2:4 weights)", 10, || {
-        std::hint::black_box(model.predict_last(&toks));
+        std::hint::black_box(model.predict_last_full(&toks));
     });
     let p = rec.bench("decode 48tok d128 L4 (packed24 stores)", 10, || {
-        std::hint::black_box(packed.predict_last(&toks));
+        std::hint::black_box(packed.predict_last_full(&toks));
     });
     rec.derived.insert("decode_packed24_speedup".into(), d / p.max(1e-9));
     rec.derived.insert(
@@ -336,16 +339,93 @@ fn bench_pruned_decode(rec: &mut Recorder) {
     }
     let csr80 = pack_as(&m80, Sparsity::Unstructured { rate: 0.8 });
     let d80 = rec.bench("decode 48tok d128 L4 (dense 80% weights)", 10, || {
-        std::hint::black_box(m80.predict_last(&toks));
+        std::hint::black_box(m80.predict_last_full(&toks));
     });
     let c80 = rec.bench("decode 48tok d128 L4 (csr stores)", 10, || {
-        std::hint::black_box(csr80.predict_last(&toks));
+        std::hint::black_box(csr80.predict_last_full(&toks));
     });
     rec.derived.insert("decode_csr_speedup_80".into(), d80 / c80.max(1e-9));
     rec.derived.insert(
         "model_compression_csr_80".into(),
         csr80.params.dense_bytes() as f64 / csr80.params.bytes() as f64,
     );
+}
+
+/// Incremental decode sessions vs the quadratic no-cache path: prefill a
+/// 256-token context, then 64 single-token steps. The baseline re-runs
+/// the full (growing) context through every block per step
+/// (`predict_last_full`, already using the `logits_last` fast path); the
+/// session path pays O(T·L) per step from its K/V caches (O(1) for
+/// mamba's recurrent state). Records `decode_session_speedup_{dense,
+/// packed24,csr,mamba}` under `derived` — expected ≫1 at this length.
+fn bench_decode_session(rec: &mut Recorder) {
+    use apt::model::BLOCK_LINEARS;
+    use apt::sparse::WeightStore;
+
+    let cfg = TransformerConfig {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq: 512,
+    };
+    let prefill: Vec<u32> = (0..256).map(|i| (i * 7 % 512) as u32).collect();
+    let steps: Vec<u32> = (0..64).map(|i| (i * 13 % 512) as u32).collect();
+
+    let prune_and_pack = |seed: u64, sp: Option<Sparsity>| -> Transformer {
+        let mut m = Transformer::init(cfg, &mut Rng::new(seed));
+        if let Some(sp) = sp {
+            for b in 0..cfg.n_layers {
+                for name in BLOCK_LINEARS {
+                    apt::prune::magnitude_prune(m.weight_mut(b, name).dense_mut(), sp);
+                    let w = m.weight(b, name).to_dense();
+                    *m.weight_mut(b, name) = WeightStore::pack(&w, sp);
+                }
+            }
+        }
+        m
+    };
+    let variants: [(&str, Transformer); 3] = [
+        ("dense", prune_and_pack(61, None)),
+        ("packed24", prune_and_pack(62, Some(Sparsity::two_four()))),
+        ("csr", prune_and_pack(63, Some(Sparsity::Unstructured { rate: 0.8 }))),
+    ];
+    let run_pair = |rec: &mut Recorder, label: &str, model: &dyn LanguageModel| {
+        let f = rec.bench(
+            &format!("decode_session full-fwd prefill256+64steps ({label})"),
+            2,
+            || {
+                let mut ctx = prefill.clone();
+                for &t in &steps {
+                    std::hint::black_box(model.predict_last_full(&ctx));
+                    ctx.push(t);
+                }
+            },
+        );
+        let s = rec.bench(
+            &format!("decode_session incremental prefill256+64steps ({label})"),
+            5,
+            || {
+                let mut sess = DecodeSession::new(model);
+                sess.prefill(&prefill);
+                for &t in &steps {
+                    std::hint::black_box(sess.step(t));
+                }
+            },
+        );
+        rec.derived
+            .insert(format!("decode_session_speedup_{label}"), f / s.max(1e-9));
+        println!("  -> decode_session {label}: {:.2}x", f / s.max(1e-9));
+    };
+    for (label, model) in &variants {
+        run_pair(rec, label, model);
+    }
+
+    // mamba: the recurrent-state path (O(1) per step in context length)
+    let mcfg = MambaConfig { vocab: 512, d_model: 128, d_inner: 256, n_layers: 4, max_seq: 512 };
+    let mamba = Mamba::init(mcfg, &mut Rng::new(64));
+    run_pair(rec, "mamba", &mamba);
 }
 
 /// End-to-end coordinator run (calibrate -> prune -> propagate) on a
@@ -505,6 +585,7 @@ fn main() {
 
     if run("decode") {
         bench_pruned_decode(&mut rec);
+        bench_decode_session(&mut rec);
     }
 
     if run("pipeline") {

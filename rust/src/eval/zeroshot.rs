@@ -1,10 +1,24 @@
 //! Zero-shot task evaluation (paper Table 3): candidate selection by
 //! length-normalized continuation log-likelihood + LAMBADA-style last-word
 //! argmax accuracy.
+//!
+//! Both metrics route through [`DecodeSession`]: a task's context is
+//! prefilled ONCE (O(T·L)), then every candidate continuation scores from
+//! a `fork()` of that snapshot, one O(T·L) step per token — instead of
+//! re-running the full O(T²·L) forward per candidate.
 
 use crate::data::{ChoiceTask, LastWordTask};
-use crate::model::LanguageModel;
+use crate::model::{DecodeSession, LanguageModel};
 use crate::util::num_threads;
+
+/// Length-normalized log-prob of `cand` continuing an already-prefilled
+/// session (scored on a fork; `base` is left untouched).
+fn score_candidate(base: &DecodeSession<'_, dyn LanguageModel + '_>, cand: &[u32]) -> f64 {
+    if cand.is_empty() {
+        return 0.0;
+    }
+    base.fork().continuation_logprob(cand) / cand.len() as f64
+}
 
 /// Accuracy on a choice suite (fraction of tasks where the model ranks the
 /// correct candidate first by per-token-normalized log-prob).
@@ -21,11 +35,12 @@ pub fn choice_accuracy(model: &dyn LanguageModel, tasks: &[ChoiceTask]) -> f64 {
             s.spawn(move || {
                 let mut local = 0usize;
                 for t in ts {
+                    let mut base = DecodeSession::new(model);
+                    base.prefill(&t.context);
                     let mut best = 0usize;
                     let mut best_lp = f64::NEG_INFINITY;
                     for (i, cand) in t.candidates.iter().enumerate() {
-                        let lp = model.continuation_logprob(&t.context, cand)
-                            / cand.len().max(1) as f64;
+                        let lp = score_candidate(&base, cand);
                         if lp > best_lp {
                             best_lp = lp;
                             best = i;

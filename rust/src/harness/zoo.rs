@@ -15,7 +15,8 @@ use anyhow::Result;
 
 use crate::data::{CorpusGen, Profile};
 use crate::model::{
-    train, LanguageModel, Mamba, MambaConfig, TrainConfig, Transformer, TransformerConfig,
+    train, DecodeSession, LanguageModel, Mamba, MambaConfig, TrainConfig, Transformer,
+    TransformerConfig,
 };
 use crate::util::Rng;
 
@@ -48,6 +49,12 @@ impl AnyModel {
             }),
             AnyModel::Mamba(m) => AnyModel::Mamba(Mamba { cfg: m.cfg, params: m.params.clone() }),
         }
+    }
+
+    /// Start an incremental-decode session over this model (the serving
+    /// path: prefill once, then O(T·L) / O(1)-per-token steps).
+    pub fn decode_session(&self) -> DecodeSession<'_, dyn LanguageModel + '_> {
+        DecodeSession::new(self.as_dyn())
     }
 }
 
@@ -168,6 +175,21 @@ mod tests {
             m1.as_dyn().forward_loss(&toks, (1, 32)),
             m2.as_dyn().forward_loss(&toks, (1, 32))
         );
+        std::fs::remove_dir_all(&zoo.cache_dir).ok();
+    }
+
+    #[test]
+    fn decode_session_matches_full_forward_on_zoo_model() {
+        let mut zoo = Zoo::new(102);
+        zoo.cache_dir = std::env::temp_dir().join("apt_zoo_test3");
+        std::fs::create_dir_all(&zoo.cache_dir).unwrap();
+        zoo.train_tokens = 8_000;
+        let m = zoo.model("llama", "small", 2).unwrap();
+        let toks: Vec<u32> = (0..24).map(|i| (i * 3 % 50) as u32).collect();
+        let mut s = m.decode_session();
+        s.prefill(&toks);
+        assert_eq!(s.len(), toks.len());
+        assert_eq!(s.argmax_last(), m.as_dyn().predict_last_full(&toks));
         std::fs::remove_dir_all(&zoo.cache_dir).ok();
     }
 

@@ -1,0 +1,236 @@
+//! Incremental decode sessions: the serving path.
+//!
+//! `predict_last`-style callers used to re-run the **full context through
+//! every block on every call** — O(T²·L) per token in a decode loop. A
+//! [`DecodeSession`] carries per-block mutable state instead:
+//!
+//! - **transformer**: per-block K/V caches (RoPE applied at the absolute
+//!   position offset); a step runs the 1-token query against the cached
+//!   keys/values — O(T·L) per token;
+//! - **mamba**: the selective-scan hidden state `h` plus a
+//!   `CONV_K − 1`-deep ring buffer for the causal depthwise conv — O(1)
+//!   per token in context length.
+//!
+//! Logits are computed **only for the last position** (`logits_row`,
+//! skipping the full (B·T, V) matmul), and the incremental path is
+//! pinned to match the full forward to <1e-5 across both families and
+//! all three weight layouts (see `incremental_decode_matches_full_forward`
+//! in the integration suite).
+//!
+//! The session API is `prefill(context) → step(token)`; `fork()` clones
+//! the state so zero-shot choice scoring prefills a context once and
+//! scores every candidate continuation from the same snapshot.
+
+use super::mamba::MambaBlockState;
+use super::transformer::TfBlockState;
+use super::{log_softmax_at, LanguageModel};
+
+/// Architecture-specific per-session mutable state, one entry per block.
+#[derive(Clone, Debug)]
+pub enum DecodeState {
+    Transformer(Vec<TfBlockState>),
+    Mamba(Vec<MambaBlockState>),
+}
+
+/// A mutable incremental-decode handle over any [`LanguageModel`].
+///
+/// ```text
+/// let mut s = DecodeSession::new(&model);
+/// s.prefill(&context);            // O(T·L) once
+/// let tok = s.argmax_last();
+/// s.step(tok);                    // O(T·L) per token (O(1)·L for mamba)
+/// ```
+pub struct DecodeSession<'m, M: LanguageModel + ?Sized> {
+    model: &'m M,
+    state: DecodeState,
+    pos: usize,
+    last_logits: Option<Vec<f32>>,
+}
+
+impl<'m, M: LanguageModel + ?Sized> DecodeSession<'m, M> {
+    pub fn new(model: &'m M) -> DecodeSession<'m, M> {
+        DecodeSession { model, state: model.decode_state(), pos: 0, last_logits: None }
+    }
+
+    /// Tokens consumed so far (prefill + steps).
+    pub fn len(&self) -> usize {
+        self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos == 0
+    }
+
+    /// Feed a chunk of tokens (a whole context, or a continuation of
+    /// one); returns the logits at the last fed position. Chunks may be
+    /// split arbitrarily — a prefill of `[a, b] + [c]` is equivalent to
+    /// `[a, b, c]`.
+    pub fn prefill(&mut self, tokens: &[u32]) -> &[f32] {
+        assert!(!tokens.is_empty(), "prefill needs at least one token");
+        let h = self.model.decode_append(&mut self.state, self.pos, tokens);
+        self.pos += tokens.len();
+        self.last_logits = Some(self.model.logits_row(&h));
+        self.last_logits.as_deref().unwrap()
+    }
+
+    /// Feed one token; returns the logits for the next position.
+    pub fn step(&mut self, token: u32) -> &[f32] {
+        self.prefill(&[token])
+    }
+
+    /// Logits at the last consumed position (panics before any prefill).
+    pub fn last_logits(&self) -> &[f32] {
+        self.last_logits.as_deref().expect("no tokens consumed yet")
+    }
+
+    /// Argmax of the last logits (first max wins on exact ties, same
+    /// tie-break as the full-forward `predict_last`).
+    pub fn argmax_last(&self) -> u32 {
+        argmax(self.last_logits()) as u32
+    }
+
+    /// Greedy-generate `n` tokens from the current state (requires at
+    /// least one consumed token). Each generated token is fed back, so
+    /// the session ends `n` tokens longer.
+    pub fn generate(&mut self, n: usize) -> Vec<u32> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let tok = self.argmax_last();
+            out.push(tok);
+            self.step(tok);
+        }
+        out
+    }
+
+    /// Sum log-prob of `continuation` scored from the current state
+    /// (requires a prior prefill), stepping each token but the last.
+    /// The single scoring loop behind both the trait's
+    /// `continuation_logprob` and the zero-shot candidate scorer.
+    pub fn continuation_logprob(&mut self, continuation: &[u32]) -> f64 {
+        if continuation.is_empty() {
+            return 0.0;
+        }
+        let mut lp = log_softmax_at(self.last_logits(), continuation[0] as usize);
+        for w in continuation.windows(2) {
+            self.step(w[0]);
+            lp += log_softmax_at(self.last_logits(), w[1] as usize);
+        }
+        lp
+    }
+
+    /// Snapshot the session: an independent copy sharing the model, used
+    /// to score multiple continuations of one prefilled context.
+    pub fn fork(&self) -> DecodeSession<'m, M> {
+        DecodeSession {
+            model: self.model,
+            state: self.state.clone(),
+            pos: self.pos,
+            last_logits: self.last_logits.clone(),
+        }
+    }
+}
+
+pub(crate) fn argmax(row: &[f32]) -> usize {
+    let mut best = 0usize;
+    for (i, &v) in row.iter().enumerate() {
+        if v > row[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Mamba, MambaConfig, Transformer, TransformerConfig};
+    use crate::util::Rng;
+
+    fn tiny_transformer(seed: u64) -> Transformer {
+        let cfg = TransformerConfig {
+            vocab: 31,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+        };
+        Transformer::init(cfg, &mut Rng::new(seed))
+    }
+
+    fn tiny_mamba(seed: u64) -> Mamba {
+        Mamba::init(
+            MambaConfig { vocab: 31, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 64 },
+            &mut Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn session_tracks_length_and_is_deterministic() {
+        let m = tiny_transformer(1);
+        let toks: Vec<u32> = (0..9).map(|i| (i * 7 % 31) as u32).collect();
+        let mut s1 = DecodeSession::new(&m);
+        s1.prefill(&toks);
+        assert_eq!(s1.len(), 9);
+        let mut s2 = DecodeSession::new(&m);
+        s2.prefill(&toks);
+        assert_eq!(s1.last_logits(), s2.last_logits());
+        assert_eq!(s1.step(3), s2.step(3));
+        assert_eq!(s1.len(), 10);
+    }
+
+    #[test]
+    fn generate_extends_session_greedily() {
+        for (name, model) in [
+            ("microllama", Box::new(tiny_transformer(2)) as Box<dyn LanguageModel>),
+            ("micromamba", Box::new(tiny_mamba(3)) as Box<dyn LanguageModel>),
+        ] {
+            let mut s = DecodeSession::new(model.as_ref());
+            s.prefill(&[1, 2, 3]);
+            let first = s.argmax_last();
+            let gen = s.generate(5);
+            assert_eq!(gen.len(), 5, "{name}");
+            assert_eq!(gen[0], first, "{name}");
+            assert_eq!(s.len(), 8, "{name}");
+            assert!(gen.iter().all(|&t| (t as usize) < 31), "{name}");
+            // replaying context + generated prefix reproduces the suffix
+            let mut replay = DecodeSession::new(model.as_ref());
+            let mut ctx = vec![1, 2, 3];
+            ctx.extend_from_slice(&gen[..2]);
+            replay.prefill(&ctx);
+            assert_eq!(replay.argmax_last(), gen[2], "{name}");
+        }
+    }
+
+    #[test]
+    fn fork_is_independent() {
+        let m = tiny_mamba(4);
+        let mut base = DecodeSession::new(&m);
+        base.prefill(&[5, 6, 7]);
+        let snapshot = base.last_logits().to_vec();
+        let mut a = base.fork();
+        a.step(1);
+        let mut b = base.fork();
+        b.step(2);
+        // diverged sessions don't share state, and the base is untouched
+        assert_eq!(base.len(), 3);
+        assert_eq!(base.last_logits(), &snapshot[..]);
+        assert_ne!(a.last_logits(), b.last_logits());
+    }
+
+    #[test]
+    #[should_panic(expected = "decode state/arch mismatch")]
+    fn state_arch_mismatch_panics() {
+        let t = tiny_transformer(5);
+        let m = tiny_mamba(6);
+        let mut state = m.decode_state();
+        t.decode_append(&mut state, 0, &[1]);
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one token")]
+    fn empty_prefill_panics() {
+        let m = tiny_transformer(7);
+        DecodeSession::new(&m).prefill(&[]);
+    }
+}

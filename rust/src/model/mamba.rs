@@ -44,7 +44,10 @@ impl MambaConfig {
 }
 
 pub const MAMBA_LINEARS: [&str; 3] = ["in_proj", "dt_proj", "out_proj"];
-const CONV_K: usize = 3;
+
+/// Causal depthwise conv kernel depth; the decode-session ring buffer
+/// carries the last `CONV_K - 1` conv inputs per block.
+pub const CONV_K: usize = 3;
 
 pub struct Mamba {
     pub cfg: MambaConfig,
@@ -104,7 +107,7 @@ impl Mamba {
     }
 
     pub fn block_forward(&self, b: usize, x: &Mat, bt: (usize, usize)) -> Mat {
-        self.block_impl(b, x, bt, None, &mut |_, _| {})
+        self.block_impl(b, x, MambaSeq::Full { bsz: bt.0, t: bt.1 }, None, &mut |_, _| {})
     }
 
     pub fn block_forward_collect(
@@ -114,14 +117,28 @@ impl Mamba {
         bt: (usize, usize),
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
-        self.block_impl(b, x, bt, None, sink)
+        self.block_impl(b, x, MambaSeq::Full { bsz: bt.0, t: bt.1 }, None, sink)
+    }
+
+    /// Incremental block forward: `x` holds newly appended tokens; the
+    /// conv ring buffer and scan hidden state carry the context, so each
+    /// step is O(1) in context length.
+    pub(crate) fn block_decode(&self, b: usize, x: &Mat, st: &mut MambaBlockState) -> Mat {
+        self.block_impl(b, x, MambaSeq::Decode { st }, None, &mut |_, _| {})
+    }
+
+    /// Fresh per-block recurrent state for a decode session. Zero-filled
+    /// history is exactly the causal zero-padding the full forward uses
+    /// for positions before the sequence start.
+    pub(crate) fn new_block_states(&self) -> Vec<MambaBlockState> {
+        (0..self.cfg.n_layers).map(|_| MambaBlockState::new(self.cfg.d_inner)).collect()
     }
 
     fn block_impl(
         &self,
         b: usize,
         x: &Mat,
-        (bsz, t): (usize, usize),
+        mode: MambaSeq<'_>,
         mut cache: Option<&mut MambaCache>,
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
@@ -139,17 +156,52 @@ impl Mamba {
         let cw = self.params.dense(&key(b, "conv_w")).unwrap();
         let cb = self.params.dense(&key(b, "conv_b")).unwrap();
         let mut pre = Mat::zeros(x.rows, e);
-        for s in 0..bsz {
-            for pos in 0..t {
-                let dst = s * t + pos;
-                for c in 0..e {
-                    let mut acc = cb[(0, c)];
-                    for kk in 0..CONV_K {
-                        if pos >= kk {
-                            acc += cw[(kk, c)] * u[(s * t + pos - kk, c)];
+        let mut mode = mode;
+        match &mut mode {
+            MambaSeq::Full { bsz, t } => {
+                for s in 0..*bsz {
+                    for pos in 0..*t {
+                        let dst = s * *t + pos;
+                        for c in 0..e {
+                            let mut acc = cb[(0, c)];
+                            for kk in 0..CONV_K {
+                                if pos >= kk {
+                                    acc += cw[(kk, c)] * u[(s * *t + pos - kk, c)];
+                                }
+                            }
+                            pre[(dst, c)] = acc;
                         }
                     }
-                    pre[(dst, c)] = acc;
+                }
+            }
+            MambaSeq::Decode { st } => {
+                // positions before the chunk come from the ring buffer
+                // (conv[0] = u_{t-1}, conv[1] = u_{t-2}, …)
+                let tn = x.rows;
+                for pos in 0..tn {
+                    for c in 0..e {
+                        let mut acc = cb[(0, c)];
+                        for kk in 0..CONV_K {
+                            let uv = if pos >= kk {
+                                u[(pos - kk, c)]
+                            } else {
+                                st.conv[kk - pos - 1][c]
+                            };
+                            acc += cw[(kk, c)] * uv;
+                        }
+                        pre[(pos, c)] = acc;
+                    }
+                }
+                // in-place ring rotation, highest index first so shifted
+                // survivors are read before they're overwritten — no
+                // allocations on the per-token hot path
+                for hi in (0..CONV_K - 1).rev() {
+                    if tn > hi {
+                        st.conv[hi].copy_from_slice(u.row(tn - 1 - hi));
+                    } else {
+                        let (head, tail) = st.conv.split_at_mut(hi);
+                        tail[0].copy_from_slice(&head[hi - tn]);
+                    }
                 }
             }
         }
@@ -165,14 +217,29 @@ impl Mamba {
         }
         // selective scan
         let mut h = Mat::zeros(x.rows, e);
-        for s in 0..bsz {
-            for pos in 0..t {
-                let r = s * t + pos;
-                for c in 0..e {
-                    let prev = if pos == 0 { 0.0 } else { h[(r - 1, c)] };
-                    let a = alpha[(r, c)];
-                    h[(r, c)] = a * prev + (1.0 - a) * up[(r, c)];
+        match &mut mode {
+            MambaSeq::Full { bsz, t } => {
+                for s in 0..*bsz {
+                    for pos in 0..*t {
+                        let r = s * *t + pos;
+                        for c in 0..e {
+                            let prev = if pos == 0 { 0.0 } else { h[(r - 1, c)] };
+                            let a = alpha[(r, c)];
+                            h[(r, c)] = a * prev + (1.0 - a) * up[(r, c)];
+                        }
+                    }
                 }
+            }
+            MambaSeq::Decode { st } => {
+                let tn = x.rows;
+                for pos in 0..tn {
+                    for c in 0..e {
+                        let prev = if pos == 0 { st.h[c] } else { h[(pos - 1, c)] };
+                        let a = alpha[(pos, c)];
+                        h[(pos, c)] = a * prev + (1.0 - a) * up[(pos, c)];
+                    }
+                }
+                st.h.copy_from_slice(h.row(tn - 1));
             }
         }
         // gate + out proj + residual
@@ -211,7 +278,13 @@ impl Mamba {
         let mut x = self.embed(tokens);
         for b in 0..cfg.n_layers {
             let mut c = MambaCache::empty();
-            x = self.block_impl(b, &x, bt, Some(&mut c), &mut |_, _| {});
+            x = self.block_impl(
+                b,
+                &x,
+                MambaSeq::Full { bsz: bt.0, t: bt.1 },
+                Some(&mut c),
+                &mut |_, _| {},
+            );
             caches.push(c);
         }
         let fg = self.params.dense("final_norm").unwrap().row(0);
@@ -361,6 +434,33 @@ fn sigmoid(x: f32) -> f32 {
 #[inline]
 fn silu(x: f32) -> f32 {
     x * sigmoid(x)
+}
+
+/// Sequence routing for `block_impl`: the whole-context batch path, or
+/// the incremental step-state path over a session's recurrent state.
+pub(crate) enum MambaSeq<'s> {
+    /// B sequences of length T, scanned from h = 0 each.
+    Full { bsz: usize, t: usize },
+    /// Newly appended tokens continuing the session's carried state.
+    Decode { st: &'s mut MambaBlockState },
+}
+
+/// Per-block decode-session state: the selective-scan hidden state `h`
+/// plus a `CONV_K - 1`-deep ring of past conv inputs (newest first), so
+/// one decode step costs O(1) in context length.
+#[derive(Clone, Debug)]
+pub struct MambaBlockState {
+    pub h: Vec<f32>,
+    conv: Vec<Vec<f32>>,
+}
+
+impl MambaBlockState {
+    fn new(d_inner: usize) -> MambaBlockState {
+        MambaBlockState {
+            h: vec![0.0; d_inner],
+            conv: vec![vec![0.0; d_inner]; CONV_K - 1],
+        }
+    }
 }
 
 pub struct MambaCache {

@@ -2,17 +2,19 @@
 //! `LanguageModel` trait consumed by the coordinator/eval layers, shared
 //! functional pieces (RMSNorm, cross-entropy), and the AdamW trainer.
 
+pub mod decode;
 pub mod mamba;
 pub mod train;
 pub mod transformer;
 
-pub use mamba::{Mamba, MambaConfig, MAMBA_LINEARS};
+pub use decode::{DecodeSession, DecodeState};
+pub use mamba::{Mamba, MambaConfig, CONV_K, MAMBA_LINEARS};
 pub use train::{train, TrainConfig};
 pub use transformer::{Transformer, TransformerConfig, BLOCK_LINEARS};
 
 use crate::io::{ParamStore, TensorStore};
 use crate::sparse::WeightStore;
-use crate::tensor::Mat;
+use crate::tensor::{dot, Mat};
 
 // ---------------------------------------------------------------------------
 // shared functional pieces (used by both architectures)
@@ -79,6 +81,31 @@ pub fn ce_loss(logits: &Mat, tokens: &[u32], bt: (usize, usize)) -> f64 {
 pub fn ce_loss_and_grad(logits: &Mat, tokens: &[u32], bt: (usize, usize)) -> (f64, Mat) {
     let (l, g) = ce_impl(logits, tokens, bt, true);
     (l, g.unwrap())
+}
+
+/// Log-prob of `target` under a log-softmax over `row` (f64 reduction,
+/// same as the perplexity path).
+pub fn log_softmax_at(row: &[f32], target: usize) -> f64 {
+    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+    let lse: f64 = row.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
+    row[target] as f64 - lse
+}
+
+/// Final-norm + tied-embedding logits for ONE hidden row — the decode
+/// fast path: a (1, V) product instead of the full (B·T, V) matmul. The
+/// per-row math (rmsnorm loop order, `dot` kernel) is identical to
+/// `logits`, so the result matches `logits(x).row(r)` bit-for-bit.
+fn logits_row_impl(params: &ParamStore, h: &[f32]) -> Vec<f32> {
+    let gain = params.dense("final_norm").expect("final_norm").row(0);
+    let embed = params.dense("embed").expect("embed");
+    let d = h.len();
+    let ms: f32 = h.iter().map(|v| v * v).sum::<f32>() / d as f32;
+    let ri = 1.0 / (ms + NORM_EPS).sqrt();
+    let mut y = vec![0.0f32; d];
+    for j in 0..d {
+        y[j] = h[j] * ri * gain[j];
+    }
+    (0..embed.rows).map(|v| dot(&y, embed.row(v))).collect()
 }
 
 fn ce_impl(
@@ -151,6 +178,31 @@ pub trait LanguageModel: Send + Sync {
     fn forward_loss(&self, tokens: &[u32], bt: (usize, usize)) -> f64;
     fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore);
 
+    // ---------------------------------------------- incremental decoding
+
+    /// Fresh per-session decode state (K/V caches or recurrent state,
+    /// one entry per block). Consumed through [`DecodeSession`].
+    fn decode_state(&self) -> DecodeState;
+
+    /// Append `tokens` at absolute positions `pos0..pos0 + tokens.len()`,
+    /// mutating `state`; returns the final hidden row of the LAST
+    /// appended position (feed it to [`LanguageModel::logits_row`]).
+    /// Panics if `state` came from the other architecture.
+    fn decode_append(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Vec<f32>;
+
+    /// Logits for a single final-hidden row: the (1, V) fast path that
+    /// skips the full (B·T, V) matmul. Matches `logits(x).row(r)`
+    /// bit-for-bit for the same hidden row.
+    fn logits_row(&self, h: &[f32]) -> Vec<f32> {
+        logits_row_impl(self.params(), h)
+    }
+
+    /// Last-position logits of a block-forward output — the single-
+    /// position caller's fast path over [`LanguageModel::logits`].
+    fn logits_last(&self, x: &Mat) -> Vec<f32> {
+        self.logits_row(x.row(x.rows - 1))
+    }
+
     /// Log-prob of each next token over a window (perplexity eval).
     fn next_token_logprobs(&self, tokens: &[u32], bt: (usize, usize)) -> Vec<f64> {
         let mut x = self.embed_tokens(tokens);
@@ -163,18 +215,28 @@ pub trait LanguageModel: Send + Sync {
         for s in 0..bsz {
             for i in 0..t - 1 {
                 let row = logits.row(s * t + i);
-                let target = tokens[s * t + i + 1] as usize;
-                let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
-                let lse: f64 =
-                    row.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
-                out.push(row[target] as f64 - lse);
+                out.push(log_softmax_at(row, tokens[s * t + i + 1] as usize));
             }
         }
         out
     }
 
     /// Sum log-prob of a continuation given a context (zero-shot choice).
+    /// Routed through a [`DecodeSession`]: the context is prefilled once
+    /// and each continuation token is a single O(T·L) step.
     fn continuation_logprob(&self, context: &[u32], continuation: &[u32]) -> f64 {
+        if continuation.is_empty() {
+            return 0.0;
+        }
+        let mut s = DecodeSession::new(self);
+        s.prefill(context);
+        s.continuation_logprob(continuation)
+    }
+
+    /// Reference continuation scoring via one full quadratic forward —
+    /// the equivalence oracle for the session path (and the honest
+    /// no-cache baseline in the decode benches).
+    fn continuation_logprob_full(&self, context: &[u32], continuation: &[u32]) -> f64 {
         let mut toks = context.to_vec();
         toks.extend_from_slice(continuation);
         let lp = self.next_token_logprobs(&toks, (1, toks.len()));
@@ -182,21 +244,23 @@ pub trait LanguageModel: Send + Sync {
         lp[context.len() - 1..].iter().sum()
     }
 
-    /// Argmax next token after a context (LAMBADA eval).
+    /// Argmax next token after a context (LAMBADA eval). Routed through
+    /// a [`DecodeSession`] — O(T·L) instead of O(T²·L).
     fn predict_last(&self, context: &[u32]) -> u32 {
+        let mut s = DecodeSession::new(self);
+        s.prefill(context);
+        s.argmax_last()
+    }
+
+    /// Reference argmax via the full forward (every block re-runs the
+    /// whole context) — the equivalence oracle and bench baseline. Uses
+    /// the `logits_last` single-position fast path.
+    fn predict_last_full(&self, context: &[u32]) -> u32 {
         let mut x = self.embed_tokens(context);
         for b in 0..self.n_blocks() {
             x = self.forward_block(b, &x, (1, context.len()));
         }
-        let logits = self.logits(&x);
-        let row = logits.row(context.len() - 1);
-        let mut best = 0usize;
-        for (i, &v) in row.iter().enumerate() {
-            if v > row[best] {
-                best = i;
-            }
-        }
-        best as u32
+        decode::argmax(&self.logits_last(&x)) as u32
     }
 }
 
@@ -252,6 +316,20 @@ impl LanguageModel for Transformer {
     fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore) {
         Transformer::loss_and_grads(self, tokens, bt)
     }
+    fn decode_state(&self) -> DecodeState {
+        DecodeState::Transformer(self.new_block_states())
+    }
+    fn decode_append(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Vec<f32> {
+        let DecodeState::Transformer(st) = state else {
+            panic!("decode state/arch mismatch: microllama fed a mamba state")
+        };
+        assert_eq!(st.len(), self.cfg.n_layers, "decode state from another model");
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            x = self.block_decode(b, &x, pos0, &mut st[b]);
+        }
+        x.row(x.rows - 1).to_vec()
+    }
 }
 
 impl LanguageModel for Mamba {
@@ -306,6 +384,20 @@ impl LanguageModel for Mamba {
     fn loss_and_grads(&self, tokens: &[u32], bt: (usize, usize)) -> (f64, TensorStore) {
         Mamba::loss_and_grads(self, tokens, bt)
     }
+    fn decode_state(&self) -> DecodeState {
+        DecodeState::Mamba(self.new_block_states())
+    }
+    fn decode_append(&self, state: &mut DecodeState, _pos0: usize, tokens: &[u32]) -> Vec<f32> {
+        let DecodeState::Mamba(st) = state else {
+            panic!("decode state/arch mismatch: micromamba fed a transformer state")
+        };
+        assert_eq!(st.len(), self.cfg.n_layers, "decode state from another model");
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            x = self.block_decode(b, &x, &mut st[b]);
+        }
+        x.row(x.rows - 1).to_vec()
+    }
 }
 
 #[cfg(test)]
@@ -346,5 +438,51 @@ mod tests {
         );
         let lp = t.continuation_logprob(&[1, 2, 3, 4], &[5, 6]);
         assert!(lp < 0.0 && lp.is_finite());
+    }
+
+    fn both_archs(seed: u64) -> Vec<Box<dyn LanguageModel>> {
+        let mut rng = Rng::new(seed);
+        let t = Transformer::init(
+            TransformerConfig { vocab: 17, d_model: 8, n_layers: 2, n_heads: 2, d_ff: 12, max_seq: 32 },
+            &mut rng,
+        );
+        let m = Mamba::init(
+            MambaConfig { vocab: 17, d_model: 8, d_inner: 12, n_layers: 2, max_seq: 32 },
+            &mut rng,
+        );
+        vec![Box::new(t), Box::new(m)]
+    }
+
+    #[test]
+    fn logits_last_matches_full_logits_row_exactly() {
+        for model in both_archs(3) {
+            let toks: Vec<u32> = (0..10).map(|i| (i * 5 % 17) as u32).collect();
+            let mut x = model.embed_tokens(&toks);
+            for b in 0..model.n_blocks() {
+                x = model.forward_block(b, &x, (1, toks.len()));
+            }
+            let full = model.logits(&x);
+            let fast = model.logits_last(&x);
+            // same rmsnorm loop + same `dot` kernel: bit-for-bit
+            assert_eq!(fast.as_slice(), full.row(full.rows - 1), "{}", model.arch());
+        }
+    }
+
+    #[test]
+    fn session_continuation_and_predict_match_full_forward() {
+        for model in both_archs(4) {
+            let ctx: Vec<u32> = (0..12).map(|i| (i * 3 % 17) as u32).collect();
+            let cont = [2u32, 9, 4];
+            let a = model.continuation_logprob(&ctx, &cont);
+            let b = model.continuation_logprob_full(&ctx, &cont);
+            assert!((a - b).abs() < 1e-5, "{}: {a} vs {b}", model.arch());
+            assert_eq!(
+                model.predict_last(&ctx),
+                model.predict_last_full(&ctx),
+                "{}",
+                model.arch()
+            );
+            assert_eq!(model.continuation_logprob(&ctx, &[]), 0.0);
+        }
     }
 }

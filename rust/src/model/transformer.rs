@@ -19,7 +19,7 @@ use anyhow::Result;
 
 use crate::io::{ParamStore, TensorStore};
 use crate::sparse::WeightStore;
-use crate::tensor::Mat;
+use crate::tensor::{dot, Mat};
 use crate::util::Rng;
 
 use super::{ce_loss, ce_loss_and_grad, transformer_rmsnorm as rmsnorm,
@@ -125,7 +125,7 @@ impl Transformer {
 
     /// One block forward. `x`: (B*T, d) with B sequences of length T.
     pub fn block_forward(&self, b: usize, x: &Mat, bt: (usize, usize)) -> Mat {
-        self.block_forward_impl(b, x, bt, None, &mut |_, _| {})
+        self.block_forward_impl(b, x, TfAttn::Full { bsz: bt.0, t: bt.1 }, None, &mut |_, _| {})
     }
 
     /// Block forward that also hands each linear's input matrix to `sink`
@@ -137,14 +137,32 @@ impl Transformer {
         bt: (usize, usize),
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
-        self.block_forward_impl(b, x, bt, None, sink)
+        self.block_forward_impl(b, x, TfAttn::Full { bsz: bt.0, t: bt.1 }, None, sink)
+    }
+
+    /// Incremental block forward: `x` holds the new tokens at absolute
+    /// positions `pos0..pos0 + x.rows`, and attention runs against the
+    /// session's cached keys/values instead of re-deriving the context.
+    pub(crate) fn block_decode(
+        &self,
+        b: usize,
+        x: &Mat,
+        pos0: usize,
+        st: &mut TfBlockState,
+    ) -> Mat {
+        self.block_forward_impl(b, x, TfAttn::Decode { pos0, st }, None, &mut |_, _| {})
+    }
+
+    /// Fresh (empty) per-block K/V caches for a decode session.
+    pub(crate) fn new_block_states(&self) -> Vec<TfBlockState> {
+        (0..self.cfg.n_layers).map(|_| TfBlockState::new(self.cfg.d_model)).collect()
     }
 
     fn block_forward_impl(
         &self,
         b: usize,
         x: &Mat,
-        (bsz, t): (usize, usize),
+        mode: TfAttn<'_>,
         mut cache: Option<&mut BlockCache>,
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
@@ -162,24 +180,59 @@ impl Transformer {
         let v = self.weight(b, "wv").matmul_tb(&n1.y);
         let mut q = q0;
         let mut k = k0;
-        rope(&mut q, bsz, t, h, dh, false);
-        rope(&mut k, bsz, t, h, dh, false);
 
-        // per (seq, head) causal attention
         let mut attn_out = Mat::zeros(x.rows, cfg.d_model);
         let mut probs_cache: Vec<Mat> = Vec::new();
-        for s in 0..bsz {
-            for hd in 0..h {
-                let qs = head_slice(&q, s, t, hd, dh);
-                let ks = head_slice(&k, s, t, hd, dh);
-                let vs = head_slice(&v, s, t, hd, dh);
-                let mut scores = qs.matmul_tb(&ks); // (t,t)
-                scores.scale(scale);
-                causal_softmax(&mut scores);
-                let o = scores.matmul(&vs); // (t, dh)
-                write_head(&mut attn_out, &o, s, t, hd, dh);
-                if cache.is_some() {
-                    probs_cache.push(scores);
+        match mode {
+            TfAttn::Full { bsz, t } => {
+                rope(&mut q, bsz, t, h, dh, false);
+                rope(&mut k, bsz, t, h, dh, false);
+                // per (seq, head) causal attention
+                for s in 0..bsz {
+                    for hd in 0..h {
+                        let qs = head_slice(&q, s, t, hd, dh);
+                        let ks = head_slice(&k, s, t, hd, dh);
+                        let vs = head_slice(&v, s, t, hd, dh);
+                        let mut scores = qs.matmul_tb(&ks); // (t,t)
+                        scores.scale(scale);
+                        causal_softmax(&mut scores);
+                        let o = scores.matmul(&vs); // (t, dh)
+                        write_head(&mut attn_out, &o, s, t, hd, dh);
+                        if cache.is_some() {
+                            probs_cache.push(scores);
+                        }
+                    }
+                }
+            }
+            TfAttn::Decode { pos0, st } => {
+                assert_eq!(st.k.rows, pos0, "K/V cache out of sync with position");
+                rope_rows(&mut q, pos0, h, dh, false);
+                rope_rows(&mut k, pos0, h, dh, false);
+                st.k.append_rows(&k);
+                st.v.append_rows(&v);
+                // each new query at absolute position pos0+i attends to
+                // cached keys 0..=pos0+i: O(T) per token, not O(T²)
+                let tn = x.rows;
+                let mut scores: Vec<f32> = Vec::with_capacity(pos0 + tn);
+                for hd in 0..h {
+                    let (c0, c1) = (hd * dh, (hd + 1) * dh);
+                    for i in 0..tn {
+                        let lim = pos0 + i + 1;
+                        let qh = &q.row(i)[c0..c1];
+                        scores.clear();
+                        scores.resize(lim, 0.0);
+                        for (j, sc) in scores.iter_mut().enumerate() {
+                            *sc = dot(qh, &st.k.row(j)[c0..c1]) * scale;
+                        }
+                        softmax_1d(&mut scores);
+                        let orow = &mut attn_out.row_mut(i)[c0..c1];
+                        for (j, &p) in scores.iter().enumerate() {
+                            let vh = &st.v.row(j)[c0..c1];
+                            for (o, &vv) in orow.iter_mut().zip(vh) {
+                                *o = p.mul_add(vv, *o);
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -242,43 +295,6 @@ impl Transformer {
         ce_loss(&logits, tokens, bt)
     }
 
-    /// Per-position log-softmax log-prob of each *next* token; used by the
-    /// eval layer. Returns (loss_sum, n_predictions, per-pos logprobs).
-    pub fn next_token_logprobs(&self, tokens: &[u32], bt: (usize, usize)) -> Vec<f64> {
-        let mut x = self.embed(tokens);
-        for b in 0..self.cfg.n_layers {
-            x = self.block_forward(b, &x, bt);
-        }
-        let logits = self.logits(&x);
-        let (bsz, t) = bt;
-        let mut out = Vec::new();
-        for s in 0..bsz {
-            for i in 0..t - 1 {
-                let row = logits.row(s * t + i);
-                let target = tokens[s * t + i + 1] as usize;
-                out.push(log_softmax_at(row, target));
-            }
-        }
-        out
-    }
-
-    /// Full-vocab argmax at the last position of a context (LAMBADA eval).
-    pub fn predict_last(&self, context: &[u32]) -> u32 {
-        let mut x = self.embed(context);
-        for b in 0..self.cfg.n_layers {
-            x = self.block_forward(b, &x, (1, context.len()));
-        }
-        let logits = self.logits(&x);
-        let row = logits.row(context.len() - 1);
-        let mut best = 0usize;
-        for (i, &v) in row.iter().enumerate() {
-            if v > row[best] {
-                best = i;
-            }
-        }
-        best as u32
-    }
-
     // ------------------------------------------------------- training step
 
     /// Forward + backward; returns (loss, gradients keyed like params).
@@ -288,7 +304,13 @@ impl Transformer {
         let mut x = self.embed(tokens);
         for b in 0..cfg.n_layers {
             let mut c = BlockCache::empty();
-            x = self.block_forward_impl(b, &x, bt, Some(&mut c), &mut |_, _| {});
+            x = self.block_forward_impl(
+                b,
+                &x,
+                TfAttn::Full { bsz: bt.0, t: bt.1 },
+                Some(&mut c),
+                &mut |_, _| {},
+            );
             caches.push(c);
         }
         let final_g = self.params.dense("final_norm").unwrap().row(0);
@@ -450,23 +472,35 @@ fn silu(x: f32) -> f32 {
 /// In-place rotary embedding on interleaved head layout (B*T, h*dh).
 /// `inverse` applies the transpose rotation (used in backward).
 fn rope(x: &mut Mat, bsz: usize, t: usize, h: usize, dh: usize, inverse: bool) {
-    let half = dh / 2;
     for s in 0..bsz {
         for pos in 0..t {
-            let row = x.row_mut(s * t + pos);
-            for hd in 0..h {
-                let base = hd * dh;
-                for i in 0..half {
-                    let theta = (pos as f32)
-                        * (10000f32).powf(-2.0 * i as f32 / dh as f32);
-                    let (sin, cos) = theta.sin_cos();
-                    let sin = if inverse { -sin } else { sin };
-                    let a = row[base + 2 * i];
-                    let b = row[base + 2 * i + 1];
-                    row[base + 2 * i] = a * cos - b * sin;
-                    row[base + 2 * i + 1] = a * sin + b * cos;
-                }
-            }
+            rope_row(x.row_mut(s * t + pos), pos, h, dh, inverse);
+        }
+    }
+}
+
+/// Rotary embedding for one sequence whose rows sit at absolute positions
+/// `pos0..pos0 + x.rows` — the decode-session variant: the same rotation
+/// `rope` applies, but with an explicit position offset so an incremental
+/// chunk lands exactly where the full forward would have put it.
+fn rope_rows(x: &mut Mat, pos0: usize, h: usize, dh: usize, inverse: bool) {
+    for i in 0..x.rows {
+        rope_row(x.row_mut(i), pos0 + i, h, dh, inverse);
+    }
+}
+
+fn rope_row(row: &mut [f32], pos: usize, h: usize, dh: usize, inverse: bool) {
+    let half = dh / 2;
+    for hd in 0..h {
+        let base = hd * dh;
+        for i in 0..half {
+            let theta = (pos as f32) * (10000f32).powf(-2.0 * i as f32 / dh as f32);
+            let (sin, cos) = theta.sin_cos();
+            let sin = if inverse { -sin } else { sin };
+            let a = row[base + 2 * i];
+            let b = row[base + 2 * i + 1];
+            row[base + 2 * i] = a * cos - b * sin;
+            row[base + 2 * i + 1] = a * sin + b * cos;
         }
     }
 }
@@ -488,33 +522,59 @@ fn write_head(dst: &mut Mat, src: &Mat, s: usize, t: usize, hd: usize, dh: usize
 }
 
 /// Row-wise causal softmax in place: row i attends to columns 0..=i.
+/// Shares `softmax_1d` with the decode path, so incremental attention
+/// probabilities reproduce the full forward's op-for-op.
 fn causal_softmax(scores: &mut Mat) {
     let t = scores.rows;
     for i in 0..t {
         let row = scores.row_mut(i);
-        let mut mx = f32::NEG_INFINITY;
-        for j in 0..=i {
-            mx = mx.max(row[j]);
-        }
-        let mut sum = 0.0f32;
-        for j in 0..=i {
-            row[j] = (row[j] - mx).exp();
-            sum += row[j];
-        }
-        let inv = 1.0 / sum;
-        for j in 0..=i {
-            row[j] *= inv;
-        }
+        softmax_1d(&mut row[..=i]);
         for j in i + 1..t {
             row[j] = 0.0;
         }
     }
 }
 
-fn log_softmax_at(row: &[f32], target: usize) -> f64 {
-    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
-    let lse: f64 = row.iter().map(|&v| ((v as f64) - mx).exp()).sum::<f64>().ln() + mx;
-    row[target] as f64 - lse
+/// Softmax over a fully-visible score slice: one decode query's causal
+/// window, and the per-row kernel of `causal_softmax` — one body, so the
+/// incremental and full paths can't drift apart.
+fn softmax_1d(row: &mut [f32]) {
+    let mut mx = f32::NEG_INFINITY;
+    for &v in row.iter() {
+        mx = mx.max(v);
+    }
+    let mut sum = 0.0f32;
+    for v in row.iter_mut() {
+        *v = (*v - mx).exp();
+        sum += *v;
+    }
+    let inv = 1.0 / sum;
+    for v in row.iter_mut() {
+        *v *= inv;
+    }
+}
+
+/// Attention routing for `block_forward_impl`: the whole-context batch
+/// path, or the incremental step-state path against a session's caches.
+pub(crate) enum TfAttn<'s> {
+    /// B sequences of length T, causal within each sequence.
+    Full { bsz: usize, t: usize },
+    /// New tokens at absolute positions `pos0..`; K/V append to `st`.
+    Decode { pos0: usize, st: &'s mut TfBlockState },
+}
+
+/// Per-block decode-session state: the RoPE-rotated keys and values of
+/// every position consumed so far, in (T, n_heads·head_dim) layout.
+#[derive(Clone, Debug)]
+pub struct TfBlockState {
+    pub k: Mat,
+    pub v: Mat,
+}
+
+impl TfBlockState {
+    fn new(d_model: usize) -> TfBlockState {
+        TfBlockState { k: Mat::zeros(0, d_model), v: Mat::zeros(0, d_model) }
+    }
 }
 
 pub struct BlockCache {
@@ -713,6 +773,7 @@ mod tests {
 
     #[test]
     fn sparse_stores_match_dense_forward() {
+        use crate::model::LanguageModel;
         use crate::prune::{magnitude_prune, Sparsity};
         for sparsity in [Sparsity::Unstructured { rate: 0.6 }, Sparsity::two_four()] {
             let mut dense = tiny_model(17);

@@ -78,22 +78,19 @@ impl Csr {
     /// x: (t, m) dense -> (t, n_out).
     ///
     /// Parallelized over chunks of W rows — not over x rows — so the
-    /// single-token decode shape (t = 1) still uses the whole pool. Each
+    /// single-token decode shape (t = 1) still uses the whole pool.
+    /// Chunk boundaries are drawn by cumulative nnz, not row count, so a
+    /// few skewed dense-ish rows no longer serialize one worker. Each
     /// worker owns the output columns of its W-row chunk across every
     /// output row; the inner loop is a 4-chain FMA gather-dot.
     pub fn matmul_tb(&self, x: &Mat) -> Mat {
         assert_eq!(x.cols, self.cols, "csr matmul_tb: x cols {} != W cols {}", x.cols, self.cols);
         let (t, n) = (x.rows, self.rows);
         let mut out = Mat::zeros(t, n);
-        let nt = num_threads().min(n.max(1));
-        let chunk = n.div_ceil(nt.max(1)).max(1);
+        let chunks = nnz_balanced_chunks(&self.indptr, num_threads());
         let base = out.data.as_mut_ptr() as usize;
         std::thread::scope(|s| {
-            for w in 0..nt {
-                let (r0, r1) = (w * chunk, ((w + 1) * chunk).min(n));
-                if r0 >= r1 {
-                    break;
-                }
+            for (r0, r1) in chunks {
                 s.spawn(move || {
                     for ti in 0..t {
                         let xrow = x.row(ti);
@@ -117,6 +114,48 @@ impl Csr {
         });
         out
     }
+}
+
+/// Contiguous row ranges covering `0..rows` with ~equal cumulative nnz
+/// (at most `nw` of them). Each remaining worker takes an equal share of
+/// the *remaining* nnz, so one pathological row can't drag the split off
+/// for everyone after it; all-empty matrices fall back to an even row
+/// split. Worker ownership of output columns stays contiguous/disjoint.
+fn nnz_balanced_chunks(indptr: &[u32], nw: usize) -> Vec<(usize, usize)> {
+    let rows = indptr.len() - 1;
+    if rows == 0 {
+        return Vec::new();
+    }
+    let nw = nw.min(rows).max(1);
+    let total = indptr[rows] as usize;
+    if total == 0 {
+        let chunk = rows.div_ceil(nw);
+        return (0..nw)
+            .map(|w| (w * chunk, ((w + 1) * chunk).min(rows)))
+            .filter(|(a, b)| a < b)
+            .collect();
+    }
+    let mut chunks = Vec::with_capacity(nw);
+    let mut start = 0usize;
+    for w in 0..nw {
+        if start >= rows {
+            break;
+        }
+        let end = if w == nw - 1 {
+            rows
+        } else {
+            let done = indptr[start] as usize;
+            let cut = done + (total - done).div_ceil(nw - w);
+            let mut e = start + 1; // every worker takes at least one row
+            while e < rows && (indptr[e] as usize) < cut {
+                e += 1;
+            }
+            e
+        };
+        chunks.push((start, end));
+        start = end;
+    }
+    chunks
 }
 
 /// Σ values[i] · x[indices[i]] with 4 independent FMA chains (same shape
@@ -236,7 +275,10 @@ impl Packed24 {
     /// densify. Per 4-group: two FMAs against the two survivors, i.e.
     /// half the dense FLOPs. Filler slots hold 0.0 and contribute
     /// nothing even though their index points at a live x element.
-    /// Same worker-pool partitioning as [`Csr::matmul_tb`].
+    /// The inner loop processes TWO 4-groups per iteration (four
+    /// independent FMA chains) so each meta-byte decode is amortized
+    /// over more arithmetic. Same worker-pool row partitioning as the
+    /// dense kernels.
     pub fn matmul_tb(&self, x: &Mat) -> Mat {
         assert_eq!(
             x.cols, self.cols,
@@ -269,15 +311,26 @@ impl Packed24 {
                         for (o, r) in orow.iter_mut().zip(r0..r1) {
                             let vals = &self.values[r * g * 2..(r + 1) * g * 2];
                             let meta = &self.meta[r * g..(r + 1) * g];
-                            let (mut a0, mut a1) = (0.0f32, 0.0f32);
-                            for (gi, (&m, vk)) in
-                                meta.iter().zip(vals.chunks_exact(2)).enumerate()
-                            {
-                                let xg = &xrow[gi * 4..gi * 4 + 4];
-                                a0 = vk[0].mul_add(xg[(m & 3) as usize], a0);
-                                a1 = vk[1].mul_add(xg[((m >> 2) & 3) as usize], a1);
+                            let (mut a0, mut a1, mut a2, mut a3) =
+                                (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+                            let pairs = g - g % 2;
+                            for gi in (0..pairs).step_by(2) {
+                                let (m0, m1) = (meta[gi], meta[gi + 1]);
+                                let vk = &vals[gi * 2..gi * 2 + 4];
+                                let xg = &xrow[gi * 4..gi * 4 + 8];
+                                a0 = vk[0].mul_add(xg[(m0 & 3) as usize], a0);
+                                a1 = vk[1].mul_add(xg[((m0 >> 2) & 3) as usize], a1);
+                                a2 = vk[2].mul_add(xg[4 + (m1 & 3) as usize], a2);
+                                a3 = vk[3].mul_add(xg[4 + ((m1 >> 2) & 3) as usize], a3);
                             }
-                            *o = a0 + a1;
+                            if pairs < g {
+                                let m = meta[pairs];
+                                let xg = &xrow[pairs * 4..pairs * 4 + 4];
+                                a0 = vals[pairs * 2].mul_add(xg[(m & 3) as usize], a0);
+                                a1 = vals[pairs * 2 + 1]
+                                    .mul_add(xg[((m >> 2) & 3) as usize], a1);
+                            }
+                            *o = (a0 + a1) + (a2 + a3);
                         }
                     }
                 });
@@ -368,6 +421,80 @@ mod tests {
         for r in [0usize, 7, 18] {
             assert_eq!(sparse[(0, r)], 0.0);
         }
+    }
+
+    #[test]
+    fn nnz_balanced_chunks_cover_disjoint_and_balance() {
+        // skewed nnz: one huge row up front, many light rows after — a
+        // row-count split would give worker 0 nearly all the work.
+        let mut indptr = vec![0u32, 1000];
+        for r in 0..31 {
+            indptr.push(1000 + (r + 1) * 10);
+        }
+        let rows = indptr.len() - 1;
+        let total = *indptr.last().unwrap() as usize;
+        for nw in [1usize, 2, 4, 8, 32, 100] {
+            let chunks = nnz_balanced_chunks(&indptr, nw);
+            assert!(chunks.len() <= nw.min(rows));
+            // exact cover, contiguous + disjoint
+            assert_eq!(chunks[0].0, 0);
+            assert_eq!(chunks.last().unwrap().1, rows);
+            for w in chunks.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+            }
+            // the heavy row sits alone once there are enough workers
+            if nw >= 4 {
+                assert_eq!(chunks[0], (0, 1), "nw={nw}: {chunks:?}");
+                // and no later chunk exceeds ~2x the fair share of the rest
+                let fair = (total - 1000).div_ceil(nw - 1);
+                for &(r0, r1) in &chunks[1..] {
+                    let nnz = (indptr[r1] - indptr[r0]) as usize;
+                    assert!(nnz <= 2 * fair + 10, "nw={nw} chunk {r0}..{r1}: {nnz}");
+                }
+            }
+        }
+        // all-empty rows fall back to an even row split that still covers
+        let empty = vec![0u32; 9];
+        let chunks = nnz_balanced_chunks(&empty, 3);
+        assert_eq!(chunks.first().unwrap().0, 0);
+        assert_eq!(chunks.last().unwrap().1, 8);
+    }
+
+    #[test]
+    fn csr_matmul_skewed_rows_match_dense() {
+        // One near-dense row among very sparse ones: exercises the
+        // nnz-balanced partitioning against the dense reference.
+        let mut rng = Rng::new(40);
+        let mut w = Mat::randn(33, 64, 1.0, &mut rng);
+        magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.9 });
+        for v in w.row_mut(0) {
+            *v = 1.5; // row 0 fully dense
+        }
+        let csr = Csr::from_dense(&w);
+        for t in [1usize, 4] {
+            let x = Mat::randn(t, 64, 1.0, &mut rng);
+            assert!(csr.matmul_tb(&x).max_abs_diff(&x.matmul_tb(&w)) < 1e-4, "t={t}");
+        }
+    }
+
+    #[test]
+    fn packed24_matmul_odd_group_count_matches_dense() {
+        // g = 3 (odd): the two-group inner loop must handle the tail
+        // group via the scalar epilogue.
+        let mut rng = Rng::new(41);
+        let mut w = Mat::randn(9, 12, 1.0, &mut rng);
+        magnitude_prune(&mut w, Sparsity::two_four());
+        let p = Packed24::from_dense(&w).unwrap();
+        for t in [1usize, 3] {
+            let x = Mat::randn(t, 12, 1.0, &mut rng);
+            assert!(p.matmul_tb(&x).max_abs_diff(&x.matmul_tb(&w)) < 1e-5, "t={t}");
+        }
+        // g = 1: pairs == 0, epilogue only
+        let mut w1 = Mat::randn(5, 4, 1.0, &mut rng);
+        magnitude_prune(&mut w1, Sparsity::two_four());
+        let p1 = Packed24::from_dense(&w1).unwrap();
+        let x1 = Mat::randn(2, 4, 1.0, &mut rng);
+        assert!(p1.matmul_tb(&x1).max_abs_diff(&x1.matmul_tb(&w1)) < 1e-5);
     }
 
     #[test]

@@ -157,6 +157,18 @@ impl Mat {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0, f32::max)
     }
+
+    /// Append the rows of `other` below this matrix (same column count).
+    /// The decode-session K/V caches grow through this.
+    pub fn append_rows(&mut self, other: &Mat) {
+        assert_eq!(
+            self.cols, other.cols,
+            "append_rows: cols {} != {}",
+            self.cols, other.cols
+        );
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
 }
 
 impl std::ops::Index<(usize, usize)> for Mat {
@@ -174,8 +186,11 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
+/// Length-matched dot product; also the inner kernel of `matmul_tb`, so
+/// single-row callers (decode-session attention, `logits_last`) reproduce
+/// the full-matrix products bit-for-bit.
 #[inline]
-fn dot(a: &[f32], b: &[f32]) -> f32 {
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     // 4 independent fma chains over exact chunks: no bounds checks in the
     // body, and with target-cpu=native (see .cargo/config.toml) mul_add
     // lowers to vfmadd, which LLVM then widens to full vector width.
@@ -473,6 +488,23 @@ mod tests {
             }
         }
         c
+    }
+
+    #[test]
+    fn append_rows_grows_and_preserves() {
+        let mut r = Rng::new(77);
+        let a = Mat::randn(3, 5, 1.0, &mut r);
+        let b = Mat::randn(2, 5, 1.0, &mut r);
+        let mut grown = Mat::zeros(0, 5);
+        grown.append_rows(&a);
+        grown.append_rows(&b);
+        assert_eq!(grown.shape(), (5, 5));
+        for i in 0..3 {
+            assert_eq!(grown.row(i), a.row(i));
+        }
+        for i in 0..2 {
+            assert_eq!(grown.row(3 + i), b.row(i));
+        }
     }
 
     #[test]

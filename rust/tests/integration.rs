@@ -234,6 +234,173 @@ fn weightstore_forward_equivalence_both_families_both_patterns() {
     }
 }
 
+/// Tentpole acceptance: the incremental decode session reproduces the
+/// full quadratic forward to <1e-5 at the logits, for both families ×
+/// all three weight layouts (Dense, Csr, Packed24) × prefill lengths
+/// {1, 7, 64}, including a prefill split mid-sequence and token-by-token
+/// stepping.
+#[test]
+fn incremental_decode_matches_full_forward() {
+    use apt::model::{DecodeSession, Mamba, MambaConfig, BLOCK_LINEARS, MAMBA_LINEARS};
+
+    let tcfg = TransformerConfig {
+        vocab: 47,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 128,
+    };
+    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 128 };
+
+    // 2 families × 3 layouts. Layout "dense" leaves init weights alone;
+    // "csr"/"packed24" prune + pack every block linear and assert the
+    // store actually left the dense format.
+    let mut models: Vec<(String, Box<dyn LanguageModel>)> = Vec::new();
+    for (layout, sparsity) in [
+        ("dense", None),
+        ("csr", Some(Sparsity::Unstructured { rate: 0.6 })),
+        ("packed24", Some(Sparsity::two_four())),
+    ] {
+        let mut t = Transformer::init(tcfg, &mut Rng::new(51));
+        let mut m = Mamba::init(mcfg, &mut Rng::new(52));
+        if let Some(sp) = sparsity {
+            for b in 0..tcfg.n_layers {
+                for name in BLOCK_LINEARS {
+                    magnitude_prune(t.weight_mut(b, name).dense_mut(), sp);
+                    let w = t.weight(b, name).to_dense();
+                    *t.weight_mut(b, name) = WeightStore::pack(&w, sp);
+                    assert_eq!(t.weight(b, name).format(), layout, "{name}");
+                }
+                for name in MAMBA_LINEARS {
+                    magnitude_prune(m.weight_mut(b, name).dense_mut(), sp);
+                    let w = m.weight(b, name).to_dense();
+                    *m.weight_mut(b, name) = WeightStore::pack(&w, sp);
+                    assert_eq!(m.weight(b, name).format(), layout, "{name}");
+                }
+            }
+        }
+        models.push((format!("microllama/{layout}"), Box::new(t)));
+        models.push((format!("micromamba/{layout}"), Box::new(m)));
+    }
+
+    for (label, model) in &models {
+        for (case, prefill_len) in [(0u64, 1usize), (1, 7), (2, 64)] {
+            let mut rng = Rng::new(90 + case);
+            let toks: Vec<u32> = (0..prefill_len).map(|_| rng.below(47) as u32).collect();
+
+            // reference: full quadratic forward, logits at last position
+            let mut x = model.embed_tokens(&toks);
+            for b in 0..model.n_blocks() {
+                x = model.forward_block(b, &x, (1, toks.len()));
+            }
+            let want = model.logits_last(&x);
+
+            let check = |got: &[f32], how: &str| {
+                assert_eq!(got.len(), want.len());
+                for (g, w) in got.iter().zip(&want) {
+                    assert!(
+                        (g - w).abs() < 1e-5,
+                        "{label} len={prefill_len} {how}: {g} vs {w}"
+                    );
+                }
+            };
+
+            // one-shot prefill
+            let mut s = DecodeSession::new(model.as_ref());
+            check(s.prefill(&toks), "one-shot prefill");
+            assert_eq!(s.len(), prefill_len);
+
+            if prefill_len > 1 {
+                // prefill split mid-sequence
+                let mid = prefill_len / 2;
+                let mut s2 = DecodeSession::new(model.as_ref());
+                s2.prefill(&toks[..mid]);
+                check(s2.prefill(&toks[mid..]), "split prefill");
+
+                // token-by-token stepping
+                let mut s3 = DecodeSession::new(model.as_ref());
+                s3.prefill(&toks[..1]);
+                for &t in &toks[1..] {
+                    s3.step(t);
+                }
+                check(s3.last_logits(), "token-by-token");
+            }
+        }
+
+        // session continuation scoring matches the full-forward oracle
+        let ctx: Vec<u32> = (0..12).map(|i| (i * 7 % 47) as u32).collect();
+        let cont = [3u32, 19, 8];
+        let a = model.continuation_logprob(&ctx, &cont);
+        let b = model.continuation_logprob_full(&ctx, &cont);
+        assert!((a - b).abs() < 1e-5, "{label}: {a} vs {b}");
+    }
+}
+
+/// Zero-shot regression: the session-routed suite reproduces the
+/// full-forward path's accuracy on every metric.
+#[test]
+fn zeroshot_suite_matches_full_forward_path() {
+    use apt::data::{TaskGen, TaskKind};
+    use apt::eval::{choice_accuracy, lambada_accuracy};
+    use apt::model::log_softmax_at;
+
+    let gen = CorpusGen::new(70, 2, 37);
+    let model = trained_model(&gen, 32, 2, 80);
+
+    let tg = TaskGen::new(&gen);
+    let tasks = tg.choice_suite(TaskKind::HellaSwagLike, 40, 1);
+    let acc_session = choice_accuracy(&model, &tasks);
+    // reference: same selection rule, quadratic full-forward scoring
+    let mut correct = 0usize;
+    for t in &tasks {
+        let mut best = 0usize;
+        let mut best_lp = f64::NEG_INFINITY;
+        for (i, cand) in t.candidates.iter().enumerate() {
+            let lp = model.continuation_logprob_full(&t.context, cand)
+                / cand.len().max(1) as f64;
+            if lp > best_lp {
+                best_lp = lp;
+                best = i;
+            }
+        }
+        if best == t.answer {
+            correct += 1;
+        }
+    }
+    let acc_full = correct as f64 / tasks.len() as f64;
+    assert!(
+        (acc_session - acc_full).abs() < 1e-12,
+        "choice: session {acc_session} vs full {acc_full}"
+    );
+
+    let lt = tg.lambada_suite(30, 2);
+    let acc_session = lambada_accuracy(&model, &lt);
+    let mut correct = 0usize;
+    for t in &lt {
+        if model.predict_last_full(&t.context) == t.answer {
+            correct += 1;
+        }
+    }
+    let acc_full = correct as f64 / lt.len() as f64;
+    assert!(
+        (acc_session - acc_full).abs() < 1e-12,
+        "lambada: session {acc_session} vs full {acc_full}"
+    );
+
+    // and the per-position session logprobs agree with the perplexity
+    // path's full-forward numbers on one window
+    let toks: Vec<u32> = (0..24).map(|i| (i * 11 % 50) as u32).collect();
+    let full_lp = model.next_token_logprobs(&toks, (1, toks.len()));
+    let mut s = apt::model::DecodeSession::new(&model);
+    s.prefill(&toks[..1]);
+    for (i, &tok) in toks[1..].iter().enumerate() {
+        let lp = log_softmax_at(s.last_logits(), tok as usize);
+        assert!((lp - full_lp[i]).abs() < 1e-5, "pos {i}: {lp} vs {}", full_lp[i]);
+        s.step(tok);
+    }
+}
+
 #[test]
 fn failure_injection_bad_calibration() {
     // Degenerate calibration (constant tokens -> rank-1 activations) must

@@ -3,6 +3,12 @@
 #
 #   scripts/bench.sh [filter]
 #
+# Sections (substring filters): gemm hessian finalize cholesky compensate
+# mrp select sequential mask24 sparse decode pipeline hlo. `decode` covers
+# both the pruned-model decode benches and the decode_session_* benches
+# (incremental KV-cache/recurrent serving path vs the quadratic
+# full-forward baseline, populating derived.decode_session_speedup_*).
+#
 # The bench binary itself writes BENCH_perf.json at the repo root and
 # prints a delta table against the previous run (a filtered run keeps the
 # previous numbers for kernels it didn't re-measure), so this wrapper only
