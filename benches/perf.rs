@@ -153,6 +153,25 @@ fn print_delta(prev: &BTreeMap<String, f64>, rec: &Recorder) {
     }
 }
 
+/// Init a transformer and, when `sp` is set, magnitude-prune + pack
+/// every block linear into the matching sparse layout — the model
+/// builder shared by the decode-session and serving-engine benches.
+fn prune_pack_transformer(cfg: TransformerConfig, seed: u64, sp: Option<Sparsity>) -> Transformer {
+    use apt::model::BLOCK_LINEARS;
+    use apt::sparse::WeightStore;
+    let mut m = Transformer::init(cfg, &mut Rng::new(seed));
+    if let Some(sp) = sp {
+        for b in 0..cfg.n_layers {
+            for name in BLOCK_LINEARS {
+                apt::prune::magnitude_prune(m.weight_mut(b, name).dense_mut(), sp);
+                let w = m.weight(b, name).to_dense();
+                *m.weight_mut(b, name) = WeightStore::pack(&w, sp);
+            }
+        }
+    }
+    m
+}
+
 fn setup(n: usize, m: usize, seed: u64) -> (Mat, MatF64, MatF64) {
     let mut rng = Rng::new(seed);
     let w = Mat::randn(n, m, 1.0, &mut rng);
@@ -359,9 +378,6 @@ fn bench_pruned_decode(rec: &mut Recorder) {
 /// mamba's recurrent state). Records `decode_session_speedup_{dense,
 /// packed24,csr,mamba}` under `derived` — expected ≫1 at this length.
 fn bench_decode_session(rec: &mut Recorder) {
-    use apt::model::BLOCK_LINEARS;
-    use apt::sparse::WeightStore;
-
     let cfg = TransformerConfig {
         vocab: 512,
         d_model: 128,
@@ -373,23 +389,10 @@ fn bench_decode_session(rec: &mut Recorder) {
     let prefill: Vec<u32> = (0..256).map(|i| (i * 7 % 512) as u32).collect();
     let steps: Vec<u32> = (0..64).map(|i| (i * 13 % 512) as u32).collect();
 
-    let prune_and_pack = |seed: u64, sp: Option<Sparsity>| -> Transformer {
-        let mut m = Transformer::init(cfg, &mut Rng::new(seed));
-        if let Some(sp) = sp {
-            for b in 0..cfg.n_layers {
-                for name in BLOCK_LINEARS {
-                    apt::prune::magnitude_prune(m.weight_mut(b, name).dense_mut(), sp);
-                    let w = m.weight(b, name).to_dense();
-                    *m.weight_mut(b, name) = WeightStore::pack(&w, sp);
-                }
-            }
-        }
-        m
-    };
     let variants: [(&str, Transformer); 3] = [
-        ("dense", prune_and_pack(61, None)),
-        ("packed24", prune_and_pack(62, Some(Sparsity::two_four()))),
-        ("csr", prune_and_pack(63, Some(Sparsity::Unstructured { rate: 0.8 }))),
+        ("dense", prune_pack_transformer(cfg, 61, None)),
+        ("packed24", prune_pack_transformer(cfg, 62, Some(Sparsity::two_four()))),
+        ("csr", prune_pack_transformer(cfg, 63, Some(Sparsity::Unstructured { rate: 0.8 }))),
     ];
     let run_pair = |rec: &mut Recorder, label: &str, model: &dyn LanguageModel| {
         let f = rec.bench(
@@ -426,6 +429,74 @@ fn bench_decode_session(rec: &mut Recorder) {
     let mcfg = MambaConfig { vocab: 512, d_model: 128, d_inner: 256, n_layers: 4, max_seq: 512 };
     let mamba = Mamba::init(mcfg, &mut Rng::new(64));
     run_pair(rec, "mamba", &mamba);
+}
+
+/// Batched serving engine vs B=1: B concurrent greedy streams (64-token
+/// prompts, 32 new tokens each) through one `Engine`, for B ∈ {1, 4,
+/// 16}. Each engine step runs ALL streams through a single (B, d)
+/// matmul per linear, so weight reads amortize across the batch — the
+/// regime where sparse-layout serving pays off. Prompts are pre-admitted
+/// (`Engine::admit`) OUTSIDE the timed region, so the recorded numbers
+/// isolate the decode loop the batching redesign targets. Records
+/// `engine_throughput_tokens_per_s_{b1,b4,b16}` (decoded tokens per
+/// second) and `engine_batch_speedup_{b4,b16}` (per-token decode
+/// throughput vs B=1) under `derived`, for dense and packed24 2:4
+/// weight stores.
+fn bench_serve(rec: &mut Recorder) {
+    use apt::serve::{Engine, EngineConfig, Request};
+
+    let cfg = TransformerConfig {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq: 512,
+    };
+    let (prefill_len, new_toks, iters) = (64usize, 32usize, 5usize);
+    let prompt = |i: usize| -> Vec<u32> {
+        (0..prefill_len).map(|j| ((j * 7 + i * 13) % 512) as u32).collect()
+    };
+    for (label, model) in [
+        ("dense", prune_pack_transformer(cfg, 71, None)),
+        ("packed24", prune_pack_transformer(cfg, 72, Some(Sparsity::two_four()))),
+    ] {
+        let make_engine = |bsz: usize| {
+            let mut eng = Engine::new(&model, EngineConfig { max_batch: bsz, max_seq: None });
+            for i in 0..bsz {
+                eng.submit(Request::greedy(prompt(i), new_toks));
+            }
+            eng.admit(); // prefill OUTSIDE the timed region
+            eng
+        };
+        let mut thr = BTreeMap::new();
+        for &bsz in &[1usize, 4, 16] {
+            // pre-admitted engines for the expected calls; rebuild on
+            // demand if the harness's warmup count ever changes
+            let mut prepped: Vec<Engine> = (0..iters + 2).map(|_| make_engine(bsz)).collect();
+            let med = rec.bench(
+                &format!("engine decode b{bsz} {new_toks}new ({label})"),
+                iters,
+                || {
+                    let mut eng = prepped.pop().unwrap_or_else(|| make_engine(bsz));
+                    eng.run();
+                    std::hint::black_box(eng.take_finished());
+                },
+            );
+            let tps = (bsz * new_toks) as f64 / (med / 1000.0).max(1e-9);
+            thr.insert(bsz, tps);
+            // dense gets the canonical keys; other layouts are suffixed
+            let suffix = if label == "dense" { String::new() } else { format!("_{label}") };
+            rec.derived
+                .insert(format!("engine_throughput_tokens_per_s_b{bsz}{suffix}"), tps);
+        }
+        for &bsz in &[4usize, 16] {
+            let speedup = thr[&bsz] / thr[&1].max(1e-9);
+            let suffix = if label == "dense" { String::new() } else { format!("_{label}") };
+            rec.derived.insert(format!("engine_batch_speedup_b{bsz}{suffix}"), speedup);
+            println!("  -> engine {label} b{bsz}: {speedup:.2}x per-token throughput vs b1");
+        }
+    }
 }
 
 /// End-to-end coordinator run (calibrate -> prune -> propagate) on a
@@ -586,6 +657,10 @@ fn main() {
     if run("decode") {
         bench_pruned_decode(&mut rec);
         bench_decode_session(&mut rec);
+    }
+
+    if run("serve") {
+        bench_serve(&mut rec);
     }
 
     if run("pipeline") {

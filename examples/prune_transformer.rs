@@ -13,7 +13,7 @@ use apt::eval::perplexity;
 use apt::harness::Zoo;
 use apt::model::{train, LanguageModel, TrainConfig, Transformer};
 use apt::prune::{Method, PruneConfig, Sparsity};
-use apt::runtime::{Engine, Runtime};
+use apt::runtime::{Backend, Runtime};
 
 fn main() -> anyhow::Result<()> {
     let use_hlo = std::env::args().any(|a| a == "hlo");
@@ -64,7 +64,7 @@ fn main() -> anyhow::Result<()> {
         for &method in methods {
             let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
             let pcfg = PipelineConfig::new(PruneConfig::new(method, sparsity)).with_engine(
-                if use_hlo { Engine::Hlo } else { Engine::Native },
+                if use_hlo { Backend::Hlo } else { Backend::Native },
             );
             let report = prune_model(&mut pruned, &calib, &pcfg, runtime.as_ref())?;
             let (wt2, ptb, c4) = eval(&pruned);

@@ -1,0 +1,86 @@
+//! The serving engine: batched continuous decoding over mixed requests.
+//!
+//! Submits a handful of concurrent requests — greedy, temperature and
+//! top-k sampled — to one `Engine`, which steps ALL active streams
+//! through a single (B, d) matmul per linear (amortizing every sparse
+//! weight read across the batch), refills slots from the queue as
+//! streams finish, and bounds each stream's K/V with a sliding window.
+//!
+//!     cargo run --release --example serve_engine
+
+use apt::data::{CorpusGen, Profile};
+use apt::model::{train, DecodeSession, TrainConfig, Transformer, TransformerConfig};
+use apt::serve::{Engine, EngineConfig, Request, SamplingParams};
+use apt::util::{Rng, Timer};
+
+fn main() {
+    let gen = CorpusGen::new(60, 2, 7);
+    let data = gen.generate(Profile::C4Like, 30_000, 1);
+    let vocab = gen.tokenizer.vocab_size();
+    let mut model = Transformer::init(
+        TransformerConfig { vocab, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 96, max_seq: 256 },
+        &mut Rng::new(3),
+    );
+    train(
+        &mut model,
+        &data,
+        &TrainConfig { steps: 60, batch: 8, seq_len: 32, log_every: 1000, ..Default::default() },
+    );
+
+    let prompt = |salt: usize, len: usize| -> Vec<u32> {
+        (0..len).map(|i| ((i * 3 + salt * 11) % vocab) as u32).collect()
+    };
+
+    // 6 requests through 4 slots: the engine admits the first four,
+    // then continuously refills as streams finish.
+    let mut eng = Engine::new(&model, EngineConfig { max_batch: 4, max_seq: Some(128) });
+    let mut ids = Vec::new();
+    ids.push(eng.submit(Request::greedy(prompt(0, 48), 16)));
+    ids.push(eng.submit(Request::greedy(prompt(1, 32), 16)));
+    ids.push(eng.submit(Request {
+        prompt: prompt(2, 40),
+        max_new_tokens: 16,
+        sampling: SamplingParams::temperature(0.8, 42),
+    }));
+    ids.push(eng.submit(Request {
+        prompt: prompt(3, 24),
+        max_new_tokens: 16,
+        sampling: SamplingParams::top_k(8, 0.9, 7),
+    }));
+    ids.push(eng.submit(Request::greedy(prompt(4, 36), 16)));
+    ids.push(eng.submit(Request {
+        prompt: prompt(5, 28),
+        max_new_tokens: 16,
+        sampling: SamplingParams::temperature(1.2, 99),
+    }));
+    println!("submitted {} requests (max_batch = 4, window = 128)", ids.len());
+
+    let t = Timer::start();
+    let total = eng.run();
+    let batched_ms = t.elapsed_ms();
+    let mut done = eng.take_finished();
+    done.sort_by_key(|c| c.id);
+    assert_eq!(done.len(), ids.len());
+    for c in &done {
+        println!("  request {:?} (+{} prompt tokens): {:?}", c.id, c.prompt.len(), c.tokens);
+    }
+
+    // the greedy streams must agree with independent single-stream
+    // sessions — batch composition never changes a stream's tokens
+    let t = Timer::start();
+    for &(salt, len) in &[(0usize, 48usize), (1, 32), (4, 36)] {
+        let mut s = DecodeSession::new(&model);
+        s.prefill(&prompt(salt, len));
+        let solo = s.generate(16);
+        let c = done.iter().find(|c| c.prompt == prompt(salt, len)).unwrap();
+        assert_eq!(c.tokens, solo, "batched and solo greedy decode must agree");
+    }
+    let solo_ms = t.elapsed_ms();
+
+    println!(
+        "\n{total} tokens in {batched_ms:.1} ms batched \
+         ({:.0} tok/s); 3 equivalent solo greedy streams took {solo_ms:.1} ms",
+        total as f64 / (batched_ms / 1000.0)
+    );
+    println!("serve_engine: OK");
+}

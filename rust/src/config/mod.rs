@@ -9,7 +9,7 @@ use anyhow::{anyhow, bail, Result};
 
 use crate::json::{self, Json};
 use crate::prune::{Method, PruneConfig, Sparsity};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
 
 /// Everything one experiment run needs.
 #[derive(Clone, Debug)]
@@ -28,7 +28,7 @@ pub struct ExperimentConfig {
     pub eval_seq_len: usize,
     pub train_steps: usize,
     pub seed: u64,
-    pub engine: Engine,
+    pub engine: Backend,
     /// Calibration profile name ("c4" | "lambada" | ...).
     pub calib_profile: String,
     pub out_dir: String,
@@ -48,7 +48,7 @@ impl Default for ExperimentConfig {
             eval_seq_len: 128,
             train_steps: 300,
             seed: 42,
-            engine: Engine::Native,
+            engine: Backend::Native,
             calib_profile: "c4".into(),
             out_dir: "results".into(),
         }
@@ -80,7 +80,7 @@ impl ExperimentConfig {
             "train_steps" | "steps" => self.train_steps = value.parse()?,
             "seed" => self.seed = value.parse()?,
             "engine" => {
-                self.engine = Engine::from_name(value)
+                self.engine = Backend::from_name(value)
                     .ok_or_else(|| anyhow!("unknown engine '{value}'"))?
             }
             "calib_profile" => self.calib_profile = value.into(),

@@ -9,7 +9,7 @@
 //!      Hessians + one batch of activations per worker).
 //!   2. *Prune*: each linear of the block is an independent job — the
 //!      worker pool solves them concurrently (native solver or AOT HLO via
-//!      the PJRT runtime, per `Engine`).
+//!      the PJRT runtime, per `Backend`).
 //!   3. *Pack*: each pruned linear is swapped, in place, into the
 //!      [`WeightStore`] layout matching its sparsity pattern (CSR for
 //!      unstructured, packed 2:4 for semi-structured; kept dense below
@@ -36,7 +36,7 @@ use crate::model::LanguageModel;
 use crate::prune::{
     prune_layer, HessianAccumulator, LayerPruneResult, Mask, PruneConfig, Sparsity,
 };
-use crate::runtime::{Engine, Runtime};
+use crate::runtime::{Backend, Runtime};
 use crate::sparse::WeightStore;
 use crate::tensor::Mat;
 use crate::util::{num_threads, profile, Timer};
@@ -49,15 +49,15 @@ pub struct PipelineConfig {
     pub batch: usize,
     /// Bounded-channel capacity between propagate and consume stages.
     pub queue_cap: usize,
-    pub engine: Engine,
+    pub engine: Backend,
 }
 
 impl PipelineConfig {
     pub fn new(prune: PruneConfig) -> Self {
-        PipelineConfig { prune, batch: 8, queue_cap: 4, engine: Engine::Native }
+        PipelineConfig { prune, batch: 8, queue_cap: 4, engine: Backend::Native }
     }
 
-    pub fn with_engine(mut self, e: Engine) -> Self {
+    pub fn with_engine(mut self, e: Backend) -> Self {
         self.engine = e;
         self
     }
@@ -306,7 +306,7 @@ fn run_prune_jobs(
     let mut native_jobs = Vec::new();
     let mut hlo_jobs = Vec::new();
     for job in jobs {
-        let use_hlo = cfg.engine == Engine::Hlo
+        let use_hlo = cfg.engine == Backend::Hlo
             && runtime.map(|rt| artifact_for(rt, &cfg.prune, &job.2).is_some()).unwrap_or(false);
         if use_hlo {
             hlo_jobs.push(job);

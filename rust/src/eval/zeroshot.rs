@@ -2,23 +2,21 @@
 //! length-normalized continuation log-likelihood + LAMBADA-style last-word
 //! argmax accuracy.
 //!
-//! Both metrics route through [`DecodeSession`]: a task's context is
-//! prefilled ONCE (O(T·L)), then every candidate continuation scores from
-//! a `fork()` of that snapshot, one O(T·L) step per token — instead of
-//! re-running the full O(T²·L) forward per candidate.
+//! Choice scoring routes through the serving engine's batched
+//! primitives: a task's context is prefilled ONCE through the threaded
+//! Full-attention arm, then ALL candidate continuations score as one
+//! batch ([`crate::serve::score_continuations`]) — every decode step
+//! runs the still-live candidates through a single (B, d) matmul per
+//! linear, instead of per-candidate single-stream steps (let alone the
+//! full O(T²·L) re-forward per candidate the seed paid). LAMBADA is a
+//! single prediction per task, so it stays on the single-stream
+//! `predict_last` session path (parallelized across tasks, like the
+//! choice suite).
 
 use crate::data::{ChoiceTask, LastWordTask};
-use crate::model::{DecodeSession, LanguageModel};
+use crate::model::LanguageModel;
+use crate::serve::score_continuations;
 use crate::util::num_threads;
-
-/// Length-normalized log-prob of `cand` continuing an already-prefilled
-/// session (scored on a fork; `base` is left untouched).
-fn score_candidate(base: &DecodeSession<'_, dyn LanguageModel + '_>, cand: &[u32]) -> f64 {
-    if cand.is_empty() {
-        return 0.0;
-    }
-    base.fork().continuation_logprob(cand) / cand.len() as f64
-}
 
 /// Accuracy on a choice suite (fraction of tasks where the model ranks the
 /// correct candidate first by per-token-normalized log-prob).
@@ -35,12 +33,13 @@ pub fn choice_accuracy(model: &dyn LanguageModel, tasks: &[ChoiceTask]) -> f64 {
             s.spawn(move || {
                 let mut local = 0usize;
                 for t in ts {
-                    let mut base = DecodeSession::new(model);
-                    base.prefill(&t.context);
+                    // all candidates of the task score as one batch
+                    let lps = score_continuations(model, &t.context, &t.candidates);
                     let mut best = 0usize;
                     let mut best_lp = f64::NEG_INFINITY;
                     for (i, cand) in t.candidates.iter().enumerate() {
-                        let lp = score_candidate(&base, cand);
+                        let lp =
+                            if cand.is_empty() { 0.0 } else { lps[i] / cand.len() as f64 };
                         if lp > best_lp {
                             best_lp = lp;
                             best = i;

@@ -10,7 +10,7 @@ use crate::coordinator::{prune_model, PipelineConfig};
 use crate::data::{Profile, TaskGen, TaskKind};
 use crate::eval::{choice_accuracy, lambada_accuracy, perplexity, ZeroShotReport};
 use crate::prune::{Method, PruneConfig, Sparsity};
-use crate::runtime::{Engine, Runtime};
+use crate::runtime::{Backend, Runtime};
 use crate::util::Timer;
 
 use super::zoo::{AnyModel, Zoo};
@@ -71,7 +71,7 @@ pub struct RunOpts {
     pub n_calib: usize,
     pub calib_seq: usize,
     pub calib_profile: Profile,
-    pub engine: Engine,
+    pub engine: Backend,
     pub zeroshot_n: usize, // 0 = skip
 }
 
@@ -85,7 +85,7 @@ impl RunOpts {
             n_calib: 32,
             calib_seq: 64,
             calib_profile: Profile::C4Like,
-            engine: Engine::Native,
+            engine: Backend::Native,
             zeroshot_n: 0,
         }
     }

@@ -18,6 +18,7 @@ use crate::model::{
     train, DecodeSession, LanguageModel, Mamba, MambaConfig, TrainConfig, Transformer,
     TransformerConfig,
 };
+use crate::serve::{Engine, EngineConfig};
 use crate::util::Rng;
 
 /// Concrete model wrapper so table code can clone fresh copies per method.
@@ -51,10 +52,18 @@ impl AnyModel {
         }
     }
 
-    /// Start an incremental-decode session over this model (the serving
-    /// path: prefill once, then O(T·L) / O(1)-per-token steps).
+    /// Start an incremental-decode session over this model (the
+    /// single-stream serving path: prefill once, then O(T·L) /
+    /// O(1)-per-token steps).
     pub fn decode_session(&self) -> DecodeSession<'_, dyn LanguageModel + '_> {
         DecodeSession::new(self.as_dyn())
+    }
+
+    /// Start a batched continuous-decoding engine over this model (the
+    /// multi-stream serving path: one (B, d) matmul per linear across
+    /// all active streams; see [`crate::serve`]).
+    pub fn engine(&self, cfg: EngineConfig) -> Engine<'_> {
+        Engine::new(self.as_dyn(), cfg)
     }
 }
 
@@ -190,6 +199,13 @@ mod tests {
         s.prefill(&toks);
         assert_eq!(s.len(), toks.len());
         assert_eq!(s.argmax_last(), m.as_dyn().predict_last_full(&toks));
+        // the batched engine agrees with the single-stream session
+        let mut eng = m.engine(EngineConfig::default());
+        eng.submit(crate::serve::Request::greedy(toks.clone(), 4));
+        eng.run();
+        let done = eng.take_finished();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].tokens, s.generate(4));
         std::fs::remove_dir_all(&zoo.cache_dir).ok();
     }
 

@@ -20,6 +20,7 @@ pub mod linalg;
 pub mod model;
 pub mod prune;
 pub mod runtime;
+pub mod serve;
 pub mod sparse;
 pub mod tensor;
 pub mod util;

@@ -20,7 +20,7 @@ use apt::coordinator::{prune_model, PipelineConfig};
 use apt::data::Profile;
 use apt::harness::{self, Zoo};
 use apt::prune::Method;
-use apt::runtime::{Engine, Runtime};
+use apt::runtime::{Backend, Runtime};
 use apt::util::profile_report;
 
 struct SimpleLogger;
@@ -107,7 +107,7 @@ fn family_of(cfg: &ExperimentConfig) -> &'static str {
 }
 
 fn load_runtime(cfg: &ExperimentConfig) -> Option<Runtime> {
-    if cfg.engine != Engine::Hlo {
+    if cfg.engine != Backend::Hlo {
         return None;
     }
     match Runtime::load(Path::new("artifacts")) {

@@ -18,8 +18,16 @@
 //! in the integration suite).
 //!
 //! The session API is `prefill(context) → step(token)`; `fork()` clones
-//! the state so zero-shot choice scoring prefills a context once and
-//! scores every candidate continuation from the same snapshot.
+//! the state so a prefilled context can be continued down several paths
+//! from the same snapshot.
+//!
+//! Since the serving-engine redesign a session is a thin single-stream
+//! wrapper over the same trait primitives the batched
+//! [`crate::serve::Engine`] schedules: `prefill` takes the threaded
+//! whole-prompt fast path (`prefill_append`), steps take the incremental
+//! arm, and [`DecodeSession::with_window`] applies the same sliding-window
+//! K/V bound the engine uses for long-running streams. Batched scoring
+//! and sampled generation live in [`crate::serve`].
 
 use super::mamba::MambaBlockState;
 use super::transformer::TfBlockState;
@@ -30,6 +38,57 @@ use super::{log_softmax_at, LanguageModel};
 pub enum DecodeState {
     Transformer(Vec<TfBlockState>),
     Mamba(Vec<MambaBlockState>),
+}
+
+impl DecodeState {
+    /// Bound every per-block K/V cache to the last `window` positions
+    /// (sliding-window eviction for long-running serving): the oldest
+    /// rows are dropped, queries keep attending at absolute positions.
+    /// Mamba's recurrent state is O(1) in context length and unaffected.
+    pub fn enforce_window(&mut self, window: usize) {
+        assert!(window >= 1, "window must hold at least one position");
+        if let DecodeState::Transformer(blocks) = self {
+            for st in blocks {
+                if st.k.rows > window {
+                    let drop = st.k.rows - window;
+                    st.k.drop_leading_rows(drop);
+                    st.v.drop_leading_rows(drop);
+                }
+            }
+        }
+    }
+
+    /// Positions currently held in the K/V caches (`None` for mamba,
+    /// whose state does not grow with context).
+    pub fn cached_len(&self) -> Option<usize> {
+        match self {
+            DecodeState::Transformer(blocks) => Some(blocks.first().map_or(0, |b| b.k.rows)),
+            DecodeState::Mamba(_) => None,
+        }
+    }
+}
+
+/// Prefill `tokens` into `state` under a sliding-window bound: chunks of
+/// `window` tokens with eviction between chunks, so peak cache memory
+/// stays O(window) regardless of prompt length (a one-shot prefill would
+/// materialize the whole prompt's K/V before trimming). Shared by
+/// windowed [`DecodeSession`]s and the engine's admission path so the
+/// two stay numerically identical. Returns the final hidden row.
+pub(crate) fn prefill_windowed<M: LanguageModel + ?Sized>(
+    model: &M,
+    state: &mut DecodeState,
+    pos0: usize,
+    tokens: &[u32],
+    window: usize,
+) -> Vec<f32> {
+    let mut pos = pos0;
+    let mut h = None;
+    for chunk in tokens.chunks(window.max(1)) {
+        h = Some(model.prefill_append(state, pos, chunk));
+        pos += chunk.len();
+        state.enforce_window(window);
+    }
+    h.expect("prefill needs at least one token")
 }
 
 /// A mutable incremental-decode handle over any [`LanguageModel`].
@@ -44,12 +103,33 @@ pub struct DecodeSession<'m, M: LanguageModel + ?Sized> {
     model: &'m M,
     state: DecodeState,
     pos: usize,
+    window: Option<usize>,
     last_logits: Option<Vec<f32>>,
 }
 
 impl<'m, M: LanguageModel + ?Sized> DecodeSession<'m, M> {
     pub fn new(model: &'m M) -> DecodeSession<'m, M> {
-        DecodeSession { model, state: model.decode_state(), pos: 0, last_logits: None }
+        DecodeSession { model, state: model.decode_state(), pos: 0, window: None, last_logits: None }
+    }
+
+    /// Session with a sliding-window K/V bound: appends run in chunks of
+    /// at most `window` tokens with the caches trimmed to the last
+    /// `window` positions between chunks, so peak memory stays
+    /// O(window) even for prompts far longer than the window (mamba
+    /// state is O(1) and unaffected). Logits match the unbounded session
+    /// exactly while fewer than `window` positions have been consumed;
+    /// beyond that, attention is truncated to the most recent cached
+    /// tokens — the bounded-memory approximation long-running serving
+    /// needs.
+    pub fn with_window(model: &'m M, window: usize) -> DecodeSession<'m, M> {
+        assert!(window >= 1, "window must hold at least one position");
+        DecodeSession {
+            model,
+            state: model.decode_state(),
+            pos: 0,
+            window: Some(window),
+            last_logits: None,
+        }
     }
 
     /// Tokens consumed so far (prefill + steps).
@@ -62,12 +142,18 @@ impl<'m, M: LanguageModel + ?Sized> DecodeSession<'m, M> {
     }
 
     /// Feed a chunk of tokens (a whole context, or a continuation of
-    /// one); returns the logits at the last fed position. Chunks may be
-    /// split arbitrarily — a prefill of `[a, b] + [c]` is equivalent to
-    /// `[a, b, c]`.
+    /// one); returns the logits at the last fed position. On an
+    /// unbounded session chunks may be split arbitrarily — a prefill of
+    /// `[a, b] + [c]` is equivalent to `[a, b, c]`. On a
+    /// [`DecodeSession::with_window`] session eviction runs between
+    /// window-sized chunks, so split and one-shot prefills agree only
+    /// while the total stays within the window.
     pub fn prefill(&mut self, tokens: &[u32]) -> &[f32] {
         assert!(!tokens.is_empty(), "prefill needs at least one token");
-        let h = self.model.decode_append(&mut self.state, self.pos, tokens);
+        let h = match self.window {
+            Some(w) => prefill_windowed(self.model, &mut self.state, self.pos, tokens, w),
+            None => self.model.prefill_append(&mut self.state, self.pos, tokens),
+        };
         self.pos += tokens.len();
         self.last_logits = Some(self.model.logits_row(&h));
         self.last_logits.as_deref().unwrap()
@@ -125,6 +211,7 @@ impl<'m, M: LanguageModel + ?Sized> DecodeSession<'m, M> {
             model: self.model,
             state: self.state.clone(),
             pos: self.pos,
+            window: self.window,
             last_logits: self.last_logits.clone(),
         }
     }

@@ -127,6 +127,19 @@ impl Mamba {
         self.block_impl(b, x, MambaSeq::Decode { st }, None, &mut |_, _| {})
     }
 
+    /// Batched decode step for one block: row `i` of `x` is stream `i`'s
+    /// single new token continuing its own recurrent state `sts[i]`. The
+    /// in/dt/out projections each run ONE (B, ·) matmul over the stacked
+    /// streams instead of B separate single-row products.
+    pub(crate) fn block_decode_batch(
+        &self,
+        b: usize,
+        x: &Mat,
+        sts: &mut [&mut MambaBlockState],
+    ) -> Mat {
+        self.block_impl(b, x, MambaSeq::BatchDecode { sts }, None, &mut |_, _| {})
+    }
+
     /// Fresh per-block recurrent state for a decode session. Zero-filled
     /// history is exactly the causal zero-padding the full forward uses
     /// for positions before the sequence start.
@@ -138,7 +151,7 @@ impl Mamba {
         &self,
         b: usize,
         x: &Mat,
-        mode: MambaSeq<'_>,
+        mode: MambaSeq<'_, '_>,
         mut cache: Option<&mut MambaCache>,
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
@@ -204,6 +217,26 @@ impl Mamba {
                     }
                 }
             }
+            MambaSeq::BatchDecode { sts } => {
+                // one token per stream: same accumulation order as the
+                // single-stream arm at pos = 0, per-stream ring buffers
+                assert_eq!(sts.len(), x.rows, "one recurrent state per stream");
+                for (i, st) in sts.iter_mut().enumerate() {
+                    for c in 0..e {
+                        let mut acc = cb[(0, c)];
+                        for kk in 0..CONV_K {
+                            let uv = if kk == 0 { u[(i, c)] } else { st.conv[kk - 1][c] };
+                            acc += cw[(kk, c)] * uv;
+                        }
+                        pre[(i, c)] = acc;
+                    }
+                    for hi in (1..CONV_K - 1).rev() {
+                        let (head, tail) = st.conv.split_at_mut(hi);
+                        tail[0].copy_from_slice(&head[hi - 1]);
+                    }
+                    st.conv[0].copy_from_slice(u.row(i));
+                }
+            }
         }
         let mut up = Mat::zeros(x.rows, e);
         for i in 0..pre.data.len() {
@@ -240,6 +273,15 @@ impl Mamba {
                     }
                 }
                 st.h.copy_from_slice(h.row(tn - 1));
+            }
+            MambaSeq::BatchDecode { sts } => {
+                for (i, st) in sts.iter_mut().enumerate() {
+                    for c in 0..e {
+                        let a = alpha[(i, c)];
+                        h[(i, c)] = a * st.h[c] + (1.0 - a) * up[(i, c)];
+                    }
+                    st.h.copy_from_slice(h.row(i));
+                }
             }
         }
         // gate + out proj + residual
@@ -437,12 +479,16 @@ fn silu(x: f32) -> f32 {
 }
 
 /// Sequence routing for `block_impl`: the whole-context batch path, or
-/// the incremental step-state path over a session's recurrent state.
-pub(crate) enum MambaSeq<'s> {
+/// the incremental step-state paths (single-stream and continuous-
+/// batched) over sessions' recurrent state.
+pub(crate) enum MambaSeq<'s, 'st> {
     /// B sequences of length T, scanned from h = 0 each.
     Full { bsz: usize, t: usize },
     /// Newly appended tokens continuing the session's carried state.
     Decode { st: &'s mut MambaBlockState },
+    /// One new token per stream, each continuing its own carried state —
+    /// the engine's continuous-batching step.
+    BatchDecode { sts: &'s mut [&'st mut MambaBlockState] },
 }
 
 /// Per-block decode-session state: the selective-scan hidden state `h`

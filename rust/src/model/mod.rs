@@ -190,6 +190,26 @@ pub trait LanguageModel: Send + Sync {
     /// Panics if `state` came from the other architecture.
     fn decode_append(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Vec<f32>;
 
+    /// Prefill fast path: semantically identical to
+    /// [`LanguageModel::decode_append`], but free to run a whole-chunk
+    /// batch arm when starting from an empty cache. The transformer
+    /// override runs the threaded Full attention arm (per-head matmuls)
+    /// while appending the rotated K/V; mamba's incremental arm already
+    /// batches its matmuls over the chunk, so the default suffices.
+    fn prefill_append(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Vec<f32> {
+        self.decode_append(state, pos0, tokens)
+    }
+
+    /// Batched decode step: `tokens[i]` is stream `i`'s single new token
+    /// at absolute position `poss[i]`, continuing `states[i]`. Every
+    /// linear runs ONE (B, d) matmul over the stacked queries — the
+    /// weight-read amortization the serving engine is built on. Returns
+    /// the (B, d) matrix of final hidden rows (feed it to
+    /// [`LanguageModel::logits`]); row `i` matches what a lone
+    /// [`LanguageModel::decode_append`] on `states[i]` would produce.
+    fn decode_step_batch(&self, states: &mut [DecodeState], poss: &[usize], tokens: &[u32])
+        -> Mat;
+
     /// Logits for a single final-hidden row: the (1, V) fast path that
     /// skips the full (B·T, V) matmul. Matches `logits(x).row(r)`
     /// bit-for-bit for the same hidden row.
@@ -330,6 +350,52 @@ impl LanguageModel for Transformer {
         }
         x.row(x.rows - 1).to_vec()
     }
+    fn prefill_append(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Vec<f32> {
+        // the threaded Full-arm fast path only applies from an empty
+        // cache; continuation chunks take the incremental arm
+        if pos0 != 0 || tokens.len() <= 1 {
+            return self.decode_append(state, pos0, tokens);
+        }
+        let DecodeState::Transformer(st) = state else {
+            panic!("decode state/arch mismatch: microllama fed a mamba state")
+        };
+        assert_eq!(st.len(), self.cfg.n_layers, "decode state from another model");
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            x = self.block_prefill(b, &x, &mut st[b]);
+        }
+        x.row(x.rows - 1).to_vec()
+    }
+    fn decode_step_batch(
+        &self,
+        states: &mut [DecodeState],
+        poss: &[usize],
+        tokens: &[u32],
+    ) -> Mat {
+        assert!(!tokens.is_empty(), "decode_step_batch needs at least one stream");
+        assert_eq!(states.len(), tokens.len(), "one state per token");
+        assert_eq!(poss.len(), tokens.len(), "one position per token");
+        // validate arch + shape once; the per-block loop below only
+        // projects out each stream's block state
+        for s in states.iter() {
+            let DecodeState::Transformer(v) = s else {
+                panic!("decode state/arch mismatch: microllama fed a mamba state")
+            };
+            assert_eq!(v.len(), self.cfg.n_layers, "decode state from another model");
+        }
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            let mut sts: Vec<&mut transformer::TfBlockState> = states
+                .iter_mut()
+                .map(|s| match s {
+                    DecodeState::Transformer(v) => &mut v[b],
+                    DecodeState::Mamba(_) => unreachable!("validated above"),
+                })
+                .collect();
+            x = self.block_decode_batch(b, &x, poss, &mut sts);
+        }
+        x
+    }
 }
 
 impl LanguageModel for Mamba {
@@ -397,6 +463,33 @@ impl LanguageModel for Mamba {
             x = self.block_decode(b, &x, &mut st[b]);
         }
         x.row(x.rows - 1).to_vec()
+    }
+    fn decode_step_batch(
+        &self,
+        states: &mut [DecodeState],
+        _poss: &[usize],
+        tokens: &[u32],
+    ) -> Mat {
+        assert!(!tokens.is_empty(), "decode_step_batch needs at least one stream");
+        assert_eq!(states.len(), tokens.len(), "one state per token");
+        for s in states.iter() {
+            let DecodeState::Mamba(v) = s else {
+                panic!("decode state/arch mismatch: micromamba fed a transformer state")
+            };
+            assert_eq!(v.len(), self.cfg.n_layers, "decode state from another model");
+        }
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            let mut sts: Vec<&mut mamba::MambaBlockState> = states
+                .iter_mut()
+                .map(|s| match s {
+                    DecodeState::Mamba(v) => &mut v[b],
+                    DecodeState::Transformer(_) => unreachable!("validated above"),
+                })
+                .collect();
+            x = self.block_decode_batch(b, &x, &mut sts);
+        }
+        x
     }
 }
 

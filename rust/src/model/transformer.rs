@@ -153,6 +153,28 @@ impl Transformer {
         self.block_forward_impl(b, x, TfAttn::Decode { pos0, st }, None, &mut |_, _| {})
     }
 
+    /// Prefill fast path for one block: the threaded Full-arm attention
+    /// (per-head matmuls) over a whole prompt, which also appends the
+    /// rotated K/V to the (empty) session cache. Numerically identical to
+    /// the incremental arm — same kernels, same op order.
+    pub(crate) fn block_prefill(&self, b: usize, x: &Mat, st: &mut TfBlockState) -> Mat {
+        self.block_forward_impl(b, x, TfAttn::Prefill { st }, None, &mut |_, _| {})
+    }
+
+    /// Batched decode step for one block: row `i` of `x` is stream `i`'s
+    /// single new token at absolute position `poss[i]`, attending against
+    /// its own K/V cache `sts[i]`. All linears run ONE (B, d) matmul over
+    /// the stacked queries instead of B separate (1, d) products.
+    pub(crate) fn block_decode_batch(
+        &self,
+        b: usize,
+        x: &Mat,
+        poss: &[usize],
+        sts: &mut [&mut TfBlockState],
+    ) -> Mat {
+        self.block_forward_impl(b, x, TfAttn::BatchDecode { poss, sts }, None, &mut |_, _| {})
+    }
+
     /// Fresh (empty) per-block K/V caches for a decode session.
     pub(crate) fn new_block_states(&self) -> Vec<TfBlockState> {
         (0..self.cfg.n_layers).map(|_| TfBlockState::new(self.cfg.d_model)).collect()
@@ -162,7 +184,7 @@ impl Transformer {
         &self,
         b: usize,
         x: &Mat,
-        mode: TfAttn<'_>,
+        mode: TfAttn<'_, '_>,
         mut cache: Option<&mut BlockCache>,
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
@@ -187,52 +209,71 @@ impl Transformer {
             TfAttn::Full { bsz, t } => {
                 rope(&mut q, bsz, t, h, dh, false);
                 rope(&mut k, bsz, t, h, dh, false);
-                // per (seq, head) causal attention
-                for s in 0..bsz {
-                    for hd in 0..h {
-                        let qs = head_slice(&q, s, t, hd, dh);
-                        let ks = head_slice(&k, s, t, hd, dh);
-                        let vs = head_slice(&v, s, t, hd, dh);
-                        let mut scores = qs.matmul_tb(&ks); // (t,t)
-                        scores.scale(scale);
-                        causal_softmax(&mut scores);
-                        let o = scores.matmul(&vs); // (t, dh)
-                        write_head(&mut attn_out, &o, s, t, hd, dh);
-                        if cache.is_some() {
-                            probs_cache.push(scores);
-                        }
-                    }
-                }
+                let probs = if cache.is_some() { Some(&mut probs_cache) } else { None };
+                full_causal_attention(&q, &k, &v, bsz, t, h, dh, scale, &mut attn_out, probs);
+            }
+            TfAttn::Prefill { st } => {
+                // whole-prompt fast path: the same threaded per-head
+                // matmuls as Full, plus the K/V append the session needs
+                assert_eq!(st.k.rows, 0, "prefill fast path needs an empty K/V cache");
+                let t = x.rows;
+                rope(&mut q, 1, t, h, dh, false);
+                rope(&mut k, 1, t, h, dh, false);
+                full_causal_attention(&q, &k, &v, 1, t, h, dh, scale, &mut attn_out, None);
+                st.k.append_rows(&k);
+                st.v.append_rows(&v);
             }
             TfAttn::Decode { pos0, st } => {
-                assert_eq!(st.k.rows, pos0, "K/V cache out of sync with position");
+                // `cached` may trail pos0 when a sliding window evicted
+                // the oldest rows; positions stay absolute for RoPE.
+                let cached = st.k.rows;
+                assert!(cached <= pos0, "K/V cache out of sync with position");
                 rope_rows(&mut q, pos0, h, dh, false);
                 rope_rows(&mut k, pos0, h, dh, false);
                 st.k.append_rows(&k);
                 st.v.append_rows(&v);
                 // each new query at absolute position pos0+i attends to
-                // cached keys 0..=pos0+i: O(T) per token, not O(T²)
+                // every cached position plus chunk rows 0..=i: O(T) per
+                // token, not O(T²)
                 let tn = x.rows;
-                let mut scores: Vec<f32> = Vec::with_capacity(pos0 + tn);
-                for hd in 0..h {
-                    let (c0, c1) = (hd * dh, (hd + 1) * dh);
-                    for i in 0..tn {
-                        let lim = pos0 + i + 1;
-                        let qh = &q.row(i)[c0..c1];
-                        scores.clear();
-                        scores.resize(lim, 0.0);
-                        for (j, sc) in scores.iter_mut().enumerate() {
-                            *sc = dot(qh, &st.k.row(j)[c0..c1]) * scale;
-                        }
-                        softmax_1d(&mut scores);
-                        let orow = &mut attn_out.row_mut(i)[c0..c1];
-                        for (j, &p) in scores.iter().enumerate() {
-                            let vh = &st.v.row(j)[c0..c1];
-                            for (o, &vv) in orow.iter_mut().zip(vh) {
-                                *o = p.mul_add(vv, *o);
-                            }
-                        }
-                    }
+                let mut scores: Vec<f32> = Vec::with_capacity(cached + tn);
+                for i in 0..tn {
+                    attend_cached(
+                        q.row(i),
+                        st,
+                        cached + i + 1,
+                        attn_out.row_mut(i),
+                        (h, dh),
+                        scale,
+                        &mut scores,
+                    );
+                }
+            }
+            TfAttn::BatchDecode { poss, sts } => {
+                // one token per stream, each against its own cache; the
+                // q/k/v projections above already ran as ONE (B, d) matmul
+                let bsz = x.rows;
+                assert_eq!(poss.len(), bsz, "one position per stream");
+                assert_eq!(sts.len(), bsz, "one K/V state per stream");
+                let mut scores: Vec<f32> = Vec::new();
+                for i in 0..bsz {
+                    rope_row(q.row_mut(i), poss[i], h, dh, false);
+                    rope_row(k.row_mut(i), poss[i], h, dh, false);
+                }
+                for (i, st) in sts.iter_mut().enumerate() {
+                    let st: &mut TfBlockState = st;
+                    assert!(st.k.rows <= poss[i], "K/V cache out of sync with position");
+                    st.k.append_row(k.row(i));
+                    st.v.append_row(v.row(i));
+                    attend_cached(
+                        q.row(i),
+                        st,
+                        st.k.rows,
+                        attn_out.row_mut(i),
+                        (h, dh),
+                        scale,
+                        &mut scores,
+                    );
                 }
             }
         }
@@ -554,13 +595,88 @@ fn softmax_1d(row: &mut [f32]) {
     }
 }
 
+/// Per-(sequence, head) causal attention over whole sequences — the body
+/// shared by the Full (training/eval) and Prefill (serving) arms. Writes
+/// the (B·T, h·dh) context into `attn_out`; optionally collects the
+/// per-(seq, head) probability matrices for the backward pass.
+#[allow(clippy::too_many_arguments)]
+fn full_causal_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    bsz: usize,
+    t: usize,
+    h: usize,
+    dh: usize,
+    scale: f32,
+    attn_out: &mut Mat,
+    mut probs_out: Option<&mut Vec<Mat>>,
+) {
+    for s in 0..bsz {
+        for hd in 0..h {
+            let qs = head_slice(q, s, t, hd, dh);
+            let ks = head_slice(k, s, t, hd, dh);
+            let vs = head_slice(v, s, t, hd, dh);
+            let mut scores = qs.matmul_tb(&ks); // (t,t)
+            scores.scale(scale);
+            causal_softmax(&mut scores);
+            let o = scores.matmul(&vs); // (t, dh)
+            write_head(attn_out, &o, s, t, hd, dh);
+            if let Some(p) = probs_out.as_deref_mut() {
+                p.push(scores);
+            }
+        }
+    }
+}
+
+/// One query row attending to the first `lim` rows of a session's K/V
+/// cache, all heads — the per-token kernel shared by the single-stream
+/// `Decode` and batched `BatchDecode` arms (same `dot`/`softmax_1d`/
+/// fused-accumulate op order as the full forward, so the paths agree
+/// bit-for-bit). `scores` is caller-provided scratch to keep the decode
+/// hot path allocation-free.
+fn attend_cached(
+    qrow: &[f32],
+    st: &TfBlockState,
+    lim: usize,
+    orow: &mut [f32],
+    (h, dh): (usize, usize),
+    scale: f32,
+    scores: &mut Vec<f32>,
+) {
+    for hd in 0..h {
+        let (c0, c1) = (hd * dh, (hd + 1) * dh);
+        let qh = &qrow[c0..c1];
+        scores.clear();
+        scores.resize(lim, 0.0);
+        for (j, sc) in scores.iter_mut().enumerate() {
+            *sc = dot(qh, &st.k.row(j)[c0..c1]) * scale;
+        }
+        softmax_1d(scores);
+        let oh = &mut orow[c0..c1];
+        for (j, &p) in scores.iter().enumerate() {
+            let vh = &st.v.row(j)[c0..c1];
+            for (o, &vv) in oh.iter_mut().zip(vh) {
+                *o = p.mul_add(vv, *o);
+            }
+        }
+    }
+}
+
 /// Attention routing for `block_forward_impl`: the whole-context batch
-/// path, or the incremental step-state path against a session's caches.
-pub(crate) enum TfAttn<'s> {
+/// path, the serving prefill fast path, or the incremental step-state
+/// paths (single-stream and continuous-batched) against session caches.
+pub(crate) enum TfAttn<'s, 'st> {
     /// B sequences of length T, causal within each sequence.
     Full { bsz: usize, t: usize },
+    /// Whole prompt into an EMPTY cache: Full-arm threaded attention
+    /// that also appends the rotated K/V — the serving prefill.
+    Prefill { st: &'s mut TfBlockState },
     /// New tokens at absolute positions `pos0..`; K/V append to `st`.
     Decode { pos0: usize, st: &'s mut TfBlockState },
+    /// One new token per stream at per-stream absolute positions, each
+    /// against its own cache — the engine's continuous-batching step.
+    BatchDecode { poss: &'s [usize], sts: &'s mut [&'st mut TfBlockState] },
 }
 
 /// Per-block decode-session state: the RoPE-rotated keys and values of

@@ -5,7 +5,7 @@
 //!
 //! Executables are compiled lazily and memoized per artifact file. Shapes
 //! not covered by the manifest fall back to the native Rust solvers (the
-//! coordinator decides; see `Engine`).
+//! coordinator decides; see `Backend`).
 //!
 //! The `xla` crate is unavailable in the offline build, so everything
 //! touching PJRT is gated behind the `pjrt` cargo feature. Without it,
@@ -30,7 +30,7 @@ use crate::tensor::Mat;
 
 /// Which implementation the coordinator uses for the pruning math.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub enum Engine {
+pub enum Backend {
     /// Pure-Rust solvers (any shape).
     Native,
     /// AOT HLO executables via PJRT where a matching artifact exists,
@@ -38,11 +38,11 @@ pub enum Engine {
     Hlo,
 }
 
-impl Engine {
-    pub fn from_name(s: &str) -> Option<Engine> {
+impl Backend {
+    pub fn from_name(s: &str) -> Option<Backend> {
         match s.to_ascii_lowercase().as_str() {
-            "native" => Some(Engine::Native),
-            "hlo" | "pjrt" | "xla" => Some(Engine::Hlo),
+            "native" => Some(Backend::Native),
+            "hlo" | "pjrt" | "xla" => Some(Backend::Hlo),
             _ => None,
         }
     }

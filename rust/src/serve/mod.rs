@@ -1,0 +1,677 @@
+//! The serving engine: batched continuous decoding over any
+//! [`LanguageModel`].
+//!
+//! [`DecodeSession`](crate::model::DecodeSession) is a strictly B = 1
+//! API: every concurrent stream re-reads the full `WeightStore` per
+//! token, so serving N users costs N sweeps over the (sparse) weights.
+//! The [`Engine`] redesigns that surface around continuous batching:
+//!
+//! - [`Engine::submit`] queues a [`Request`] and returns a
+//!   [`RequestId`];
+//! - each [`Engine::step`] admits queued requests up to `max_batch`
+//!   (prefilling each prompt through the threaded Full-attention arm),
+//!   samples one token per active stream, and runs ALL streams through
+//!   one batched forward — every linear executes a single (B, d)
+//!   `matmul_tb` over the stacked queries, amortizing each sparse
+//!   weight read (CSR / packed 2:4 row decode) across B streams;
+//! - streams carry per-request K/V caches or recurrent state, absolute
+//!   position offsets, and a seeded [`SamplingParams`] RNG, so batch
+//!   composition never changes a stream's tokens (batch invariance is
+//!   pinned by `engine_batch_matches_independent_sessions` in the
+//!   integration suite);
+//! - finished streams retire to [`Engine::take_finished`] and their
+//!   slots refill from the queue mid-flight (continuous batching, not
+//!   static batching);
+//! - an optional `max_seq` sliding-window bound evicts the oldest K/V
+//!   rows so long-running streams hold bounded memory.
+//!
+//! [`score_continuations`] is the eval-side consumer: all candidate
+//! continuations of a zero-shot task score as one batch from a single
+//! shared prefill.
+
+use std::collections::VecDeque;
+
+use crate::model::{log_softmax_at, DecodeState, LanguageModel};
+use crate::tensor::Mat;
+use crate::util::Rng;
+
+// ---------------------------------------------------------------------------
+// sampling
+// ---------------------------------------------------------------------------
+
+/// Per-request sampling policy. `temperature <= 0` is greedy argmax
+/// (the RNG is never consulted, matching `DecodeSession::generate`);
+/// otherwise tokens draw from the temperature-scaled softmax, optionally
+/// restricted to the `top_k` highest logits. `seed` starts the request's
+/// private [`Rng`] stream: the same seed always reproduces the same
+/// tokens, independent of what else is in the batch.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SamplingParams {
+    pub temperature: f32,
+    pub top_k: Option<usize>,
+    pub seed: u64,
+}
+
+impl SamplingParams {
+    pub fn greedy() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: None, seed: 0 }
+    }
+
+    pub fn temperature(t: f32, seed: u64) -> SamplingParams {
+        SamplingParams { temperature: t, top_k: None, seed }
+    }
+
+    pub fn top_k(k: usize, t: f32, seed: u64) -> SamplingParams {
+        SamplingParams { temperature: t, top_k: Some(k), seed }
+    }
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams::greedy()
+    }
+}
+
+/// Draw one token from `logits` under `params`. Greedy ties break to the
+/// lowest index (same rule as `argmax_last`); top-k ties at the boundary
+/// also break to the lowest index so the candidate set is deterministic.
+///
+/// This sits on the per-stream per-step hot path, so the full-vocab case
+/// iterates the logits slice directly (no index allocation) and top-k
+/// uses an O(V) selection instead of a full sort. The softmax runs over
+/// logit/T in f64, max-subtracted (the perplexity-path convention) so
+/// extreme temperatures stay finite.
+pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
+    sample_token_with(logits, params, rng, &mut SampleScratch::default())
+}
+
+/// Reusable sampling buffers (top-k index selection + softmax weights)
+/// so the engine's per-stream per-step sampling allocates nothing and
+/// computes each exp exactly once.
+#[derive(Default)]
+struct SampleScratch {
+    idx: Vec<usize>,
+    w: Vec<f64>,
+}
+
+/// [`sample_token`] over caller-owned scratch buffers — the engine
+/// threads one [`SampleScratch`] across streams and steps.
+fn sample_token_with(
+    logits: &[f32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+    scratch: &mut SampleScratch,
+) -> u32 {
+    if params.temperature <= 0.0 {
+        return crate::model::decode::argmax(logits) as u32;
+    }
+    let inv_t = 1.0 / params.temperature as f64;
+    // CDF walk over cached weights: each exp computed exactly once
+    let draw = |w: &[f64], rng: &mut Rng| -> Option<usize> {
+        let total: f64 = w.iter().sum();
+        let mut r = rng.uniform() * total;
+        for (j, &wj) in w.iter().enumerate() {
+            r -= wj;
+            if r <= 0.0 {
+                return Some(j);
+            }
+        }
+        None // fp tail: r stayed (barely) positive
+    };
+    match params.top_k {
+        None => {
+            let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
+            scratch.w.clear();
+            scratch.w.extend(logits.iter().map(|&v| ((v as f64 - mx) * inv_t).exp()));
+            let j = draw(&scratch.w, rng).unwrap_or(logits.len() - 1);
+            j as u32
+        }
+        Some(k) => {
+            let k = k.max(1).min(logits.len());
+            scratch.idx.clear();
+            scratch.idx.extend(0..logits.len());
+            // total order (logit desc, index asc) makes the selected SET
+            // deterministic; the walk order below is the deterministic
+            // (if unsorted) selection output, so same seed => same token
+            let cmp = |a: &usize, b: &usize| {
+                logits[*b].partial_cmp(&logits[*a]).expect("finite logits").then(a.cmp(b))
+            };
+            scratch.idx.select_nth_unstable_by(k - 1, cmp);
+            scratch.idx.truncate(k);
+            let mx = scratch
+                .idx
+                .iter()
+                .map(|&i| logits[i])
+                .fold(f32::NEG_INFINITY, f32::max) as f64;
+            scratch.w.clear();
+            scratch
+                .w
+                .extend(scratch.idx.iter().map(|&i| ((logits[i] as f64 - mx) * inv_t).exp()));
+            let j = draw(&scratch.w, rng).unwrap_or(scratch.idx.len() - 1);
+            scratch.idx[j] as u32
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// requests
+// ---------------------------------------------------------------------------
+
+/// One generation request: a prompt, a budget of new tokens, and a
+/// sampling policy.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+}
+
+impl Request {
+    /// Greedy request — the common serving default.
+    pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize) -> Request {
+        Request { prompt, max_new_tokens, sampling: SamplingParams::greedy() }
+    }
+}
+
+/// Handle returned by [`Engine::submit`]; matches the `id` on the
+/// eventual [`Completion`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct RequestId(pub u64);
+
+/// A finished request: the generated tokens plus the logits at the final
+/// position (so scoring-style consumers don't re-run the model).
+#[derive(Clone, Debug)]
+pub struct Completion {
+    pub id: RequestId,
+    pub prompt: Vec<u32>,
+    pub tokens: Vec<u32>,
+    pub last_logits: Vec<f32>,
+}
+
+/// Engine knobs. `max_batch` bounds concurrent streams (queued requests
+/// wait); `max_seq`, when set, applies the sliding-window K/V bound to
+/// every stream.
+#[derive(Clone, Copy, Debug)]
+pub struct EngineConfig {
+    pub max_batch: usize,
+    pub max_seq: Option<usize>,
+}
+
+impl Default for EngineConfig {
+    fn default() -> EngineConfig {
+        EngineConfig { max_batch: 8, max_seq: None }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the engine
+// ---------------------------------------------------------------------------
+
+struct Stream {
+    id: RequestId,
+    prompt: Vec<u32>,
+    last_logits: Vec<f32>,
+    out: Vec<u32>,
+    max_new: usize,
+    sampling: SamplingParams,
+    rng: Rng,
+}
+
+impl Stream {
+    /// Absolute position of the NEXT token: everything consumed so far.
+    /// Derived (not stored) so RoPE positions can never desync from the
+    /// prompt + generated history.
+    fn pos(&self) -> usize {
+        self.prompt.len() + self.out.len()
+    }
+}
+
+/// Continuous-batching decode engine over a borrowed model.
+///
+/// ```text
+/// let mut eng = Engine::new(&model, EngineConfig::default());
+/// let id = eng.submit(Request::greedy(prompt, 32));
+/// eng.run();
+/// let done = eng.take_finished();   // Completion { id, tokens, .. }
+/// ```
+pub struct Engine<'m> {
+    model: &'m dyn LanguageModel,
+    cfg: EngineConfig,
+    next_id: u64,
+    queue: VecDeque<(RequestId, Request)>,
+    /// Active streams; `states[i]` is `streams[i]`'s decode state (kept
+    /// as a parallel contiguous slice so `decode_step_batch` can take
+    /// `&mut [DecodeState]` directly).
+    streams: Vec<Stream>,
+    states: Vec<DecodeState>,
+    finished: Vec<Completion>,
+    /// Sampling scratch (top-k indices + softmax weights), reused
+    /// across streams and steps.
+    sample_scratch: SampleScratch,
+}
+
+impl<'m> Engine<'m> {
+    pub fn new(model: &'m dyn LanguageModel, cfg: EngineConfig) -> Engine<'m> {
+        assert!(cfg.max_batch >= 1, "max_batch must admit at least one stream");
+        if let Some(w) = cfg.max_seq {
+            assert!(w >= 1, "max_seq window must hold at least one position");
+        }
+        Engine {
+            model,
+            cfg,
+            next_id: 0,
+            queue: VecDeque::new(),
+            streams: Vec::new(),
+            states: Vec::new(),
+            finished: Vec::new(),
+            sample_scratch: SampleScratch::default(),
+        }
+    }
+
+    /// Queue a request; it becomes active when a batch slot frees up.
+    pub fn submit(&mut self, req: Request) -> RequestId {
+        assert!(!req.prompt.is_empty(), "request needs a non-empty prompt");
+        let id = RequestId(self.next_id);
+        self.next_id += 1;
+        self.queue.push_back((id, req));
+        id
+    }
+
+    /// Streams currently decoding.
+    pub fn active(&self) -> usize {
+        self.streams.len()
+    }
+
+    /// Requests waiting for a batch slot.
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.streams.is_empty()
+    }
+
+    /// Admit queued requests into free batch slots, prefilling each
+    /// prompt through the threaded Full-attention fast path. With a
+    /// `max_seq` window the prefill runs in window-sized chunks with
+    /// eviction between them (shared with windowed `DecodeSession`s),
+    /// so one long prompt can't blow past the memory bound at admission.
+    ///
+    /// `step` calls this automatically; it is public so callers (and the
+    /// serve benches) can pay the prefill cost eagerly, separate from
+    /// the decode loop.
+    pub fn admit(&mut self) {
+        while self.streams.len() < self.cfg.max_batch {
+            let Some((id, req)) = self.queue.pop_front() else { break };
+            let mut state = self.model.decode_state();
+            let h = match self.cfg.max_seq {
+                Some(w) => crate::model::decode::prefill_windowed(
+                    self.model,
+                    &mut state,
+                    0,
+                    &req.prompt,
+                    w,
+                ),
+                None => self.model.prefill_append(&mut state, 0, &req.prompt),
+            };
+            let logits = self.model.logits_row(&h);
+            if req.max_new_tokens == 0 {
+                self.finished.push(Completion {
+                    id,
+                    prompt: req.prompt,
+                    tokens: Vec::new(),
+                    last_logits: logits,
+                });
+                continue;
+            }
+            self.streams.push(Stream {
+                id,
+                last_logits: logits,
+                out: Vec::with_capacity(req.max_new_tokens),
+                max_new: req.max_new_tokens,
+                rng: Rng::new(req.sampling.seed),
+                sampling: req.sampling,
+                prompt: req.prompt,
+            });
+            self.states.push(state);
+        }
+    }
+
+    /// One continuous-batching step: admit queued requests, sample one
+    /// token per active stream, run all B streams through ONE batched
+    /// forward (a single (B, d) matmul per linear plus one (B, V) logits
+    /// matmul), then retire finished streams so their slots refill next
+    /// step. Returns the number of tokens generated.
+    pub fn step(&mut self) -> usize {
+        self.admit();
+        if self.streams.is_empty() {
+            return 0;
+        }
+        let mut toks: Vec<u32> = Vec::with_capacity(self.streams.len());
+        for s in self.streams.iter_mut() {
+            toks.push(sample_token_with(
+                &s.last_logits,
+                &s.sampling,
+                &mut s.rng,
+                &mut self.sample_scratch,
+            ));
+        }
+        let poss: Vec<usize> = self.streams.iter().map(|s| s.pos()).collect();
+        let h = self.model.decode_step_batch(&mut self.states, &poss, &toks);
+        let logits = self.model.logits(&h);
+        for (i, s) in self.streams.iter_mut().enumerate() {
+            s.out.push(toks[i]);
+            s.last_logits = logits.row(i).to_vec();
+            if let Some(w) = self.cfg.max_seq {
+                self.states[i].enforce_window(w);
+            }
+        }
+        // retire back-to-front so swap_remove leaves earlier indices
+        // valid, then flip so same-step completions land in slot order
+        let mut retired = Vec::new();
+        for i in (0..self.streams.len()).rev() {
+            if self.streams[i].out.len() >= self.streams[i].max_new {
+                let s = self.streams.swap_remove(i);
+                self.states.swap_remove(i);
+                retired.push(Completion {
+                    id: s.id,
+                    prompt: s.prompt,
+                    tokens: s.out,
+                    last_logits: s.last_logits,
+                });
+            }
+        }
+        retired.reverse();
+        self.finished.extend(retired);
+        toks.len()
+    }
+
+    /// Drive until every queued and active request completes; returns
+    /// the total number of generated tokens.
+    pub fn run(&mut self) -> usize {
+        let mut total = 0;
+        while self.has_work() {
+            total += self.step();
+        }
+        total
+    }
+
+    /// Drain completed requests: ordered by completion step, batch-slot
+    /// order within a step. That is NOT submission order under mixed
+    /// workloads — match results to requests by [`Completion::id`].
+    pub fn take_finished(&mut self) -> Vec<Completion> {
+        std::mem::take(&mut self.finished)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// batched scoring (the zero-shot eval path)
+// ---------------------------------------------------------------------------
+
+/// Sum log-prob of every candidate continuation after `context`, scored
+/// as ONE batch: the context is prefilled once through the threaded
+/// Full-attention arm, the state is cloned per candidate, and each step
+/// runs all still-live candidates through a single batched forward.
+/// Candidates may have different lengths — finished ones drop out of the
+/// batch. An empty candidate scores 0.0 (the `choice_accuracy`
+/// convention). Results match per-candidate
+/// [`DecodeSession::continuation_logprob`](crate::model::DecodeSession)
+/// runs to within 1e-5 (bit-for-bit in practice: the batched arms run
+/// the same per-row kernels in the same order).
+pub fn score_continuations(
+    model: &dyn LanguageModel,
+    context: &[u32],
+    candidates: &[Vec<u32>],
+) -> Vec<f64> {
+    assert!(!context.is_empty(), "scoring needs a non-empty context");
+    let mut base = model.decode_state();
+    let h = model.prefill_append(&mut base, 0, context);
+    let base_logits = model.logits_row(&h);
+    let mut lps = vec![0.0f64; candidates.len()];
+    for (i, cand) in candidates.iter().enumerate() {
+        if let Some(&first) = cand.first() {
+            lps[i] = log_softmax_at(&base_logits, first as usize);
+        }
+    }
+    // streams only for candidates that still need decode steps
+    let mut who: Vec<usize> = (0..candidates.len()).filter(|&i| candidates[i].len() >= 2).collect();
+    let mut states: Vec<DecodeState> = who.iter().map(|_| base.clone()).collect();
+    let mut t = 0usize;
+    while !who.is_empty() {
+        let toks: Vec<u32> = who.iter().map(|&i| candidates[i][t]).collect();
+        let poss: Vec<usize> = vec![context.len() + t; who.len()];
+        let h = model.decode_step_batch(&mut states, &poss, &toks);
+        let logits: Mat = model.logits(&h);
+        for (j, &i) in who.iter().enumerate() {
+            lps[i] += log_softmax_at(logits.row(j), candidates[i][t + 1] as usize);
+        }
+        t += 1;
+        for j in (0..who.len()).rev() {
+            if candidates[who[j]].len() <= t + 1 {
+                who.swap_remove(j);
+                states.swap_remove(j);
+            }
+        }
+    }
+    lps
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{
+        DecodeSession, Mamba, MambaConfig, Transformer, TransformerConfig,
+    };
+
+    fn tiny_transformer(seed: u64) -> Transformer {
+        Transformer::init(
+            TransformerConfig {
+                vocab: 37,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 24,
+                max_seq: 64,
+            },
+            &mut Rng::new(seed),
+        )
+    }
+
+    fn tiny_mamba(seed: u64) -> Mamba {
+        Mamba::init(
+            MambaConfig { vocab: 37, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 64 },
+            &mut Rng::new(seed),
+        )
+    }
+
+    fn prompt(len: usize, salt: usize) -> Vec<u32> {
+        (0..len).map(|i| ((i * 5 + salt * 3) % 37) as u32).collect()
+    }
+
+    #[test]
+    fn greedy_engine_matches_sessions_both_archs() {
+        for (name, model) in [
+            ("microllama", Box::new(tiny_transformer(1)) as Box<dyn LanguageModel>),
+            ("micromamba", Box::new(tiny_mamba(2)) as Box<dyn LanguageModel>),
+        ] {
+            let mut eng = Engine::new(model.as_ref(), EngineConfig::default());
+            let ids: Vec<RequestId> = (0..3)
+                .map(|i| eng.submit(Request::greedy(prompt(4 + 3 * i, i), 5 + i)))
+                .collect();
+            eng.run();
+            assert!(!eng.has_work());
+            let mut done = eng.take_finished();
+            done.sort_by_key(|c| c.id);
+            assert_eq!(done.len(), 3, "{name}");
+            for (i, (c, id)) in done.iter().zip(&ids).enumerate() {
+                assert_eq!(c.id, *id, "{name}");
+                let mut s = DecodeSession::new(model.as_ref());
+                s.prefill(&prompt(4 + 3 * i, i));
+                let expect = s.generate(5 + i);
+                assert_eq!(c.tokens, expect, "{name} stream {i}");
+                let d = c
+                    .last_logits
+                    .iter()
+                    .zip(s.last_logits())
+                    .map(|(a, b)| (a - b).abs())
+                    .fold(0.0f32, f32::max);
+                assert!(d < 1e-5, "{name} stream {i}: logits diverge by {d}");
+            }
+        }
+    }
+
+    #[test]
+    fn continuous_batching_refills_slots_from_queue() {
+        let m = tiny_transformer(3);
+        // 5 requests through 2 slots: every completion must still match
+        // an isolated session despite mid-flight admissions
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 2, max_seq: None });
+        for i in 0..5usize {
+            eng.submit(Request::greedy(prompt(3 + i, i), 3 + (i % 3)));
+        }
+        assert_eq!(eng.queued(), 5);
+        eng.step();
+        assert_eq!(eng.active(), 2, "only max_batch streams admitted");
+        assert_eq!(eng.queued(), 3);
+        eng.run();
+        let mut done = eng.take_finished();
+        assert_eq!(done.len(), 5);
+        done.sort_by_key(|c| c.id);
+        for (i, c) in done.iter().enumerate() {
+            let mut s = DecodeSession::new(&m);
+            s.prefill(&prompt(3 + i, i));
+            assert_eq!(c.tokens, s.generate(3 + (i % 3)), "request {i}");
+        }
+    }
+
+    #[test]
+    fn seeded_sampling_is_deterministic_and_seed_sensitive() {
+        let m = tiny_transformer(4);
+        let gen = |seed: u64| -> Vec<u32> {
+            let mut eng = Engine::new(&m, EngineConfig::default());
+            eng.submit(Request {
+                prompt: prompt(6, 1),
+                max_new_tokens: 12,
+                sampling: SamplingParams::temperature(1.5, seed),
+            });
+            eng.run();
+            eng.take_finished().remove(0).tokens
+        };
+        assert_eq!(gen(7), gen(7), "same seed must reproduce the stream");
+        assert_ne!(gen(7), gen(8), "different seeds should diverge at T=1.5");
+        // batch composition must not perturb a seeded stream
+        let solo = gen(7);
+        let mut eng = Engine::new(&m, EngineConfig::default());
+        eng.submit(Request {
+            prompt: prompt(6, 1),
+            max_new_tokens: 12,
+            sampling: SamplingParams::temperature(1.5, 7),
+        });
+        eng.submit(Request::greedy(prompt(9, 2), 12));
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done[0].tokens, solo, "batch mate changed a seeded stream");
+    }
+
+    #[test]
+    fn top_k_one_is_greedy_and_topk_restricts_support() {
+        let m = tiny_transformer(5);
+        let run = |sampling: SamplingParams| -> Vec<u32> {
+            let mut eng = Engine::new(&m, EngineConfig::default());
+            eng.submit(Request { prompt: prompt(5, 3), max_new_tokens: 8, sampling });
+            eng.run();
+            eng.take_finished().remove(0).tokens
+        };
+        let greedy = run(SamplingParams::greedy());
+        assert_eq!(run(SamplingParams::top_k(1, 0.8, 11)), greedy);
+        // top-k sampling only ever emits tokens inside the current top-k
+        let logits: Vec<f32> = vec![0.1, 2.0, -1.0, 1.5, 0.3];
+        let mut rng = Rng::new(12);
+        for _ in 0..200 {
+            let t = sample_token(&logits, &SamplingParams::top_k(2, 1.0, 0), &mut rng);
+            assert!(t == 1 || t == 3, "token {t} outside top-2");
+        }
+    }
+
+    #[test]
+    fn sliding_window_bounds_cache_and_matches_unbounded_when_short() {
+        let m = tiny_transformer(6);
+        let p = prompt(10, 4);
+        // window larger than prompt+gen: identical to unbounded
+        let run = |max_seq: Option<usize>| -> Completion {
+            let mut eng = Engine::new(&m, EngineConfig { max_batch: 4, max_seq });
+            eng.submit(Request::greedy(p.clone(), 6));
+            eng.run();
+            eng.take_finished().remove(0)
+        };
+        let unbounded = run(None);
+        let wide = run(Some(64));
+        assert_eq!(unbounded.tokens, wide.tokens);
+        assert_eq!(unbounded.last_logits, wide.last_logits);
+        // tight window: still decodes, and the cache stays bounded
+        let w = 8;
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 4, max_seq: Some(w) });
+        eng.submit(Request::greedy(p.clone(), 12));
+        while eng.has_work() {
+            eng.step();
+            for st in &eng.states {
+                assert!(st.cached_len().unwrap_or(0) <= w, "window exceeded");
+            }
+        }
+        let c = eng.take_finished().remove(0);
+        assert_eq!(c.tokens.len(), 12);
+        assert!(c.tokens.iter().all(|&t| (t as usize) < 37));
+        // windowed DecodeSession agrees with the windowed engine
+        let mut s = DecodeSession::with_window(&m, w);
+        s.prefill(&p);
+        assert_eq!(s.generate(12), c.tokens);
+    }
+
+    #[test]
+    fn zero_budget_request_completes_with_prompt_logits() {
+        let m = tiny_mamba(7);
+        let mut eng = Engine::new(&m, EngineConfig::default());
+        let p = prompt(5, 5);
+        eng.submit(Request::greedy(p.clone(), 0));
+        eng.run();
+        let done = eng.take_finished();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].tokens.is_empty());
+        let mut s = DecodeSession::new(&m);
+        s.prefill(&p);
+        assert_eq!(done[0].last_logits, s.last_logits());
+    }
+
+    #[test]
+    fn score_continuations_matches_session_forks() {
+        for model in [
+            Box::new(tiny_transformer(8)) as Box<dyn LanguageModel>,
+            Box::new(tiny_mamba(9)) as Box<dyn LanguageModel>,
+        ] {
+            let ctx = prompt(7, 6);
+            let cands: Vec<Vec<u32>> =
+                vec![vec![1, 2, 3], vec![4], vec![], vec![5, 6], vec![7, 8, 9, 10]];
+            let batched = score_continuations(model.as_ref(), &ctx, &cands);
+            let mut base = DecodeSession::new(model.as_ref());
+            base.prefill(&ctx);
+            for (i, cand) in cands.iter().enumerate() {
+                let lp = base.fork().continuation_logprob(cand);
+                assert!(
+                    (batched[i] - lp).abs() < 1e-5,
+                    "{} cand {i}: {} vs {lp}",
+                    model.arch(),
+                    batched[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-empty prompt")]
+    fn empty_prompt_rejected() {
+        let m = tiny_transformer(10);
+        Engine::new(&m, EngineConfig::default())
+            .submit(Request::greedy(vec![], 4));
+    }
+}

@@ -166,8 +166,39 @@ impl Mat {
             "append_rows: cols {} != {}",
             self.cols, other.cols
         );
+        self.reserve_amortized(other.data.len());
         self.data.extend_from_slice(&other.data);
         self.rows += other.rows;
+    }
+
+    /// Append one row (the per-stream K/V append in batched decode).
+    pub fn append_row(&mut self, row: &[f32]) {
+        assert_eq!(self.cols, row.len(), "append_row: cols {} != {}", self.cols, row.len());
+        self.reserve_amortized(row.len());
+        self.data.extend_from_slice(row);
+        self.rows += 1;
+    }
+
+    /// Explicit doubling capacity growth: a T-step decode does O(log T)
+    /// reallocations (O(T) elements moved in total). `Vec`'s own growth
+    /// is already amortized; this pins the policy in OUR code so cache
+    /// growth can't regress with libstd/allocator changes, and documents
+    /// the contract that callers must never assume pointer stability
+    /// across appends — the buffer moves whenever capacity is outgrown.
+    fn reserve_amortized(&mut self, add: usize) {
+        let need = self.data.len() + add;
+        if need > self.data.capacity() {
+            let target = need.max(self.data.capacity() * 2);
+            self.data.reserve_exact(target - self.data.len());
+        }
+    }
+
+    /// Drop the first `n` rows in place (sliding-window K/V eviction).
+    /// Keeps the allocation; the remaining rows shift to the front.
+    pub fn drop_leading_rows(&mut self, n: usize) {
+        assert!(n <= self.rows, "drop_leading_rows: {n} > {}", self.rows);
+        self.data.drain(..n * self.cols);
+        self.rows -= n;
     }
 }
 
@@ -505,6 +536,67 @@ mod tests {
         for i in 0..2 {
             assert_eq!(grown.row(3 + i), b.row(i));
         }
+    }
+
+    #[test]
+    fn append_rows_amortized_growth() {
+        // 1024 single-row appends must trigger only O(log n) reallocations,
+        // and correctness must never depend on the buffer staying put.
+        let cols = 7;
+        let mut m = Mat::zeros(0, cols);
+        let mut caps = Vec::new();
+        let mut moved = 0usize;
+        let mut last_ptr = m.data.as_ptr();
+        for i in 0..1024usize {
+            let row: Vec<f32> = (0..cols).map(|c| (i * cols + c) as f32).collect();
+            m.append_row(&row);
+            if m.data.as_ptr() != last_ptr {
+                moved += 1;
+                last_ptr = m.data.as_ptr();
+            }
+            if caps.last() != Some(&m.data.capacity()) {
+                caps.push(m.data.capacity());
+            }
+        }
+        assert_eq!(m.shape(), (1024, cols));
+        // doubling growth: ~log2(1024*7) distinct capacities, not ~1024
+        assert!(caps.len() <= 16, "capacity changed {} times: {caps:?}", caps.len());
+        assert!(moved <= 16, "buffer moved {moved} times");
+        // contents survive every move — no pointer stability assumed
+        for i in 0..1024 {
+            for c in 0..cols {
+                assert_eq!(m[(i, c)], (i * cols + c) as f32);
+            }
+        }
+    }
+
+    #[test]
+    fn append_rows_matches_append_row() {
+        let mut r = Rng::new(78);
+        let chunk = Mat::randn(4, 6, 1.0, &mut r);
+        let mut a = Mat::zeros(0, 6);
+        a.append_rows(&chunk);
+        let mut b = Mat::zeros(0, 6);
+        for i in 0..chunk.rows {
+            b.append_row(chunk.row(i));
+        }
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn drop_leading_rows_slides_window() {
+        let mut r = Rng::new(79);
+        let m0 = Mat::randn(6, 5, 1.0, &mut r);
+        let mut m = m0.clone();
+        m.drop_leading_rows(2);
+        assert_eq!(m.shape(), (4, 5));
+        for i in 0..4 {
+            assert_eq!(m.row(i), m0.row(i + 2));
+        }
+        m.drop_leading_rows(0);
+        assert_eq!(m.shape(), (4, 5));
+        m.drop_leading_rows(4);
+        assert_eq!(m.shape(), (0, 5));
     }
 
     #[test]

@@ -7,7 +7,7 @@ use apt::data::{CorpusGen, Profile};
 use apt::eval::perplexity;
 use apt::model::{train, LanguageModel, TrainConfig, Transformer, TransformerConfig};
 use apt::prune::{magnitude_prune, Method, PruneConfig, Sparsity};
-use apt::runtime::{Engine, Runtime};
+use apt::runtime::{Backend, Runtime};
 use apt::sparse::{Packed24, WeightStore};
 use apt::util::Rng;
 
@@ -88,15 +88,15 @@ fn engine_parity_native_vs_hlo() {
     let calib = data.sample_calibration(8, 32, &mut Rng::new(4));
     let eval_data = gen.generate(Profile::Wt2Like, 2_048, 5);
 
-    let run = |engine: Engine| -> (f64, f64) {
+    let run = |backend: Backend| -> (f64, f64) {
         let mut m = Transformer { cfg: model.cfg, params: model.params.clone() };
         let cfg = PipelineConfig::new(PruneConfig::new(Method::SM, Sparsity::two_four()))
-            .with_engine(engine);
+            .with_engine(backend);
         let rep = prune_model(&mut m, &calib, &cfg, Some(&rt)).unwrap();
         (perplexity(&m, &eval_data, 64), rep.hlo_fraction())
     };
-    let (ppl_native, frac_native) = run(Engine::Native);
-    let (ppl_hlo, frac_hlo) = run(Engine::Hlo);
+    let (ppl_native, frac_native) = run(Backend::Native);
+    let (ppl_hlo, frac_hlo) = run(Backend::Hlo);
     assert_eq!(frac_native, 0.0);
     assert!(frac_hlo > 0.9, "hlo engine should cover the layers: {frac_hlo}");
     let rel = (ppl_hlo - ppl_native).abs() / ppl_native;
@@ -234,14 +234,12 @@ fn weightstore_forward_equivalence_both_families_both_patterns() {
     }
 }
 
-/// Tentpole acceptance: the incremental decode session reproduces the
-/// full quadratic forward to <1e-5 at the logits, for both families ×
-/// all three weight layouts (Dense, Csr, Packed24) × prefill lengths
-/// {1, 7, 64}, including a prefill split mid-sequence and token-by-token
-/// stepping.
-#[test]
-fn incremental_decode_matches_full_forward() {
-    use apt::model::{DecodeSession, Mamba, MambaConfig, BLOCK_LINEARS, MAMBA_LINEARS};
+/// 2 families × 3 weight layouts: the model grid the serving-equivalence
+/// tests sweep. Layout "dense" leaves init weights alone; "csr"/
+/// "packed24" prune + pack every block linear and assert the store
+/// actually left the dense format.
+fn layout_variants() -> Vec<(String, Box<dyn LanguageModel>)> {
+    use apt::model::{Mamba, MambaConfig, BLOCK_LINEARS, MAMBA_LINEARS};
 
     let tcfg = TransformerConfig {
         vocab: 47,
@@ -252,10 +250,6 @@ fn incremental_decode_matches_full_forward() {
         max_seq: 128,
     };
     let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 128 };
-
-    // 2 families × 3 layouts. Layout "dense" leaves init weights alone;
-    // "csr"/"packed24" prune + pack every block linear and assert the
-    // store actually left the dense format.
     let mut models: Vec<(String, Box<dyn LanguageModel>)> = Vec::new();
     for (layout, sparsity) in [
         ("dense", None),
@@ -283,8 +277,19 @@ fn incremental_decode_matches_full_forward() {
         models.push((format!("microllama/{layout}"), Box::new(t)));
         models.push((format!("micromamba/{layout}"), Box::new(m)));
     }
+    models
+}
 
-    for (label, model) in &models {
+/// Tentpole acceptance: the incremental decode session reproduces the
+/// full quadratic forward to <1e-5 at the logits, for both families ×
+/// all three weight layouts (Dense, Csr, Packed24) × prefill lengths
+/// {1, 7, 64}, including a prefill split mid-sequence and token-by-token
+/// stepping.
+#[test]
+fn incremental_decode_matches_full_forward() {
+    use apt::model::DecodeSession;
+
+    for (label, model) in &layout_variants() {
         for (case, prefill_len) in [(0u64, 1usize), (1, 7), (2, 64)] {
             let mut rng = Rng::new(90 + case);
             let toks: Vec<u32> = (0..prefill_len).map(|_| rng.below(47) as u32).collect();
@@ -335,6 +340,85 @@ fn incremental_decode_matches_full_forward() {
         let b = model.continuation_logprob_full(&ctx, &cont);
         assert!((a - b).abs() < 1e-5, "{label}: {a} vs {b}");
     }
+}
+
+/// Serving-engine acceptance: a batched engine over B ∈ {2, 4, 7}
+/// mixed-length greedy streams reproduces B independent `DecodeSession`s
+/// — identical token streams and final logits within 1e-5 — for both
+/// families × all three weight layouts.
+#[test]
+fn engine_batch_matches_independent_sessions() {
+    use apt::model::DecodeSession;
+    use apt::serve::{Engine, EngineConfig, Request};
+
+    for (label, model) in &layout_variants() {
+        for &bsz in &[2usize, 4, 7] {
+            // mixed prompt lengths and generation budgets per stream
+            let prompts: Vec<Vec<u32>> = (0..bsz)
+                .map(|i| (0..2 + (i * 5) % 11 + i).map(|j| ((j * 3 + i * 7) % 47) as u32).collect())
+                .collect();
+            let gens: Vec<usize> = (0..bsz).map(|i| 3 + i % 4).collect();
+
+            let mut eng =
+                Engine::new(model.as_ref(), EngineConfig { max_batch: bsz, max_seq: None });
+            for i in 0..bsz {
+                eng.submit(Request::greedy(prompts[i].clone(), gens[i]));
+            }
+            eng.run();
+            let mut done = eng.take_finished();
+            assert_eq!(done.len(), bsz, "{label} B={bsz}");
+            done.sort_by_key(|c| c.id);
+
+            for i in 0..bsz {
+                let mut s = DecodeSession::new(model.as_ref());
+                s.prefill(&prompts[i]);
+                let toks = s.generate(gens[i]);
+                assert_eq!(done[i].tokens, toks, "{label} B={bsz} stream {i}");
+                for (a, b) in done[i].last_logits.iter().zip(s.last_logits()) {
+                    assert!(
+                        (a - b).abs() < 1e-5,
+                        "{label} B={bsz} stream {i}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Seeded sampling through the engine is reproducible (same seed → same
+/// tokens) and seed-sensitive (different seeds diverge), independent of
+/// what else shares the batch.
+#[test]
+fn engine_seeded_sampling_deterministic_across_batches() {
+    use apt::serve::{Engine, EngineConfig, Request, SamplingParams};
+
+    let gen = CorpusGen::new(60, 2, 38);
+    let model = trained_model(&gen, 32, 2, 20);
+    let prompt: Vec<u32> = (0..8).map(|i| (i * 3 % 50) as u32).collect();
+
+    let run = |seed: u64, with_mates: bool| -> Vec<u32> {
+        let mut eng = Engine::new(&model, EngineConfig::default());
+        let id = eng.submit(Request {
+            prompt: prompt.clone(),
+            max_new_tokens: 10,
+            sampling: SamplingParams::temperature(1.3, seed),
+        });
+        if with_mates {
+            eng.submit(Request::greedy((0..5).map(|i| (i % 50) as u32).collect(), 10));
+            eng.submit(Request {
+                prompt: (0..3).map(|i| ((i * 9) % 50) as u32).collect(),
+                max_new_tokens: 10,
+                sampling: SamplingParams::top_k(5, 0.9, seed ^ 0xff),
+            });
+        }
+        eng.run();
+        let done = eng.take_finished();
+        done.into_iter().find(|c| c.id == id).expect("completed").tokens
+    };
+
+    assert_eq!(run(3, false), run(3, false), "same seed must reproduce");
+    assert_eq!(run(3, false), run(3, true), "batch mates must not perturb the stream");
+    assert_ne!(run(3, false), run(4, false), "different seeds should diverge");
 }
 
 /// Zero-shot regression: the session-routed suite reproduces the
@@ -437,7 +521,7 @@ fn mismatched_runtime_shapes_fall_back_to_native() {
     let calib = data.sample_calibration(4, 32, &mut Rng::new(10));
     let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
     let cfg = PipelineConfig::new(PruneConfig::new(Method::SM, Sparsity::two_four()))
-        .with_engine(Engine::Hlo);
+        .with_engine(Backend::Hlo);
     let report = prune_model(&mut pruned, &calib, &cfg, Some(&rt)).unwrap();
     assert_eq!(report.hlo_fraction(), 0.0);
     assert!((report.overall_sparsity() - 0.5).abs() < 0.02);

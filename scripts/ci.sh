@@ -15,6 +15,9 @@ cargo build --release
 echo "== tier-1: tests =="
 cargo test -q
 
+echo "== smoke: serving engine example =="
+cargo run --release --example serve_engine
+
 echo "== hygiene: rustfmt check =="
 cargo fmt --all -- --check
 
