@@ -17,8 +17,8 @@ use apt::data::{CorpusGen, Profile};
 use apt::json::{self, Json};
 use apt::linalg::{cholesky_blocked, cholesky_unblocked, cholesky_upper, inv_spd};
 use apt::model::{
-    train, DecodeSession, LanguageModel, Mamba, MambaConfig, TrainConfig, Transformer,
-    TransformerConfig,
+    train, DecodeSession, DecodeState, LanguageModel, Mamba, MambaConfig, TrainConfig,
+    Transformer, TransformerConfig,
 };
 use apt::prune::{
     column_blocks, compensate_m, compensate_sequential, select_24_m, select_unstructured_s,
@@ -249,13 +249,14 @@ fn bench_mrp_blockwise(rec: &mut Recorder) {
 /// Sparse-vs-dense `matmul_tb` across formats and batch shapes; records
 /// the realized kernel speedups and compression ratios under `derived`.
 fn bench_sparse_kernels(rec: &mut Recorder) {
-    use apt::sparse::{Csr, Packed24};
+    use apt::sparse::{Csr, Csr16, Packed24};
     let mut rng = Rng::new(9);
 
     // unstructured 80% -> CSR
     let mut w = Mat::randn(256, 512, 1.0, &mut rng);
     apt::prune::magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.8 });
     let csr = Csr::from_dense(&w);
+    let csr16 = Csr16::from_dense(&w);
     let x = Mat::randn(64, 512, 1.0, &mut rng);
     let d = rec.bench("dense matmul_tb 64x512 @ (256,512)", 20, || {
         std::hint::black_box(x.matmul_tb(&w));
@@ -266,6 +267,15 @@ fn bench_sparse_kernels(rec: &mut Recorder) {
     rec.derived.insert("csr_matmul_speedup_80".into(), d / c.max(1e-9));
     rec.derived
         .insert("csr_compression_80".into(), csr.dense_bytes() as f64 / csr.bytes() as f64);
+    // u16-index CSR: same kernel body, half the index bytes per nnz
+    let c16 = rec.bench("csr16 matmul_tb @80% sparsity", 20, || {
+        std::hint::black_box(csr16.matmul_tb(&x));
+    });
+    rec.derived.insert("csr16_matmul_speedup_80".into(), d / c16.max(1e-9));
+    rec.derived.insert(
+        "csr16_compression_80".into(),
+        csr16.dense_bytes() as f64 / csr16.bytes() as f64,
+    );
 
     // 2:4 -> packed layout, executed without densifying
     let mut w24 = Mat::randn(256, 512, 1.0, &mut rng);
@@ -291,10 +301,14 @@ fn bench_sparse_kernels(rec: &mut Recorder) {
     let c1 = rec.bench("csr matmul_tb 1x512 @80%", 50, || {
         std::hint::black_box(csr.matmul_tb(&x1));
     });
+    let c16_1 = rec.bench("csr16 matmul_tb 1x512 @80%", 50, || {
+        std::hint::black_box(csr16.matmul_tb(&x1));
+    });
     let p1 = rec.bench("packed24 matmul_tb 1x512", 50, || {
         std::hint::black_box(packed.matmul_tb(&x1));
     });
     rec.derived.insert("csr_decode_speedup_80".into(), d1 / c1.max(1e-9));
+    rec.derived.insert("csr16_decode_speedup_80".into(), d1 / c16_1.max(1e-9));
     rec.derived.insert("packed24_decode_speedup".into(), d1 / p1.max(1e-9));
 }
 
@@ -499,6 +513,128 @@ fn bench_serve(rec: &mut Recorder) {
     }
 }
 
+/// Sliding-window K/V eviction at long T: the old contiguous-shift
+/// layout (append + drop the leading row = O(W·d) memmove per step) vs
+/// the paged layout (append + cursor advance, whole pages recycled =
+/// O(1) per step, no row copying). Records
+/// `decode_eviction_ns_per_step_{shift,paged}` under `derived`.
+fn bench_paged_eviction(rec: &mut Recorder) {
+    use apt::tensor::PagedKv;
+    let (w, d, steps) = (512usize, 128usize, 4096usize);
+    let row = vec![1.0f32; d];
+    let med_shift = rec.bench("kv eviction shift W=512 d=128 4096 steps", 10, || {
+        let mut m = Mat::zeros(0, d);
+        for _ in 0..w {
+            m.append_row(&row);
+        }
+        for _ in 0..steps {
+            m.append_row(&row);
+            m.drop_leading_rows(1);
+        }
+        std::hint::black_box(&m);
+    });
+    let med_paged = rec.bench("kv eviction paged W=512 d=128 4096 steps", 10, || {
+        let mut p = PagedKv::new(d);
+        for _ in 0..w {
+            p.append_row(&row);
+        }
+        for _ in 0..steps {
+            p.append_row(&row);
+            p.evict_to(w);
+        }
+        std::hint::black_box(&p);
+    });
+    rec.derived.insert("decode_eviction_ns_per_step_shift".into(), med_shift * 1e6 / steps as f64);
+    rec.derived.insert("decode_eviction_ns_per_step_paged".into(), med_paged * 1e6 / steps as f64);
+    println!(
+        "  -> eviction per step: shift {:.0} ns vs paged {:.0} ns",
+        med_shift * 1e6 / steps as f64,
+        med_paged * 1e6 / steps as f64
+    );
+}
+
+/// Bursty admission: 8 queued 64-token prompts prefilled one-by-one
+/// (the pre-packing admission path) vs as ONE padded Full-arm batch
+/// (`prefill_batch`, what `Engine::admit` now runs). Records
+/// `engine_prefill_packed_speedup` under `derived`.
+fn bench_prefill_packed(rec: &mut Recorder) {
+    let cfg = TransformerConfig {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq: 512,
+    };
+    let model = prune_pack_transformer(cfg, 81, None);
+    let (bsz, plen) = (8usize, 64usize);
+    let prompts: Vec<Vec<u32>> = (0..bsz)
+        .map(|i| (0..plen).map(|j| ((j * 7 + i * 13) % 512) as u32).collect())
+        .collect();
+    let refs: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let per = rec.bench("prefill admission 8x64tok (per-request)", 10, || {
+        for p in &prompts {
+            let mut st = model.decode_state();
+            std::hint::black_box(model.prefill_append(&mut st, 0, p));
+        }
+    });
+    let packed = rec.bench("prefill admission 8x64tok (packed batch)", 10, || {
+        let mut sts: Vec<DecodeState> = (0..bsz).map(|_| model.decode_state()).collect();
+        std::hint::black_box(model.prefill_batch(&mut sts, &refs));
+    });
+    let speedup = per / packed.max(1e-9);
+    rec.derived.insert("engine_prefill_packed_speedup".into(), speedup);
+    println!("  -> packed cross-request prefill: {speedup:.2}x vs per-request");
+}
+
+/// Threaded vs serial per-stream attention in the batched decode step at
+/// large B·T (16 streams, 512 cached positions each, window-pinned so
+/// every step sees the same T). The serial baseline is forced via
+/// `APT_BATCH_ATTN_THRESHOLD`; the threaded run forces the pool on.
+/// Records `batch_attn_thread_speedup` under `derived`.
+fn bench_batch_attn(rec: &mut Recorder) {
+    let cfg = TransformerConfig {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq: 1024,
+    };
+    let model = prune_pack_transformer(cfg, 91, None);
+    let (bsz, t) = (16usize, 512usize);
+    let prompts: Vec<Vec<u32>> = (0..bsz)
+        .map(|i| (0..t).map(|j| ((j * 7 + i * 13) % 512) as u32).collect())
+        .collect();
+    let refs: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+    let mut states: Vec<DecodeState> = (0..bsz).map(|_| model.decode_state()).collect();
+    model.prefill_batch(&mut states, &refs);
+    let mut poss: Vec<usize> = vec![t; bsz];
+    let run_steps = |states: &mut Vec<DecodeState>, poss: &mut Vec<usize>, n: usize| {
+        for _ in 0..n {
+            let toks: Vec<u32> = (0..bsz).map(|i| ((poss[i] * 7 + i) % 512) as u32).collect();
+            let h = model.decode_step_batch(states, poss, &toks);
+            std::hint::black_box(&h);
+            for (i, st) in states.iter_mut().enumerate() {
+                st.enforce_window(t); // O(1) paged eviction pins T
+                poss[i] += 1;
+            }
+        }
+    };
+    std::env::set_var("APT_BATCH_ATTN_THRESHOLD", usize::MAX.to_string());
+    let serial = rec.bench("batch decode b16 T512 8 steps (serial attn)", 8, || {
+        run_steps(&mut states, &mut poss, 8);
+    });
+    std::env::set_var("APT_BATCH_ATTN_THRESHOLD", "1");
+    let threaded = rec.bench("batch decode b16 T512 8 steps (threaded attn)", 8, || {
+        run_steps(&mut states, &mut poss, 8);
+    });
+    std::env::remove_var("APT_BATCH_ATTN_THRESHOLD");
+    let speedup = serial / threaded.max(1e-9);
+    rec.derived.insert("batch_attn_thread_speedup".into(), speedup);
+    println!("  -> threaded batch attention: {speedup:.2}x vs serial at B·T = {}", bsz * t);
+}
+
 /// End-to-end coordinator run (calibrate -> prune -> propagate) on a
 /// small trained transformer, so every future PR has a pipeline-level
 /// trajectory, not just kernel medians.
@@ -659,8 +795,14 @@ fn main() {
         bench_decode_session(&mut rec);
     }
 
+    if run("paged") {
+        bench_paged_eviction(&mut rec);
+    }
+
     if run("serve") {
         bench_serve(&mut rec);
+        bench_prefill_packed(&mut rec);
+        bench_batch_attn(&mut rec);
     }
 
     if run("pipeline") {

@@ -31,9 +31,15 @@ fn main() {
         (0..len).map(|i| ((i * 3 + salt * 11) % vocab) as u32).collect()
     };
 
-    // 6 requests through 4 slots: the engine admits the first four,
-    // then continuously refills as streams finish.
+    // 6 requests through 4 slots: the engine admits the first four
+    // (prefilled as ONE padded batch), then continuously refills as
+    // streams finish. Tokens stream through the on_token hook the
+    // moment they are sampled, not only at completion.
+    let streamed: std::rc::Rc<std::cell::RefCell<std::collections::BTreeMap<_, Vec<u32>>>> =
+        Default::default();
+    let sink = streamed.clone();
     let mut eng = Engine::new(&model, EngineConfig { max_batch: 4, max_seq: Some(128) });
+    eng.set_on_token(move |id, tok| sink.borrow_mut().entry(id).or_default().push(tok));
     let mut ids = Vec::new();
     ids.push(eng.submit(Request::greedy(prompt(0, 48), 16)));
     ids.push(eng.submit(Request::greedy(prompt(1, 32), 16)));
@@ -63,6 +69,12 @@ fn main() {
     assert_eq!(done.len(), ids.len());
     for c in &done {
         println!("  request {:?} (+{} prompt tokens): {:?}", c.id, c.prompt.len(), c.tokens);
+        // the streamed view saw exactly the completed tokens, in order
+        assert_eq!(
+            streamed.borrow().get(&c.id),
+            Some(&c.tokens),
+            "on_token stream must match the completion"
+        );
     }
 
     // the greedy streams must agree with independent single-stream

@@ -12,8 +12,9 @@
 //!      the PJRT runtime, per `Backend`).
 //!   3. *Pack*: each pruned linear is swapped, in place, into the
 //!      [`WeightStore`] layout matching its sparsity pattern (CSR for
-//!      unstructured, packed 2:4 for semi-structured; kept dense below
-//!      the byte break-even), so every later stage — propagation below,
+//!      unstructured — u16 indices when cols fit, u32 otherwise — and
+//!      packed 2:4 for semi-structured; kept dense below the byte
+//!      break-even), so every later stage — propagation below,
 //!      perplexity/zero-shot eval, serving — executes the sparse
 //!      kernels and the realized compression is reported per linear in
 //!      [`PipelineReport`].
@@ -74,8 +75,8 @@ pub struct LinearReport {
     pub pred_loss: f64,
     pub elapsed_ms: f64,
     pub engine: &'static str,
-    /// Layout the linear was packed into ("csr" / "packed24", or
-    /// "dense" when packing would not have shrunk it).
+    /// Layout the linear was packed into ("csr16" / "csr" / "packed24",
+    /// or "dense" when packing would not have shrunk it).
     pub format: &'static str,
     /// Actual bytes of the packed layout.
     pub bytes: usize,
@@ -549,7 +550,7 @@ mod tests {
         let toks: Vec<u32> = (0..32).map(|i| (i % 50) as u32).collect();
         assert!(model.forward_loss(&toks, (1, 32)).is_finite());
 
-        // unstructured → CSR layout
+        // unstructured → u16-index CSR (every linear here has cols ≪ 65536)
         let (_gen2, data2, mut model2) = setup_transformer();
         let calib2 = data2.sample_calibration(8, 32, &mut Rng::new(22));
         let cfg2 = PipelineConfig::new(PruneConfig::new(
@@ -558,7 +559,7 @@ mod tests {
         ));
         let report2 = prune_model(&mut model2, &calib2, &cfg2, None).unwrap();
         for l in &report2.linears {
-            assert_eq!(l.format, "csr", "{l:?}");
+            assert_eq!(l.format, "csr16", "{l:?}");
             assert!(l.bytes < l.dense_bytes, "{l:?}");
         }
         assert!(report2.compression_ratio() > 1.2);

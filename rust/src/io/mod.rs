@@ -19,6 +19,7 @@
 //!     fmt 0 dense:    f32 data (rows*cols)
 //!     fmt 1 csr:      u32 nnz | u32 indptr (rows+1) | u32 indices | f32 values
 //!     fmt 2 packed24: f32 values (rows*cols/2) | u8 meta (rows*cols/4)
+//!     fmt 3 csr16:    u32 nnz | u32 indptr (rows+1) | u16 indices | f32 values
 //!
 //! `ParamStore::load` also accepts ATS1 files (all-dense), so pre-existing
 //! checkpoints and model caches keep working.
@@ -31,7 +32,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::sparse::{Csr, Packed24, WeightStore};
+use crate::sparse::{Csr, Csr16, Packed24, WeightStore};
 use crate::tensor::Mat;
 
 const MAGIC: &[u8; 4] = b"ATS1";
@@ -174,6 +175,15 @@ fn read_u32s(r: &mut impl Read, n: usize) -> Result<Vec<u32>> {
         .collect())
 }
 
+fn read_u16s(r: &mut impl Read, n: usize) -> Result<Vec<u16>> {
+    let mut bytes = vec![0u8; n * 2];
+    r.read_exact(&mut bytes)?;
+    Ok(bytes
+        .chunks_exact(2)
+        .map(|b| u16::from_le_bytes([b[0], b[1]]))
+        .collect())
+}
+
 fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
     let bytes: Vec<u8> = data.iter().flat_map(|f| f.to_le_bytes()).collect();
     w.write_all(&bytes)?;
@@ -181,6 +191,12 @@ fn write_f32s(w: &mut impl Write, data: &[f32]) -> Result<()> {
 }
 
 fn write_u32s(w: &mut impl Write, data: &[u32]) -> Result<()> {
+    let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
+    w.write_all(&bytes)?;
+    Ok(())
+}
+
+fn write_u16s(w: &mut impl Write, data: &[u16]) -> Result<()> {
     let bytes: Vec<u8> = data.iter().flat_map(|v| v.to_le_bytes()).collect();
     w.write_all(&bytes)?;
     Ok(())
@@ -287,6 +303,7 @@ impl ParamStore {
                 WeightStore::Dense(_) => 0,
                 WeightStore::Csr(_) => 1,
                 WeightStore::Packed24(_) => 2,
+                WeightStore::Csr16(_) => 3,
             };
             w.write_all(&[fmt])?;
             w.write_all(&(rows as u32).to_le_bytes())?;
@@ -297,6 +314,12 @@ impl ParamStore {
                     w.write_all(&(c.nnz() as u32).to_le_bytes())?;
                     write_u32s(&mut w, &c.indptr)?;
                     write_u32s(&mut w, &c.indices)?;
+                    write_f32s(&mut w, &c.values)?;
+                }
+                WeightStore::Csr16(c) => {
+                    w.write_all(&(c.nnz() as u32).to_le_bytes())?;
+                    write_u32s(&mut w, &c.indptr)?;
+                    write_u16s(&mut w, &c.indices)?;
                     write_f32s(&mut w, &c.values)?;
                 }
                 WeightStore::Packed24(p) => {
@@ -383,6 +406,35 @@ impl ParamStore {
                     }
                     WeightStore::Packed24(Packed24 { rows, cols, values, meta })
                 }
+                3 => {
+                    if cols > Csr16::MAX_COLS {
+                        bail!("csr16 cols {cols} exceed u16 index range in '{name}'");
+                    }
+                    let nnz = read_u32(&mut r)? as usize;
+                    if nnz > rows * cols {
+                        bail!("implausible nnz {nnz} for {rows}x{cols} '{name}'");
+                    }
+                    let indptr = read_u32s(&mut r, rows + 1)?;
+                    // same indptr/index invariants as the u32 CSR arm:
+                    // fail loudly at load, not at first forward
+                    if indptr.first().copied().unwrap_or(1) != 0
+                        || indptr.windows(2).any(|p| p[0] > p[1])
+                        || indptr.last().copied().unwrap_or(0) as usize != nnz
+                    {
+                        bail!("csr16 indptr malformed in '{name}'");
+                    }
+                    let indices = read_u16s(&mut r, nnz)?;
+                    for row in 0..rows {
+                        let seg = &indices[indptr[row] as usize..indptr[row + 1] as usize];
+                        if seg.iter().any(|&c| c as usize >= cols)
+                            || seg.windows(2).any(|p| p[0] >= p[1])
+                        {
+                            bail!("csr16 indices malformed in '{name}' row {row}");
+                        }
+                    }
+                    let values = read_f32s(&mut r, nnz)?;
+                    WeightStore::Csr16(Csr16 { rows, cols, indptr, indices, values })
+                }
                 f => bail!("unknown weight format tag {f} in '{name}'"),
             };
             store.tensors.insert(name, ws);
@@ -449,6 +501,9 @@ mod tests {
         let mut wu = Mat::randn(6, 12, 1.0, &mut rng);
         magnitude_prune(&mut wu, Sparsity::Unstructured { rate: 0.7 });
         s.insert_store("csr", WeightStore::Csr(Csr::from_dense(&wu)));
+        let mut w16 = Mat::randn(7, 20, 1.0, &mut rng);
+        magnitude_prune(&mut w16, Sparsity::Unstructured { rate: 0.6 });
+        s.insert_store("csr16", WeightStore::Csr16(Csr16::from_dense(&w16)));
         let mut w24 = Mat::randn(4, 16, 1.0, &mut rng);
         magnitude_prune(&mut w24, Sparsity::two_four());
         s.insert_store("packed", WeightStore::Packed24(Packed24::from_dense(&w24).unwrap()));
@@ -458,12 +513,13 @@ mod tests {
         let path = dir.join("roundtrip.ats");
         s.save(&path).unwrap();
         let loaded = ParamStore::load(&path).unwrap();
-        assert_eq!(loaded.len(), 3);
+        assert_eq!(loaded.len(), 4);
         for name in s.names() {
             assert_eq!(s.get(name).unwrap(), loaded.get(name).unwrap(), "{name}");
         }
         // layouts survive, and so do the byte counts
         assert_eq!(loaded.get("csr").unwrap().format(), "csr");
+        assert_eq!(loaded.get("csr16").unwrap().format(), "csr16");
         assert_eq!(loaded.get("packed").unwrap().format(), "packed24");
         assert_eq!(loaded.bytes(), s.bytes());
         assert!(loaded.bytes() < loaded.dense_bytes());
@@ -542,6 +598,47 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("shape"), "{err}");
+    }
+
+    /// Hand-build one ATS2 csr16 (fmt 3) entry named "w" from raw parts.
+    fn ats2_csr16_bytes(rows: u32, cols: u32, indptr: &[u32], indices: &[u16]) -> Vec<u8> {
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"ATS2");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'w');
+        bytes.push(3u8); // fmt = csr16
+        bytes.extend_from_slice(&rows.to_le_bytes());
+        bytes.extend_from_slice(&cols.to_le_bytes());
+        bytes.extend_from_slice(&(indices.len() as u32).to_le_bytes());
+        for v in indptr {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in indices {
+            bytes.extend_from_slice(&v.to_le_bytes());
+        }
+        for _ in indices {
+            bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        bytes
+    }
+
+    #[test]
+    fn param_store_rejects_malformed_csr16() {
+        // same invariants as the u32 CSR arm, on the halved-index layout
+        let err = load_bytes("bad_indptr16.ats", &ats2_csr16_bytes(2, 2, &[0, 2, 1], &[0]))
+            .unwrap_err();
+        assert!(err.to_string().contains("indptr"), "{err}");
+        let err = load_bytes("dup_idx16.ats", &ats2_csr16_bytes(1, 4, &[0, 2], &[1, 1]))
+            .unwrap_err();
+        assert!(err.to_string().contains("indices"), "{err}");
+        // cols beyond the u16 index range must be rejected up front
+        let err = load_bytes(
+            "wide16.ats",
+            &ats2_csr16_bytes(1, (Csr16::MAX_COLS + 1) as u32, &[0, 0], &[]),
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("u16 index range"), "{err}");
     }
 
     #[test]

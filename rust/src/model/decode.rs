@@ -42,18 +42,17 @@ pub enum DecodeState {
 
 impl DecodeState {
     /// Bound every per-block K/V cache to the last `window` positions
-    /// (sliding-window eviction for long-running serving): the oldest
-    /// rows are dropped, queries keep attending at absolute positions.
-    /// Mamba's recurrent state is O(1) in context length and unaffected.
+    /// (sliding-window eviction for long-running serving): the caches
+    /// are paged, so eviction advances the page cursor — O(1) per step,
+    /// freeing whole pages onto a reuse list instead of shifting rows —
+    /// while queries keep attending at absolute positions. Mamba's
+    /// recurrent state is O(1) in context length and unaffected.
     pub fn enforce_window(&mut self, window: usize) {
         assert!(window >= 1, "window must hold at least one position");
         if let DecodeState::Transformer(blocks) = self {
             for st in blocks {
-                if st.k.rows > window {
-                    let drop = st.k.rows - window;
-                    st.k.drop_leading_rows(drop);
-                    st.v.drop_leading_rows(drop);
-                }
+                st.k.evict_to(window);
+                st.v.evict_to(window);
             }
         }
     }
@@ -62,7 +61,7 @@ impl DecodeState {
     /// whose state does not grow with context).
     pub fn cached_len(&self) -> Option<usize> {
         match self {
-            DecodeState::Transformer(blocks) => Some(blocks.first().map_or(0, |b| b.k.rows)),
+            DecodeState::Transformer(blocks) => Some(blocks.first().map_or(0, |b| b.k.len())),
             DecodeState::Mamba(_) => None,
         }
     }

@@ -481,6 +481,12 @@ fn silu(x: f32) -> f32 {
 /// Sequence routing for `block_impl`: the whole-context batch path, or
 /// the incremental step-state paths (single-stream and continuous-
 /// batched) over sessions' recurrent state.
+///
+/// There is deliberately no cross-request packed-prefill arm here: the
+/// `Decode` arm already runs its in/dt/out projections as whole-chunk
+/// matmuls, and the scan/conv state is O(1) per stream, so the trait's
+/// default per-request `prefill_batch` loop IS the fast path for this
+/// family (padding would only add wasted scan work).
 pub(crate) enum MambaSeq<'s, 'st> {
     /// B sequences of length T, scanned from h = 0 each.
     Full { bsz: usize, t: usize },

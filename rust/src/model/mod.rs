@@ -210,6 +210,31 @@ pub trait LanguageModel: Send + Sync {
     fn decode_step_batch(&self, states: &mut [DecodeState], poss: &[usize], tokens: &[u32])
         -> Mat;
 
+    /// Packed cross-request prefill: `prompts[i]` (non-empty) fills the
+    /// FRESH state `states[i]` from position 0; returns the (B, d)
+    /// matrix of final hidden rows, one per prompt (feed it to
+    /// [`LanguageModel::logits`]). Row `i` matches what a lone
+    /// [`LanguageModel::prefill_append`] on `states[i]` would produce.
+    /// The transformer override right-pads the prompts to one batch and
+    /// runs a single threaded Full-arm pass (per-(seq, head) work is
+    /// independent, so results are bit-identical to solo prefills); the
+    /// default loops per prompt — correct for mamba, whose incremental
+    /// arm already batches its matmuls over each chunk.
+    fn prefill_batch(&self, states: &mut [DecodeState], prompts: &[&[u32]]) -> Mat {
+        assert_eq!(states.len(), prompts.len(), "one state per prompt");
+        let rows: Vec<Vec<f32>> = states
+            .iter_mut()
+            .zip(prompts)
+            .map(|(st, p)| self.prefill_append(st, 0, p))
+            .collect();
+        let d = rows.first().map_or(0, |r| r.len());
+        let mut h = Mat::zeros(rows.len(), d);
+        for (i, r) in rows.iter().enumerate() {
+            h.row_mut(i).copy_from_slice(r);
+        }
+        h
+    }
+
     /// Logits for a single final-hidden row: the (1, V) fast path that
     /// skips the full (B·T, V) matmul. Matches `logits(x).row(r)`
     /// bit-for-bit for the same hidden row.
@@ -395,6 +420,44 @@ impl LanguageModel for Transformer {
             x = self.block_decode_batch(b, &x, poss, &mut sts);
         }
         x
+    }
+    fn prefill_batch(&self, states: &mut [DecodeState], prompts: &[&[u32]]) -> Mat {
+        assert_eq!(states.len(), prompts.len(), "one state per prompt");
+        assert!(!prompts.is_empty(), "prefill_batch needs at least one prompt");
+        assert!(prompts.iter().all(|p| !p.is_empty()), "prompts must be non-empty");
+        for s in states.iter() {
+            let DecodeState::Transformer(v) = s else {
+                panic!("decode state/arch mismatch: microllama fed a mamba state")
+            };
+            assert_eq!(v.len(), self.cfg.n_layers, "decode state from another model");
+        }
+        let bsz = prompts.len();
+        let t = prompts.iter().map(|p| p.len()).max().unwrap();
+        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        // right-pad with each prompt's last token (any valid id works:
+        // padding rows are causally downstream of every real row and
+        // their K/V is never appended)
+        let mut toks: Vec<u32> = Vec::with_capacity(bsz * t);
+        for p in prompts {
+            toks.extend_from_slice(p);
+            toks.extend(std::iter::repeat(*p.last().unwrap()).take(t - p.len()));
+        }
+        let mut x = self.embed(&toks);
+        for b in 0..self.cfg.n_layers {
+            let mut sts: Vec<&mut transformer::TfBlockState> = states
+                .iter_mut()
+                .map(|s| match s {
+                    DecodeState::Transformer(v) => &mut v[b],
+                    DecodeState::Mamba(_) => unreachable!("validated above"),
+                })
+                .collect();
+            x = self.block_prefill_batch(b, &x, &lens, &mut sts);
+        }
+        let mut h = Mat::zeros(bsz, self.cfg.d_model);
+        for s in 0..bsz {
+            h.row_mut(s).copy_from_slice(x.row(s * t + lens[s] - 1));
+        }
+        h
     }
 }
 

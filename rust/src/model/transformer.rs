@@ -19,8 +19,8 @@ use anyhow::Result;
 
 use crate::io::{ParamStore, TensorStore};
 use crate::sparse::WeightStore;
-use crate::tensor::{dot, Mat};
-use crate::util::Rng;
+use crate::tensor::{dot, Mat, PagedKv};
+use crate::util::{num_threads, Rng};
 
 use super::{ce_loss, ce_loss_and_grad, transformer_rmsnorm as rmsnorm,
             transformer_rmsnorm_backward as rmsnorm_backward, NormCachePub as NormCache};
@@ -161,6 +161,20 @@ impl Transformer {
         self.block_forward_impl(b, x, TfAttn::Prefill { st }, None, &mut |_, _| {})
     }
 
+    /// Packed cross-request prefill for one block: `x` holds B prompts
+    /// right-padded to a common length (B·t rows); the first `lens[s]`
+    /// K/V rows of stream `s` append to its (empty) cache. One threaded
+    /// Full-arm pass instead of B separate prefills.
+    pub(crate) fn block_prefill_batch(
+        &self,
+        b: usize,
+        x: &Mat,
+        lens: &[usize],
+        sts: &mut [&mut TfBlockState],
+    ) -> Mat {
+        self.block_forward_impl(b, x, TfAttn::PrefillBatch { lens, sts }, None, &mut |_, _| {})
+    }
+
     /// Batched decode step for one block: row `i` of `x` is stream `i`'s
     /// single new token at absolute position `poss[i]`, attending against
     /// its own K/V cache `sts[i]`. All linears run ONE (B, d) matmul over
@@ -215,7 +229,7 @@ impl Transformer {
             TfAttn::Prefill { st } => {
                 // whole-prompt fast path: the same threaded per-head
                 // matmuls as Full, plus the K/V append the session needs
-                assert_eq!(st.k.rows, 0, "prefill fast path needs an empty K/V cache");
+                assert_eq!(st.k.len(), 0, "prefill fast path needs an empty K/V cache");
                 let t = x.rows;
                 rope(&mut q, 1, t, h, dh, false);
                 rope(&mut k, 1, t, h, dh, false);
@@ -223,10 +237,33 @@ impl Transformer {
                 st.k.append_rows(&k);
                 st.v.append_rows(&v);
             }
+            TfAttn::PrefillBatch { lens, sts } => {
+                // packed cross-request prefill: B prompts right-padded to
+                // t rows run the SAME Full-arm threaded attention as one
+                // batch; per-(seq, head) work is independent, so each
+                // stream's rows are bit-identical to a solo prefill, and
+                // the padding rows (causally downstream of every real
+                // row) are simply never appended to a cache.
+                let bsz = sts.len();
+                assert_eq!(lens.len(), bsz, "one prompt length per stream");
+                assert!(bsz >= 1 && x.rows % bsz == 0, "padded batch shape");
+                let t = x.rows / bsz;
+                rope(&mut q, bsz, t, h, dh, false);
+                rope(&mut k, bsz, t, h, dh, false);
+                full_causal_attention(&q, &k, &v, bsz, t, h, dh, scale, &mut attn_out, None);
+                for (s, st) in sts.iter_mut().enumerate() {
+                    assert!(lens[s] >= 1 && lens[s] <= t, "prompt length vs padded t");
+                    assert_eq!(st.k.len(), 0, "packed prefill needs empty K/V caches");
+                    for i in 0..lens[s] {
+                        st.k.append_row(k.row(s * t + i));
+                        st.v.append_row(v.row(s * t + i));
+                    }
+                }
+            }
             TfAttn::Decode { pos0, st } => {
                 // `cached` may trail pos0 when a sliding window evicted
                 // the oldest rows; positions stay absolute for RoPE.
-                let cached = st.k.rows;
+                let cached = st.k.len();
                 assert!(cached <= pos0, "K/V cache out of sync with position");
                 rope_rows(&mut q, pos0, h, dh, false);
                 rope_rows(&mut k, pos0, h, dh, false);
@@ -255,26 +292,23 @@ impl Transformer {
                 let bsz = x.rows;
                 assert_eq!(poss.len(), bsz, "one position per stream");
                 assert_eq!(sts.len(), bsz, "one K/V state per stream");
-                let mut scores: Vec<f32> = Vec::new();
                 for i in 0..bsz {
                     rope_row(q.row_mut(i), poss[i], h, dh, false);
                     rope_row(k.row_mut(i), poss[i], h, dh, false);
                 }
                 for (i, st) in sts.iter_mut().enumerate() {
                     let st: &mut TfBlockState = st;
-                    assert!(st.k.rows <= poss[i], "K/V cache out of sync with position");
+                    assert!(st.k.len() <= poss[i], "K/V cache out of sync with position");
                     st.k.append_row(k.row(i));
                     st.v.append_row(v.row(i));
-                    attend_cached(
-                        q.row(i),
-                        st,
-                        st.k.rows,
-                        attn_out.row_mut(i),
-                        (h, dh),
-                        scale,
-                        &mut scores,
-                    );
                 }
+                // per-stream attention: disjoint states, disjoint output
+                // rows — threaded across the pool once B·T clears the
+                // break-even, serial below it
+                let views: Vec<&TfBlockState> = sts.iter().map(|s| &**s).collect();
+                let work = views.iter().map(|st| st.k.len()).sum::<usize>() * cfg.d_model;
+                let threaded = bsz > 1 && num_threads() > 1 && work >= batch_attn_threshold();
+                batch_attend(&q, &views, &mut attn_out, (h, dh), scale, threaded);
             }
         }
         sink("wo", &attn_out);
@@ -631,10 +665,12 @@ fn full_causal_attention(
 
 /// One query row attending to the first `lim` rows of a session's K/V
 /// cache, all heads — the per-token kernel shared by the single-stream
-/// `Decode` and batched `BatchDecode` arms (same `dot`/`softmax_1d`/
-/// fused-accumulate op order as the full forward, so the paths agree
-/// bit-for-bit). `scores` is caller-provided scratch to keep the decode
-/// hot path allocation-free.
+/// `Decode` and batched `BatchDecode` arms. The cache is paged, so the
+/// loop walks it page by page via [`PagedKv::row_slices`]; rows arrive
+/// in the same logical order a contiguous buffer would supply, and the
+/// `dot`/`softmax_1d`/fused-accumulate op order is unchanged, so the
+/// paths agree bit-for-bit with the full forward. `scores` is
+/// caller-provided scratch to keep the decode hot path allocation-free.
 fn attend_cached(
     qrow: &[f32],
     st: &TfBlockState,
@@ -649,18 +685,86 @@ fn attend_cached(
         let qh = &qrow[c0..c1];
         scores.clear();
         scores.resize(lim, 0.0);
-        for (j, sc) in scores.iter_mut().enumerate() {
-            *sc = dot(qh, &st.k.row(j)[c0..c1]) * scale;
+        let mut sc = scores.iter_mut();
+        for krow in st.k.row_slices(lim) {
+            *sc.next().expect("lim scores") = dot(qh, &krow[c0..c1]) * scale;
         }
         softmax_1d(scores);
         let oh = &mut orow[c0..c1];
-        for (j, &p) in scores.iter().enumerate() {
-            let vh = &st.v.row(j)[c0..c1];
+        for (vrow, &p) in st.v.row_slices(lim).zip(scores.iter()) {
+            let vh = &vrow[c0..c1];
             for (o, &vv) in oh.iter_mut().zip(vh) {
                 *o = p.mul_add(vv, *o);
             }
         }
     }
+}
+
+/// Break-even for threading `BatchDecode` attention, in total
+/// fused-multiply work units (Σ cached rows × d_model). Below it the
+/// scoped-thread spawn costs more than the attention itself. Re-read
+/// from `APT_BATCH_ATTN_THRESHOLD` on every call (not cached) so the
+/// perf benches can force the serial baseline in-process.
+fn batch_attn_threshold() -> usize {
+    std::env::var("APT_BATCH_ATTN_THRESHOLD")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(32_768)
+}
+
+/// Per-stream attention for the batched decode step: stream `i`'s query
+/// row attends its own (just-appended) cache into output row `i`.
+/// Streams are fully independent — disjoint states, disjoint output
+/// rows — so the threaded path splits streams over the worker pool with
+/// interleaved ownership (`i % nw`, balancing mixed cache lengths) and
+/// is bit-identical to the serial path: the same [`attend_cached`]
+/// kernel runs per stream either way.
+fn batch_attend(
+    q: &Mat,
+    views: &[&TfBlockState],
+    attn_out: &mut Mat,
+    (h, dh): (usize, usize),
+    scale: f32,
+    threaded: bool,
+) {
+    let bsz = q.rows;
+    debug_assert_eq!(views.len(), bsz);
+    if !threaded {
+        let mut scores: Vec<f32> = Vec::new();
+        for (i, st) in views.iter().enumerate() {
+            attend_cached(
+                q.row(i),
+                st,
+                st.k.len(),
+                attn_out.row_mut(i),
+                (h, dh),
+                scale,
+                &mut scores,
+            );
+        }
+        return;
+    }
+    let d = attn_out.cols;
+    let nw = num_threads().min(bsz);
+    let base = attn_out.data.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        for w in 0..nw {
+            s.spawn(move || {
+                let mut scores: Vec<f32> = Vec::new();
+                let mut i = w;
+                while i < bsz {
+                    // SAFETY: output rows are disjoint across workers
+                    // (i % nw == w) and `attn_out` outlives the scope.
+                    let orow: &mut [f32] = unsafe {
+                        std::slice::from_raw_parts_mut((base as *mut f32).add(i * d), d)
+                    };
+                    let st = views[i];
+                    attend_cached(q.row(i), st, st.k.len(), orow, (h, dh), scale, &mut scores);
+                    i += nw;
+                }
+            });
+        }
+    });
 }
 
 /// Attention routing for `block_forward_impl`: the whole-context batch
@@ -672,6 +776,10 @@ pub(crate) enum TfAttn<'s, 'st> {
     /// Whole prompt into an EMPTY cache: Full-arm threaded attention
     /// that also appends the rotated K/V — the serving prefill.
     Prefill { st: &'s mut TfBlockState },
+    /// B whole prompts right-padded to a common length into B EMPTY
+    /// caches, as ONE Full-arm pass — the engine's packed cross-request
+    /// admission. `lens[s]` rows of stream `s` append to `sts[s]`.
+    PrefillBatch { lens: &'s [usize], sts: &'s mut [&'st mut TfBlockState] },
     /// New tokens at absolute positions `pos0..`; K/V append to `st`.
     Decode { pos0: usize, st: &'s mut TfBlockState },
     /// One new token per stream at per-stream absolute positions, each
@@ -680,16 +788,28 @@ pub(crate) enum TfAttn<'s, 'st> {
 }
 
 /// Per-block decode-session state: the RoPE-rotated keys and values of
-/// every position consumed so far, in (T, n_heads·head_dim) layout.
+/// every live position, in paged (T, n_heads·head_dim) row storage.
+/// Sliding-window eviction advances the page cursor — O(1) per step, no
+/// row copying — instead of shifting a contiguous buffer.
 #[derive(Clone, Debug)]
 pub struct TfBlockState {
-    pub k: Mat,
-    pub v: Mat,
+    pub k: PagedKv,
+    pub v: PagedKv,
 }
 
 impl TfBlockState {
     fn new(d_model: usize) -> TfBlockState {
-        TfBlockState { k: Mat::zeros(0, d_model), v: Mat::zeros(0, d_model) }
+        TfBlockState { k: PagedKv::new(d_model), v: PagedKv::new(d_model) }
+    }
+
+    /// Custom page granularity — page-boundary tests only; sessions use
+    /// the [`crate::tensor::KV_PAGE_ROWS`] default.
+    #[cfg(test)]
+    fn with_page_rows(d_model: usize, page_rows: usize) -> TfBlockState {
+        TfBlockState {
+            k: PagedKv::with_page_rows(d_model, page_rows),
+            v: PagedKv::with_page_rows(d_model, page_rows),
+        }
     }
 }
 
@@ -870,6 +990,113 @@ mod tests {
                     ((fd - an) / denom).abs() < 0.08,
                     "{name}[{idx}]: fd={fd:.6} analytic={an:.6}"
                 );
+            }
+        }
+    }
+
+    /// Decode logits must be invariant to the K/V page granularity:
+    /// paging is storage layout only, never math. Runs token-by-token
+    /// decode with per-step window eviction across page sizes that
+    /// divide, equal, and straddle the window.
+    #[test]
+    fn paged_decode_is_invariant_to_page_size() {
+        let m = tiny_model(21);
+        let toks = rand_tokens(40, 31, 22);
+        let run = |page: usize, window: Option<usize>| -> Vec<f32> {
+            let mut sts: Vec<TfBlockState> =
+                (0..2).map(|_| TfBlockState::with_page_rows(16, page)).collect();
+            let mut last = Vec::new();
+            for (pos, &tok) in toks.iter().enumerate() {
+                let mut x = m.embed(&[tok]);
+                for b in 0..2 {
+                    x = m.block_decode(b, &x, pos, &mut sts[b]);
+                }
+                if let Some(w) = window {
+                    for st in sts.iter_mut() {
+                        st.k.evict_to(w);
+                        st.v.evict_to(w);
+                    }
+                }
+                last = x.row(0).to_vec();
+            }
+            last
+        };
+        for window in [None, Some(8), Some(5), Some(40)] {
+            let base = run(64, window);
+            for page in [1usize, 5, 7, 8] {
+                // bit-identical: same kernels, same row order
+                assert_eq!(run(page, window), base, "page={page} window={window:?}");
+            }
+        }
+    }
+
+    /// The threaded BatchDecode attention path must be bit-identical to
+    /// the serial one: streams are independent, so thread assignment can
+    /// never change a result. Mixed cache lengths exercise the
+    /// interleaved (i % nw) ownership.
+    #[test]
+    fn batch_attend_threaded_matches_serial_bitwise() {
+        let (h, dh, d) = (2usize, 8usize, 16usize);
+        let mut r = Rng::new(31);
+        let rand_row = |r: &mut Rng| -> Vec<f32> {
+            (0..d).map(|_| r.normal_f32(0.0, 1.0)).collect()
+        };
+        let states: Vec<TfBlockState> = (0..8)
+            .map(|i| {
+                let mut st = TfBlockState::with_page_rows(d, 4);
+                for _ in 0..(3 + i * 13) {
+                    let kr = rand_row(&mut r);
+                    let vr = rand_row(&mut r);
+                    st.k.append_row(&kr);
+                    st.v.append_row(&vr);
+                }
+                // exercise evicted heads too (page cursor mid-page)
+                if i % 2 == 0 {
+                    let keep = st.k.len().max(2) - 1;
+                    st.k.evict_to(keep);
+                    st.v.evict_to(keep);
+                }
+                st
+            })
+            .collect();
+        let q = Mat::randn(8, d, 1.0, &mut r);
+        let views: Vec<&TfBlockState> = states.iter().collect();
+        let scale = 1.0 / (dh as f32).sqrt();
+        let mut serial = Mat::zeros(8, d);
+        batch_attend(&q, &views, &mut serial, (h, dh), scale, false);
+        let mut threaded = Mat::zeros(8, d);
+        batch_attend(&q, &views, &mut threaded, (h, dh), scale, true);
+        assert_eq!(serial, threaded);
+    }
+
+    /// The packed cross-request prefill arm (padded Full-arm batch) must
+    /// reproduce per-stream solo prefills bit-for-bit: hidden rows AND
+    /// the appended K/V caches.
+    #[test]
+    fn prefill_batch_matches_solo_prefills_bitwise() {
+        use crate::model::{DecodeState, LanguageModel};
+        let m = tiny_model(23);
+        let prompts: Vec<Vec<u32>> =
+            (0..4).map(|i| rand_tokens(1 + i * 5, 31, 24 + i as u64)).collect();
+        let refs: Vec<&[u32]> = prompts.iter().map(|p| p.as_slice()).collect();
+        let mut batch_states: Vec<DecodeState> =
+            (0..4).map(|_| LanguageModel::decode_state(&m)).collect();
+        let h = LanguageModel::prefill_batch(&m, &mut batch_states, &refs);
+        for (i, p) in prompts.iter().enumerate() {
+            let mut solo = LanguageModel::decode_state(&m);
+            let hr = m.prefill_append(&mut solo, 0, p);
+            assert_eq!(h.row(i), &hr[..], "stream {i} hidden row");
+            let (DecodeState::Transformer(a), DecodeState::Transformer(b)) =
+                (&batch_states[i], &solo)
+            else {
+                unreachable!()
+            };
+            for (sa, sb) in a.iter().zip(b) {
+                assert_eq!(sa.k.len(), sb.k.len(), "stream {i}");
+                for j in 0..sa.k.len() {
+                    assert_eq!(sa.k.row(j), sb.k.row(j), "stream {i} k row {j}");
+                    assert_eq!(sa.v.row(j), sb.v.row(j), "stream {i} v row {j}");
+                }
             }
         }
     }

@@ -8,12 +8,15 @@
 //!
 //! - [`Engine::submit`] queues a [`Request`] and returns a
 //!   [`RequestId`];
-//! - each [`Engine::step`] admits queued requests up to `max_batch`
-//!   (prefilling each prompt through the threaded Full-attention arm),
-//!   samples one token per active stream, and runs ALL streams through
-//!   one batched forward — every linear executes a single (B, d)
-//!   `matmul_tb` over the stacked queries, amortizing each sparse
-//!   weight read (CSR / packed 2:4 row decode) across B streams;
+//! - each [`Engine::step`] admits queued requests up to `max_batch` —
+//!   ALL prompts admitted together prefill as ONE padded batch through
+//!   the threaded Full-attention arm (`prefill_batch`), so a bursty
+//!   arrival pays a single sweep over the weights — then samples one
+//!   token per active stream and runs ALL streams through one batched
+//!   forward: every linear executes a single (B, d) `matmul_tb` over
+//!   the stacked queries, amortizing each sparse weight read (CSR /
+//!   packed 2:4 row decode) across B streams, with per-stream attention
+//!   threaded across the pool once B·T clears a break-even;
 //! - streams carry per-request K/V caches or recurrent state, absolute
 //!   position offsets, and a seeded [`SamplingParams`] RNG, so batch
 //!   composition never changes a stream's tokens (batch invariance is
@@ -21,9 +24,11 @@
 //!   integration suite);
 //! - finished streams retire to [`Engine::take_finished`] and their
 //!   slots refill from the queue mid-flight (continuous batching, not
-//!   static batching);
+//!   static batching); [`Engine::set_on_token`] streams each sampled
+//!   token to the caller the moment it exists;
 //! - an optional `max_seq` sliding-window bound evicts the oldest K/V
-//!   rows so long-running streams hold bounded memory.
+//!   rows — O(1) per step through the paged cache layout — so
+//!   long-running streams hold bounded memory.
 //!
 //! [`score_continuations`] is the eval-side consumer: all candidate
 //! continuations of a zero-shot task score as one batch from a single
@@ -248,6 +253,9 @@ pub struct Engine<'m> {
     /// Sampling scratch (top-k indices + softmax weights), reused
     /// across streams and steps.
     sample_scratch: SampleScratch,
+    /// Streaming hook: called with (request, token) the moment each new
+    /// token is sampled, instead of only at completion.
+    on_token: Option<Box<dyn FnMut(RequestId, u32) + 'm>>,
 }
 
 impl<'m> Engine<'m> {
@@ -265,7 +273,17 @@ impl<'m> Engine<'m> {
             states: Vec::new(),
             finished: Vec::new(),
             sample_scratch: SampleScratch::default(),
+            on_token: None,
         }
+    }
+
+    /// Register a streaming token callback: `f(id, token)` fires the
+    /// moment a stream samples each new token (batch-slot order within a
+    /// step), so callers see tokens as they are generated instead of
+    /// only at completion. Tokens still accumulate into the eventual
+    /// [`Completion`]; the hook observes, it does not consume.
+    pub fn set_on_token(&mut self, f: impl FnMut(RequestId, u32) + 'm) {
+        self.on_token = Some(Box::new(f));
     }
 
     /// Queue a request; it becomes active when a batch slot frees up.
@@ -287,53 +305,124 @@ impl<'m> Engine<'m> {
         self.queue.len()
     }
 
+    /// Decode states of the active streams (batch-slot order) — cache
+    /// introspection for window monitoring and the long-context smoke.
+    pub fn states(&self) -> &[DecodeState] {
+        &self.states
+    }
+
     pub fn has_work(&self) -> bool {
         !self.queue.is_empty() || !self.streams.is_empty()
     }
 
-    /// Admit queued requests into free batch slots, prefilling each
-    /// prompt through the threaded Full-attention fast path. With a
-    /// `max_seq` window the prefill runs in window-sized chunks with
-    /// eviction between them (shared with windowed `DecodeSession`s),
-    /// so one long prompt can't blow past the memory bound at admission.
+    /// Admit queued requests into free batch slots. All prompts admitted
+    /// in one call prefill as ONE padded batch through the Full-arm
+    /// threaded attention (`prefill_batch`), so a bursty arrival of B
+    /// prompts pays a single threaded sweep over the weights instead of
+    /// B separate passes — followed by one (B, V) logits matmul. With a
+    /// `max_seq` window, prompts longer than the window fall back to the
+    /// per-request windowed prefill (window-sized chunks with paged
+    /// eviction between them, shared with windowed `DecodeSession`s), so
+    /// one long prompt can't blow past the memory bound at admission;
+    /// prompts within the window still pack. Length-skewed bursts are
+    /// peeled to a ≥50% fill ratio so the padded pass never does more
+    /// than 2x the useful prefill work.
     ///
     /// `step` calls this automatically; it is public so callers (and the
     /// serve benches) can pay the prefill cost eagerly, separate from
     /// the decode loop.
     pub fn admit(&mut self) {
-        while self.streams.len() < self.cfg.max_batch {
-            let Some((id, req)) = self.queue.pop_front() else { break };
-            let mut state = self.model.decode_state();
-            let h = match self.cfg.max_seq {
-                Some(w) => crate::model::decode::prefill_windowed(
-                    self.model,
-                    &mut state,
-                    0,
-                    &req.prompt,
-                    w,
-                ),
-                None => self.model.prefill_append(&mut state, 0, &req.prompt),
-            };
-            let logits = self.model.logits_row(&h);
-            if req.max_new_tokens == 0 {
-                self.finished.push(Completion {
-                    id,
-                    prompt: req.prompt,
-                    tokens: Vec::new(),
-                    last_logits: logits,
-                });
-                continue;
+        loop {
+            let free = self.cfg.max_batch - self.streams.len();
+            let mut batch: Vec<(RequestId, Request)> = Vec::with_capacity(free);
+            while batch.len() < free {
+                let Some(item) = self.queue.pop_front() else { break };
+                batch.push(item);
             }
-            self.streams.push(Stream {
-                id,
-                last_logits: logits,
-                out: Vec::with_capacity(req.max_new_tokens),
-                max_new: req.max_new_tokens,
-                rng: Rng::new(req.sampling.seed),
-                sampling: req.sampling,
-                prompt: req.prompt,
-            });
-            self.states.push(state);
+            if batch.is_empty() {
+                return;
+            }
+            // prompts the one-shot packed pass can take whole: window
+            // unset, or prompt within the window (a single chunk of the
+            // windowed prefill — identical math, no eviction mid-prompt)
+            let mut packable: Vec<usize> = (0..batch.len())
+                .filter(|&i| match self.cfg.max_seq {
+                    None => true,
+                    Some(w) => batch[i].1.prompt.len() <= w,
+                })
+                .collect();
+            // Bound padding waste: the packed pass costs n·max(len), so
+            // one long prompt among short ones would make the burst pay
+            // mostly padding. Peel the longest prompts off to the
+            // per-request path until the set packs at least half full
+            // (Σ len ≥ n·max/2); skew within the set is then ≤ 2x.
+            packable.sort_by_key(|&i| batch[i].1.prompt.len());
+            while packable.len() >= 2 {
+                let max = batch[*packable.last().unwrap()].1.prompt.len();
+                let sum: usize = packable.iter().map(|&i| batch[i].1.prompt.len()).sum();
+                if sum * 2 >= packable.len() * max {
+                    break;
+                }
+                packable.pop();
+            }
+            let mut states: Vec<Option<DecodeState>> = (0..batch.len()).map(|_| None).collect();
+            let mut logits: Vec<Option<Vec<f32>>> = vec![None; batch.len()];
+            if packable.len() >= 2 {
+                let mut sts: Vec<DecodeState> =
+                    packable.iter().map(|_| self.model.decode_state()).collect();
+                let prompts: Vec<&[u32]> =
+                    packable.iter().map(|&i| batch[i].1.prompt.as_slice()).collect();
+                let h = self.model.prefill_batch(&mut sts, &prompts);
+                let lg = self.model.logits(&h);
+                for (j, (&i, st)) in packable.iter().zip(sts).enumerate() {
+                    states[i] = Some(st);
+                    logits[i] = Some(lg.row(j).to_vec());
+                }
+            }
+            for (i, (id, req)) in batch.into_iter().enumerate() {
+                let (state, lg) = match (states[i].take(), logits[i].take()) {
+                    (Some(s), Some(l)) => (s, l),
+                    _ => {
+                        // singleton admission or a prompt longer than the
+                        // window: the per-request path
+                        let mut state = self.model.decode_state();
+                        let h = match self.cfg.max_seq {
+                            Some(w) => crate::model::decode::prefill_windowed(
+                                self.model,
+                                &mut state,
+                                0,
+                                &req.prompt,
+                                w,
+                            ),
+                            None => self.model.prefill_append(&mut state, 0, &req.prompt),
+                        };
+                        (state, self.model.logits_row(&h))
+                    }
+                };
+                if req.max_new_tokens == 0 {
+                    self.finished.push(Completion {
+                        id,
+                        prompt: req.prompt,
+                        tokens: Vec::new(),
+                        last_logits: lg,
+                    });
+                    continue;
+                }
+                self.streams.push(Stream {
+                    id,
+                    last_logits: lg,
+                    out: Vec::with_capacity(req.max_new_tokens),
+                    max_new: req.max_new_tokens,
+                    rng: Rng::new(req.sampling.seed),
+                    sampling: req.sampling,
+                    prompt: req.prompt,
+                });
+                self.states.push(state);
+            }
+            // zero-budget completions freed their slots: admit again
+            if self.streams.len() >= self.cfg.max_batch || self.queue.is_empty() {
+                return;
+            }
         }
     }
 
@@ -349,12 +438,16 @@ impl<'m> Engine<'m> {
         }
         let mut toks: Vec<u32> = Vec::with_capacity(self.streams.len());
         for s in self.streams.iter_mut() {
-            toks.push(sample_token_with(
+            let tok = sample_token_with(
                 &s.last_logits,
                 &s.sampling,
                 &mut s.rng,
                 &mut self.sample_scratch,
-            ));
+            );
+            if let Some(cb) = self.on_token.as_mut() {
+                cb(s.id, tok);
+            }
+            toks.push(tok);
         }
         let poss: Vec<usize> = self.streams.iter().map(|s| s.pos()).collect();
         let h = self.model.decode_step_batch(&mut self.states, &poss, &toks);
@@ -664,6 +757,60 @@ mod tests {
                     batched[i]
                 );
             }
+        }
+    }
+
+    #[test]
+    fn skewed_burst_peels_long_prompt_and_still_matches_sessions() {
+        // One long prompt among shorts would make the padded pack mostly
+        // padding; admit peels it to the per-request path. Either way,
+        // every stream must reproduce its independent session.
+        let m = tiny_transformer(13);
+        let lens = [2usize, 2, 2, 40];
+        let mut eng = Engine::new(&m, EngineConfig::default());
+        for (i, &len) in lens.iter().enumerate() {
+            eng.submit(Request::greedy(prompt(len, i), 5));
+        }
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), lens.len());
+        for (i, &len) in lens.iter().enumerate() {
+            let mut s = DecodeSession::new(&m);
+            s.prefill(&prompt(len, i));
+            assert_eq!(done[i].tokens, s.generate(5), "stream {i} (len {len})");
+        }
+    }
+
+    #[test]
+    fn on_token_streams_every_token_in_order() {
+        use std::cell::RefCell;
+        use std::collections::BTreeMap;
+        use std::rc::Rc;
+
+        let m = tiny_transformer(11);
+        let streamed: Rc<RefCell<BTreeMap<RequestId, Vec<u32>>>> =
+            Rc::new(RefCell::new(BTreeMap::new()));
+        let sink = streamed.clone();
+        // 3 requests through 2 slots: tokens must stream for refilled
+        // slots too, in generation order per request
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 2, max_seq: None });
+        eng.set_on_token(move |id, tok| sink.borrow_mut().entry(id).or_default().push(tok));
+        for i in 0..3usize {
+            eng.submit(Request::greedy(prompt(4 + i, i), 3 + i));
+        }
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 3);
+        let streamed = streamed.borrow();
+        for c in &done {
+            assert_eq!(
+                streamed.get(&c.id).map(|v| v.as_slice()),
+                Some(c.tokens.as_slice()),
+                "streamed tokens must equal the completion for {:?}",
+                c.id
+            );
         }
     }
 

@@ -75,45 +75,80 @@ impl Csr {
     }
 
     /// y = x @ W^T for sparse W (n_out, m): the pruned-linear fast path.
-    /// x: (t, m) dense -> (t, n_out).
-    ///
-    /// Parallelized over chunks of W rows — not over x rows — so the
-    /// single-token decode shape (t = 1) still uses the whole pool.
-    /// Chunk boundaries are drawn by cumulative nnz, not row count, so a
-    /// few skewed dense-ish rows no longer serialize one worker. Each
-    /// worker owns the output columns of its W-row chunk across every
-    /// output row; the inner loop is a 4-chain FMA gather-dot.
+    /// x: (t, m) dense -> (t, n_out). One kernel body shared with
+    /// [`Csr16`] — see [`csr_matmul_tb`].
     pub fn matmul_tb(&self, x: &Mat) -> Mat {
-        assert_eq!(x.cols, self.cols, "csr matmul_tb: x cols {} != W cols {}", x.cols, self.cols);
-        let (t, n) = (x.rows, self.rows);
-        let mut out = Mat::zeros(t, n);
-        let chunks = nnz_balanced_chunks(&self.indptr, num_threads());
-        let base = out.data.as_mut_ptr() as usize;
-        std::thread::scope(|s| {
-            for (r0, r1) in chunks {
-                s.spawn(move || {
-                    for ti in 0..t {
-                        let xrow = x.row(ti);
-                        // SAFETY: workers write disjoint column ranges
-                        // [r0, r1) of each output row; `out` outlives the
-                        // scope and is not otherwise touched inside it.
-                        let orow: &mut [f32] = unsafe {
-                            std::slice::from_raw_parts_mut(
-                                (base as *mut f32).add(ti * n + r0),
-                                r1 - r0,
-                            )
-                        };
-                        for (o, r) in orow.iter_mut().zip(r0..r1) {
-                            let (s0, e0) =
-                                (self.indptr[r] as usize, self.indptr[r + 1] as usize);
-                            *o = gather_dot(&self.values[s0..e0], &self.indices[s0..e0], xrow);
-                        }
-                    }
-                });
-            }
-        });
-        out
+        csr_matmul_tb(self.rows, self.cols, &self.indptr, &self.indices, &self.values, x)
     }
+
+    /// Row `r` densified into a fresh buffer (zeros in pruned slots).
+    pub(crate) fn densify_row(&self, r: usize) -> Vec<f32> {
+        densify_csr_row(self.cols, &self.indptr, &self.indices, &self.values, r)
+    }
+}
+
+/// The CSR × dense kernel body, generic over the column-index width so
+/// [`Csr`] and [`Csr16`] can't drift apart (one unsafe block to audit).
+///
+/// Parallelized over chunks of W rows — not over x rows — so the
+/// single-token decode shape (t = 1) still uses the whole pool. Chunk
+/// boundaries are drawn by cumulative nnz, not row count, so a few
+/// skewed dense-ish rows no longer serialize one worker. Each worker
+/// owns the output columns of its W-row chunk across every output row;
+/// the inner loop is a 4-chain FMA gather-dot.
+fn csr_matmul_tb<I: ColIdx>(
+    rows: usize,
+    cols: usize,
+    indptr: &[u32],
+    indices: &[I],
+    values: &[f32],
+    x: &Mat,
+) -> Mat {
+    assert_eq!(x.cols, cols, "csr matmul_tb: x cols {} != W cols {}", x.cols, cols);
+    let (t, n) = (x.rows, rows);
+    let mut out = Mat::zeros(t, n);
+    let chunks = nnz_balanced_chunks(indptr, num_threads());
+    let base = out.data.as_mut_ptr() as usize;
+    std::thread::scope(|s| {
+        for (r0, r1) in chunks {
+            s.spawn(move || {
+                for ti in 0..t {
+                    let xrow = x.row(ti);
+                    // SAFETY: workers write disjoint column ranges
+                    // [r0, r1) of each output row; `out` outlives the
+                    // scope and is not otherwise touched inside it.
+                    let orow: &mut [f32] = unsafe {
+                        std::slice::from_raw_parts_mut(
+                            (base as *mut f32).add(ti * n + r0),
+                            r1 - r0,
+                        )
+                    };
+                    for (o, r) in orow.iter_mut().zip(r0..r1) {
+                        let (s0, e0) = (indptr[r] as usize, indptr[r + 1] as usize);
+                        *o = gather_dot(&values[s0..e0], &indices[s0..e0], xrow);
+                    }
+                }
+            });
+        }
+    });
+    out
+}
+
+/// Densify one CSR row (either index width) into a zeroed buffer — the
+/// single scatter loop behind `WeightStore::row` for both CSR layouts.
+fn densify_csr_row<I: ColIdx>(
+    cols: usize,
+    indptr: &[u32],
+    indices: &[I],
+    values: &[f32],
+    r: usize,
+) -> Vec<f32> {
+    let mut v = vec![0.0f32; cols];
+    let (s, e) = (indptr[r] as usize, indptr[r + 1] as usize);
+    for i in s..e {
+        v[indices[i].at()] = values[i];
+    }
+    v
 }
 
 /// Contiguous row ranges covering `0..rows` with ~equal cumulative nnz
@@ -158,27 +193,129 @@ fn nnz_balanced_chunks(indptr: &[u32], nw: usize) -> Vec<(usize, usize)> {
     chunks
 }
 
+/// Column-index storage a CSR kernel can gather through: u32 for the
+/// general layout, u16 for [`Csr16`]'s halved index bytes. `Sync` so
+/// index slices can be shared across the worker pool.
+trait ColIdx: Copy + Sync {
+    fn at(self) -> usize;
+}
+
+impl ColIdx for u32 {
+    #[inline]
+    fn at(self) -> usize {
+        self as usize
+    }
+}
+
+impl ColIdx for u16 {
+    #[inline]
+    fn at(self) -> usize {
+        self as usize
+    }
+}
+
 /// Σ values[i] · x[indices[i]] with 4 independent FMA chains (same shape
 /// as `tensor::dot`; the gathers bound throughput, the chains keep the
-/// FMAs off the dependency critical path).
+/// FMAs off the dependency critical path). Generic over the index width
+/// so `Csr` and `Csr16` share one kernel body.
 #[inline]
-fn gather_dot(values: &[f32], indices: &[u32], x: &[f32]) -> f32 {
+fn gather_dot<I: ColIdx>(values: &[f32], indices: &[I], x: &[f32]) -> f32 {
     let n = values.len().min(indices.len());
     let split = n - n % 4;
     let (vc, vr) = values[..n].split_at(split);
     let (ic, ir) = indices[..n].split_at(split);
     let mut acc = [0.0f32; 4];
     for (vk, ik) in vc.chunks_exact(4).zip(ic.chunks_exact(4)) {
-        acc[0] = vk[0].mul_add(x[ik[0] as usize], acc[0]);
-        acc[1] = vk[1].mul_add(x[ik[1] as usize], acc[1]);
-        acc[2] = vk[2].mul_add(x[ik[2] as usize], acc[2]);
-        acc[3] = vk[3].mul_add(x[ik[3] as usize], acc[3]);
+        acc[0] = vk[0].mul_add(x[ik[0].at()], acc[0]);
+        acc[1] = vk[1].mul_add(x[ik[1].at()], acc[1]);
+        acc[2] = vk[2].mul_add(x[ik[2].at()], acc[2]);
+        acc[3] = vk[3].mul_add(x[ik[3].at()], acc[3]);
     }
     let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
     for (&v, &i) in vr.iter().zip(ir) {
-        s = v.mul_add(x[i as usize], s);
+        s = v.mul_add(x[i.at()], s);
     }
     s
+}
+
+/// CSR with u16 column indices: for layers with cols <= 65536 (every
+/// linear in this repo's model zoo, and most real LLM projections),
+/// index storage halves vs [`Csr`] — 6 B/nnz instead of 8 B/nnz, which
+/// also moves the pack-vs-dense break-even down to ~38% sparsity. The
+/// coordinator's packing step auto-selects this layout when the column
+/// count fits; [`Csr`] remains the wide-matrix fallback.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Csr16 {
+    pub rows: usize,
+    pub cols: usize,
+    pub indptr: Vec<u32>,
+    pub indices: Vec<u16>,
+    pub values: Vec<f32>,
+}
+
+impl Csr16 {
+    /// Max column count a u16 index can address (index 65535 ⇒ 65536
+    /// columns).
+    pub const MAX_COLS: usize = u16::MAX as usize + 1;
+
+    pub fn from_dense(m: &Mat) -> Csr16 {
+        assert!(m.cols <= Csr16::MAX_COLS, "csr16 cols {} exceed u16 index range", m.cols);
+        let mut indptr = Vec::with_capacity(m.rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0u32);
+        for r in 0..m.rows {
+            for (c, &v) in m.row(r).iter().enumerate() {
+                if v != 0.0 {
+                    indices.push(c as u16);
+                    values.push(v);
+                }
+            }
+            indptr.push(indices.len() as u32);
+        }
+        Csr16 { rows: m.rows, cols: m.cols, indptr, indices, values }
+    }
+
+    pub fn to_dense(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            let (s, e) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
+            for i in s..e {
+                out[(r, self.indices[i] as usize)] = self.values[i];
+            }
+        }
+        out
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
+    }
+
+    /// Memory footprint in bytes (f32 values + u16 indices + u32 indptr).
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.indices.len() * 2 + self.indptr.len() * 4
+    }
+
+    /// Dense-equivalent bytes for the compression-ratio stat.
+    pub fn dense_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+
+    /// y = x @ W^T — the shared [`csr_matmul_tb`] kernel (nnz-balanced
+    /// worker partitioning, 4-chain FMA gather-dot), reading half the
+    /// index bytes per nonzero.
+    pub fn matmul_tb(&self, x: &Mat) -> Mat {
+        csr_matmul_tb(self.rows, self.cols, &self.indptr, &self.indices, &self.values, x)
+    }
+
+    /// Row `r` densified into a fresh buffer (zeros in pruned slots).
+    pub(crate) fn densify_row(&self, r: usize) -> Vec<f32> {
+        densify_csr_row(self.cols, &self.indptr, &self.indices, &self.values, r)
+    }
 }
 
 /// Packed 2:4: per 4-group, 2 values + 2x 2-bit indices (byte-packed).
@@ -366,6 +503,56 @@ mod tests {
         let dense = x.matmul_tb(&w);
         let sparse = Csr::from_dense(&w).matmul_tb(&x);
         assert!(dense.max_abs_diff(&sparse) < 1e-5);
+    }
+
+    #[test]
+    fn csr16_roundtrip_and_matmul_match_csr() {
+        let mut rng = Rng::new(61);
+        let mut w = Mat::randn(23, 40, 1.0, &mut rng);
+        magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.6 });
+        let c16 = Csr16::from_dense(&w);
+        let c32 = Csr::from_dense(&w);
+        assert_eq!(c16.to_dense(), w);
+        assert_eq!(c16.nnz(), c32.nnz());
+        // index bytes halve: 6 B/nnz vs 8 B/nnz (+ shared indptr)
+        assert_eq!(c16.bytes() + 2 * c16.nnz(), c32.bytes());
+        for t in [1usize, 5] {
+            let x = Mat::randn(t, 40, 1.0, &mut rng);
+            let dense = x.matmul_tb(&w);
+            assert!(c16.matmul_tb(&x).max_abs_diff(&dense) < 1e-5, "t={t}");
+            // identical kernel body => identical results to u32 CSR
+            assert_eq!(c16.matmul_tb(&x), c32.matmul_tb(&x), "t={t}");
+        }
+    }
+
+    #[test]
+    fn csr16_skewed_and_empty_rows_match_dense() {
+        // same edge shapes the Csr kernel is pinned on: all-zero rows and
+        // one near-dense row through the nnz-balanced partitioning
+        let mut rng = Rng::new(62);
+        let mut w = Mat::randn(19, 24, 1.0, &mut rng);
+        magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.7 });
+        for r in [0usize, 7, 18] {
+            for v in w.row_mut(r) {
+                *v = 0.0;
+            }
+        }
+        for v in w.row_mut(3) {
+            *v = 1.5; // near-dense row
+        }
+        let c = Csr16::from_dense(&w);
+        let x = Mat::randn(1, 24, 1.0, &mut rng);
+        assert!(c.matmul_tb(&x).max_abs_diff(&x.matmul_tb(&w)) < 1e-4);
+        for r in [0usize, 7, 18] {
+            assert_eq!(c.matmul_tb(&x)[(0, r)], 0.0);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "exceed u16 index range")]
+    fn csr16_rejects_wide_matrices() {
+        let w = Mat::zeros(1, Csr16::MAX_COLS + 4);
+        let _ = Csr16::from_dense(&w);
     }
 
     #[test]

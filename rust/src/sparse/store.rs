@@ -9,7 +9,7 @@
 
 use std::borrow::Cow;
 
-use super::{Csr, Packed24};
+use super::{Csr, Csr16, Packed24};
 use crate::prune::Sparsity;
 use crate::tensor::Mat;
 
@@ -18,26 +18,36 @@ use crate::tensor::Mat;
 pub enum WeightStore {
     Dense(Mat),
     Csr(Csr),
+    Csr16(Csr16),
     Packed24(Packed24),
 }
 
 impl WeightStore {
     /// Pack a pruned dense matrix into the format matching its sparsity
     /// pattern: 2:4 → [`Packed24`] (hardware-legal layout), unstructured
-    /// → [`Csr`]. Falls back to CSR if the matrix is not actually 2:4
-    /// (e.g. cols not divisible by 4), so packing never loses weights.
+    /// → CSR, with u16 column indices ([`Csr16`], 6 B/nnz) whenever the
+    /// column count fits and u32 ([`Csr`], 8 B/nnz) for wider matrices.
+    /// Falls back to CSR if the matrix is not actually 2:4 (e.g. cols
+    /// not divisible by 4), so packing never loses weights.
     ///
     /// Packing only happens when it actually shrinks the layout: below
-    /// the break-even point (CSR needs sparsity > ~50% before
-    /// 8 B/nnz + 4 B/row beats 4 B/weight) the candidate would be both
-    /// larger *and* slower than dense, so the weights stay `Dense`.
+    /// the break-even point (~38% sparsity for Csr16, ~50% for Csr) the
+    /// candidate would be both larger *and* slower than dense, so the
+    /// weights stay `Dense`.
     pub fn pack(w: &Mat, sparsity: Sparsity) -> WeightStore {
+        let csr = |w: &Mat| {
+            if w.cols <= Csr16::MAX_COLS {
+                WeightStore::Csr16(Csr16::from_dense(w))
+            } else {
+                WeightStore::Csr(Csr::from_dense(w))
+            }
+        };
         let candidate = match sparsity {
             Sparsity::SemiStructured { n: 2, m: 4 } => match Packed24::from_dense(w) {
                 Ok(p) => WeightStore::Packed24(p),
-                Err(_) => WeightStore::Csr(Csr::from_dense(w)),
+                Err(_) => csr(w),
             },
-            _ => WeightStore::Csr(Csr::from_dense(w)),
+            _ => csr(w),
         };
         if candidate.bytes() < candidate.dense_bytes() {
             candidate
@@ -50,6 +60,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(_) => "dense",
             WeightStore::Csr(_) => "csr",
+            WeightStore::Csr16(_) => "csr16",
             WeightStore::Packed24(_) => "packed24",
         }
     }
@@ -58,6 +69,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(m) => (m.rows, m.cols),
             WeightStore::Csr(c) => (c.rows, c.cols),
+            WeightStore::Csr16(c) => (c.rows, c.cols),
             WeightStore::Packed24(p) => (p.rows, p.cols),
         }
     }
@@ -82,6 +94,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(m) => x.matmul_tb(m),
             WeightStore::Csr(c) => c.matmul_tb(x),
+            WeightStore::Csr16(c) => c.matmul_tb(x),
             WeightStore::Packed24(p) => p.matmul_tb(x),
         }
     }
@@ -90,14 +103,8 @@ impl WeightStore {
     pub fn row(&self, r: usize) -> Cow<'_, [f32]> {
         match self {
             WeightStore::Dense(m) => Cow::Borrowed(m.row(r)),
-            WeightStore::Csr(c) => {
-                let mut v = vec![0.0f32; c.cols];
-                let (s, e) = (c.indptr[r] as usize, c.indptr[r + 1] as usize);
-                for i in s..e {
-                    v[c.indices[i] as usize] = c.values[i];
-                }
-                Cow::Owned(v)
-            }
+            WeightStore::Csr(c) => Cow::Owned(c.densify_row(r)),
+            WeightStore::Csr16(c) => Cow::Owned(c.densify_row(r)),
             WeightStore::Packed24(p) => {
                 let g = p.cols / 4;
                 let mut v = vec![0.0f32; p.cols];
@@ -117,6 +124,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(m) => m.data.len() * 4,
             WeightStore::Csr(c) => c.bytes(),
+            WeightStore::Csr16(c) => c.bytes(),
             WeightStore::Packed24(p) => p.bytes(),
         }
     }
@@ -130,6 +138,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(m) => m.nnz(),
             WeightStore::Csr(c) => c.nnz(),
+            WeightStore::Csr16(c) => c.nnz(),
             WeightStore::Packed24(p) => p.nnz(),
         }
     }
@@ -142,6 +151,7 @@ impl WeightStore {
         match self {
             WeightStore::Dense(m) => m.clone(),
             WeightStore::Csr(c) => c.to_dense(),
+            WeightStore::Csr16(c) => c.to_dense(),
             WeightStore::Packed24(p) => p.to_dense(),
         }
     }
@@ -194,25 +204,33 @@ mod tests {
     fn pack_chooses_format_by_sparsity_pattern() {
         let w24 = pruned(8, 16, Sparsity::two_four(), 1);
         assert_eq!(WeightStore::pack(&w24, Sparsity::two_four()).format(), "packed24");
+        // narrow matrices (cols <= 65536) auto-select the u16-index CSR
         let wu = pruned(8, 16, Sparsity::Unstructured { rate: 0.6 }, 2);
         assert_eq!(
             WeightStore::pack(&wu, Sparsity::Unstructured { rate: 0.6 }).format(),
-            "csr"
+            "csr16"
         );
         // 2:4 request on an incompatible matrix falls back to CSR (sparse
-        // enough here for CSR to beat dense bytes)
+        // enough here for the layout to beat dense bytes)
         let odd = pruned(4, 6, Sparsity::Unstructured { rate: 0.8 }, 3);
-        assert_eq!(WeightStore::pack(&odd, Sparsity::two_four()).format(), "csr");
+        assert_eq!(WeightStore::pack(&odd, Sparsity::two_four()).format(), "csr16");
     }
 
     #[test]
     fn pack_keeps_dense_below_break_even() {
-        // At 30% sparsity CSR would be larger (and slower) than dense:
-        // 8 B/nnz + 4 B/row > 4 B/weight. pack must refuse to regress.
+        // At 30% sparsity even Csr16 is larger (and slower) than dense:
+        // 6 B/nnz + 4 B/row > 4 B/weight below ~38% sparsity. pack must
+        // refuse to regress.
         let w = pruned(8, 16, Sparsity::Unstructured { rate: 0.3 }, 7);
         let store = WeightStore::pack(&w, Sparsity::Unstructured { rate: 0.3 });
         assert_eq!(store.format(), "dense");
         assert_eq!(store.to_dense(), w);
+        // ...but Csr16 packs at 50% where u32 CSR (8 B/nnz) would not
+        let w50 = pruned(8, 16, Sparsity::Unstructured { rate: 0.5 }, 9);
+        let s50 = WeightStore::pack(&w50, Sparsity::Unstructured { rate: 0.5 });
+        assert_eq!(s50.format(), "csr16");
+        assert!(s50.bytes() < s50.dense_bytes());
+        assert!(Csr::from_dense(&w50).bytes() >= s50.dense_bytes());
         // 2:4 always wins (2.25 B/weight), regardless of matrix size
         let w24 = pruned(1, 4, Sparsity::two_four(), 8);
         assert_eq!(WeightStore::pack(&w24, Sparsity::two_four()).format(), "packed24");
@@ -228,6 +246,7 @@ mod tests {
             dense.clone(),
             WeightStore::pack(&w, Sparsity::two_four()),
             WeightStore::Csr(Csr::from_dense(&w)),
+            WeightStore::Csr16(Csr16::from_dense(&w)),
         ];
         let y_ref = dense.matmul_tb(&x);
         for s in &stores {

@@ -159,7 +159,8 @@ impl Mat {
     }
 
     /// Append the rows of `other` below this matrix (same column count).
-    /// The decode-session K/V caches grow through this.
+    /// (The decode-session K/V caches now grow through [`PagedKv`];
+    /// this remains the general contiguous-growth primitive.)
     pub fn append_rows(&mut self, other: &Mat) {
         assert_eq!(
             self.cols, other.cols,
@@ -193,8 +194,11 @@ impl Mat {
         }
     }
 
-    /// Drop the first `n` rows in place (sliding-window K/V eviction).
-    /// Keeps the allocation; the remaining rows shift to the front.
+    /// Drop the first `n` rows in place. Keeps the allocation; the
+    /// remaining rows shift to the front — O(rows·cols). The decode
+    /// K/V caches no longer evict through this (see [`PagedKv`], whose
+    /// cursor eviction is O(1)); it remains the contiguous-layout
+    /// primitive and the shift-eviction bench baseline.
     pub fn drop_leading_rows(&mut self, n: usize) {
         assert!(n <= self.rows, "drop_leading_rows: {n} > {}", self.rows);
         self.data.drain(..n * self.cols);
@@ -214,6 +218,182 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     #[inline]
     fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f32 {
         &mut self.data[r * self.cols + c]
+    }
+}
+
+// ---------------------------------------------------------------------------
+// paged K/V storage (the decode-session cache layout)
+// ---------------------------------------------------------------------------
+
+/// Default rows per K/V page. One page of a d=4096 cache is 1 MiB; small
+/// enough that the over-retention window (`< page` rows past the logical
+/// window) stays negligible, large enough that page bookkeeping vanishes
+/// against the attention work over the page.
+pub const KV_PAGE_ROWS: usize = 64;
+
+/// Paged row store for decode-session K/V caches.
+///
+/// A contiguous `Mat` cache makes sliding-window eviction O(W·cols) per
+/// step: dropping the oldest row shifts the whole live window down.
+/// `PagedKv` stores rows in fixed-size pages and evicts by advancing a
+/// `head` cursor — a whole page is freed (onto a reuse list) only when
+/// every row in it has slid out of the window, so per-step eviction does
+/// **no row copying** and steady-state decode allocates nothing.
+///
+/// Logical row `i` (0 = oldest live row) lives at physical slot
+/// `head + i`; [`PagedKv::row_slices`] walks the live rows page by page
+/// in logical order, so attention consumers see exactly the sequence a
+/// contiguous layout would hand them.
+#[derive(Debug)]
+pub struct PagedKv {
+    cols: usize,
+    page_rows: usize,
+    pages: std::collections::VecDeque<Box<[f32]>>,
+    /// Offset of the first live row within `pages[0]` (0..page_rows).
+    head: usize,
+    /// Live rows.
+    len: usize,
+    /// Evicted pages kept for reuse (capacity recycling).
+    free: Vec<Box<[f32]>>,
+    /// Pages ever allocated (not recycled) — pinned by tests/benches to
+    /// prove steady-state eviction is allocation-free.
+    allocated: usize,
+}
+
+/// Manual clone: copies only the LIVE pages. The freelist holds dead
+/// recycled pages — copying it would make every session fork (per-
+/// candidate scoring, `DecodeSession::fork`) duplicate memory that
+/// contains no data.
+impl Clone for PagedKv {
+    fn clone(&self) -> PagedKv {
+        PagedKv {
+            cols: self.cols,
+            page_rows: self.page_rows,
+            pages: self.pages.clone(),
+            head: self.head,
+            len: self.len,
+            free: Vec::new(),
+            allocated: self.pages.len(),
+        }
+    }
+}
+
+impl PagedKv {
+    pub fn new(cols: usize) -> PagedKv {
+        PagedKv::with_page_rows(cols, KV_PAGE_ROWS)
+    }
+
+    /// Custom page granularity — the boundary-case tests (window == page,
+    /// window not a multiple of the page) and page-size-invariance checks
+    /// use this; production callers take [`PagedKv::new`].
+    pub fn with_page_rows(cols: usize, page_rows: usize) -> PagedKv {
+        assert!(page_rows >= 1, "page must hold at least one row");
+        PagedKv {
+            cols,
+            page_rows,
+            pages: std::collections::VecDeque::new(),
+            head: 0,
+            len: 0,
+            free: Vec::new(),
+            allocated: 0,
+        }
+    }
+
+    /// Live rows (logical length after eviction).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// Pages ever allocated fresh (recycled evictions don't count).
+    pub fn pages_allocated(&self) -> usize {
+        self.allocated
+    }
+
+    /// Pages currently holding live rows.
+    pub fn pages_live(&self) -> usize {
+        self.pages.len()
+    }
+
+    /// Logical row `i` (0 = oldest live row).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        debug_assert!(i < self.len, "row {i} out of {} live rows", self.len);
+        let slot = self.head + i;
+        let page = &self.pages[slot / self.page_rows];
+        let off = (slot % self.page_rows) * self.cols;
+        &page[off..off + self.cols]
+    }
+
+    /// Append one row at the logical end, reusing an evicted page when
+    /// the tail page is full.
+    pub fn append_row(&mut self, row: &[f32]) {
+        assert_eq!(self.cols, row.len(), "append_row: cols {} != {}", self.cols, row.len());
+        let slot = self.head + self.len;
+        if slot == self.pages.len() * self.page_rows {
+            let page = self.free.pop().unwrap_or_else(|| {
+                self.allocated += 1;
+                vec![0.0f32; self.page_rows * self.cols].into_boxed_slice()
+            });
+            self.pages.push_back(page);
+        }
+        let page = self.pages.back_mut().expect("tail page exists");
+        let off = (slot % self.page_rows) * self.cols;
+        page[off..off + self.cols].copy_from_slice(row);
+        self.len += 1;
+    }
+
+    /// Append every row of `m` (the prefill bulk append).
+    pub fn append_rows(&mut self, m: &Mat) {
+        assert_eq!(self.cols, m.cols, "append_rows: cols {} != {}", self.cols, m.cols);
+        for r in 0..m.rows {
+            self.append_row(m.row(r));
+        }
+    }
+
+    /// Slide the window: keep only the newest `window` rows. Eviction
+    /// advances the head cursor and frees whole leading pages onto the
+    /// reuse list — O(1) per call (amortized, and never copies a row),
+    /// vs the O(W·cols) shift of a contiguous layout.
+    pub fn evict_to(&mut self, window: usize) {
+        assert!(window >= 1, "window must hold at least one position");
+        if self.len <= window {
+            return;
+        }
+        self.head += self.len - window;
+        self.len = window;
+        while self.head >= self.page_rows {
+            let page = self.pages.pop_front().expect("head page exists");
+            self.free.push(page);
+            self.head -= self.page_rows;
+        }
+    }
+
+    /// Iterate the first `lim` live rows in logical order, page by page.
+    /// This is the attention hot loop's accessor: per-page slicing keeps
+    /// the per-row cost at one pointer bump (no div/mod per row) while
+    /// visiting rows in exactly the order `row(0..lim)` would.
+    pub fn row_slices(&self, lim: usize) -> impl Iterator<Item = &[f32]> + '_ {
+        debug_assert!(lim <= self.len, "row_slices: {lim} > {} live rows", self.len);
+        let (pr, cols, head) = (self.page_rows, self.cols, self.head);
+        let end = head + lim;
+        self.pages.iter().enumerate().flat_map(move |(pi, page)| {
+            let p0 = pi * pr;
+            let hi = end.saturating_sub(p0).min(pr);
+            let lo = head.saturating_sub(p0).min(hi);
+            page[lo * cols..hi * cols].chunks_exact(cols)
+        })
     }
 }
 
@@ -597,6 +777,112 @@ mod tests {
         assert_eq!(m.shape(), (4, 5));
         m.drop_leading_rows(4);
         assert_eq!(m.shape(), (0, 5));
+    }
+
+    /// Naive reference for PagedKv: a Vec of rows with shift eviction.
+    struct NaiveKv {
+        rows: Vec<Vec<f32>>,
+    }
+
+    impl NaiveKv {
+        fn push(&mut self, r: &[f32]) {
+            self.rows.push(r.to_vec());
+        }
+        fn evict_to(&mut self, w: usize) {
+            while self.rows.len() > w {
+                self.rows.remove(0);
+            }
+        }
+    }
+
+    #[test]
+    fn paged_kv_matches_naive_across_page_sizes() {
+        // page sizes around the window: smaller, equal, non-divisor,
+        // larger — row contents and order must be invariant to paging.
+        let cols = 5;
+        for &page in &[1usize, 3, 8, 11, 64] {
+            for &window in &[3usize, 8, 10] {
+                let mut p = PagedKv::with_page_rows(cols, page);
+                let mut n = NaiveKv { rows: Vec::new() };
+                let mut r = Rng::new(100 + page as u64 * 7 + window as u64);
+                for step in 0..200 {
+                    let row: Vec<f32> = (0..cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                    p.append_row(&row);
+                    n.push(&row);
+                    if step % 3 != 0 {
+                        p.evict_to(window);
+                        n.evict_to(window);
+                    }
+                    assert_eq!(p.len(), n.rows.len(), "page={page} window={window}");
+                    for i in 0..p.len() {
+                        assert_eq!(p.row(i), &n.rows[i][..], "page={page} w={window} row {i}");
+                    }
+                    let iterated: Vec<&[f32]> = p.row_slices(p.len()).collect();
+                    assert_eq!(iterated.len(), p.len());
+                    for (i, s) in iterated.iter().enumerate() {
+                        assert_eq!(*s, &n.rows[i][..], "iter page={page} w={window} row {i}");
+                    }
+                    // partial lim (a mid-chunk decode query's view)
+                    let lim = p.len() / 2;
+                    assert_eq!(p.row_slices(lim).count(), lim);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn paged_kv_eviction_is_allocation_free_in_steady_state() {
+        // Sliding a window forever must recycle pages, not allocate:
+        // after the first window's pages exist, `pages_allocated` stays
+        // flat no matter how many steps run.
+        let (cols, page, window) = (4usize, 8usize, 20usize);
+        let mut p = PagedKv::with_page_rows(cols, page);
+        let row = vec![1.0f32; cols];
+        for _ in 0..window {
+            p.append_row(&row);
+        }
+        // one extra page may be in flight beyond the window's own pages
+        let ceiling = window.div_ceil(page) + 2;
+        for _ in 0..10_000 {
+            p.append_row(&row);
+            p.evict_to(window);
+            assert!(p.pages_allocated() <= ceiling, "allocated {}", p.pages_allocated());
+            assert!(p.pages_live() <= ceiling);
+            assert_eq!(p.len(), window);
+        }
+    }
+
+    #[test]
+    fn paged_kv_window_equals_page_and_bulk_append() {
+        // window == page size: eviction frees exactly one page per page
+        // of progress; bulk append matches row-by-row.
+        let (cols, page) = (3usize, 4usize);
+        let mut a = PagedKv::with_page_rows(cols, page);
+        let mut b = PagedKv::with_page_rows(cols, page);
+        let mut r = Rng::new(7);
+        let chunk = Mat::randn(10, cols, 1.0, &mut r);
+        a.append_rows(&chunk);
+        for i in 0..chunk.rows {
+            b.append_row(chunk.row(i));
+        }
+        for i in 0..10 {
+            assert_eq!(a.row(i), b.row(i));
+        }
+        a.evict_to(page);
+        assert_eq!(a.len(), page);
+        for i in 0..page {
+            assert_eq!(a.row(i), chunk.row(10 - page + i));
+        }
+        // clones are independent (the session fork path) and carry only
+        // LIVE pages — the dead freelist is not duplicated
+        let mut c = a.clone();
+        assert_eq!(c.pages_allocated(), c.pages_live());
+        for i in 0..page {
+            assert_eq!(c.row(i), a.row(i));
+        }
+        c.append_row(chunk.row(0));
+        assert_eq!(a.len(), page);
+        assert_eq!(c.len(), page + 1);
     }
 
     #[test]

@@ -122,12 +122,12 @@ fn pruned_checkpoint_roundtrip() {
     pruned.save(&path).unwrap();
     let loaded = Transformer::load(pruned.cfg, &path).unwrap();
     // layouts, sparsity and behaviour survive the round-trip exactly:
-    // the pipeline packed the linears into CSR and the ATS2 checkpoint
-    // preserves that layout (and its compression) on disk
+    // the pipeline packed the linears into u16-index CSR and the ATS2
+    // checkpoint preserves that layout (and its compression) on disk
     for name in loaded.params.names() {
         assert_eq!(loaded.params.get(name).unwrap(), pruned.params.get(name).unwrap());
     }
-    assert_eq!(loaded.weight(0, "w1").format(), "csr");
+    assert_eq!(loaded.weight(0, "w1").format(), "csr16");
     assert_eq!(loaded.params.bytes(), pruned.params.bytes());
     assert!(loaded.params.bytes() < loaded.params.dense_bytes());
     let toks: Vec<u32> = (0..32).map(|i| (i % 50) as u32).collect();
@@ -151,9 +151,10 @@ fn csr_fast_path_matches_dense_forward() {
     ));
     prune_model(&mut pruned, &calib, &cfg, None).unwrap();
 
-    // the pipeline already left w1 in CSR; its matmul matches a dense run
+    // the pipeline already left w1 in u16-index CSR (cols < 65536); its
+    // matmul matches a dense run
     let w = pruned.weight(0, "w1");
-    assert_eq!(w.format(), "csr");
+    assert_eq!(w.format(), "csr16");
     let dense_w = w.to_dense();
     let x = apt::tensor::Mat::randn(8, w.cols(), 1.0, &mut Rng::new(9));
     let dense = x.matmul_tb(&dense_w);
@@ -235,9 +236,10 @@ fn weightstore_forward_equivalence_both_families_both_patterns() {
 }
 
 /// 2 families × 3 weight layouts: the model grid the serving-equivalence
-/// tests sweep. Layout "dense" leaves init weights alone; "csr"/
+/// tests sweep. Layout "dense" leaves init weights alone; "csr16"/
 /// "packed24" prune + pack every block linear and assert the store
-/// actually left the dense format.
+/// actually left the dense format (pack auto-selects the u16-index CSR
+/// at these widths).
 fn layout_variants() -> Vec<(String, Box<dyn LanguageModel>)> {
     use apt::model::{Mamba, MambaConfig, BLOCK_LINEARS, MAMBA_LINEARS};
 
@@ -247,13 +249,13 @@ fn layout_variants() -> Vec<(String, Box<dyn LanguageModel>)> {
         n_layers: 2,
         n_heads: 2,
         d_ff: 24,
-        max_seq: 128,
+        max_seq: 256,
     };
-    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 128 };
+    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 256 };
     let mut models: Vec<(String, Box<dyn LanguageModel>)> = Vec::new();
     for (layout, sparsity) in [
         ("dense", None),
-        ("csr", Some(Sparsity::Unstructured { rate: 0.6 })),
+        ("csr16", Some(Sparsity::Unstructured { rate: 0.6 })),
         ("packed24", Some(Sparsity::two_four())),
     ] {
         let mut t = Transformer::init(tcfg, &mut Rng::new(51));
@@ -380,6 +382,121 @@ fn engine_batch_matches_independent_sessions() {
                         "{label} B={bsz} stream {i}: {a} vs {b}"
                     );
                 }
+            }
+        }
+    }
+}
+
+/// Paged-K/V acceptance: at context lengths that cross multiple 64-row
+/// page boundaries, the incremental session still reproduces the
+/// full-forward oracle to <1e-5 (exact in practice) — both families ×
+/// Dense/Csr16/Packed24, one-shot and split prefill.
+#[test]
+fn paged_kv_matches_full_forward_across_page_boundaries() {
+    use apt::model::DecodeSession;
+
+    // 150 tokens: crosses the 64-row page boundary at 64 and 128, ends
+    // mid-page; the split at 100 lands inside the second page.
+    let t_len = 150usize;
+    for (label, model) in &layout_variants() {
+        let mut rng = Rng::new(130);
+        let toks: Vec<u32> = (0..t_len).map(|_| rng.below(47) as u32).collect();
+
+        let mut x = model.embed_tokens(&toks);
+        for b in 0..model.n_blocks() {
+            x = model.forward_block(b, &x, (1, toks.len()));
+        }
+        let want = model.logits_last(&x);
+
+        let check = |got: &[f32], how: &str| {
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "{label} {how}: {g} vs {w}");
+            }
+        };
+        let mut s = DecodeSession::new(model.as_ref());
+        check(s.prefill(&toks), "one-shot prefill");
+        // split prefill: the continuation chunk enters through the
+        // incremental arm against a partially-filled page
+        let mut s2 = DecodeSession::new(model.as_ref());
+        s2.prefill(&toks[..100]);
+        check(s2.prefill(&toks[100..]), "split prefill");
+    }
+}
+
+/// Page-eviction boundary cases through the serving surfaces: windows
+/// equal to the page size (64), smaller than a page, and not a multiple
+/// of the page size, under sustained eviction (prompt + generation ≫
+/// window). The engine's batch arm and the windowed single-stream
+/// session must agree token-for-token, and the cache must stay bounded.
+#[test]
+fn paged_eviction_window_boundary_cases() {
+    use apt::model::DecodeSession;
+    use apt::serve::{Engine, EngineConfig, Request};
+
+    for (label, model) in &layout_variants() {
+        // 64 == page size; 50 and 100 straddle it without dividing it
+        for &w in &[64usize, 50, 100] {
+            let prompt: Vec<u32> = (0..120).map(|i| ((i * 5 + 3) % 47) as u32).collect();
+            let gen = 40usize;
+            let mut eng =
+                Engine::new(model.as_ref(), EngineConfig { max_batch: 2, max_seq: Some(w) });
+            eng.submit(Request::greedy(prompt.clone(), gen));
+            while eng.has_work() {
+                eng.step();
+            }
+            let c = eng.take_finished().remove(0);
+            assert_eq!(c.tokens.len(), gen, "{label} w={w}");
+
+            let mut s = DecodeSession::with_window(model.as_ref(), w);
+            s.prefill(&prompt);
+            assert_eq!(s.generate(gen), c.tokens, "{label} w={w}");
+            assert!(s.len() == prompt.len() + gen, "{label} w={w}");
+        }
+    }
+}
+
+/// Packed cross-request admission reproduces per-request prefills: a
+/// burst of mixed-length prompts admitted in one step must generate
+/// exactly what independent sessions generate (the padded Full-arm pass
+/// is bit-identical per stream), including under a window and for the
+/// prefill-only (zero-budget) completions whose logits come from the
+/// batched (B, V) matmul.
+#[test]
+fn packed_prefill_admission_matches_independent_sessions() {
+    use apt::model::DecodeSession;
+    use apt::serve::{Engine, EngineConfig, Request};
+
+    for (label, model) in &layout_variants() {
+        for max_seq in [None, Some(32usize)] {
+            let prompts: Vec<Vec<u32>> = (0..5)
+                .map(|i| (0..3 + i * 9).map(|j| ((j * 3 + i * 7) % 47) as u32).collect())
+                .collect();
+            // i = 3 ⇒ 30 tokens ≤ window; i = 4 ⇒ 39 tokens > window,
+            // forcing the per-request windowed fallback inside a packed
+            // admission burst
+            let mut eng = Engine::new(model.as_ref(), EngineConfig { max_batch: 8, max_seq });
+            for p in &prompts {
+                eng.submit(Request::greedy(p.clone(), 4));
+            }
+            eng.submit(Request::greedy(prompts[1].clone(), 0)); // prefill-only
+            eng.run();
+            let mut done = eng.take_finished();
+            done.sort_by_key(|c| c.id);
+            assert_eq!(done.len(), 6, "{label}");
+
+            for (i, p) in prompts.iter().enumerate() {
+                let mut s = match max_seq {
+                    Some(w) => DecodeSession::with_window(model.as_ref(), w),
+                    None => DecodeSession::new(model.as_ref()),
+                };
+                s.prefill(p);
+                if i == 1 {
+                    // the zero-budget completion carries the prompt logits
+                    for (a, b) in done[5].last_logits.iter().zip(s.last_logits()) {
+                        assert!((a - b).abs() < 1e-5, "{label} prefill-only: {a} vs {b}");
+                    }
+                }
+                assert_eq!(done[i].tokens, s.generate(4), "{label} stream {i}");
             }
         }
     }

@@ -4,14 +4,20 @@
 #   scripts/bench.sh [filter]
 #
 # Sections (substring filters): gemm hessian finalize cholesky compensate
-# mrp select sequential mask24 sparse decode serve pipeline hlo. `decode`
-# covers both the pruned-model decode benches and the decode_session_*
-# benches (incremental KV-cache/recurrent serving path vs the quadratic
-# full-forward baseline, populating derived.decode_session_speedup_*).
-# `serve` runs the batched continuous-decoding engine at B ∈ {1, 4, 16}
-# (dense + packed24 stores), populating
+# mrp select sequential mask24 sparse decode paged serve pipeline hlo.
+# `decode` covers both the pruned-model decode benches and the
+# decode_session_* benches (incremental KV-cache/recurrent serving path
+# vs the quadratic full-forward baseline, populating
+# derived.decode_session_speedup_*). `paged` measures sliding-window
+# K/V eviction (contiguous shift vs paged cursor), populating
+# derived.decode_eviction_ns_per_step_{shift,paged}. `serve` runs the
+# batched continuous-decoding engine at B ∈ {1, 4, 16} (dense +
+# packed24 stores), populating
 # derived.engine_throughput_tokens_per_s_{b1,b4,b16} and
-# derived.engine_batch_speedup_{b4,b16} (plus *_packed24 variants).
+# derived.engine_batch_speedup_{b4,b16} (plus *_packed24 variants), and
+# also the cross-request packed-prefill and threaded batch-attention
+# benches (derived.engine_prefill_packed_speedup,
+# derived.batch_attn_thread_speedup).
 #
 # The bench binary itself writes BENCH_perf.json at the repo root and
 # prints a delta table against the previous run (a filtered run keeps the

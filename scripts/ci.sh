@@ -18,6 +18,9 @@ cargo test -q
 echo "== smoke: serving engine example =="
 cargo run --release --example serve_engine
 
+echo "== smoke: long context (window << prompt, sustained paged eviction) =="
+cargo run --release --example long_context_smoke
+
 echo "== hygiene: rustfmt check =="
 cargo fmt --all -- --check
 
