@@ -635,6 +635,99 @@ fn bench_batch_attn(rec: &mut Recorder) {
     println!("  -> threaded batch attention: {speedup:.2}x vs serial at B·T = {}", bsz * t);
 }
 
+/// Self-speculative serving vs the plain dense engine: the dense target
+/// serves the same greedy workload directly and in draft-propose /
+/// target-verify rounds against a magnitude-2:4 pruned copy of its OWN
+/// weights (the pair `coordinator::prune_draft_model` produces), for
+/// k ∈ {2, 4, 8}. The lossless gate (`spec_serve_report` asserts
+/// bit-identical outputs) runs once untimed; the timed runs pre-admit
+/// prompts like `bench_serve` (draft prefill stays inside the timed
+/// region — the speculative path really pays it). Records
+/// `spec_decode_tokens_per_s_{k2,k4,k8}`, `spec_acceptance_rate` (at
+/// k=4), and `spec_decode_speedup_vs_dense` (best k) under `derived`.
+fn bench_speculative(rec: &mut Recorder) {
+    use apt::model::BLOCK_LINEARS;
+    use apt::serve::speculative::spec_serve_report;
+    use apt::serve::{Engine, EngineConfig, Request};
+    use apt::sparse::WeightStore;
+
+    let cfg = TransformerConfig {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq: 512,
+    };
+    let target = prune_pack_transformer(cfg, 101, None);
+    let mut draft = Transformer { cfg: target.cfg, params: target.params.clone() };
+    let sp = Sparsity::two_four();
+    for b in 0..cfg.n_layers {
+        for name in BLOCK_LINEARS {
+            apt::prune::magnitude_prune(draft.weight_mut(b, name).dense_mut(), sp);
+            let w = draft.weight(b, name).to_dense();
+            *draft.weight_mut(b, name) = WeightStore::pack(&w, sp);
+        }
+    }
+    let (bsz, plen, new_toks, iters) = (4usize, 64usize, 32usize, 5usize);
+    let prompts: Vec<Vec<u32>> = (0..bsz)
+        .map(|i| (0..plen).map(|j| ((j * 7 + i * 13) % 512) as u32).collect())
+        .collect();
+    let ecfg = EngineConfig { max_batch: bsz, max_seq: None };
+
+    let probe = spec_serve_report(&target, &draft, &prompts, new_toks, 4, ecfg);
+    rec.derived.insert("spec_acceptance_rate".into(), probe.acceptance_rate);
+    println!(
+        "  -> spec acceptance rate {:.3} ({:.2} tokens/round at k=4)",
+        probe.acceptance_rate, probe.tokens_per_round
+    );
+
+    let make_dense = || {
+        let mut eng = Engine::new(&target, ecfg);
+        for p in &prompts {
+            eng.submit(Request::greedy(p.clone(), new_toks));
+        }
+        eng.admit(); // target prefill OUTSIDE the timed region
+        eng
+    };
+    let mut prepped: Vec<Engine> = (0..iters + 2).map(|_| make_dense()).collect();
+    let dense_med = rec.bench(&format!("spec_decode dense b{bsz} {new_toks}new"), iters, || {
+        let mut eng = prepped.pop().unwrap_or_else(|| make_dense());
+        eng.run();
+        std::hint::black_box(eng.take_finished());
+    });
+    let dense_tps = (bsz * new_toks) as f64 / (dense_med / 1000.0).max(1e-9);
+    rec.derived.insert("spec_decode_tokens_per_s_dense".into(), dense_tps);
+
+    let mut best_tps = 0.0f64;
+    for k in [2usize, 4, 8] {
+        let make_spec = || {
+            let mut eng = Engine::speculative(&target, &draft, k, ecfg);
+            for p in &prompts {
+                eng.submit(Request::greedy(p.clone(), new_toks));
+            }
+            eng.admit();
+            eng
+        };
+        let mut prepped: Vec<Engine> = (0..iters + 2).map(|_| make_spec()).collect();
+        let med = rec.bench(
+            &format!("spec_decode speculative k{k} b{bsz} {new_toks}new"),
+            iters,
+            || {
+                let mut eng = prepped.pop().unwrap_or_else(|| make_spec());
+                eng.run();
+                std::hint::black_box(eng.take_finished());
+            },
+        );
+        let tps = (bsz * new_toks) as f64 / (med / 1000.0).max(1e-9);
+        best_tps = best_tps.max(tps);
+        rec.derived.insert(format!("spec_decode_tokens_per_s_k{k}"), tps);
+    }
+    let speedup = best_tps / dense_tps.max(1e-9);
+    rec.derived.insert("spec_decode_speedup_vs_dense".into(), speedup);
+    println!("  -> speculative best-k throughput vs dense engine: {speedup:.2}x");
+}
+
 /// End-to-end coordinator run (calibrate -> prune -> propagate) on a
 /// small trained transformer, so every future PR has a pipeline-level
 /// trajectory, not just kernel medians.
@@ -803,6 +896,10 @@ fn main() {
         bench_serve(&mut rec);
         bench_prefill_packed(&mut rec);
         bench_batch_attn(&mut rec);
+    }
+
+    if run("speculative") {
+        bench_speculative(&mut rec);
     }
 
     if run("pipeline") {

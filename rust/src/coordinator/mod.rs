@@ -254,6 +254,27 @@ pub fn prune_model(
     Ok(report)
 }
 
+/// Prune `draft` (a fresh copy of `dense`) in place to produce a
+/// speculative-decoding draft — the "prune → keep both → serve
+/// speculatively" wiring: the caller keeps `dense` as the lossless
+/// verification target and hands both to
+/// [`Engine::speculative`](crate::serve::Engine::speculative) or a
+/// [`SpecSession`](crate::serve::speculative::SpecSession). Checks the
+/// pair actually speaks the same token space (same arch/vocab) before
+/// pruning; the returned report is the usual [`PipelineReport`].
+pub fn prune_draft_model(
+    dense: &dyn LanguageModel,
+    draft: &mut dyn LanguageModel,
+    calib: &[Vec<u32>],
+    cfg: &PipelineConfig,
+    runtime: Option<&Runtime>,
+) -> Result<PipelineReport> {
+    assert_eq!(dense.arch(), draft.arch(), "draft must copy the target architecture");
+    assert_eq!(dense.vocab(), draft.vocab(), "draft and target must share a vocabulary");
+    assert_eq!(dense.n_params(), draft.n_params(), "draft must start as a copy of the target");
+    prune_model(draft, calib, cfg, runtime)
+}
+
 /// Stage 1: one Hessian accumulator per linear name, batches in parallel.
 fn calibrate_block(
     model: &dyn LanguageModel,

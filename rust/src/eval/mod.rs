@@ -75,6 +75,47 @@ pub fn perplexity_streaming(model: &dyn LanguageModel, data: &Dataset, window: u
     (nll / (toks.len() - 1) as f64).exp()
 }
 
+/// Fraction of next-token positions where the draft's greedy argmax
+/// equals the target's, over the given eval windows — a cheap offline
+/// predictor of speculative-decoding acceptance rate (the verifier
+/// accepts a proposal exactly when the two argmaxes agree on the true
+/// prefix). Use it to choose a draft sparsity before paying for a
+/// serving run: acceptance ≈ agreement, and speedup needs agreement to
+/// clear `k·cost_draft/cost_target` (see PERF.md iteration 8).
+/// Parallelizes over windows like [`perplexity_windows`].
+pub fn greedy_agreement(
+    target: &dyn LanguageModel,
+    draft: &dyn LanguageModel,
+    windows: &[&[u32]],
+) -> f64 {
+    assert_eq!(target.vocab(), draft.vocab(), "draft and target must share a vocabulary");
+    assert!(!windows.is_empty(), "agreement needs at least one window");
+    let nt = num_threads().min(windows.len());
+    let chunk = windows.len().div_ceil(nt);
+    let totals = std::sync::Mutex::new((0usize, 0usize));
+    std::thread::scope(|s| {
+        for ws in windows.chunks(chunk) {
+            let totals = &totals;
+            s.spawn(move || {
+                let mut agree = 0usize;
+                let mut n = 0usize;
+                for w in ws {
+                    let bt = (1, w.len());
+                    let pt = target.next_token_argmaxes(w, bt);
+                    let pd = draft.next_token_argmaxes(w, bt);
+                    agree += pt.iter().zip(&pd).filter(|(a, b)| a == b).count();
+                    n += pt.len();
+                }
+                let mut t = totals.lock().unwrap();
+                t.0 += agree;
+                t.1 += n;
+            });
+        }
+    });
+    let (agree, n) = totals.into_inner().unwrap();
+    agree as f64 / n.max(1) as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -159,6 +200,26 @@ mod tests {
         let a = perplexity_streaming(&model, &data, 8);
         assert!(a.is_finite() && a > 1.0);
         assert_eq!(a, perplexity_streaming(&model, &data, 8));
+    }
+
+    #[test]
+    fn greedy_agreement_is_one_for_self_and_drops_for_unrelated_draft() {
+        let toks: Vec<u32> = (0..48).map(|i| (i * 5 % 17) as u32).collect();
+        let windows: Vec<&[u32]> = toks.chunks(16).collect();
+        let t = Transformer::init(
+            TransformerConfig { vocab: 17, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_seq: 32 },
+            &mut Rng::new(31),
+        );
+        assert_eq!(greedy_agreement(&t, &t, &windows), 1.0, "self-agreement");
+        // an unrelated draft should agree less than perfectly (argmax
+        // collisions are possible but not universal at vocab 17)
+        let other = Transformer::init(
+            TransformerConfig { vocab: 17, d_model: 16, n_layers: 2, n_heads: 2, d_ff: 24, max_seq: 32 },
+            &mut Rng::new(32),
+        );
+        let a = greedy_agreement(&t, &other, &windows);
+        assert!((0.0..1.0).contains(&a), "agreement {a}");
+        assert_eq!(a, greedy_agreement(&t, &other, &windows), "deterministic");
     }
 
     #[test]

@@ -65,6 +65,21 @@ impl AnyModel {
     pub fn engine(&self, cfg: EngineConfig) -> Engine<'_> {
         Engine::new(self.as_dyn(), cfg)
     }
+
+    /// Speculative serving over this (dense target) model with a pruned
+    /// `draft` — typically a [`AnyModel::duplicate`] run through
+    /// [`crate::coordinator::prune_draft_model`]. Greedy streams decode
+    /// in draft-propose / target-verify rounds (see
+    /// [`crate::serve::speculative`]); output is bit-identical to
+    /// [`AnyModel::engine`] on the same requests.
+    pub fn spec_engine<'a>(
+        &'a self,
+        draft: &'a AnyModel,
+        k: usize,
+        cfg: EngineConfig,
+    ) -> Engine<'a> {
+        Engine::speculative(self.as_dyn(), draft.as_dyn(), k, cfg)
+    }
 }
 
 pub struct Zoo {

@@ -57,6 +57,28 @@ impl DecodeState {
         }
     }
 
+    /// Roll back every per-block K/V cache to its OLDEST `len` rows —
+    /// the speculative-decoding rollback: draft tokens the target
+    /// rejected are discarded by moving the paged tail cursor back
+    /// ([`crate::tensor::PagedKv::truncate_to`], O(1), freed pages
+    /// recycled), never by recomputing. Panics for mamba: recurrent
+    /// state folds every consumed token into `h` irreversibly, so
+    /// rollback there is a pre-round [`Clone`] snapshot instead (the
+    /// `fork` idiom) — see [`crate::serve::speculative`].
+    pub fn truncate_to(&mut self, len: usize) {
+        match self {
+            DecodeState::Transformer(blocks) => {
+                for st in blocks {
+                    st.k.truncate_to(len);
+                    st.v.truncate_to(len);
+                }
+            }
+            DecodeState::Mamba(_) => {
+                panic!("mamba state cannot be truncated; snapshot via clone() instead")
+            }
+        }
+    }
+
     /// Positions currently held in the K/V caches (`None` for mamba,
     /// whose state does not grow with context).
     pub fn cached_len(&self) -> Option<usize> {
@@ -302,6 +324,35 @@ mod tests {
         assert_eq!(base.len(), 3);
         assert_eq!(base.last_logits(), &snapshot[..]);
         assert_ne!(a.last_logits(), b.last_logits());
+    }
+
+    #[test]
+    fn truncate_rolls_back_overshoot_bit_exactly() {
+        // The spec-decode rollback contract: append a rejected tail,
+        // truncate it away, and the continuation is bit-identical to a
+        // state that never saw the overshoot.
+        let m = tiny_transformer(8);
+        let ctx: Vec<u32> = (0..10).map(|i| (i * 3 % 31) as u32).collect();
+        let mut clean = m.decode_state();
+        m.prefill_append(&mut clean, 0, &ctx);
+        let mut overshot = m.decode_state();
+        m.prefill_append(&mut overshot, 0, &ctx);
+        m.decode_append(&mut overshot, ctx.len(), &[4, 9, 2, 7]);
+        assert_eq!(overshot.cached_len(), Some(ctx.len() + 4));
+        overshot.truncate_to(ctx.len());
+        assert_eq!(overshot.cached_len(), Some(ctx.len()));
+        let h_clean = m.decode_append(&mut clean, ctx.len(), &[11, 13]);
+        let h_rolled = m.decode_append(&mut overshot, ctx.len(), &[11, 13]);
+        assert_eq!(h_clean, h_rolled);
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot be truncated")]
+    fn mamba_truncate_panics() {
+        let m = tiny_mamba(9);
+        let mut st = m.decode_state();
+        m.decode_append(&mut st, 0, &[1, 2, 3]);
+        st.truncate_to(1);
     }
 
     #[test]

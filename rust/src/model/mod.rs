@@ -190,6 +190,17 @@ pub trait LanguageModel: Send + Sync {
     /// Panics if `state` came from the other architecture.
     fn decode_append(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Vec<f32>;
 
+    /// Like [`LanguageModel::decode_append`], but returns the final
+    /// hidden rows of ALL `tokens.len()` appended positions as a
+    /// (T, d) matrix — the speculative-verification primitive: the
+    /// target model scores every draft position in one batched forward,
+    /// and each row fed to [`LanguageModel::logits_row`] matches what a
+    /// sequence of single-token `decode_append` calls would produce at
+    /// the same absolute positions, bit-for-bit (the incremental arms
+    /// append the whole chunk's K/V first, then attend row `i` against
+    /// exactly `pos0 + i + 1` cached rows / scan positions in order).
+    fn decode_append_full(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Mat;
+
     /// Prefill fast path: semantically identical to
     /// [`LanguageModel::decode_append`], but free to run a whole-chunk
     /// batch arm when starting from an empty cache. The transformer
@@ -261,6 +272,27 @@ pub trait LanguageModel: Send + Sync {
             for i in 0..t - 1 {
                 let row = logits.row(s * t + i);
                 out.push(log_softmax_at(row, tokens[s * t + i + 1] as usize));
+            }
+        }
+        out
+    }
+
+    /// Greedy next-token prediction at every position of a window (one
+    /// full forward, one argmax per row) — the eval-side primitive
+    /// behind [`greedy_agreement`](crate::eval::greedy_agreement), which
+    /// compares a pruned draft's argmaxes against the dense target's to
+    /// predict speculative-decoding acceptance.
+    fn next_token_argmaxes(&self, tokens: &[u32], bt: (usize, usize)) -> Vec<u32> {
+        let mut x = self.embed_tokens(tokens);
+        for b in 0..self.n_blocks() {
+            x = self.forward_block(b, &x, bt);
+        }
+        let logits = self.logits(&x);
+        let (bsz, t) = bt;
+        let mut out = Vec::with_capacity(bsz * (t - 1));
+        for s in 0..bsz {
+            for i in 0..t - 1 {
+                out.push(decode::argmax(logits.row(s * t + i)) as u32);
             }
         }
         out
@@ -374,6 +406,17 @@ impl LanguageModel for Transformer {
             x = self.block_decode(b, &x, pos0, &mut st[b]);
         }
         x.row(x.rows - 1).to_vec()
+    }
+    fn decode_append_full(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Mat {
+        let DecodeState::Transformer(st) = state else {
+            panic!("decode state/arch mismatch: microllama fed a mamba state")
+        };
+        assert_eq!(st.len(), self.cfg.n_layers, "decode state from another model");
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            x = self.block_decode(b, &x, pos0, &mut st[b]);
+        }
+        x
     }
     fn prefill_append(&self, state: &mut DecodeState, pos0: usize, tokens: &[u32]) -> Vec<f32> {
         // the threaded Full-arm fast path only applies from an empty
@@ -527,6 +570,17 @@ impl LanguageModel for Mamba {
         }
         x.row(x.rows - 1).to_vec()
     }
+    fn decode_append_full(&self, state: &mut DecodeState, _pos0: usize, tokens: &[u32]) -> Mat {
+        let DecodeState::Mamba(st) = state else {
+            panic!("decode state/arch mismatch: micromamba fed a transformer state")
+        };
+        assert_eq!(st.len(), self.cfg.n_layers, "decode state from another model");
+        let mut x = self.embed(tokens);
+        for b in 0..self.cfg.n_layers {
+            x = self.block_decode(b, &x, &mut st[b]);
+        }
+        x
+    }
     fn decode_step_batch(
         &self,
         states: &mut [DecodeState],
@@ -621,6 +675,34 @@ mod tests {
             let fast = model.logits_last(&x);
             // same rmsnorm loop + same `dot` kernel: bit-for-bit
             assert_eq!(fast.as_slice(), full.row(full.rows - 1), "{}", model.arch());
+        }
+    }
+
+    #[test]
+    fn decode_append_full_rows_match_sequential_steps() {
+        // The speculative-verification contract: one batched chunk
+        // append yields, per position, the SAME final hidden row (and
+        // hence the same logits_row) as single-token steps — bit-exact.
+        for model in both_archs(5) {
+            let toks: Vec<u32> = (0..9).map(|i| (i * 7 % 17) as u32).collect();
+            let mut st_seq = model.decode_state();
+            let mut seq_rows = Vec::new();
+            for (i, &t) in toks.iter().enumerate() {
+                seq_rows.push(model.decode_append(&mut st_seq, i, &[t]));
+            }
+            let mut st = model.decode_state();
+            model.decode_append(&mut st, 0, &toks[..4]);
+            let full = model.decode_append_full(&mut st, 4, &toks[4..]);
+            assert_eq!(full.rows, 5, "{}", model.arch());
+            for i in 0..full.rows {
+                assert_eq!(full.row(i), &seq_rows[4 + i][..], "{} row {i}", model.arch());
+                assert_eq!(
+                    model.logits_row(full.row(i)),
+                    model.logits_row(&seq_rows[4 + i]),
+                    "{} logits {i}",
+                    model.arch()
+                );
+            }
         }
     }
 

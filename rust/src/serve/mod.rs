@@ -33,6 +33,13 @@
 //! [`score_continuations`] is the eval-side consumer: all candidate
 //! continuations of a zero-shot task score as one batch from a single
 //! shared prefill.
+//!
+//! [`Engine::speculative`] swaps the one-token-per-step decode loop for
+//! draft-propose / target-verify rounds over a pruned draft model (see
+//! [`speculative`]) — greedy streams emit several tokens per target
+//! sweep, bit-identical to plain decoding.
+
+pub mod speculative;
 
 use std::collections::VecDeque;
 
@@ -256,6 +263,15 @@ pub struct Engine<'m> {
     /// Streaming hook: called with (request, token) the moment each new
     /// token is sampled, instead of only at completion.
     on_token: Option<Box<dyn FnMut(RequestId, u32) + 'm>>,
+    /// Speculative mode: the pruned draft model and the proposal depth
+    /// `k`. `None` = plain one-token-per-step decoding.
+    spec: Option<(&'m dyn LanguageModel, usize)>,
+    /// Per-stream draft state + pending token, parallel to `streams`
+    /// (speculative mode only; built lazily after admission).
+    spec_cursors: Vec<speculative::SpecCursor>,
+    /// Acceptance accounting across every stream, including retired
+    /// ones.
+    spec_stats: speculative::SpecStats,
 }
 
 impl<'m> Engine<'m> {
@@ -274,7 +290,40 @@ impl<'m> Engine<'m> {
             finished: Vec::new(),
             sample_scratch: SampleScratch::default(),
             on_token: None,
+            spec: None,
+            spec_cursors: Vec::new(),
+            spec_stats: speculative::SpecStats::default(),
         }
+    }
+
+    /// Speculative-decoding engine: same continuous batching, admission
+    /// packing and windowing, but each stream decodes in
+    /// draft-propose / target-verify rounds (see [`speculative`]) so one
+    /// target sweep can emit up to `k + 1` tokens. Greedy requests only
+    /// — lossless verification is an argmax identity — and the output is
+    /// bit-identical to [`Engine::new`] over `model` alone.
+    pub fn speculative(
+        model: &'m dyn LanguageModel,
+        draft: &'m dyn LanguageModel,
+        k: usize,
+        cfg: EngineConfig,
+    ) -> Engine<'m> {
+        assert!(k >= 1, "speculation depth k must be at least 1");
+        assert_eq!(
+            model.vocab(),
+            draft.vocab(),
+            "draft and target must share a vocabulary"
+        );
+        let mut eng = Engine::new(model, cfg);
+        eng.spec = Some((draft, k));
+        eng
+    }
+
+    /// Aggregated speculative acceptance stats (every round of every
+    /// stream, including retired ones). All zeros outside speculative
+    /// mode.
+    pub fn spec_stats(&self) -> speculative::SpecStats {
+        self.spec_stats
     }
 
     /// Register a streaming token callback: `f(id, token)` fires the
@@ -289,6 +338,13 @@ impl<'m> Engine<'m> {
     /// Queue a request; it becomes active when a batch slot frees up.
     pub fn submit(&mut self, req: Request) -> RequestId {
         assert!(!req.prompt.is_empty(), "request needs a non-empty prompt");
+        if self.spec.is_some() {
+            assert!(
+                req.sampling.temperature <= 0.0,
+                "speculative mode serves greedy requests only \
+                 (lossless verification is an argmax identity)"
+            );
+        }
         let id = RequestId(self.next_id);
         self.next_id += 1;
         self.queue.push_back((id, req));
@@ -332,6 +388,14 @@ impl<'m> Engine<'m> {
     /// serve benches) can pay the prefill cost eagerly, separate from
     /// the decode loop.
     pub fn admit(&mut self) {
+        // Shortest-first admission: sort the WHOLE pending queue by
+        // prompt length before slots are filled, so the ≥50%-fill
+        // peeling below sees length-sorted candidates and mixed-length
+        // bursts pack tightly instead of pairing a long straggler with
+        // whatever arrived next. The sort is stable — equal-length
+        // requests keep submission order — but under sustained skew a
+        // long prompt can wait; aging is a noted follow-up (ROADMAP).
+        self.queue.make_contiguous().sort_by_key(|(_, r)| r.prompt.len());
         loop {
             let free = self.cfg.max_batch - self.streams.len();
             let mut batch: Vec<(RequestId, Request)> = Vec::with_capacity(free);
@@ -432,6 +496,9 @@ impl<'m> Engine<'m> {
     /// matmul), then retire finished streams so their slots refill next
     /// step. Returns the number of tokens generated.
     pub fn step(&mut self) -> usize {
+        if self.spec.is_some() {
+            return self.spec_step();
+        }
         self.admit();
         if self.streams.is_empty() {
             return 0;
@@ -477,6 +544,78 @@ impl<'m> Engine<'m> {
         retired.reverse();
         self.finished.extend(retired);
         toks.len()
+    }
+
+    /// One speculative continuous-batching step: admit queued requests
+    /// (the target still prefills through the packed path), lazily
+    /// prefill the draft for newly admitted streams, then run ONE
+    /// propose/verify round per active stream — each emits between 1
+    /// and `k + 1` tokens. Returns the number of tokens emitted.
+    fn spec_step(&mut self) -> usize {
+        let (draft, k) = self.spec.expect("spec_step outside speculative mode");
+        self.admit();
+        // new streams: prefill the draft and lift the target's prompt
+        // argmax into the pending slot (exactly the token the plain
+        // engine would sample first)
+        for i in self.spec_cursors.len()..self.streams.len() {
+            let s = &self.streams[i];
+            let mut d_state = draft.decode_state();
+            speculative::feed(draft, &mut d_state, 0, &s.prompt, self.cfg.max_seq);
+            self.spec_cursors.push(speculative::SpecCursor {
+                d_state,
+                d_pos: s.prompt.len(),
+                pending: crate::model::decode::argmax(&s.last_logits) as u32,
+            });
+        }
+        if self.streams.is_empty() {
+            return 0;
+        }
+        let mut total = 0usize;
+        for i in 0..self.streams.len() {
+            let budget = self.streams[i].max_new - self.streams[i].out.len();
+            let k_eff = k.min(budget - 1);
+            let history: Vec<u32> = {
+                let s = &self.streams[i];
+                s.prompt.iter().chain(s.out.iter()).copied().collect()
+            };
+            let o = speculative::spec_round(
+                self.model,
+                draft,
+                self.cfg.max_seq,
+                k_eff,
+                &mut self.states[i],
+                &mut self.spec_cursors[i],
+                &history,
+            );
+            self.spec_stats.absorb(&o);
+            let s = &mut self.streams[i];
+            if let Some(cb) = self.on_token.as_mut() {
+                for &t in &o.emitted {
+                    cb(s.id, t);
+                }
+            }
+            s.out.extend_from_slice(&o.emitted);
+            s.last_logits = o.last_logits;
+            total += o.emitted.len();
+        }
+        // retire exactly like the plain step, keeping cursors in sync
+        let mut retired = Vec::new();
+        for i in (0..self.streams.len()).rev() {
+            if self.streams[i].out.len() >= self.streams[i].max_new {
+                let s = self.streams.swap_remove(i);
+                self.states.swap_remove(i);
+                self.spec_cursors.swap_remove(i);
+                retired.push(Completion {
+                    id: s.id,
+                    prompt: s.prompt,
+                    tokens: s.out,
+                    last_logits: s.last_logits,
+                });
+            }
+        }
+        retired.reverse();
+        self.finished.extend(retired);
+        total
     }
 
     /// Drive until every queued and active request completes; returns
@@ -779,6 +918,42 @@ mod tests {
             let mut s = DecodeSession::new(&m);
             s.prefill(&prompt(len, i));
             assert_eq!(done[i].tokens, s.generate(5), "stream {i} (len {len})");
+        }
+    }
+
+    #[test]
+    fn skewed_burst_admission_sorts_queue_shortest_first() {
+        // More pending requests than slots: the whole queue is sorted by
+        // prompt length before admission, so the three SHORTEST prompts
+        // go first (packing tightly) and the long straggler waits —
+        // regardless of arrival order. Results still match solo
+        // sessions per id.
+        let m = tiny_transformer(12);
+        let lens = [40usize, 2, 3, 2, 5];
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 3, max_seq: None });
+        let mut ids = Vec::new();
+        for (i, &len) in lens.iter().enumerate() {
+            ids.push(eng.submit(Request::greedy(prompt(len, i), 4)));
+        }
+        eng.step();
+        assert_eq!(eng.active(), 3, "three slots filled");
+        assert_eq!(eng.queued(), 2, "len-40 and len-5 wait behind the shorts");
+        // the admitted streams are exactly the three shortest prompts
+        let active_lens: Vec<usize> =
+            eng.streams.iter().map(|s| s.prompt.len()).collect();
+        assert!(active_lens.iter().all(|&l| l <= 3), "active: {active_lens:?}");
+        // stable sort: the two len-2 prompts keep submission order
+        assert_eq!(eng.streams[0].id, ids[1]);
+        assert_eq!(eng.streams[1].id, ids[3]);
+        assert_eq!(eng.streams[2].id, ids[2]);
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), lens.len());
+        for (i, &len) in lens.iter().enumerate() {
+            let mut s = DecodeSession::new(&m);
+            s.prefill(&prompt(len, i));
+            assert_eq!(done[i].tokens, s.generate(4), "request {i} (len {len})");
         }
     }
 

@@ -1,0 +1,710 @@
+//! Self-speculative decoding: the pruned model proposes, the dense model
+//! verifies — in one batched forward.
+//!
+//! The pruning pipeline leaves us holding *both* the dense model and a
+//! pruned variant of it from the same run. That pruned variant is a
+//! uniquely cheap **draft**: it needed no separate training, it shares
+//! the tokenizer/vocab by construction, and its greedy continuations
+//! agree with the dense model often enough to propose with. A
+//! [`SpecSession`] turns that agreement into a serving speedup:
+//!
+//! 1. *Propose*: the draft greedily decodes `k` tokens one step at a
+//!    time (cheap — it runs from the packed sparse layouts).
+//! 2. *Verify*: the target feeds the pending token plus all `k`
+//!    proposals through ONE batched incremental forward
+//!    ([`LanguageModel::decode_append_full`]) — `k + 1` positions for
+//!    one sweep over the dense weights — and takes its own argmax at
+//!    every position.
+//! 3. *Accept*: the longest prefix of proposals matching the target's
+//!    argmaxes is emitted, plus the target's own token at the first
+//!    divergence (or a bonus token when everything matched). Overshot
+//!    target K/V rolls back through the paged tail cursor
+//!    ([`DecodeState::truncate_to`], O(1), pages recycled); mamba's
+//!    irreversible recurrent state rolls back by restoring a pre-round
+//!    clone snapshot (the `fork` idiom) and re-scanning the accepted
+//!    prefix.
+//!
+//! **Greedy verification is losslessly exact**: every emitted token is a
+//! target argmax over logits computed at the same absolute position with
+//! the same per-row kernels as plain decoding (the incremental arms
+//! append the whole chunk's K/V first, then attend row `i` against
+//! exactly `pos + i + 1` rows), so the output stream is bit-identical
+//! token-for-token to dense [`DecodeSession::generate`] — pinned across
+//! both families, all draft layouts and every `k` by
+//! `speculative_generate_matches_plain_greedy` in the integration suite.
+//! One carve-out: a sliding-window (`max_seq`) *transformer* target
+//! evicts between every token, so a batched append would let mid-batch
+//! queries attend rows plain decoding had already evicted; windowed
+//! transformer targets therefore verify token-by-token (still lossless,
+//! no batching win), while mamba targets batch under any window (its
+//! state never evicts).
+//!
+//! Break-even model (PERF.md iteration 8): with acceptance rate `a` per
+//! proposal, a round emits `1 + a·k` tokens (expected) for `1` target
+//! sweep plus `k` draft steps, so
+//! `speedup ≈ (accepted/round) / (k · cost_draft/cost_target + 1)` —
+//! speculation pays exactly when the draft is cheap (high sparsity)
+//! and agreeable (modest sparsity). [`spec_serve_report`] measures both
+//! sides end-to-end.
+//!
+//! [`LanguageModel::decode_append_full`]: crate::model::LanguageModel::decode_append_full
+//! [`DecodeState::truncate_to`]: crate::model::DecodeState::truncate_to
+//! [`DecodeSession::generate`]: crate::model::DecodeSession::generate
+
+use crate::model::decode::{argmax, prefill_windowed};
+use crate::model::{DecodeState, LanguageModel};
+use crate::util::Timer;
+
+use super::{Engine, EngineConfig, Request};
+
+/// Acceptance accounting across rounds (one session or a whole engine).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SpecStats {
+    /// Verification rounds run.
+    pub rounds: usize,
+    /// Draft tokens proposed.
+    pub proposed: usize,
+    /// Draft tokens accepted by the target.
+    pub accepted: usize,
+    /// Tokens emitted (accepted drafts + one target token per round).
+    pub emitted: usize,
+}
+
+impl SpecStats {
+    /// Fraction of proposed draft tokens the target accepted.
+    pub fn acceptance_rate(&self) -> f64 {
+        self.accepted as f64 / self.proposed.max(1) as f64
+    }
+
+    /// Mean tokens emitted per verification round (1.0 = no win).
+    pub fn tokens_per_round(&self) -> f64 {
+        self.emitted as f64 / self.rounds.max(1) as f64
+    }
+
+    pub(crate) fn absorb(&mut self, o: &RoundOutcome) {
+        self.rounds += 1;
+        self.proposed += o.proposed;
+        self.accepted += o.accepted;
+        self.emitted += o.emitted.len();
+    }
+}
+
+/// Per-stream speculative bookkeeping beyond the target's own decode
+/// state: the draft's state/cursor and the pending token (emitted to the
+/// caller, not yet fed to either model).
+pub(crate) struct SpecCursor {
+    pub(crate) d_state: DecodeState,
+    /// True tokens the draft has consumed (a prefix of the history —
+    /// the draft may lag after a rollback and resyncs lazily).
+    pub(crate) d_pos: usize,
+    /// Next output token: a target argmax, determined but not yet fed.
+    pub(crate) pending: u32,
+}
+
+/// What one propose/verify/accept round produced.
+pub(crate) struct RoundOutcome {
+    /// Tokens emitted this round: the old pending token, then every
+    /// accepted proposal. All are fed to the target by round end.
+    pub(crate) emitted: Vec<u32>,
+    /// Target logits after the last emitted token (the position that
+    /// produced the new pending token).
+    pub(crate) last_logits: Vec<f32>,
+    pub(crate) proposed: usize,
+    pub(crate) accepted: usize,
+}
+
+/// Append `tokens` the way a (possibly windowed) `DecodeSession` would:
+/// windowed feeds chunk-and-evict through the shared `prefill_windowed`,
+/// unbounded takes the prefill fast path. Returns the final hidden row.
+pub(crate) fn feed(
+    model: &dyn LanguageModel,
+    state: &mut DecodeState,
+    pos0: usize,
+    tokens: &[u32],
+    window: Option<usize>,
+) -> Vec<f32> {
+    match window {
+        Some(w) => prefill_windowed(model, state, pos0, tokens, w),
+        None => model.prefill_append(state, pos0, tokens),
+    }
+}
+
+/// One speculative round over explicit state (shared by [`SpecSession`]
+/// and the engine's per-stream speculative mode).
+///
+/// `history` is every true token the TARGET has consumed (prompt plus
+/// previously emitted tokens); `cursor.pending` sits at absolute
+/// position `history.len()` and is fed this round. Emits between 1 and
+/// `k_eff + 1` tokens and leaves both models consistent with exactly
+/// `history + emitted` consumed, with a fresh pending token in the
+/// cursor.
+pub(crate) fn spec_round(
+    target: &dyn LanguageModel,
+    draft: &dyn LanguageModel,
+    window: Option<usize>,
+    k_eff: usize,
+    t_state: &mut DecodeState,
+    cursor: &mut SpecCursor,
+    history: &[u32],
+) -> RoundOutcome {
+    let p0 = history.len();
+    let pending = cursor.pending;
+
+    // ---- propose: draft decodes k_eff tokens greedily, one at a time
+    let mut proposals: Vec<u32> = Vec::with_capacity(k_eff);
+    let mut d_snapshot: Option<(DecodeState, usize)> = None;
+    if k_eff > 0 {
+        // resync: feed every true token the draft hasn't seen yet, ending
+        // with the pending one, as a single chunk (chunk boundaries never
+        // change the incremental arms' math)
+        let mut chunk: Vec<u32> = history[cursor.d_pos..].to_vec();
+        chunk.push(pending);
+        let h = feed(draft, &mut cursor.d_state, cursor.d_pos, &chunk, window);
+        cursor.d_pos = p0 + 1;
+        // rollback plan for rejected proposal feeds: a mamba draft folds
+        // tokens irreversibly and a windowed draft may evict past the
+        // rollback point, so both snapshot here (post-resync: only
+        // proposal feeds can be wrong); an unbounded transformer draft
+        // rolls back through the paged tail cursor instead.
+        if window.is_some() || matches!(cursor.d_state, DecodeState::Mamba(_)) {
+            d_snapshot = Some((cursor.d_state.clone(), cursor.d_pos));
+        }
+        let mut lg = draft.logits_row(&h);
+        loop {
+            proposals.push(argmax(&lg) as u32);
+            if proposals.len() == k_eff {
+                break;
+            }
+            let last = proposals[proposals.len() - 1];
+            let h = feed(draft, &mut cursor.d_state, cursor.d_pos, &[last], window);
+            cursor.d_pos += 1;
+            lg = draft.logits_row(&h);
+        }
+    }
+
+    // ---- verify: target scores all k_eff + 1 positions
+    let mut batch: Vec<u32> = Vec::with_capacity(k_eff + 1);
+    batch.push(pending);
+    batch.extend_from_slice(&proposals);
+
+    let accepted: usize;
+    let new_pending: u32;
+    let last_logits: Vec<f32>;
+    let windowed_tf_target =
+        window.is_some() && matches!(t_state, DecodeState::Transformer(_));
+    if windowed_tf_target {
+        // A windowed transformer evicts after EVERY token, so a batched
+        // append would attend rows plain decoding had already evicted.
+        // Verify token-by-token (append, evict, argmax) — identical op
+        // order to the plain windowed session, stopping at the first
+        // divergence so nothing overshoots.
+        let w = window.expect("windowed arm");
+        let mut i = 0usize;
+        loop {
+            let h = target.decode_append(t_state, p0 + i, &batch[i..i + 1]);
+            t_state.enforce_window(w);
+            let lg = target.logits_row(&h);
+            let t = argmax(&lg) as u32;
+            if i < k_eff && t == proposals[i] {
+                i += 1;
+            } else {
+                accepted = i;
+                new_pending = t;
+                last_logits = lg;
+                break;
+            }
+        }
+    } else {
+        // ONE batched incremental forward over the pending token + all
+        // proposals: k_eff + 1 positions for a single sweep over the
+        // dense weights. Per-row hidden states (and hence logits_row)
+        // are bit-identical to sequential single-token appends.
+        let t_snapshot = (k_eff > 0 && matches!(t_state, DecodeState::Mamba(_)))
+            .then(|| t_state.clone());
+        let full = target.decode_append_full(t_state, p0, &batch);
+        let mut a = 0usize;
+        let (np, ll) = loop {
+            let lg = target.logits_row(full.row(a));
+            let t = argmax(&lg) as u32;
+            if a < k_eff && t == proposals[a] {
+                a += 1;
+            } else {
+                break (t, lg);
+            }
+        };
+        if a < k_eff {
+            // roll back the overshot positions
+            match t_snapshot {
+                // mamba: restore the pre-round snapshot, re-scan the
+                // accepted prefix (sequential scan ≡ per-token feeds)
+                Some(snap) => {
+                    *t_state = snap;
+                    target.decode_append(t_state, p0, &batch[..a + 1]);
+                }
+                // transformer: move the paged K/V tail cursor back —
+                // O(1), freed pages return to the freelist
+                None => t_state.truncate_to(p0 + 1 + a),
+            }
+        }
+        accepted = a;
+        new_pending = np;
+        last_logits = ll;
+    }
+
+    // ---- draft rollback: proposal feeds beyond the accepted prefix
+    // consumed tokens that never became true
+    if k_eff > 0 {
+        let d_valid = p0 + 1 + accepted.min(k_eff - 1);
+        if cursor.d_pos > d_valid {
+            match d_snapshot.take() {
+                Some((snap, pos)) => {
+                    cursor.d_state = snap;
+                    cursor.d_pos = pos;
+                }
+                None => {
+                    cursor.d_state.truncate_to(d_valid);
+                    cursor.d_pos = d_valid;
+                }
+            }
+        }
+    }
+
+    let mut emitted = Vec::with_capacity(1 + accepted);
+    emitted.push(pending);
+    emitted.extend_from_slice(&proposals[..accepted]);
+    cursor.pending = new_pending;
+    RoundOutcome { emitted, last_logits, proposed: k_eff, accepted }
+}
+
+/// A single-stream speculative decode session: draft proposes `k`
+/// greedy tokens, target verifies them in one batched pass. Output is
+/// bit-identical to plain greedy [`DecodeSession::generate`] over the
+/// target alone.
+///
+/// ```text
+/// let mut s = SpecSession::new(&dense, &pruned, 4);
+/// s.prefill(&prompt);
+/// let toks = s.generate(64);          // == dense-only greedy decode
+/// let rate = s.stats().acceptance_rate();
+/// ```
+///
+/// [`DecodeSession::generate`]: crate::model::DecodeSession::generate
+pub struct SpecSession<'m> {
+    target: &'m dyn LanguageModel,
+    draft: &'m dyn LanguageModel,
+    k: usize,
+    window: Option<usize>,
+    t_state: DecodeState,
+    cursor: Option<SpecCursor>,
+    /// Prompt + emitted tokens — exactly what the target has consumed.
+    history: Vec<u32>,
+    stats: SpecStats,
+}
+
+impl<'m> SpecSession<'m> {
+    pub fn new(
+        target: &'m dyn LanguageModel,
+        draft: &'m dyn LanguageModel,
+        k: usize,
+    ) -> SpecSession<'m> {
+        SpecSession::build(target, draft, k, None)
+    }
+
+    /// Session with the sliding-window K/V bound applied to both models
+    /// (a windowed transformer target verifies token-by-token; see the
+    /// module docs).
+    pub fn with_window(
+        target: &'m dyn LanguageModel,
+        draft: &'m dyn LanguageModel,
+        k: usize,
+        window: usize,
+    ) -> SpecSession<'m> {
+        assert!(window >= 1, "window must hold at least one position");
+        SpecSession::build(target, draft, k, Some(window))
+    }
+
+    fn build(
+        target: &'m dyn LanguageModel,
+        draft: &'m dyn LanguageModel,
+        k: usize,
+        window: Option<usize>,
+    ) -> SpecSession<'m> {
+        assert!(k >= 1, "speculation depth k must be at least 1");
+        assert_eq!(
+            target.vocab(),
+            draft.vocab(),
+            "draft and target must share a vocabulary"
+        );
+        SpecSession {
+            target,
+            draft,
+            k,
+            window,
+            t_state: target.decode_state(),
+            cursor: None,
+            history: Vec::new(),
+            stats: SpecStats::default(),
+        }
+    }
+
+    /// Feed the prompt through BOTH models and determine the first
+    /// output token (the target's argmax, same as plain greedy).
+    pub fn prefill(&mut self, prompt: &[u32]) {
+        assert!(!prompt.is_empty(), "prefill needs at least one token");
+        assert!(self.cursor.is_none(), "prefill once per session");
+        let h = feed(self.target, &mut self.t_state, 0, prompt, self.window);
+        let lg = self.target.logits_row(&h);
+        let mut d_state = self.draft.decode_state();
+        feed(self.draft, &mut d_state, 0, prompt, self.window);
+        self.cursor = Some(SpecCursor {
+            d_state,
+            d_pos: prompt.len(),
+            pending: argmax(&lg) as u32,
+        });
+        self.history = prompt.to_vec();
+    }
+
+    /// Tokens consumed so far by the target (prompt + emitted).
+    pub fn len(&self) -> usize {
+        self.history.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.history.is_empty()
+    }
+
+    /// Generate exactly `n` tokens in speculative rounds. The proposal
+    /// depth adapts down near the budget edge (`k_eff = min(k, n -
+    /// emitted - 1)`) so a round never overshoots the request. Output is
+    /// bit-identical to the target's own greedy decode.
+    pub fn generate(&mut self, n: usize) -> Vec<u32> {
+        let cursor = self.cursor.as_mut().expect("prefill before generate");
+        let mut out = Vec::with_capacity(n);
+        while out.len() < n {
+            let budget = n - out.len();
+            let k_eff = self.k.min(budget - 1);
+            let o = spec_round(
+                self.target,
+                self.draft,
+                self.window,
+                k_eff,
+                &mut self.t_state,
+                cursor,
+                &self.history,
+            );
+            self.stats.absorb(&o);
+            self.history.extend_from_slice(&o.emitted);
+            out.extend_from_slice(&o.emitted);
+        }
+        out
+    }
+
+    /// Acceptance accounting across every round so far.
+    pub fn stats(&self) -> &SpecStats {
+        &self.stats
+    }
+}
+
+/// End-to-end "prune → keep both → serve speculatively" measurement:
+/// runs the same greedy workload through a plain dense [`Engine`] and a
+/// speculative one, asserts the outputs are bit-identical (the lossless
+/// gate), and reports acceptance rate + tokens/s on both sides.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecServeReport {
+    pub k: usize,
+    pub streams: usize,
+    pub total_tokens: usize,
+    pub rounds: usize,
+    pub acceptance_rate: f64,
+    pub tokens_per_round: f64,
+    pub dense_ms: f64,
+    pub spec_ms: f64,
+    pub dense_tokens_per_s: f64,
+    pub spec_tokens_per_s: f64,
+    /// dense_ms / spec_ms (>1 = speculation wins).
+    pub speedup: f64,
+}
+
+pub fn spec_serve_report(
+    target: &dyn LanguageModel,
+    draft: &dyn LanguageModel,
+    prompts: &[Vec<u32>],
+    max_new: usize,
+    k: usize,
+    cfg: EngineConfig,
+) -> SpecServeReport {
+    assert!(!prompts.is_empty(), "report needs at least one prompt");
+    let timer = Timer::start();
+    let mut dense = Engine::new(target, cfg);
+    for p in prompts {
+        dense.submit(Request::greedy(p.clone(), max_new));
+    }
+    let dense_tokens = dense.run();
+    let dense_ms = timer.elapsed_ms();
+    let mut dense_done = dense.take_finished();
+    dense_done.sort_by_key(|c| c.id);
+
+    let timer = Timer::start();
+    let mut spec = Engine::speculative(target, draft, k, cfg);
+    for p in prompts {
+        spec.submit(Request::greedy(p.clone(), max_new));
+    }
+    let spec_tokens = spec.run();
+    let spec_ms = timer.elapsed_ms();
+    let mut spec_done = spec.take_finished();
+    spec_done.sort_by_key(|c| c.id);
+
+    assert_eq!(dense_tokens, spec_tokens, "token budgets must agree");
+    for (d, s) in dense_done.iter().zip(&spec_done) {
+        assert_eq!(
+            d.tokens, s.tokens,
+            "lossless gate: speculative output must be bit-identical to dense greedy"
+        );
+    }
+    let stats = spec.spec_stats();
+    SpecServeReport {
+        k,
+        streams: prompts.len(),
+        total_tokens: spec_tokens,
+        rounds: stats.rounds,
+        acceptance_rate: stats.acceptance_rate(),
+        tokens_per_round: stats.tokens_per_round(),
+        dense_ms,
+        spec_ms,
+        dense_tokens_per_s: dense_tokens as f64 / (dense_ms / 1e3).max(1e-9),
+        spec_tokens_per_s: spec_tokens as f64 / (spec_ms / 1e3).max(1e-9),
+        speedup: dense_ms / spec_ms.max(1e-9),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{
+        DecodeSession, Mamba, MambaConfig, Transformer, TransformerConfig,
+    };
+    use crate::util::Rng;
+
+    fn tiny_transformer(seed: u64) -> Transformer {
+        Transformer::init(
+            TransformerConfig {
+                vocab: 37,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 24,
+                max_seq: 128,
+            },
+            &mut Rng::new(seed),
+        )
+    }
+
+    fn tiny_mamba(seed: u64) -> Mamba {
+        Mamba::init(
+            MambaConfig { vocab: 37, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 128 },
+            &mut Rng::new(seed),
+        )
+    }
+
+    fn prompt(len: usize, salt: usize) -> Vec<u32> {
+        (0..len).map(|i| ((i * 5 + salt * 3) % 37) as u32).collect()
+    }
+
+    #[test]
+    fn draft_equals_target_gives_full_acceptance() {
+        // Self-speculation sanity: when the draft IS the target, every
+        // proposal matches the verifier's argmax, so acceptance is 100%
+        // and every round emits k + 1 tokens.
+        for (name, model) in [
+            ("microllama", Box::new(tiny_transformer(1)) as Box<dyn LanguageModel>),
+            ("micromamba", Box::new(tiny_mamba(2)) as Box<dyn LanguageModel>),
+        ] {
+            let k = 4;
+            let mut s = SpecSession::new(model.as_ref(), model.as_ref(), k);
+            s.prefill(&prompt(8, 1));
+            let toks = s.generate(20);
+            let mut plain = DecodeSession::new(model.as_ref());
+            plain.prefill(&prompt(8, 1));
+            assert_eq!(toks, plain.generate(20), "{name}");
+            let st = s.stats();
+            assert_eq!(st.accepted, st.proposed, "{name}: all proposals must be accepted");
+            assert!(st.proposed > 0, "{name}");
+            assert!((st.acceptance_rate() - 1.0).abs() < 1e-12, "{name}");
+            assert_eq!(st.emitted, 20, "{name}");
+            // 20 tokens at k = 4: rounds of 5, so exactly 4 rounds
+            assert_eq!(st.rounds, 4, "{name}");
+            assert_eq!(st.tokens_per_round(), 5.0, "{name}");
+        }
+    }
+
+    #[test]
+    fn hostile_draft_still_lossless() {
+        // A freshly-initialized (untrained, unrelated) draft diverges
+        // almost immediately — including at position 0 — yet the output
+        // must stay bit-identical to plain greedy decoding.
+        for (name, target, draft) in [
+            (
+                "microllama",
+                Box::new(tiny_transformer(3)) as Box<dyn LanguageModel>,
+                Box::new(tiny_transformer(99)) as Box<dyn LanguageModel>,
+            ),
+            (
+                "micromamba",
+                Box::new(tiny_mamba(4)) as Box<dyn LanguageModel>,
+                Box::new(tiny_mamba(77)) as Box<dyn LanguageModel>,
+            ),
+        ] {
+            for k in [1usize, 2, 4, 8] {
+                let mut s = SpecSession::new(target.as_ref(), draft.as_ref(), k);
+                s.prefill(&prompt(6, 2));
+                let toks = s.generate(16);
+                let mut plain = DecodeSession::new(target.as_ref());
+                plain.prefill(&prompt(6, 2));
+                assert_eq!(toks, plain.generate(16), "{name} k={k}");
+                assert_eq!(s.stats().emitted, 16, "{name} k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn cross_family_draft_is_lossless_too() {
+        // Nothing requires the draft to share the target's architecture —
+        // only the vocabulary. A mamba draft proposing for a transformer
+        // target must keep the lossless gate.
+        let target = tiny_transformer(5);
+        let draft = tiny_mamba(6);
+        let mut s = SpecSession::new(&target, &draft, 3);
+        s.prefill(&prompt(7, 3));
+        let toks = s.generate(14);
+        let mut plain = DecodeSession::new(&target);
+        plain.prefill(&prompt(7, 3));
+        assert_eq!(toks, plain.generate(14));
+    }
+
+    #[test]
+    fn k_longer_than_budget_adapts_down() {
+        // k = 8 against a 3-token budget: rounds clamp k_eff so the
+        // output is exactly n tokens, still bit-identical.
+        for (name, model) in [
+            ("microllama", Box::new(tiny_transformer(7)) as Box<dyn LanguageModel>),
+            ("micromamba", Box::new(tiny_mamba(8)) as Box<dyn LanguageModel>),
+        ] {
+            let mut s = SpecSession::new(model.as_ref(), model.as_ref(), 8);
+            s.prefill(&prompt(5, 4));
+            let toks = s.generate(3);
+            assert_eq!(toks.len(), 3, "{name}");
+            let mut plain = DecodeSession::new(model.as_ref());
+            plain.prefill(&prompt(5, 4));
+            assert_eq!(toks, plain.generate(3), "{name}");
+            // generate(1) must also work (k_eff = 0: pure verify round)
+            let more = s.generate(1);
+            let expect = plain.generate(1);
+            assert_eq!(more, expect, "{name}: continuation after budget-clamped round");
+        }
+    }
+
+    #[test]
+    fn windowed_target_stays_lossless() {
+        // Sliding-window targets: the windowed-transformer per-token
+        // arm and the windowed-mamba batched arm must both reproduce
+        // the plain windowed session exactly — including once real
+        // eviction kicks in (prompt + gen ≫ window).
+        for (name, target, draft) in [
+            (
+                "microllama",
+                Box::new(tiny_transformer(9)) as Box<dyn LanguageModel>,
+                Box::new(tiny_transformer(55)) as Box<dyn LanguageModel>,
+            ),
+            (
+                "micromamba",
+                Box::new(tiny_mamba(10)) as Box<dyn LanguageModel>,
+                Box::new(tiny_mamba(56)) as Box<dyn LanguageModel>,
+            ),
+        ] {
+            for w in [8usize, 64] {
+                let mut s = SpecSession::with_window(target.as_ref(), draft.as_ref(), 4, w);
+                s.prefill(&prompt(12, 5));
+                let toks = s.generate(18);
+                let mut plain = DecodeSession::with_window(target.as_ref(), w);
+                plain.prefill(&prompt(12, 5));
+                assert_eq!(toks, plain.generate(18), "{name} window={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn engine_speculative_matches_plain_engine() {
+        let target = tiny_transformer(11);
+        let draft = tiny_transformer(12);
+        let prompts: Vec<Vec<u32>> = (0..5).map(|i| prompt(3 + i * 2, i)).collect();
+        let cfg = EngineConfig { max_batch: 3, max_seq: None };
+        let report = spec_serve_report(&target, &draft, &prompts, 9, 4, cfg);
+        assert_eq!(report.streams, 5);
+        assert_eq!(report.total_tokens, 45);
+        assert!(report.rounds > 0);
+        assert!(report.acceptance_rate >= 0.0 && report.acceptance_rate <= 1.0);
+        assert!(report.tokens_per_round >= 1.0);
+    }
+
+    #[test]
+    fn engine_speculative_streams_tokens_and_reports_stats() {
+        use std::cell::RefCell;
+        use std::collections::BTreeMap;
+        use std::rc::Rc;
+        let model = tiny_mamba(13);
+        let streamed: Rc<RefCell<BTreeMap<super::super::RequestId, Vec<u32>>>> =
+            Rc::new(RefCell::new(BTreeMap::new()));
+        let sink = streamed.clone();
+        let mut eng = Engine::speculative(&model, &model, 3, EngineConfig::default());
+        eng.set_on_token(move |id, tok| sink.borrow_mut().entry(id).or_default().push(tok));
+        for i in 0..3usize {
+            eng.submit(Request::greedy(prompt(4 + i, i), 7));
+        }
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 3);
+        for c in &done {
+            assert_eq!(c.tokens.len(), 7);
+            assert_eq!(
+                streamed.borrow().get(&c.id),
+                Some(&c.tokens),
+                "on_token stream must match the completion"
+            );
+        }
+        // draft == target: every round emits k + 1 (or the budget tail)
+        let st = eng.spec_stats();
+        assert_eq!(st.accepted, st.proposed);
+        assert_eq!(st.emitted, 21);
+    }
+
+    #[test]
+    #[should_panic(expected = "greedy requests only")]
+    fn speculative_engine_rejects_sampled_requests() {
+        let m = tiny_transformer(14);
+        let mut eng = Engine::speculative(&m, &m, 2, EngineConfig::default());
+        eng.submit(Request {
+            prompt: prompt(4, 0),
+            max_new_tokens: 4,
+            sampling: super::super::SamplingParams::temperature(0.8, 1),
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "share a vocabulary")]
+    fn vocab_mismatch_rejected() {
+        let t = tiny_transformer(15);
+        let other = Transformer::init(
+            TransformerConfig {
+                vocab: 12,
+                d_model: 16,
+                n_layers: 1,
+                n_heads: 2,
+                d_ff: 24,
+                max_seq: 32,
+            },
+            &mut Rng::new(16),
+        );
+        SpecSession::new(&t, &other, 2);
+    }
+}

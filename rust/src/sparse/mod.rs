@@ -17,18 +17,46 @@ pub use store::WeightStore;
 use crate::tensor::Mat;
 use crate::util::num_threads;
 
-/// Compressed sparse rows over f32 (row-major origin).
+/// Compressed sparse rows over f32 (row-major origin), generic over the
+/// column-index width. The two instantiations are [`Csr`] (u32 indices,
+/// the wide-matrix fallback) and [`Csr16`] (u16 indices, halved index
+/// bytes when the column count fits) — one container/accessor body for
+/// both, so the layouts can't drift apart. The field layout is public
+/// and identical to the pre-generic structs: io and the benches build
+/// these by struct literal.
 #[derive(Clone, Debug, PartialEq)]
-pub struct Csr {
+pub struct CsrBase<I> {
     pub rows: usize,
     pub cols: usize,
     pub indptr: Vec<u32>,
-    pub indices: Vec<u32>,
+    pub indices: Vec<I>,
     pub values: Vec<f32>,
 }
 
-impl Csr {
-    pub fn from_dense(m: &Mat) -> Csr {
+/// CSR with u32 column indices — the general (wide-matrix) layout.
+pub type Csr = CsrBase<u32>;
+
+/// CSR with u16 column indices: for layers with cols <= 65536 (every
+/// linear in this repo's model zoo, and most real LLM projections),
+/// index storage halves vs [`Csr`] — 6 B/nnz instead of 8 B/nnz, which
+/// also moves the pack-vs-dense break-even down to ~38% sparsity. The
+/// coordinator's packing step auto-selects this layout when the column
+/// count fits; [`Csr`] remains the wide-matrix fallback.
+pub type Csr16 = CsrBase<u16>;
+
+impl<I: ColIdx> CsrBase<I> {
+    /// Max column count this index width can address (index max ⇒
+    /// max + 1 columns, e.g. 65536 for [`Csr16`]).
+    pub const MAX_COLS: usize = I::MAX_COLS;
+
+    pub fn from_dense(m: &Mat) -> CsrBase<I> {
+        assert!(
+            m.cols <= I::MAX_COLS,
+            "{} cols {} exceed {} index range",
+            I::TAG,
+            m.cols,
+            I::IDX
+        );
         let mut indptr = Vec::with_capacity(m.rows + 1);
         let mut indices = Vec::new();
         let mut values = Vec::new();
@@ -36,13 +64,13 @@ impl Csr {
         for r in 0..m.rows {
             for (c, &v) in m.row(r).iter().enumerate() {
                 if v != 0.0 {
-                    indices.push(c as u32);
+                    indices.push(I::from_col(c));
                     values.push(v);
                 }
             }
             indptr.push(indices.len() as u32);
         }
-        Csr { rows: m.rows, cols: m.cols, indptr, indices, values }
+        CsrBase { rows: m.rows, cols: m.cols, indptr, indices, values }
     }
 
     pub fn to_dense(&self) -> Mat {
@@ -50,7 +78,7 @@ impl Csr {
         for r in 0..self.rows {
             let (s, e) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
             for i in s..e {
-                out[(r, self.indices[i] as usize)] = self.values[i];
+                out[(r, self.indices[i].at())] = self.values[i];
             }
         }
         out
@@ -64,9 +92,12 @@ impl Csr {
         1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
     }
 
-    /// Memory footprint in bytes (values + indices + indptr).
+    /// Memory footprint in bytes (f32 values + I-width indices + u32
+    /// indptr).
     pub fn bytes(&self) -> usize {
-        self.values.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 4
+        self.values.len() * 4
+            + self.indices.len() * std::mem::size_of::<I>()
+            + self.indptr.len() * 4
     }
 
     /// Dense-equivalent bytes for the compression-ratio stat.
@@ -75,8 +106,9 @@ impl Csr {
     }
 
     /// y = x @ W^T for sparse W (n_out, m): the pruned-linear fast path.
-    /// x: (t, m) dense -> (t, n_out). One kernel body shared with
-    /// [`Csr16`] — see [`csr_matmul_tb`].
+    /// x: (t, m) dense -> (t, n_out). The [`csr_matmul_tb`] kernel body
+    /// (nnz-balanced worker partitioning, 4-chain FMA gather-dot) is
+    /// shared across index widths.
     pub fn matmul_tb(&self, x: &Mat) -> Mat {
         csr_matmul_tb(self.rows, self.cols, &self.indptr, &self.indices, &self.values, x)
     }
@@ -193,24 +225,47 @@ fn nnz_balanced_chunks(indptr: &[u32], nw: usize) -> Vec<(usize, usize)> {
     chunks
 }
 
-/// Column-index storage a CSR kernel can gather through: u32 for the
-/// general layout, u16 for [`Csr16`]'s halved index bytes. `Sync` so
-/// index slices can be shared across the worker pool.
-trait ColIdx: Copy + Sync {
+/// Column-index storage a CSR container/kernel can gather through: u32
+/// for the general layout, u16 for [`Csr16`]'s halved index bytes.
+/// `Sync` so index slices can be shared across the worker pool.
+pub trait ColIdx: Copy + Sync {
+    /// Column counts this width can address (index max + 1).
+    const MAX_COLS: usize;
+    /// Layout tag for diagnostics ("csr" / "csr16").
+    const TAG: &'static str;
+    /// Index-type name for diagnostics ("u32" / "u16").
+    const IDX: &'static str;
     fn at(self) -> usize;
+    /// Narrow a column position into this width (callers check
+    /// `MAX_COLS` first).
+    fn from_col(c: usize) -> Self;
 }
 
 impl ColIdx for u32 {
+    const MAX_COLS: usize = u32::MAX as usize + 1;
+    const TAG: &'static str = "csr";
+    const IDX: &'static str = "u32";
     #[inline]
     fn at(self) -> usize {
         self as usize
     }
+    #[inline]
+    fn from_col(c: usize) -> u32 {
+        c as u32
+    }
 }
 
 impl ColIdx for u16 {
+    const MAX_COLS: usize = u16::MAX as usize + 1;
+    const TAG: &'static str = "csr16";
+    const IDX: &'static str = "u16";
     #[inline]
     fn at(self) -> usize {
         self as usize
+    }
+    #[inline]
+    fn from_col(c: usize) -> u16 {
+        c as u16
     }
 }
 
@@ -236,86 +291,6 @@ fn gather_dot<I: ColIdx>(values: &[f32], indices: &[I], x: &[f32]) -> f32 {
         s = v.mul_add(x[i.at()], s);
     }
     s
-}
-
-/// CSR with u16 column indices: for layers with cols <= 65536 (every
-/// linear in this repo's model zoo, and most real LLM projections),
-/// index storage halves vs [`Csr`] — 6 B/nnz instead of 8 B/nnz, which
-/// also moves the pack-vs-dense break-even down to ~38% sparsity. The
-/// coordinator's packing step auto-selects this layout when the column
-/// count fits; [`Csr`] remains the wide-matrix fallback.
-#[derive(Clone, Debug, PartialEq)]
-pub struct Csr16 {
-    pub rows: usize,
-    pub cols: usize,
-    pub indptr: Vec<u32>,
-    pub indices: Vec<u16>,
-    pub values: Vec<f32>,
-}
-
-impl Csr16 {
-    /// Max column count a u16 index can address (index 65535 ⇒ 65536
-    /// columns).
-    pub const MAX_COLS: usize = u16::MAX as usize + 1;
-
-    pub fn from_dense(m: &Mat) -> Csr16 {
-        assert!(m.cols <= Csr16::MAX_COLS, "csr16 cols {} exceed u16 index range", m.cols);
-        let mut indptr = Vec::with_capacity(m.rows + 1);
-        let mut indices = Vec::new();
-        let mut values = Vec::new();
-        indptr.push(0u32);
-        for r in 0..m.rows {
-            for (c, &v) in m.row(r).iter().enumerate() {
-                if v != 0.0 {
-                    indices.push(c as u16);
-                    values.push(v);
-                }
-            }
-            indptr.push(indices.len() as u32);
-        }
-        Csr16 { rows: m.rows, cols: m.cols, indptr, indices, values }
-    }
-
-    pub fn to_dense(&self) -> Mat {
-        let mut out = Mat::zeros(self.rows, self.cols);
-        for r in 0..self.rows {
-            let (s, e) = (self.indptr[r] as usize, self.indptr[r + 1] as usize);
-            for i in s..e {
-                out[(r, self.indices[i] as usize)] = self.values[i];
-            }
-        }
-        out
-    }
-
-    pub fn nnz(&self) -> usize {
-        self.values.len()
-    }
-
-    pub fn sparsity(&self) -> f64 {
-        1.0 - self.nnz() as f64 / (self.rows * self.cols) as f64
-    }
-
-    /// Memory footprint in bytes (f32 values + u16 indices + u32 indptr).
-    pub fn bytes(&self) -> usize {
-        self.values.len() * 4 + self.indices.len() * 2 + self.indptr.len() * 4
-    }
-
-    /// Dense-equivalent bytes for the compression-ratio stat.
-    pub fn dense_bytes(&self) -> usize {
-        self.rows * self.cols * 4
-    }
-
-    /// y = x @ W^T — the shared [`csr_matmul_tb`] kernel (nnz-balanced
-    /// worker partitioning, 4-chain FMA gather-dot), reading half the
-    /// index bytes per nonzero.
-    pub fn matmul_tb(&self, x: &Mat) -> Mat {
-        csr_matmul_tb(self.rows, self.cols, &self.indptr, &self.indices, &self.values, x)
-    }
-
-    /// Row `r` densified into a fresh buffer (zeros in pruned slots).
-    pub(crate) fn densify_row(&self, r: usize) -> Vec<f32> {
-        densify_csr_row(self.cols, &self.indptr, &self.indices, &self.values, r)
-    }
 }
 
 /// Packed 2:4: per 4-group, 2 values + 2x 2-bit indices (byte-packed).
@@ -553,6 +528,29 @@ mod tests {
     fn csr16_rejects_wide_matrices() {
         let w = Mat::zeros(1, Csr16::MAX_COLS + 4);
         let _ = Csr16::from_dense(&w);
+    }
+
+    #[test]
+    fn csr_base_widths_agree_on_every_accessor() {
+        // One generic container body behind both index widths: every
+        // accessor must agree between Csr and Csr16 on the same matrix,
+        // and the byte accounting must reflect exactly the index-width
+        // difference (2 B/nnz).
+        let mut rng = Rng::new(63);
+        let mut w = Mat::randn(11, 28, 1.0, &mut rng);
+        magnitude_prune(&mut w, Sparsity::Unstructured { rate: 0.55 });
+        let c32 = Csr::from_dense(&w);
+        let c16 = Csr16::from_dense(&w);
+        assert_eq!(c32.to_dense(), c16.to_dense());
+        assert_eq!(c32.nnz(), c16.nnz());
+        assert_eq!(c32.sparsity(), c16.sparsity());
+        assert_eq!(c32.dense_bytes(), c16.dense_bytes());
+        assert_eq!(c32.bytes(), c16.bytes() + 2 * c16.nnz());
+        for r in 0..11 {
+            assert_eq!(c32.densify_row(r), c16.densify_row(r), "row {r}");
+        }
+        assert_eq!(Csr16::MAX_COLS, u16::MAX as usize + 1);
+        assert!(Csr::MAX_COLS > Csr16::MAX_COLS);
     }
 
     #[test]

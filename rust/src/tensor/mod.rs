@@ -380,6 +380,27 @@ impl PagedKv {
         }
     }
 
+    /// Roll back the logical end: keep only the OLDEST `len` rows
+    /// (the dual of [`PagedKv::evict_to`], which keeps the newest).
+    /// Speculative decoding uses this to discard K/V rows appended for
+    /// draft tokens the target rejected. Whole dead TAIL pages return to
+    /// the reuse list — O(1) amortized, never copies a row — which also
+    /// keeps [`PagedKv::append_row`]'s tail-page invariant intact
+    /// (`head + len` must land inside the last live page or exactly at
+    /// the next page boundary).
+    pub fn truncate_to(&mut self, len: usize) {
+        if len >= self.len {
+            return;
+        }
+        self.len = len;
+        while !self.pages.is_empty()
+            && (self.pages.len() - 1) * self.page_rows >= self.head + self.len
+        {
+            let page = self.pages.pop_back().expect("tail page exists");
+            self.free.push(page);
+        }
+    }
+
     /// Iterate the first `lim` live rows in logical order, page by page.
     /// This is the attention hot loop's accessor: per-page slicing keeps
     /// the per-row cost at one pointer bump (no div/mod per row) while
@@ -793,6 +814,9 @@ mod tests {
                 self.rows.remove(0);
             }
         }
+        fn truncate(&mut self, len: usize) {
+            self.rows.truncate(len);
+        }
     }
 
     #[test]
@@ -828,6 +852,91 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn paged_kv_truncate_matches_naive_across_page_sizes() {
+        // Interleave appends, window evictions and tail truncations (the
+        // speculative-rollback pattern): bitwise row contents and order
+        // must be invariant to the page size throughout.
+        let cols = 4;
+        for &page in &[1usize, 3, 8, 11, 64] {
+            let mut p = PagedKv::with_page_rows(cols, page);
+            let mut n = NaiveKv { rows: Vec::new() };
+            let mut r = Rng::new(500 + page as u64);
+            for step in 0..300 {
+                let row: Vec<f32> = (0..cols).map(|_| r.normal_f32(0.0, 1.0)).collect();
+                p.append_row(&row);
+                n.push(&row);
+                match step % 5 {
+                    // drop a speculative tail (0..=3 rows)
+                    1 | 3 => {
+                        let keep = p.len().saturating_sub(step % 4);
+                        p.truncate_to(keep);
+                        n.truncate(keep);
+                    }
+                    // slide the window from the front
+                    2 => {
+                        p.evict_to(7);
+                        n.evict_to(7);
+                    }
+                    _ => {}
+                }
+                assert_eq!(p.len(), n.rows.len(), "page={page} step={step}");
+                for i in 0..p.len() {
+                    assert_eq!(p.row(i), &n.rows[i][..], "page={page} step={step} row {i}");
+                }
+                let iterated: Vec<&[f32]> = p.row_slices(p.len()).collect();
+                assert_eq!(iterated.len(), p.len());
+                for (i, s) in iterated.iter().enumerate() {
+                    assert_eq!(*s, &n.rows[i][..], "iter page={page} step={step} row {i}");
+                }
+            }
+        }
+        // truncate past the end is a no-op; truncate to 0 empties
+        let mut p = PagedKv::with_page_rows(2, 4);
+        p.append_row(&[1.0, 2.0]);
+        p.truncate_to(10);
+        assert_eq!(p.len(), 1);
+        p.truncate_to(0);
+        assert!(p.is_empty());
+        p.append_row(&[3.0, 4.0]);
+        assert_eq!(p.row(0), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn paged_kv_truncate_recycles_tail_pages() {
+        // The spec-decode round trip — overshoot k rows, roll back —
+        // must recycle freed tail pages through the freelist, never
+        // allocate in steady state, and leave append_row's tail-page
+        // invariant intact after every rollback depth.
+        let (cols, page) = (4usize, 3usize);
+        let mut p = PagedKv::with_page_rows(cols, page);
+        let row = vec![1.0f32; cols];
+        for _ in 0..10 {
+            p.append_row(&row);
+        }
+        let base = p.len();
+        let ceiling = (base + 8).div_ceil(page) + 1;
+        for round in 0..5_000usize {
+            let k = round % 8 + 1;
+            for _ in 0..k {
+                p.append_row(&row);
+            }
+            p.truncate_to(base);
+            assert_eq!(p.len(), base);
+            assert!(p.pages_allocated() <= ceiling, "allocated {}", p.pages_allocated());
+            assert!(p.pages_live() <= ceiling);
+        }
+        // rollback composes with head eviction: pages freed from both
+        // ends land on the same freelist
+        p.evict_to(4);
+        for _ in 0..6 {
+            p.append_row(&row);
+        }
+        p.truncate_to(5);
+        assert_eq!(p.len(), 5);
+        assert!(p.pages_allocated() <= ceiling + 1);
     }
 
     #[test]

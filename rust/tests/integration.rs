@@ -621,6 +621,187 @@ fn failure_injection_bad_calibration() {
     }
 }
 
+/// Dense target + same-weight pruned drafts for the speculative grid:
+/// per family, the dense model and one draft per sparse layout {csr,
+/// csr16, packed24}, all pruned from the SAME initial weights (csr is
+/// forced to u32 indices — `WeightStore::pack` would auto-select csr16
+/// at these widths).
+#[allow(clippy::type_complexity)]
+fn spec_model_grid(
+) -> Vec<(String, Box<dyn LanguageModel>, Vec<(String, Box<dyn LanguageModel>)>)> {
+    use apt::model::{Mamba, MambaConfig, BLOCK_LINEARS, MAMBA_LINEARS};
+    use apt::sparse::Csr;
+
+    let tcfg = TransformerConfig {
+        vocab: 47,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 256,
+    };
+    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 256 };
+    let layouts = [
+        ("csr", Sparsity::Unstructured { rate: 0.6 }),
+        ("csr16", Sparsity::Unstructured { rate: 0.6 }),
+        ("packed24", Sparsity::two_four()),
+    ];
+    let mut out: Vec<(String, Box<dyn LanguageModel>, Vec<(String, Box<dyn LanguageModel>)>)> =
+        Vec::new();
+
+    let dense_t = Transformer::init(tcfg, &mut Rng::new(51));
+    let mut t_drafts: Vec<(String, Box<dyn LanguageModel>)> = Vec::new();
+    for (layout, sp) in layouts {
+        let mut d = Transformer { cfg: dense_t.cfg, params: dense_t.params.clone() };
+        for b in 0..tcfg.n_layers {
+            for name in BLOCK_LINEARS {
+                magnitude_prune(d.weight_mut(b, name).dense_mut(), sp);
+                let w = d.weight(b, name).to_dense();
+                *d.weight_mut(b, name) = if layout == "csr" {
+                    WeightStore::Csr(Csr::from_dense(&w))
+                } else {
+                    WeightStore::pack(&w, sp)
+                };
+                assert_eq!(d.weight(b, name).format(), layout, "{name}");
+            }
+        }
+        t_drafts.push((layout.to_string(), Box::new(d)));
+    }
+    out.push(("microllama".to_string(), Box::new(dense_t), t_drafts));
+
+    let dense_m = Mamba::init(mcfg, &mut Rng::new(52));
+    let mut m_drafts: Vec<(String, Box<dyn LanguageModel>)> = Vec::new();
+    for (layout, sp) in layouts {
+        let mut d = Mamba { cfg: dense_m.cfg, params: dense_m.params.clone() };
+        for b in 0..mcfg.n_layers {
+            for name in MAMBA_LINEARS {
+                magnitude_prune(d.weight_mut(b, name).dense_mut(), sp);
+                let w = d.weight(b, name).to_dense();
+                *d.weight_mut(b, name) = if layout == "csr" {
+                    WeightStore::Csr(Csr::from_dense(&w))
+                } else {
+                    WeightStore::pack(&w, sp)
+                };
+                assert_eq!(d.weight(b, name).format(), layout, "{name}");
+            }
+        }
+        m_drafts.push((layout.to_string(), Box::new(d)));
+    }
+    out.push(("micromamba".to_string(), Box::new(dense_m), m_drafts));
+    out
+}
+
+/// ISSUE 6 lossless gate: speculative output is bit-identical
+/// token-for-token to plain greedy dense decoding for both model
+/// families × every draft layout {Csr, Csr16, Packed24} × every
+/// k ∈ {1, 2, 4, 8}. The drafts are pruned from the same weights as the
+/// target, so proposals agree often but not always — both the accept
+/// and the rollback paths run.
+#[test]
+fn speculative_generate_matches_plain_greedy() {
+    use apt::model::DecodeSession;
+    use apt::serve::speculative::SpecSession;
+
+    for (family, target, drafts) in &spec_model_grid() {
+        let prompt: Vec<u32> = (0..9).map(|i| ((i * 11 + 5) % 47) as u32).collect();
+        let mut plain = DecodeSession::new(target.as_ref());
+        plain.prefill(&prompt);
+        let want = plain.generate(24);
+        for (layout, draft) in drafts {
+            for k in [1usize, 2, 4, 8] {
+                let mut s = SpecSession::new(target.as_ref(), draft.as_ref(), k);
+                s.prefill(&prompt);
+                let got = s.generate(24);
+                assert_eq!(got, want, "{family} draft={layout} k={k}");
+                let st = *s.stats();
+                assert_eq!(st.emitted, 24, "{family} draft={layout} k={k}");
+                // a round emits at most k + 1 tokens, so at least
+                // ceil(24 / (k + 1)) rounds ran
+                assert!(
+                    st.rounds >= 24usize.div_ceil(k + 1),
+                    "{family} draft={layout} k={k}: {} rounds",
+                    st.rounds
+                );
+                assert!(st.accepted <= st.proposed, "{family} draft={layout} k={k}");
+            }
+        }
+    }
+}
+
+/// The lossless gate holds under a sliding `max_seq` window too: a
+/// windowed transformer target verifies token-by-token (batched appends
+/// would attend evicted rows), a windowed mamba target still batches —
+/// both must reproduce the plain windowed session exactly, including
+/// with real eviction (prompt + generation ≫ window).
+#[test]
+fn speculative_windowed_target_matches_plain_windowed() {
+    use apt::model::DecodeSession;
+    use apt::serve::speculative::SpecSession;
+
+    for (family, target, drafts) in &spec_model_grid() {
+        for w in [10usize, 64] {
+            let prompt: Vec<u32> = (0..20).map(|i| ((i * 7 + 3) % 47) as u32).collect();
+            let mut plain = DecodeSession::with_window(target.as_ref(), w);
+            plain.prefill(&prompt);
+            let want = plain.generate(20);
+            for (layout, draft) in drafts {
+                let mut s =
+                    SpecSession::with_window(target.as_ref(), draft.as_ref(), 4, w);
+                s.prefill(&prompt);
+                assert_eq!(s.generate(20), want, "{family} draft={layout} w={w}");
+            }
+        }
+    }
+}
+
+/// End-to-end "prune → keep both → serve speculatively": the coordinator
+/// prunes a copy of the trained dense model into a draft
+/// (`prune_draft_model`), the speculative engine serves a greedy batch
+/// against the dense engine baseline (`spec_serve_report` asserts the
+/// outputs bit-identical), and the eval-side agreement predictor is
+/// consistent with a trained-draft setup.
+#[test]
+fn engine_speculative_end_to_end_prune_then_serve() {
+    use apt::coordinator::prune_draft_model;
+    use apt::eval::greedy_agreement;
+    use apt::serve::speculative::spec_serve_report;
+    use apt::serve::EngineConfig;
+
+    let gen = CorpusGen::new(60, 2, 34);
+    let target = trained_model(&gen, 32, 2, 30);
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    let calib = data.sample_calibration(4, 32, &mut Rng::new(8));
+    let mut draft = Transformer { cfg: target.cfg, params: target.params.clone() };
+    let cfg = PipelineConfig::new(PruneConfig::new(
+        Method::SS,
+        Sparsity::Unstructured { rate: 0.5 },
+    ));
+    let report = prune_draft_model(&target, &mut draft, &calib, &cfg, None).unwrap();
+    assert!((report.overall_sparsity() - 0.5).abs() < 0.03);
+
+    let v = gen.tokenizer.vocab_size() as u32;
+    let prompts: Vec<Vec<u32>> = (0..4)
+        .map(|i| (0..6 + i).map(|j| ((j * 5 + i * 3) as u32) % v).collect())
+        .collect();
+    let r = spec_serve_report(
+        &target,
+        &draft,
+        &prompts,
+        12,
+        4,
+        EngineConfig { max_batch: 3, max_seq: None },
+    );
+    assert_eq!(r.total_tokens, 48);
+    assert!(r.rounds > 0);
+    assert!((0.0..=1.0).contains(&r.acceptance_rate));
+    assert!(r.tokens_per_round >= 1.0);
+
+    // offline acceptance predictor runs on the same pair
+    let ws: Vec<&[u32]> = calib.iter().map(|c| c.as_slice()).collect();
+    let agree = greedy_agreement(&target, &draft, &ws);
+    assert!((0.0..=1.0).contains(&agree), "agreement {agree}");
+}
+
 #[test]
 fn mismatched_runtime_shapes_fall_back_to_native() {
     if cfg!(not(feature = "pjrt")) {

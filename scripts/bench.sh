@@ -4,7 +4,8 @@
 #   scripts/bench.sh [filter]
 #
 # Sections (substring filters): gemm hessian finalize cholesky compensate
-# mrp select sequential mask24 sparse decode paged serve pipeline hlo.
+# mrp select sequential mask24 sparse decode paged serve speculative
+# pipeline hlo.
 # `decode` covers both the pruned-model decode benches and the
 # decode_session_* benches (incremental KV-cache/recurrent serving path
 # vs the quadratic full-forward baseline, populating
@@ -17,7 +18,12 @@
 # derived.engine_batch_speedup_{b4,b16} (plus *_packed24 variants), and
 # also the cross-request packed-prefill and threaded batch-attention
 # benches (derived.engine_prefill_packed_speedup,
-# derived.batch_attn_thread_speedup).
+# derived.batch_attn_thread_speedup). `speculative` serves the same
+# greedy workload through the dense engine and the self-speculative one
+# (magnitude-2:4 draft of the target's own weights) at k ∈ {2, 4, 8},
+# populating derived.spec_decode_tokens_per_s_{dense,k2,k4,k8},
+# derived.spec_acceptance_rate, and derived.spec_decode_speedup_vs_dense
+# — the lossless gate (bit-identical outputs) is asserted before timing.
 #
 # The bench binary itself writes BENCH_perf.json at the repo root and
 # prints a delta table against the previous run (a filtered run keeps the

@@ -21,6 +21,9 @@ cargo run --release --example serve_engine
 echo "== smoke: long context (window << prompt, sustained paged eviction) =="
 cargo run --release --example long_context_smoke
 
+echo "== smoke: speculative decoding (lossless draft-propose / target-verify) =="
+cargo run --release --example spec_decode
+
 echo "== hygiene: rustfmt check =="
 cargo fmt --all -- --check
 
