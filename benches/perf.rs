@@ -476,7 +476,7 @@ fn bench_serve(rec: &mut Recorder) {
         ("packed24", prune_pack_transformer(cfg, 72, Some(Sparsity::two_four()))),
     ] {
         let make_engine = |bsz: usize| {
-            let mut eng = Engine::new(&model, EngineConfig { max_batch: bsz, max_seq: None });
+            let mut eng = Engine::new(&model, EngineConfig { max_batch: bsz, ..Default::default() });
             for i in 0..bsz {
                 eng.submit(Request::greedy(prompt(i), new_toks));
             }
@@ -673,7 +673,7 @@ fn bench_speculative(rec: &mut Recorder) {
     let prompts: Vec<Vec<u32>> = (0..bsz)
         .map(|i| (0..plen).map(|j| ((j * 7 + i * 13) % 512) as u32).collect())
         .collect();
-    let ecfg = EngineConfig { max_batch: bsz, max_seq: None };
+    let ecfg = EngineConfig { max_batch: bsz, ..Default::default() };
 
     let probe = spec_serve_report(&target, &draft, &prompts, new_toks, 4, ecfg);
     rec.derived.insert("spec_acceptance_rate".into(), probe.acceptance_rate);
@@ -728,6 +728,63 @@ fn bench_speculative(rec: &mut Recorder) {
     println!("  -> speculative best-k throughput vs dense engine: {speedup:.2}x");
 }
 
+/// Structured pruning vs element-sparse serving at matched 50% budget:
+/// a structured-pruned transformer (half the heads, half the FFN
+/// channels — every block linear a physically smaller dense matmul)
+/// against a magnitude-50% csr16 model of the same geometry, through
+/// the same prefill+decode workload. Records
+/// `structured_decode_tokens_per_s`, `structured_vs_csr_speedup` and
+/// the pipeline's achieved `structured_flops_ratio` under `derived`.
+fn bench_structured(rec: &mut Recorder) {
+    use apt::coordinator::structured_prune_transformer;
+    use apt::prune::StructuredConfig;
+
+    let cfg = TransformerConfig {
+        vocab: 512,
+        d_model: 128,
+        n_layers: 4,
+        n_heads: 4,
+        d_ff: 256,
+        max_seq: 512,
+    };
+    let mut structured = prune_pack_transformer(cfg, 111, None);
+    let mut rng = Rng::new(112);
+    let calib: Vec<Vec<u32>> =
+        (0..8).map(|_| (0..32).map(|_| rng.below(512) as u32).collect()).collect();
+    let rep = structured_prune_transformer(&mut structured, &calib, &StructuredConfig::new(0.5))
+        .unwrap();
+    rec.derived.insert("structured_flops_ratio".into(), rep.flops_ratio());
+    println!("  -> structured pipeline FLOPs ratio: {:.3}", rep.flops_ratio());
+
+    // element-sparse baseline at the same 50% weight budget
+    let csr = prune_pack_transformer(cfg, 111, Some(Sparsity::Unstructured { rate: 0.5 }));
+
+    let prefill: Vec<u32> = (0..128).map(|i| (i * 7 % 512) as u32).collect();
+    let steps = 64usize;
+    let run_decode = |rec: &mut Recorder, label: &str, model: &dyn LanguageModel| -> f64 {
+        let med = rec.bench(
+            &format!("decode_session prefill128+{steps}steps ({label})"),
+            5,
+            || {
+                let mut sess = DecodeSession::new(model);
+                sess.prefill(&prefill);
+                for i in 0..steps {
+                    std::hint::black_box(sess.step((i * 13 % 512) as u32));
+                }
+            },
+        );
+        steps as f64 / (med / 1000.0).max(1e-9)
+    };
+    let tps_structured = run_decode(rec, "structured 0.5", &structured);
+    let tps_csr = run_decode(rec, "csr16 0.5", &csr);
+    rec.derived.insert("structured_decode_tokens_per_s".into(), tps_structured);
+    rec.derived.insert("structured_vs_csr_speedup".into(), tps_structured / tps_csr.max(1e-9));
+    println!(
+        "  -> structured decode: {tps_structured:.0} tok/s ({:.2}x vs csr16)",
+        tps_structured / tps_csr.max(1e-9)
+    );
+}
+
 /// End-to-end coordinator run (calibrate -> prune -> propagate) on a
 /// small trained transformer, so every future PR has a pipeline-level
 /// trajectory, not just kernel medians.
@@ -777,6 +834,27 @@ fn main() {
         rec.bench("gemm_tb 512x512x512", 10, || {
             std::hint::black_box(a.matmul_tb(&b));
         });
+
+        // K-dimension cache tiling: a K-heavy shape where the untiled
+        // inner loop streams `b` out of cache once per output row-chunk.
+        // Both runs produce bitwise-identical output (the per-element
+        // accumulation order is unchanged); only locality differs.
+        let ak = Mat::randn(128, 4096, 1.0, &mut rng);
+        let bk = Mat::randn(4096, 256, 1.0, &mut rng);
+        let mut out = Mat::zeros(128, 256);
+        let untiled = rec.bench("gemm_into 128x4096x256 (untiled)", 10, || {
+            out.data.fill(0.0); // matmul_into accumulates
+            apt::tensor::matmul_into_tiled(&ak, &bk, &mut out, usize::MAX);
+            std::hint::black_box(&out);
+        });
+        let tiled = rec.bench("gemm_into 128x4096x256 (k-tiled 128)", 10, || {
+            out.data.fill(0.0);
+            apt::tensor::matmul_into_tiled(&ak, &bk, &mut out, 128);
+            std::hint::black_box(&out);
+        });
+        let speedup = untiled / tiled.max(1e-9);
+        rec.derived.insert("gemm_k_tiling_speedup".into(), speedup);
+        println!("  -> gemm K-tiling: {speedup:.2}x vs untiled at K=4096");
     }
 
     if run("hessian") {
@@ -900,6 +978,10 @@ fn main() {
 
     if run("speculative") {
         bench_speculative(&mut rec);
+    }
+
+    if run("structured") {
+        bench_structured(&mut rec);
     }
 
     if run("pipeline") {

@@ -28,7 +28,7 @@ fn main() {
 
     let t = Timer::start();
     let streamed = Cell::new(0usize);
-    let mut eng = Engine::new(&model, EngineConfig { max_batch: 2, max_seq: Some(window) });
+    let mut eng = Engine::new(&model, EngineConfig { max_batch: 2, max_seq: Some(window), ..Default::default() });
     eng.set_on_token(|_, _| streamed.set(streamed.get() + 1));
     eng.submit(Request::greedy(prompt.clone(), new_toks));
     while eng.has_work() {

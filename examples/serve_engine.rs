@@ -38,7 +38,7 @@ fn main() {
     let streamed: std::rc::Rc<std::cell::RefCell<std::collections::BTreeMap<_, Vec<u32>>>> =
         Default::default();
     let sink = streamed.clone();
-    let mut eng = Engine::new(&model, EngineConfig { max_batch: 4, max_seq: Some(128) });
+    let mut eng = Engine::new(&model, EngineConfig { max_batch: 4, max_seq: Some(128), ..Default::default() });
     eng.set_on_token(move |id, tok| sink.borrow_mut().entry(id).or_default().push(tok));
     let mut ids = Vec::new();
     ids.push(eng.submit(Request::greedy(prompt(0, 48), 16)));

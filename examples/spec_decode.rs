@@ -81,7 +81,7 @@ fn main() {
         &prompts,
         16,
         4,
-        EngineConfig { max_batch: 4, max_seq: None },
+        EngineConfig { max_batch: 4, ..Default::default() },
     );
     println!(
         "engine (k={}, {} streams): {} tokens, acceptance {:.3}, \

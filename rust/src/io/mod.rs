@@ -20,6 +20,12 @@
 //!     fmt 1 csr:      u32 nnz | u32 indptr (rows+1) | u32 indices | f32 values
 //!     fmt 2 packed24: f32 values (rows*cols/2) | u8 meta (rows*cols/4)
 //!     fmt 3 csr16:    u32 nnz | u32 indptr (rows+1) | u16 indices | f32 values
+//!     fmt 4 reduced:  u32 phys_rows | u32 phys_cols | u8 flags
+//!                     | [flags&1: u32 n | u32 kept_rows (n, ascending)]
+//!                     | [flags&2: u32 n | u32 kept_cols (n, ascending)]
+//!                     | f32 data (phys_rows*phys_cols)
+//!       (header rows/cols carry the LOGICAL full shape; the payload's
+//!        physical shape is what the dense matmul executes)
 //!
 //! `ParamStore::load` also accepts ATS1 files (all-dense), so pre-existing
 //! checkpoints and model caches keep working.
@@ -32,7 +38,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::sparse::{Csr, Csr16, Packed24, WeightStore};
+use crate::sparse::{Csr, Csr16, Packed24, ReducedDense, WeightStore};
 use crate::tensor::Mat;
 
 const MAGIC: &[u8; 4] = b"ATS1";
@@ -298,12 +304,19 @@ impl ParamStore {
             let nb = name.as_bytes();
             w.write_all(&(nb.len() as u32).to_le_bytes())?;
             w.write_all(nb)?;
-            let (rows, cols) = ws.shape();
+            // header shape is LOGICAL: a reduced store's physical shape
+            // lives in its payload, so accounting against the model
+            // config stays layout-blind
+            let (rows, cols) = match ws {
+                WeightStore::DenseReduced(rd) => (rd.full_rows, rd.full_cols),
+                _ => ws.shape(),
+            };
             let fmt: u8 = match ws {
                 WeightStore::Dense(_) => 0,
                 WeightStore::Csr(_) => 1,
                 WeightStore::Packed24(_) => 2,
                 WeightStore::Csr16(_) => 3,
+                WeightStore::DenseReduced(_) => 4,
             };
             w.write_all(&[fmt])?;
             w.write_all(&(rows as u32).to_le_bytes())?;
@@ -325,6 +338,18 @@ impl ParamStore {
                 WeightStore::Packed24(p) => {
                     write_f32s(&mut w, &p.values)?;
                     w.write_all(&p.meta)?;
+                }
+                WeightStore::DenseReduced(rd) => {
+                    w.write_all(&(rd.mat.rows as u32).to_le_bytes())?;
+                    w.write_all(&(rd.mat.cols as u32).to_le_bytes())?;
+                    let flags = rd.kept_rows.is_some() as u8
+                        | ((rd.kept_cols.is_some() as u8) << 1);
+                    w.write_all(&[flags])?;
+                    for kept in [&rd.kept_rows, &rd.kept_cols].into_iter().flatten() {
+                        w.write_all(&(kept.len() as u32).to_le_bytes())?;
+                        write_u32s(&mut w, kept)?;
+                    }
+                    write_f32s(&mut w, &rd.mat.data)?;
                 }
             }
         }
@@ -434,6 +459,54 @@ impl ParamStore {
                     }
                     let values = read_f32s(&mut r, nnz)?;
                     WeightStore::Csr16(Csr16 { rows, cols, indptr, indices, values })
+                }
+                4 => {
+                    let phys_rows = read_u32(&mut r)? as usize;
+                    let phys_cols = read_u32(&mut r)? as usize;
+                    check_shape(&name, phys_rows, phys_cols)?;
+                    if phys_rows > rows || phys_cols > cols {
+                        bail!(
+                            "reduced physical shape {phys_rows}x{phys_cols} exceeds \
+                             logical {rows}x{cols} in '{name}'"
+                        );
+                    }
+                    let mut flags = [0u8; 1];
+                    r.read_exact(&mut flags)?;
+                    if flags[0] & !3 != 0 {
+                        bail!("unknown reduced-store flags {:#04x} in '{name}'", flags[0]);
+                    }
+                    // each kept list's length must equal the physical
+                    // axis — checked BEFORE the allocation so a corrupt
+                    // count fails cleanly, and again structurally (range,
+                    // strict ascent, presence) by ReducedDense::new
+                    let mut kept = [None, None];
+                    for (bit, (slot, phys)) in
+                        kept.iter_mut().zip([phys_rows, phys_cols]).enumerate()
+                    {
+                        if flags[0] & (1 << bit) == 0 {
+                            continue;
+                        }
+                        let n = read_u32(&mut r)? as usize;
+                        let axis = if bit == 0 { "row" } else { "col" };
+                        if n != phys {
+                            bail!(
+                                "kept-{axis} list length {n} != physical {axis}s {phys} \
+                                 in '{name}'"
+                            );
+                        }
+                        *slot = Some(read_u32s(&mut r, n)?);
+                    }
+                    let [kept_rows, kept_cols] = kept;
+                    let data = read_f32s(&mut r, phys_rows * phys_cols)?;
+                    let rd = ReducedDense::new(
+                        rows,
+                        cols,
+                        kept_rows,
+                        kept_cols,
+                        Mat::from_vec(phys_rows, phys_cols, data),
+                    )
+                    .with_context(|| format!("reduced store '{name}'"))?;
+                    WeightStore::DenseReduced(rd)
                 }
                 f => bail!("unknown weight format tag {f} in '{name}'"),
             };
@@ -639,6 +712,122 @@ mod tests {
         )
         .unwrap_err();
         assert!(err.to_string().contains("u16 index range"), "{err}");
+    }
+
+    #[test]
+    fn param_store_roundtrips_reduced_stores() {
+        // rows-only, cols-only, and both-axes reduced stores survive a
+        // save/load with their index maps, physical data and LOGICAL
+        // accounting intact.
+        let mut rng = Rng::new(6);
+        let full = Mat::randn(6, 8, 1.0, &mut rng);
+        let mut s = ParamStore::new();
+        s.insert_store(
+            "rows",
+            WeightStore::DenseReduced(
+                ReducedDense::from_dense(&full, Some(&[0, 3, 5]), None).unwrap(),
+            ),
+        );
+        s.insert_store(
+            "cols",
+            WeightStore::DenseReduced(
+                ReducedDense::from_dense(&full, None, Some(&[1, 2, 6, 7])).unwrap(),
+            ),
+        );
+        s.insert_store(
+            "both",
+            WeightStore::DenseReduced(
+                ReducedDense::from_dense(&full, Some(&[1, 4]), Some(&[0, 5])).unwrap(),
+            ),
+        );
+        let dir = std::env::temp_dir().join("apt_test_param_store");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("reduced_roundtrip.ats");
+        s.save(&path).unwrap();
+        let loaded = ParamStore::load(&path).unwrap();
+        for name in ["rows", "cols", "both"] {
+            assert_eq!(s.get(name).unwrap(), loaded.get(name).unwrap(), "{name}");
+            assert_eq!(loaded.get(name).unwrap().format(), "dense_reduced");
+            // logical geometry, not the physical payload shape
+            assert_eq!(loaded.get(name).unwrap().n_params(), 48, "{name}");
+        }
+        assert_eq!(loaded.get("both").unwrap().shape(), (2, 2));
+        std::fs::remove_file(path).ok();
+    }
+
+    /// Hand-build one ATS2 reduced (fmt 4) entry named "w" from raw
+    /// parts; `n` in each kept pair is written verbatim so length
+    /// corruption is expressible.
+    fn ats2_reduced_bytes(
+        full: (u32, u32),
+        phys: (u32, u32),
+        flags: u8,
+        kept_rows: Option<(u32, &[u32])>,
+        kept_cols: Option<(u32, &[u32])>,
+    ) -> Vec<u8> {
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"ATS2");
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.extend_from_slice(&1u32.to_le_bytes());
+        bytes.push(b'w');
+        bytes.push(4u8); // fmt = reduced
+        bytes.extend_from_slice(&full.0.to_le_bytes());
+        bytes.extend_from_slice(&full.1.to_le_bytes());
+        bytes.extend_from_slice(&phys.0.to_le_bytes());
+        bytes.extend_from_slice(&phys.1.to_le_bytes());
+        bytes.push(flags);
+        for (n, kept) in [kept_rows, kept_cols].into_iter().flatten() {
+            bytes.extend_from_slice(&n.to_le_bytes());
+            for v in kept {
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        for _ in 0..phys.0 * phys.1 {
+            bytes.extend_from_slice(&1.0f32.to_le_bytes());
+        }
+        bytes
+    }
+
+    #[test]
+    fn param_store_rejects_malformed_reduced() {
+        // kept-row index beyond the logical row count: scatters out of
+        // bounds at to_full / save time — reject at load.
+        let err = load_bytes(
+            "red_oob.ats",
+            &ats2_reduced_bytes((4, 4), (2, 4), 1, Some((2, &[1, 9])), None),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("out of range"), "{err:#}");
+        // duplicate (non-increasing) kept indices: two physical rows
+        // would claim one logical row — reject.
+        let err = load_bytes(
+            "red_dup.ats",
+            &ats2_reduced_bytes((4, 4), (2, 4), 1, Some((2, &[2, 2])), None),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("strictly increasing"), "{err:#}");
+        // kept list length disagreeing with the physical axis: fails
+        // before the list allocation, with the axis named.
+        let err = load_bytes(
+            "red_len.ats",
+            &ats2_reduced_bytes((4, 4), (2, 4), 1, Some((3, &[0, 1, 2])), None),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("kept-row list length"), "{err:#}");
+        // a shrunk axis with no index map is unreconstructible
+        let err = load_bytes(
+            "red_nomap.ats",
+            &ats2_reduced_bytes((4, 4), (2, 4), 0, None, None),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("no kept-row map"), "{err:#}");
+        // physical shape larger than the logical header shape
+        let err = load_bytes(
+            "red_grow.ats",
+            &ats2_reduced_bytes((4, 4), (5, 4), 1, Some((5, &[0, 1, 2, 3, 4])), None),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("exceeds logical"), "{err:#}");
     }
 
     #[test]

@@ -143,8 +143,13 @@ impl Mamba {
     /// Fresh per-block recurrent state for a decode session. Zero-filled
     /// history is exactly the causal zero-padding the full forward uses
     /// for positions before the sequence start.
+    /// Sized per block from the actual `out_proj` store: structured
+    /// pruning may have removed inner channels, so a block's scan/conv
+    /// state is `out_proj.cols()` wide, not `d_inner`.
     pub(crate) fn new_block_states(&self) -> Vec<MambaBlockState> {
-        (0..self.cfg.n_layers).map(|_| MambaBlockState::new(self.cfg.d_inner)).collect()
+        (0..self.cfg.n_layers)
+            .map(|b| MambaBlockState::new(self.weight(b, "out_proj").cols()))
+            .collect()
     }
 
     fn block_impl(
@@ -155,7 +160,12 @@ impl Mamba {
         mut cache: Option<&mut MambaCache>,
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
-        let e = self.cfg.d_inner;
+        // Per-block inner width from the physical out_proj shape:
+        // structured pruning removes whole channels, so a block may run
+        // narrower than cfg.d_inner. in_proj (2e rows), dt_proj (e×e),
+        // conv (e cols) and the scan state are all sliced by the same
+        // kept-channel set, so every width below derives from this one.
+        let e = self.weight(b, "out_proj").cols();
         let norm_g = self.params.dense(&key(b, "norm")).unwrap().row(0);
         let n = super::transformer_rmsnorm(x, norm_g);
         sink("in_proj", &n.y);

@@ -189,9 +189,14 @@ impl Transformer {
         self.block_forward_impl(b, x, TfAttn::BatchDecode { poss, sts }, None, &mut |_, _| {})
     }
 
-    /// Fresh (empty) per-block K/V caches for a decode session.
+    /// Fresh (empty) per-block K/V caches for a decode session. Sized
+    /// per block from the actual `wq` store: structured pruning may
+    /// have removed whole heads, so a block's K/V rows are `wq.rows()`
+    /// (= surviving heads × head_dim) wide, not `d_model`.
     pub(crate) fn new_block_states(&self) -> Vec<TfBlockState> {
-        (0..self.cfg.n_layers).map(|_| TfBlockState::new(self.cfg.d_model)).collect()
+        (0..self.cfg.n_layers)
+            .map(|b| TfBlockState::new(self.weight(b, "wq").rows()))
+            .collect()
     }
 
     fn block_forward_impl(
@@ -203,7 +208,13 @@ impl Transformer {
         sink: &mut dyn FnMut(&str, &Mat),
     ) -> Mat {
         let cfg = &self.cfg;
-        let (h, dh) = (cfg.n_heads, cfg.head_dim());
+        // Per-block head count from the physical wq shape: structured
+        // pruning removes whole heads, so a block may run fewer than
+        // cfg.n_heads. head_dim is invariant (heads are dropped, never
+        // narrowed), which keeps RoPE rotating every surviving head
+        // exactly as the full-shape model would.
+        let dh = cfg.head_dim();
+        let h = self.weight(b, "wq").rows() / dh;
         let scale = 1.0 / (dh as f32).sqrt();
 
         // --- attention sublayer
@@ -217,7 +228,7 @@ impl Transformer {
         let mut q = q0;
         let mut k = k0;
 
-        let mut attn_out = Mat::zeros(x.rows, cfg.d_model);
+        let mut attn_out = Mat::zeros(x.rows, h * dh);
         let mut probs_cache: Vec<Mat> = Vec::new();
         match mode {
             TfAttn::Full { bsz, t } => {

@@ -11,6 +11,7 @@ pub mod hessian;
 pub mod mask;
 pub mod mrp;
 pub mod sparsegpt;
+pub mod structured;
 
 pub use baselines::{magnitude_prune, wanda_prune};
 pub use hessian::{column_norms, HessianAccumulator};
@@ -20,6 +21,10 @@ pub use mrp::{
     IncrementalMrp, MrpSolver,
 };
 pub use sparsegpt::{compensate_sequential, compensate_sequential_range, sparsegpt_prune};
+pub use structured::{
+    column_groups, compensate_columns, dropped_columns, group_scores, kept_columns,
+    select_kept_groups, StructuredConfig,
+};
 
 use anyhow::{bail, Result};
 

@@ -1,0 +1,305 @@
+//! Structured post-training pruning: score whole attention heads / FFN
+//! channels from the same calibration Hessians the unstructured path
+//! accumulates, select a keep-set under a budget, and compensate the
+//! surviving weights with the paper's Eq. 13 least-squares
+//! reconstruction before the consumer/producer pair is physically
+//! sliced down to a [`crate::sparse::ReducedDense`] store.
+//!
+//! The granularity trick (Kwon et al.'s fast post-training framework,
+//! Compresso's channel variant): a structural unit — one head, one FFN
+//! channel, one mamba inner channel — is visible to exactly one or two
+//! *consumer* linears as a contiguous set of input columns. Removing
+//! the unit therefore scores as an Eq. 12 GROUP loss on the consumer's
+//! Hessian, and zeroing it compensates with the same column-uniform
+//! Eq. 13 solve used per-row by the unstructured path. Once the
+//! consumer columns are exact zeros, the producer rows feeding them are
+//! dead code and can be dropped with NO further approximation — that
+//! step is lossless, which is why the reduced model is gated against
+//! the masked full-shape oracle at <1e-5 (f32 re-association only)
+//! rather than a looser tolerance.
+
+use crate::linalg::{cholesky_unblocked, solve_lower, solve_lower_t};
+use crate::prune::{compensate_m, Mask};
+use crate::tensor::{Mat, MatF64};
+
+/// Structured pruning budget + calibration knobs, shared by the
+/// coordinator's transformer and mamba entry points. All `keep_*`
+/// fractions are of the structural unit count (heads / channels), not
+/// of parameters; at least one unit always survives.
+#[derive(Clone, Copy, Debug)]
+pub struct StructuredConfig {
+    /// Fraction of attention heads kept per transformer block.
+    pub keep_heads: f64,
+    /// Fraction of FFN channels kept per transformer block.
+    pub keep_ffn: f64,
+    /// Fraction of inner channels kept per mamba block.
+    pub keep_channels: f64,
+    /// Hessian dampening ratio (Remark 4.1; paper default 0.01).
+    pub gamma: f64,
+    /// Calibration sequences per forward batch.
+    pub batch: usize,
+    /// Bounded-queue depth for the propagate stage.
+    pub queue_cap: usize,
+    /// Oracle mode: stop after Eq. 13 compensation, leaving every
+    /// linear at its full logical shape with exact zeros in the dropped
+    /// columns. Decisions and compensation are byte-identical to the
+    /// reducing run on the same calibration set, so a `masked: true`
+    /// run is the reference the physically reduced model is gated
+    /// against.
+    pub masked: bool,
+}
+
+impl StructuredConfig {
+    /// Uniform keep-fraction across heads, FFN channels and mamba
+    /// channels, with the pipeline defaults for everything else.
+    pub fn new(keep: f64) -> StructuredConfig {
+        StructuredConfig {
+            keep_heads: keep,
+            keep_ffn: keep,
+            keep_channels: keep,
+            gamma: 0.01,
+            batch: 8,
+            queue_cap: 4,
+            masked: false,
+        }
+    }
+}
+
+/// The structural units of a `cols`-wide consumer input, as contiguous
+/// column groups of width `group_size` (head_dim for attention heads,
+/// 1 for FFN / mamba channels). `cols` must divide evenly.
+pub fn column_groups(cols: usize, group_size: usize) -> Vec<Vec<usize>> {
+    assert!(group_size > 0 && cols % group_size == 0, "{cols} cols / group {group_size}");
+    (0..cols / group_size)
+        .map(|g| (g * group_size..(g + 1) * group_size).collect())
+        .collect()
+}
+
+/// Eq. 12 group removal loss per unit: for group G of consumer columns,
+/// Σ_rows ½ · w[r,G]ᵀ (Hinv[G,G])⁻¹ w[r,G]. The G×G sub-matrix is
+/// factored once and back-solved per row (the mask is column-uniform,
+/// so unlike the per-row unstructured path one factorization serves
+/// every row).
+pub fn group_scores(w: &Mat, hinv: &MatF64, groups: &[Vec<usize>]) -> Vec<f64> {
+    assert_eq!(hinv.rows, w.cols, "hessian dim {} != consumer in-dim {}", hinv.rows, w.cols);
+    groups
+        .iter()
+        .map(|g| {
+            let l = cholesky_unblocked(&hinv.sub(g, g))
+                .expect("Hinv principal submatrix must be SPD");
+            let mut total = 0.0f64;
+            for r in 0..w.rows {
+                let row = w.row(r);
+                let rhs: Vec<f64> = g.iter().map(|&c| row[c] as f64).collect();
+                let lam = solve_lower_t(&l, &solve_lower(&l, &rhs));
+                total += 0.5 * lam.iter().zip(&rhs).map(|(a, b)| a * b).sum::<f64>();
+            }
+            total
+        })
+        .collect()
+}
+
+/// Keep the `⌈keep·n⌉` highest-scoring units (always ≥ 1, ties broken
+/// toward the lower index for determinism). Returns the kept unit
+/// indices in ascending order.
+pub fn select_kept_groups(scores: &[f64], keep: f64) -> Vec<usize> {
+    let n = scores.len();
+    let n_keep = ((keep * n as f64).ceil() as usize).clamp(1, n.max(1));
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).expect("group score must not be NaN").then(a.cmp(&b))
+    });
+    let mut kept: Vec<usize> = order[..n_keep].to_vec();
+    kept.sort_unstable();
+    kept
+}
+
+/// Expand kept unit indices into kept logical column indices
+/// (ascending), each unit covering a contiguous `group_size`-wide range.
+pub fn kept_columns(kept_groups: &[usize], group_size: usize) -> Vec<u32> {
+    kept_groups
+        .iter()
+        .flat_map(|&g| (g * group_size..(g + 1) * group_size).map(|c| c as u32))
+        .collect()
+}
+
+/// The complement of a sorted kept-index list over `0..n`.
+pub fn dropped_columns(kept: &[u32], n: usize) -> Vec<usize> {
+    let keep: std::collections::BTreeSet<u32> = kept.iter().copied().collect();
+    (0..n).filter(|&c| !keep.contains(&(c as u32))).collect()
+}
+
+/// Eq. 13 compensation for a column-uniform removal: every row of the
+/// consumer prunes exactly `dropped`, the survivors absorb the update,
+/// and the dropped columns end as exact zeros. Returns the Eq. 12
+/// predicted loss (= Σ of the joint group loss over rows).
+pub fn compensate_columns(w: &mut Mat, hinv: &MatF64, dropped: &[usize]) -> f64 {
+    if dropped.is_empty() {
+        return 0.0;
+    }
+    let mut mask = Mask::new(w.rows, w.cols);
+    for r in 0..w.rows {
+        for &c in dropped {
+            mask.set(r, c, true);
+        }
+    }
+    compensate_m(w, &mask, hinv)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prune::{quadratic_loss, HessianAccumulator};
+    use crate::util::Rng;
+
+    fn eye(n: usize) -> MatF64 {
+        let mut m = MatF64::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    #[test]
+    fn column_groups_partition_the_input() {
+        let g = column_groups(12, 4);
+        assert_eq!(g.len(), 3);
+        assert_eq!(g[0], vec![0, 1, 2, 3]);
+        assert_eq!(g[2], vec![8, 9, 10, 11]);
+        let singles = column_groups(3, 1);
+        assert_eq!(singles, vec![vec![0], vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn group_scores_identity_hessian_is_half_sq_norm() {
+        // With Hinv = I the Eq. 12 group loss degenerates to ½‖w[:,G]‖²
+        // — the magnitude baseline — which pins the solve path exactly.
+        let mut rng = Rng::new(7);
+        let w = Mat::randn(5, 8, 1.0, &mut rng);
+        let groups = column_groups(8, 2);
+        let scores = group_scores(&w, &eye(8), &groups);
+        for (gi, g) in groups.iter().enumerate() {
+            let expect: f64 = (0..5)
+                .map(|r| {
+                    g.iter().map(|&c| (w[(r, c)] as f64).powi(2)).sum::<f64>() * 0.5
+                })
+                .sum();
+            assert!((scores[gi] - expect).abs() < 1e-9, "group {gi}");
+        }
+    }
+
+    #[test]
+    fn select_kept_groups_budget_and_ordering() {
+        let scores = [3.0, 0.5, 9.0, 1.0];
+        assert_eq!(select_kept_groups(&scores, 0.5), vec![0, 2]);
+        assert_eq!(select_kept_groups(&scores, 1.0), vec![0, 1, 2, 3]);
+        // floor of one unit even under an absurd budget
+        assert_eq!(select_kept_groups(&scores, 0.0), vec![2]);
+        // ⌈0.6·4⌉ = 3: drops only the weakest
+        assert_eq!(select_kept_groups(&scores, 0.6), vec![0, 2, 3]);
+        // ties resolve toward the lower index
+        assert_eq!(select_kept_groups(&[1.0, 1.0, 1.0], 0.34), vec![0]);
+    }
+
+    #[test]
+    fn kept_and_dropped_columns_are_complementary() {
+        let kept = kept_columns(&[0, 2], 3);
+        assert_eq!(kept, vec![0, 1, 2, 6, 7, 8]);
+        assert_eq!(dropped_columns(&kept, 9), vec![3, 4, 5]);
+        assert_eq!(dropped_columns(&[], 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn compensate_columns_identity_hessian_zeros_only_dropped() {
+        // Hinv = I ⇒ the Eq. 13 update touches exactly the pruned
+        // columns; survivors must be bit-identical.
+        let mut rng = Rng::new(8);
+        let w0 = Mat::randn(4, 6, 1.0, &mut rng);
+        let mut w = w0.clone();
+        let loss = compensate_columns(&mut w, &eye(6), &[1, 4]);
+        let expect: f64 = (0..4)
+            .map(|r| {
+                0.5 * ((w0[(r, 1)] as f64).powi(2) + (w0[(r, 4)] as f64).powi(2))
+            })
+            .sum();
+        assert!((loss - expect).abs() < 1e-9);
+        for r in 0..4 {
+            assert_eq!(w[(r, 1)], 0.0);
+            assert_eq!(w[(r, 4)], 0.0);
+            for c in [0usize, 2, 3, 5] {
+                assert_eq!(w[(r, c)], w0[(r, c)], "row {r} col {c}");
+            }
+        }
+        // empty drop-set is a no-op
+        let mut w2 = w0.clone();
+        assert_eq!(compensate_columns(&mut w2, &eye(6), &[]), 0.0);
+        assert_eq!(w2, w0);
+    }
+
+    #[test]
+    fn compensation_beats_naive_column_zeroing() {
+        // On a real calibration Hessian, Eq. 13 reconstruction of the
+        // survivors must not lose to just zeroing the dropped columns
+        // (the paper's core claim, at structured granularity).
+        let mut rng = Rng::new(9);
+        let w0 = Mat::randn(6, 16, 1.0, &mut rng);
+        let x = Mat::randn(64, 16, 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(16);
+        acc.add_chunk(&x);
+        let (hd, hinv) = acc.finalize(0.01);
+
+        let groups = column_groups(16, 4);
+        let scores = group_scores(&w0, &hinv, &groups);
+        let kept = select_kept_groups(&scores, 0.5);
+        let dropped = dropped_columns(&kept_columns(&kept, 4), 16);
+
+        let mut comp = w0.clone();
+        compensate_columns(&mut comp, &hinv, &dropped);
+        let mut naive = w0.clone();
+        for r in 0..6 {
+            for &c in &dropped {
+                naive[(r, c)] = 0.0;
+            }
+        }
+        let l_comp = quadratic_loss(&w0, &comp, &hd);
+        let l_naive = quadratic_loss(&w0, &naive, &hd);
+        assert!(l_comp <= l_naive * (1.0 + 1e-9), "{l_comp} vs {l_naive}");
+        // and pruning the LOWEST-scoring units beats pruning the highest
+        let worst: Vec<usize> = {
+            let best = select_kept_groups(&scores, 0.5);
+            (0..4).filter(|g| !best.contains(g)).collect()
+        };
+        let mut flipped = w0.clone();
+        compensate_columns(
+            &mut flipped,
+            &hinv,
+            &dropped_columns(&kept_columns(&worst, 4), 16),
+        );
+        let l_flipped = quadratic_loss(&w0, &flipped, &hd);
+        assert!(l_comp <= l_flipped * (1.0 + 1e-9), "{l_comp} vs {l_flipped}");
+    }
+
+    #[test]
+    fn group_scores_match_compensate_loss_single_group() {
+        // Dropping exactly one unit: the selection score must equal the
+        // Eq. 12 loss the compensation path reports — same math, two
+        // code paths.
+        let mut rng = Rng::new(10);
+        let w0 = Mat::randn(5, 12, 1.0, &mut rng);
+        let x = Mat::randn(48, 12, 1.0, &mut rng);
+        let mut acc = HessianAccumulator::new(12);
+        acc.add_chunk(&x);
+        let (_hd, hinv) = acc.finalize(0.01);
+        let groups = column_groups(12, 3);
+        let scores = group_scores(&w0, &hinv, &groups);
+        for (gi, g) in groups.iter().enumerate() {
+            let mut w = w0.clone();
+            let loss = compensate_columns(&mut w, &hinv, g);
+            assert!(
+                (loss - scores[gi]).abs() < 1e-9 * scores[gi].abs().max(1.0),
+                "group {gi}: {loss} vs {}",
+                scores[gi]
+            );
+        }
+    }
+}

@@ -202,16 +202,23 @@ pub struct Completion {
 
 /// Engine knobs. `max_batch` bounds concurrent streams (queued requests
 /// wait); `max_seq`, when set, applies the sliding-window K/V bound to
-/// every stream.
+/// every stream; `max_wait_rounds` bounds how many admit rounds a
+/// request can be passed over by shortest-first admission before it
+/// jumps the sort (see [`Engine::admit`]).
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
     pub max_batch: usize,
     pub max_seq: Option<usize>,
+    /// After waiting this many admit rounds, a queued request is aged:
+    /// it admits ahead of every fresh request, FIFO among aged ones, so
+    /// sustained streams of short arrivals cannot starve a long prompt.
+    /// `0` disables shortest-first entirely (pure FIFO admission).
+    pub max_wait_rounds: usize,
 }
 
 impl Default for EngineConfig {
     fn default() -> EngineConfig {
-        EngineConfig { max_batch: 8, max_seq: None }
+        EngineConfig { max_batch: 8, max_seq: None, max_wait_rounds: 8 }
     }
 }
 
@@ -238,6 +245,15 @@ impl Stream {
     }
 }
 
+/// A request waiting for a batch slot, plus how many admit rounds it
+/// has already been passed over — the aging counter that bounds
+/// shortest-first starvation.
+struct Queued {
+    id: RequestId,
+    req: Request,
+    waited: usize,
+}
+
 /// Continuous-batching decode engine over a borrowed model.
 ///
 /// ```text
@@ -250,7 +266,7 @@ pub struct Engine<'m> {
     model: &'m dyn LanguageModel,
     cfg: EngineConfig,
     next_id: u64,
-    queue: VecDeque<(RequestId, Request)>,
+    queue: VecDeque<Queued>,
     /// Active streams; `states[i]` is `streams[i]`'s decode state (kept
     /// as a parallel contiguous slice so `decode_step_batch` can take
     /// `&mut [DecodeState]` directly).
@@ -347,7 +363,7 @@ impl<'m> Engine<'m> {
         }
         let id = RequestId(self.next_id);
         self.next_id += 1;
-        self.queue.push_back((id, req));
+        self.queue.push_back(Queued { id, req, waited: 0 });
         id
     }
 
@@ -388,20 +404,42 @@ impl<'m> Engine<'m> {
     /// serve benches) can pay the prefill cost eagerly, separate from
     /// the decode loop.
     pub fn admit(&mut self) {
-        // Shortest-first admission: sort the WHOLE pending queue by
-        // prompt length before slots are filled, so the ≥50%-fill
-        // peeling below sees length-sorted candidates and mixed-length
-        // bursts pack tightly instead of pairing a long straggler with
-        // whatever arrived next. The sort is stable — equal-length
-        // requests keep submission order — but under sustained skew a
-        // long prompt can wait; aging is a noted follow-up (ROADMAP).
-        self.queue.make_contiguous().sort_by_key(|(_, r)| r.prompt.len());
+        // Shortest-first admission with aging: sort the WHOLE pending
+        // queue before slots are filled, so the ≥50%-fill peeling below
+        // sees length-sorted candidates and mixed-length bursts pack
+        // tightly instead of pairing a long straggler with whatever
+        // arrived next. The sort is stable — equal-length requests keep
+        // submission order. Under sustained skew pure shortest-first
+        // starves: a long prompt loses to every fresh short arrival,
+        // forever. So any request passed over for `max_wait_rounds`
+        // admit rounds is AGED: aged requests sort ahead of every fresh
+        // one, FIFO among themselves (by id = submission order), which
+        // bounds queue wait at O(max_wait_rounds) regardless of what
+        // keeps arriving.
+        let max_wait = self.cfg.max_wait_rounds;
+        self.queue.make_contiguous().sort_by_key(|q| {
+            if q.waited >= max_wait {
+                (false, q.id.0 as usize) // aged: FIFO, ahead of fresh
+            } else {
+                (true, q.req.prompt.len()) // fresh: shortest-first
+            }
+        });
+        self.admit_sorted();
+        // everything still queued was passed over this round
+        for q in self.queue.iter_mut() {
+            q.waited += 1;
+        }
+    }
+
+    /// The slot-filling half of [`Engine::admit`], consuming the queue
+    /// in its already-sorted order.
+    fn admit_sorted(&mut self) {
         loop {
             let free = self.cfg.max_batch - self.streams.len();
             let mut batch: Vec<(RequestId, Request)> = Vec::with_capacity(free);
             while batch.len() < free {
-                let Some(item) = self.queue.pop_front() else { break };
-                batch.push(item);
+                let Some(q) = self.queue.pop_front() else { break };
+                batch.push((q.id, q.req));
             }
             if batch.is_empty() {
                 return;
@@ -757,7 +795,7 @@ mod tests {
         let m = tiny_transformer(3);
         // 5 requests through 2 slots: every completion must still match
         // an isolated session despite mid-flight admissions
-        let mut eng = Engine::new(&m, EngineConfig { max_batch: 2, max_seq: None });
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 2, ..Default::default() });
         for i in 0..5usize {
             eng.submit(Request::greedy(prompt(3 + i, i), 3 + (i % 3)));
         }
@@ -832,7 +870,7 @@ mod tests {
         let p = prompt(10, 4);
         // window larger than prompt+gen: identical to unbounded
         let run = |max_seq: Option<usize>| -> Completion {
-            let mut eng = Engine::new(&m, EngineConfig { max_batch: 4, max_seq });
+            let mut eng = Engine::new(&m, EngineConfig { max_batch: 4, max_seq, ..Default::default() });
             eng.submit(Request::greedy(p.clone(), 6));
             eng.run();
             eng.take_finished().remove(0)
@@ -843,7 +881,8 @@ mod tests {
         assert_eq!(unbounded.last_logits, wide.last_logits);
         // tight window: still decodes, and the cache stays bounded
         let w = 8;
-        let mut eng = Engine::new(&m, EngineConfig { max_batch: 4, max_seq: Some(w) });
+        let mut eng =
+            Engine::new(&m, EngineConfig { max_batch: 4, max_seq: Some(w), ..Default::default() });
         eng.submit(Request::greedy(p.clone(), 12));
         while eng.has_work() {
             eng.step();
@@ -930,7 +969,7 @@ mod tests {
         // sessions per id.
         let m = tiny_transformer(12);
         let lens = [40usize, 2, 3, 2, 5];
-        let mut eng = Engine::new(&m, EngineConfig { max_batch: 3, max_seq: None });
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 3, ..Default::default() });
         let mut ids = Vec::new();
         for (i, &len) in lens.iter().enumerate() {
             ids.push(eng.submit(Request::greedy(prompt(len, i), 4)));
@@ -958,6 +997,47 @@ mod tests {
     }
 
     #[test]
+    fn aged_request_jumps_shortest_first_admission() {
+        // A perpetual stream of fresh short prompts against one slot:
+        // pure shortest-first would pass the long prompt over on every
+        // admit round, forever. Aging bounds its wait.
+        let m = tiny_transformer(14);
+        let drive = |max_wait_rounds: usize, steps: usize| -> (bool, Vec<Completion>) {
+            let mut eng = Engine::new(
+                &m,
+                EngineConfig { max_batch: 1, max_seq: None, max_wait_rounds },
+            );
+            let long_id = eng.submit(Request::greedy(prompt(20, 0), 2));
+            let mut done = Vec::new();
+            for salt in 1..=steps {
+                // a fresh, shorter rival arrives before every step
+                eng.submit(Request::greedy(prompt(2, salt), 2));
+                eng.step();
+                done.extend(eng.take_finished());
+                if done.iter().any(|c| c.id == long_id) {
+                    return (true, done);
+                }
+            }
+            (false, done)
+        };
+        // starvation really happens without the bound...
+        let (finished, _) = drive(usize::MAX, 24);
+        assert!(!finished, "long prompt should starve under pure shortest-first");
+        // ...and aging ends it within ~max_wait_rounds + one stream span
+        let (finished, done) = drive(3, 24);
+        assert!(finished, "aged long prompt must admit despite fresh short arrivals");
+        // the aged stream still reproduces its independent session
+        let long = done.iter().find(|c| c.prompt.len() == 20).unwrap();
+        let mut s = DecodeSession::new(&m);
+        s.prefill(&prompt(20, 0));
+        assert_eq!(long.tokens, s.generate(2));
+        // max_wait_rounds = 0 is documented as pure FIFO: the long
+        // prompt (submitted first) admits on the very first step
+        let (finished, _) = drive(0, 2);
+        assert!(finished, "max_wait_rounds = 0 must admit in submission order");
+    }
+
+    #[test]
     fn on_token_streams_every_token_in_order() {
         use std::cell::RefCell;
         use std::collections::BTreeMap;
@@ -969,7 +1049,7 @@ mod tests {
         let sink = streamed.clone();
         // 3 requests through 2 slots: tokens must stream for refilled
         // slots too, in generation order per request
-        let mut eng = Engine::new(&m, EngineConfig { max_batch: 2, max_seq: None });
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 2, ..Default::default() });
         eng.set_on_token(move |id, tok| sink.borrow_mut().entry(id).or_default().push(tok));
         for i in 0..3usize {
             eng.submit(Request::greedy(prompt(4 + i, i), 3 + i));

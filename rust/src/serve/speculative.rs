@@ -637,7 +637,7 @@ mod tests {
         let target = tiny_transformer(11);
         let draft = tiny_transformer(12);
         let prompts: Vec<Vec<u32>> = (0..5).map(|i| prompt(3 + i * 2, i)).collect();
-        let cfg = EngineConfig { max_batch: 3, max_seq: None };
+        let cfg = EngineConfig { max_batch: 3, ..Default::default() };
         let report = spec_serve_report(&target, &draft, &prompts, 9, 4, cfg);
         assert_eq!(report.streams, 5);
         assert_eq!(report.total_tokens, 45);

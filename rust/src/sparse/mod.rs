@@ -12,7 +12,7 @@
 
 pub mod store;
 
-pub use store::WeightStore;
+pub use store::{ReducedDense, WeightStore};
 
 use crate::tensor::Mat;
 use crate::util::num_threads;

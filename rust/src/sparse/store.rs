@@ -1,7 +1,7 @@
 //! [`WeightStore`]: the uniform weight abstraction threaded through
 //! model → coordinator → eval. A linear's weights live in exactly one of
-//! three layouts — dense [`Mat`], unstructured [`Csr`], or
-//! semi-structured [`Packed24`] — behind one
+//! four layouts — dense [`Mat`], unstructured [`Csr`], semi-structured
+//! [`Packed24`], or structurally reduced [`ReducedDense`] — behind one
 //! `matmul_tb`/`row`/`shape`/`bytes` surface, so the forward path
 //! executes pruned checkpoints straight from the packed layout
 //! (realizing the inference speedup the paper motivates) while the
@@ -9,9 +9,140 @@
 
 use std::borrow::Cow;
 
+use anyhow::{bail, Result};
+
 use super::{Csr, Csr16, Packed24};
 use crate::prune::Sparsity;
 use crate::tensor::Mat;
+
+/// Structured pruning's output layout: a physically smaller dense
+/// matrix holding only the surviving rows/columns of a logically larger
+/// linear, plus the kept-index maps back into the original geometry.
+///
+/// Unlike the sparse layouts (which keep the logical shape and pay
+/// gather overhead per nonzero), a reduced store *is* a dense matrix —
+/// the model runs the fastest kernel we have, just smaller. `shape()`
+/// is therefore the PHYSICAL shape (what the matmul sees), while
+/// `n_params()`/`dense_bytes()` report the LOGICAL geometry so
+/// compression ratios stay comparable across layouts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ReducedDense {
+    /// Logical (pre-pruning) row count.
+    pub full_rows: usize,
+    /// Logical (pre-pruning) column count.
+    pub full_cols: usize,
+    /// Strictly increasing logical row indices that survive, or `None`
+    /// when every row does.
+    pub kept_rows: Option<Vec<u32>>,
+    /// Strictly increasing logical column indices that survive, or
+    /// `None` when every column does.
+    pub kept_cols: Option<Vec<u32>>,
+    /// The surviving weights, physically `kept_rows × kept_cols`.
+    pub mat: Mat,
+}
+
+fn check_kept(kept: &Option<Vec<u32>>, phys: usize, full: usize, axis: &str) -> Result<()> {
+    match kept {
+        None => {
+            if phys != full {
+                bail!("reduced {axis}s {phys} != full {full} but no kept-{axis} map");
+            }
+        }
+        Some(idx) => {
+            if idx.len() != phys {
+                bail!("kept-{axis} map has {} entries for {phys} physical {axis}s", idx.len());
+            }
+            let mut prev: Option<u32> = None;
+            for &i in idx {
+                if i as usize >= full {
+                    bail!("kept-{axis} index {i} out of range for {full} full {axis}s");
+                }
+                if let Some(p) = prev {
+                    if i <= p {
+                        bail!("kept-{axis} map not strictly increasing at index {i}");
+                    }
+                }
+                prev = Some(i);
+            }
+        }
+    }
+    Ok(())
+}
+
+impl ReducedDense {
+    /// Validating constructor — the single entry point shared by the
+    /// structured pruner and the checkpoint loader, so a malformed
+    /// kept-index map fails loudly in both.
+    pub fn new(
+        full_rows: usize,
+        full_cols: usize,
+        kept_rows: Option<Vec<u32>>,
+        kept_cols: Option<Vec<u32>>,
+        mat: Mat,
+    ) -> Result<ReducedDense> {
+        check_kept(&kept_rows, mat.rows, full_rows, "row")?;
+        check_kept(&kept_cols, mat.cols, full_cols, "col")?;
+        Ok(ReducedDense { full_rows, full_cols, kept_rows, kept_cols, mat })
+    }
+
+    /// Slice the kept rows/columns out of a full-shape dense matrix
+    /// (`None` = keep the whole axis).
+    pub fn from_dense(w: &Mat, kept_rows: Option<&[u32]>, kept_cols: Option<&[u32]>) -> Result<ReducedDense> {
+        let rows: Vec<usize> = match kept_rows {
+            Some(k) => k.iter().map(|&i| i as usize).collect(),
+            None => (0..w.rows).collect(),
+        };
+        let mut mat = Mat::zeros(rows.len(), kept_cols.map_or(w.cols, |k| k.len()));
+        for (pr, &lr) in rows.iter().enumerate() {
+            if lr >= w.rows {
+                bail!("kept-row index {lr} out of range for {} full rows", w.rows);
+            }
+            let src = w.row(lr);
+            let dst = mat.row_mut(pr);
+            match kept_cols {
+                None => dst.copy_from_slice(src),
+                Some(cols) => {
+                    for (pc, &lc) in cols.iter().enumerate() {
+                        dst[pc] = src[lc as usize];
+                    }
+                }
+            }
+        }
+        ReducedDense::new(
+            w.rows,
+            w.cols,
+            kept_rows.map(|k| k.to_vec()),
+            kept_cols.map(|k| k.to_vec()),
+            mat,
+        )
+    }
+
+    /// Scatter the physical weights back into the logical full shape
+    /// (zeros at removed positions) — the masked-oracle view.
+    pub fn to_full(&self) -> Mat {
+        let mut full = Mat::zeros(self.full_rows, self.full_cols);
+        for pr in 0..self.mat.rows {
+            let lr = self.kept_rows.as_ref().map_or(pr, |k| k[pr] as usize);
+            let src = self.mat.row(pr);
+            let dst = full.row_mut(lr);
+            match &self.kept_cols {
+                None => dst.copy_from_slice(src),
+                Some(cols) => {
+                    for (pc, &lc) in cols.iter().enumerate() {
+                        dst[lc as usize] = src[pc];
+                    }
+                }
+            }
+        }
+        full
+    }
+
+    /// Index-map footprint on top of the dense payload.
+    fn index_bytes(&self) -> usize {
+        let n = |k: &Option<Vec<u32>>| k.as_ref().map_or(0, |v| v.len());
+        (n(&self.kept_rows) + n(&self.kept_cols)) * 4
+    }
+}
 
 /// One linear's weights in whichever layout the coordinator packed them.
 #[derive(Clone, Debug, PartialEq)]
@@ -20,6 +151,7 @@ pub enum WeightStore {
     Csr(Csr),
     Csr16(Csr16),
     Packed24(Packed24),
+    DenseReduced(ReducedDense),
 }
 
 impl WeightStore {
@@ -62,15 +194,22 @@ impl WeightStore {
             WeightStore::Csr(_) => "csr",
             WeightStore::Csr16(_) => "csr16",
             WeightStore::Packed24(_) => "packed24",
+            WeightStore::DenseReduced(_) => "dense_reduced",
         }
     }
 
+    /// The shape the matmul executes. For every layout but
+    /// `DenseReduced` this is also the logical shape; a reduced store
+    /// reports its PHYSICAL (smaller) shape here, because that is what
+    /// the forward path consumes and what downstream activations size
+    /// against.
     pub fn shape(&self) -> (usize, usize) {
         match self {
             WeightStore::Dense(m) => (m.rows, m.cols),
             WeightStore::Csr(c) => (c.rows, c.cols),
             WeightStore::Csr16(c) => (c.rows, c.cols),
             WeightStore::Packed24(p) => (p.rows, p.cols),
+            WeightStore::DenseReduced(r) => (r.mat.rows, r.mat.cols),
         }
     }
 
@@ -82,10 +221,16 @@ impl WeightStore {
         self.shape().1
     }
 
-    /// Logical parameter count (rows · cols), independent of layout.
+    /// Logical (pre-pruning) parameter count, independent of layout —
+    /// the denominator for sparsity/compression reporting.
     pub fn n_params(&self) -> usize {
-        let (r, c) = self.shape();
-        r * c
+        match self {
+            WeightStore::DenseReduced(r) => r.full_rows * r.full_cols,
+            other => {
+                let (r, c) = other.shape();
+                r * c
+            }
+        }
     }
 
     /// y = x @ W^T dispatched to the layout's kernel. This is the single
@@ -96,6 +241,10 @@ impl WeightStore {
             WeightStore::Csr(c) => c.matmul_tb(x),
             WeightStore::Csr16(c) => c.matmul_tb(x),
             WeightStore::Packed24(p) => p.matmul_tb(x),
+            // `x` is already in the reduced input space (the producing
+            // linear was sliced by the same kept map), so this is a
+            // plain — smaller — dense matmul.
+            WeightStore::DenseReduced(r) => x.matmul_tb(&r.mat),
         }
     }
 
@@ -116,6 +265,7 @@ impl WeightStore {
                 }
                 Cow::Owned(v)
             }
+            WeightStore::DenseReduced(rd) => Cow::Borrowed(rd.mat.row(r)),
         }
     }
 
@@ -126,6 +276,7 @@ impl WeightStore {
             WeightStore::Csr(c) => c.bytes(),
             WeightStore::Csr16(c) => c.bytes(),
             WeightStore::Packed24(p) => p.bytes(),
+            WeightStore::DenseReduced(r) => r.mat.data.len() * 4 + r.index_bytes(),
         }
     }
 
@@ -140,6 +291,7 @@ impl WeightStore {
             WeightStore::Csr(c) => c.nnz(),
             WeightStore::Csr16(c) => c.nnz(),
             WeightStore::Packed24(p) => p.nnz(),
+            WeightStore::DenseReduced(r) => r.mat.nnz(),
         }
     }
 
@@ -147,12 +299,16 @@ impl WeightStore {
         1.0 - self.nnz() as f64 / self.n_params().max(1) as f64
     }
 
+    /// Dense materialization at the EXECUTED shape: logical for the
+    /// sparse layouts, physical for `DenseReduced` (use
+    /// [`ReducedDense::to_full`] for the scattered full-shape view).
     pub fn to_dense(&self) -> Mat {
         match self {
             WeightStore::Dense(m) => m.clone(),
             WeightStore::Csr(c) => c.to_dense(),
             WeightStore::Csr16(c) => c.to_dense(),
             WeightStore::Packed24(p) => p.to_dense(),
+            WeightStore::DenseReduced(r) => r.mat.clone(),
         }
     }
 
@@ -169,6 +325,7 @@ impl WeightStore {
     pub fn dense_view(&self) -> Cow<'_, Mat> {
         match self {
             WeightStore::Dense(m) => Cow::Borrowed(m),
+            WeightStore::DenseReduced(r) => Cow::Borrowed(&r.mat),
             other => Cow::Owned(other.to_dense()),
         }
     }
@@ -262,6 +419,61 @@ mod tests {
         }
         // 2:4 packing actually shrinks the payload: 4 B/weight -> 2.25 B
         assert!(stores[1].bytes() * 16 == stores[1].dense_bytes() * 9);
+    }
+
+    #[test]
+    fn reduced_dense_surface_and_slicing() {
+        let mut rng = Rng::new(11);
+        let w = Mat::randn(8, 12, 1.0, &mut rng);
+        // keep rows {1,4,6} and cols {0,2,3,7,10}
+        let kr = [1u32, 4, 6];
+        let kc = [0u32, 2, 3, 7, 10];
+        let rd = ReducedDense::from_dense(&w, Some(&kr), Some(&kc)).unwrap();
+        let s = WeightStore::DenseReduced(rd.clone());
+        assert_eq!(s.format(), "dense_reduced");
+        // physical shape executes; logical geometry reports
+        assert_eq!(s.shape(), (3, 5));
+        assert_eq!(s.n_params(), 96);
+        assert_eq!(s.dense_bytes(), 96 * 4);
+        assert_eq!(s.bytes(), 3 * 5 * 4 + (3 + 5) * 4);
+        // structural sparsity: 1 - physical/logical (all kept weights nonzero)
+        assert!((s.sparsity() - (1.0 - 15.0 / 96.0)).abs() < 1e-12);
+        // slicing picked the right entries
+        for (pr, &lr) in kr.iter().enumerate() {
+            for (pc, &lc) in kc.iter().enumerate() {
+                assert_eq!(s.row(pr)[pc], w.row(lr as usize)[lc as usize]);
+            }
+        }
+        // matmul on reduced inputs == dense matmul on the sliced matrix
+        let x = Mat::randn(4, 5, 1.0, &mut rng);
+        assert_eq!(s.matmul_tb(&x), x.matmul_tb(&rd.mat));
+        // scatter back: kept entries restored, removed entries zero
+        let full = rd.to_full();
+        assert_eq!(full.rows, 8);
+        assert_eq!(full.cols, 12);
+        assert_eq!(full.nnz(), s.nnz());
+        assert_eq!(full.row(4)[7], w.row(4)[7]);
+        assert_eq!(full.row(0)[0], 0.0);
+        // None axes mean "whole axis kept"
+        let rows_only = ReducedDense::from_dense(&w, Some(&kr), None).unwrap();
+        assert_eq!(WeightStore::DenseReduced(rows_only).shape(), (3, 12));
+    }
+
+    #[test]
+    fn reduced_dense_rejects_malformed_kept_maps() {
+        let m = Mat::zeros(2, 3);
+        // out-of-range row index
+        let e = ReducedDense::new(4, 3, Some(vec![1, 9]), None, m.clone()).unwrap_err();
+        assert!(e.to_string().contains("out of range"), "{e}");
+        // duplicate (non-increasing) column index
+        let e = ReducedDense::new(2, 6, None, Some(vec![2, 2, 4]), m.clone()).unwrap_err();
+        assert!(e.to_string().contains("strictly increasing"), "{e}");
+        // length mismatch between map and physical dim
+        let e = ReducedDense::new(4, 3, Some(vec![0]), None, m.clone()).unwrap_err();
+        assert!(e.to_string().contains("entries"), "{e}");
+        // physical != full with no map at all
+        let e = ReducedDense::new(5, 3, None, None, m).unwrap_err();
+        assert!(e.to_string().contains("no kept-row map"), "{e}");
     }
 
     #[test]

@@ -443,12 +443,40 @@ pub fn dot(a: &[f32], b: &[f32]) -> f32 {
     s
 }
 
+/// K-dimension cache tile for [`matmul_into`], from `APT_GEMM_K_TILE`
+/// (re-read per call, like `APT_BATCH_ATTN_THRESHOLD`). Default 128
+/// rows of B: at m ≈ 1k f32 columns that is ~512 KiB of B per tile —
+/// L2-resident — so every output row of a worker's chunk re-reads the
+/// SAME B rows instead of streaming all of B from memory per output
+/// row. Set it at or above K (e.g. 99999999) for the untiled baseline
+/// the `gemm_k_tiling_speedup` bench key compares against.
+fn gemm_k_tile() -> usize {
+    std::env::var("APT_GEMM_K_TILE")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&t| t > 0)
+        .unwrap_or(128)
+}
+
 /// C = A @ B written into `out` (must be zeroed or pre-filled; we add).
 /// i-k-j loop order: each A element broadcasts over a contiguous B row,
-/// so the inner loop is a SIMD-friendly axpy.
+/// so the inner loop is a SIMD-friendly axpy. The k loop is tiled (see
+/// [`gemm_k_tile`]) so a tile of B rows stays cache-hot across all
+/// output rows of the worker's chunk.
 pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
+    matmul_into_tiled(a, b, out, gemm_k_tile());
+}
+
+/// [`matmul_into`] with an explicit K tile. Any tile size produces
+/// bit-identical output: each output element accumulates its k terms in
+/// ascending order whether or not the loop is tiled (tiles are visited
+/// ascending, and a given output row meets each k exactly once), so
+/// this is a pure traversal-order change — pinned by
+/// `matmul_k_tiling_is_bitwise_invariant`.
+pub fn matmul_into_tiled(a: &Mat, b: &Mat, out: &mut Mat, tile: usize) {
     let (n, k, m) = (a.rows, a.cols, b.cols);
     assert_eq!(out.shape(), (n, m));
+    assert!(tile > 0, "K tile must be non-zero");
     let nt = num_threads().min(n.max(1));
     let chunk = n.div_ceil(nt);
     let ad = &a.data;
@@ -457,14 +485,17 @@ pub fn matmul_into(a: &Mat, b: &Mat, out: &mut Mat) {
         for (ci, orows) in out.data.chunks_mut(chunk * m).enumerate() {
             let r0 = ci * chunk;
             s.spawn(move || {
-                for (ri, orow) in orows.chunks_mut(m).enumerate() {
-                    let arow = &ad[(r0 + ri) * k..(r0 + ri + 1) * k];
-                    for (kk, &av) in arow.iter().enumerate() {
-                        if av == 0.0 {
-                            continue; // pruned-weight fast path
+                for k0 in (0..k).step_by(tile) {
+                    let k1 = k0.saturating_add(tile).min(k);
+                    for (ri, orow) in orows.chunks_mut(m).enumerate() {
+                        let arow = &ad[(r0 + ri) * k + k0..(r0 + ri) * k + k1];
+                        for (kk, &av) in arow.iter().enumerate() {
+                            if av == 0.0 {
+                                continue; // pruned-weight fast path
+                            }
+                            let brow = &bd[(k0 + kk) * m..(k0 + kk + 1) * m];
+                            axpy(av, brow, orow);
                         }
-                        let brow = &bd[kk * m..(kk + 1) * m];
-                        axpy(av, brow, orow);
                     }
                 }
             });
@@ -1008,6 +1039,26 @@ mod tests {
             let a = Mat::randn(n, k, 1.0, &mut r);
             let b = Mat::randn(k, m, 1.0, &mut r);
             assert!(a.matmul(&b).max_abs_diff(&naive_matmul(&a, &b)) < 1e-3);
+        }
+    }
+
+    #[test]
+    fn matmul_k_tiling_is_bitwise_invariant() {
+        // Tiling only reorders the traversal, never the per-element
+        // accumulation order, so every tile size must agree with the
+        // untiled kernel to the bit — including tiles that don't divide
+        // K and a tile of 1.
+        let mut r = Rng::new(21);
+        for &(n, k, m) in &[(5, 64, 9), (3, 7, 11), (16, 33, 16)] {
+            let a = Mat::randn(n, k, 1.0, &mut r);
+            let b = Mat::randn(k, m, 1.0, &mut r);
+            let mut base = Mat::zeros(n, m);
+            matmul_into_tiled(&a, &b, &mut base, usize::MAX);
+            for tile in [1usize, 3, 8, 32, 128] {
+                let mut out = Mat::zeros(n, m);
+                matmul_into_tiled(&a, &b, &mut out, tile);
+                assert_eq!(out, base, "({n},{k},{m}) tile {tile}");
+            }
         }
     }
 

@@ -362,7 +362,7 @@ fn engine_batch_matches_independent_sessions() {
             let gens: Vec<usize> = (0..bsz).map(|i| 3 + i % 4).collect();
 
             let mut eng =
-                Engine::new(model.as_ref(), EngineConfig { max_batch: bsz, max_seq: None });
+                Engine::new(model.as_ref(), EngineConfig { max_batch: bsz, ..Default::default() });
             for i in 0..bsz {
                 eng.submit(Request::greedy(prompts[i].clone(), gens[i]));
             }
@@ -439,7 +439,7 @@ fn paged_eviction_window_boundary_cases() {
             let prompt: Vec<u32> = (0..120).map(|i| ((i * 5 + 3) % 47) as u32).collect();
             let gen = 40usize;
             let mut eng =
-                Engine::new(model.as_ref(), EngineConfig { max_batch: 2, max_seq: Some(w) });
+                Engine::new(model.as_ref(), EngineConfig { max_batch: 2, max_seq: Some(w), ..Default::default() });
             eng.submit(Request::greedy(prompt.clone(), gen));
             while eng.has_work() {
                 eng.step();
@@ -474,7 +474,7 @@ fn packed_prefill_admission_matches_independent_sessions() {
             // i = 3 ⇒ 30 tokens ≤ window; i = 4 ⇒ 39 tokens > window,
             // forcing the per-request windowed fallback inside a packed
             // admission burst
-            let mut eng = Engine::new(model.as_ref(), EngineConfig { max_batch: 8, max_seq });
+            let mut eng = Engine::new(model.as_ref(), EngineConfig { max_batch: 8, max_seq, ..Default::default() });
             for p in &prompts {
                 eng.submit(Request::greedy(p.clone(), 4));
             }
@@ -789,7 +789,7 @@ fn engine_speculative_end_to_end_prune_then_serve() {
         &prompts,
         12,
         4,
-        EngineConfig { max_batch: 3, max_seq: None },
+        EngineConfig { max_batch: 3, ..Default::default() },
     );
     assert_eq!(r.total_tokens, 48);
     assert!(r.rounds > 0);
@@ -823,4 +823,327 @@ fn mismatched_runtime_shapes_fall_back_to_native() {
     let report = prune_model(&mut pruned, &calib, &cfg, Some(&rt)).unwrap();
     assert_eq!(report.hlo_fraction(), 0.0);
     assert!((report.overall_sparsity() - 0.5).abs() < 0.02);
+}
+
+// ---------------------------------------------------------------------------
+// structured pruning: reduced-shape stores end to end
+// ---------------------------------------------------------------------------
+
+fn rand_calib(n: usize, len: usize, vocab: usize, seed: u64) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (0..len).map(|_| rng.below(vocab) as u32).collect()).collect()
+}
+
+/// Tentpole oracle gate: the physically reduced model reproduces the
+/// masked full-shape oracle to <1e-5 at the logits, for both families.
+/// The masked run makes byte-identical keep decisions on the same
+/// calibration set and leaves exact zeros in the dropped consumer
+/// columns, so the only difference is the dense-matmul shape — dropped
+/// columns contribute exact-zero terms the reduced matmul simply skips.
+#[test]
+fn structured_reduced_matches_masked_oracle_both_families() {
+    use apt::coordinator::{structured_prune_mamba, structured_prune_transformer};
+    use apt::model::{Mamba, MambaConfig};
+    use apt::prune::StructuredConfig;
+
+    let probe: Vec<u32> = (0..20).map(|i| ((i * 13 + 2) % 47) as u32).collect();
+    let cfg = StructuredConfig::new(0.5);
+    let mcfg_masked = StructuredConfig { masked: true, ..cfg };
+
+    // --- transformer
+    let tcfg = TransformerConfig {
+        vocab: 47,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 64,
+    };
+    let base = Transformer::init(tcfg, &mut Rng::new(61));
+    let calib = rand_calib(6, 24, 47, 62);
+    let mut reduced = Transformer { cfg: base.cfg, params: base.params.clone() };
+    let rep = structured_prune_transformer(&mut reduced, &calib, &cfg).unwrap();
+    assert!((rep.flops_ratio() - 0.5).abs() < 1e-9, "{}", rep.flops_ratio());
+    let mut masked = Transformer { cfg: base.cfg, params: base.params.clone() };
+    let mrep = structured_prune_transformer(&mut masked, &calib, &mcfg_masked).unwrap();
+    assert_eq!(mrep.flops_ratio(), 1.0, "masked run keeps full shapes");
+    assert_eq!(reduced.weight(0, "wq").shape(), (8, 16), "half the heads");
+    assert_eq!(masked.weight(0, "wq").shape(), (16, 16));
+    let a = reduced.next_token_logprobs(&probe, (1, probe.len()));
+    let b = masked.next_token_logprobs(&probe, (1, probe.len()));
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5, "transformer: {x} vs {y}");
+    }
+
+    // --- mamba
+    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 64 };
+    let base = Mamba::init(mcfg, &mut Rng::new(63));
+    let calib = rand_calib(6, 24, 47, 64);
+    let mut reduced = Mamba { cfg: base.cfg, params: base.params.clone() };
+    let rep = structured_prune_mamba(&mut reduced, &calib, &cfg).unwrap();
+    assert!(rep.flops_ratio() < 0.65, "{}", rep.flops_ratio());
+    let mut masked = Mamba { cfg: base.cfg, params: base.params.clone() };
+    structured_prune_mamba(&mut masked, &calib, &mcfg_masked).unwrap();
+    assert_eq!(reduced.weight(0, "out_proj").shape(), (12, 10), "half the channels");
+    assert_eq!(masked.weight(0, "out_proj").shape(), (12, 20));
+    let a = reduced.next_token_logprobs(&probe, (1, probe.len()));
+    let b = masked.next_token_logprobs(&probe, (1, probe.len()));
+    for (x, y) in a.iter().zip(&b) {
+        assert!((x - y).abs() < 1e-5, "mamba: {x} vs {y}");
+    }
+}
+
+/// Structured-pruned copies of both families at keep 0.5 for the
+/// serving / speculative / checkpoint gates below. Every consumer and
+/// producer linear must actually land in the reduced-dense store.
+fn structured_variants() -> Vec<(String, Box<dyn LanguageModel>)> {
+    use apt::coordinator::{structured_prune_mamba, structured_prune_transformer};
+    use apt::model::{Mamba, MambaConfig};
+    use apt::prune::StructuredConfig;
+
+    let cfg = StructuredConfig::new(0.5);
+    let tcfg = TransformerConfig {
+        vocab: 47,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 256,
+    };
+    let mut t = Transformer::init(tcfg, &mut Rng::new(71));
+    structured_prune_transformer(&mut t, &rand_calib(6, 24, 47, 72), &cfg).unwrap();
+    for b in 0..tcfg.n_layers {
+        for name in ["wq", "wk", "wv", "wo", "w1", "w2", "w3"] {
+            assert_eq!(t.weight(b, name).format(), "dense_reduced", "block {b} {name}");
+        }
+    }
+
+    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 256 };
+    let mut m = Mamba::init(mcfg, &mut Rng::new(73));
+    structured_prune_mamba(&mut m, &rand_calib(6, 24, 47, 74), &cfg).unwrap();
+    for b in 0..mcfg.n_layers {
+        for name in ["in_proj", "dt_proj", "out_proj"] {
+            assert_eq!(m.weight(b, name).format(), "dense_reduced", "block {b} {name}");
+        }
+    }
+
+    vec![
+        ("microllama/structured".to_string(), Box::new(t)),
+        ("micromamba/structured".to_string(), Box::new(m)),
+    ]
+}
+
+/// Serving gate: structured-pruned models run the whole decode surface
+/// unchanged — incremental sessions reproduce the full quadratic
+/// forward to <1e-5 (split prefill and token-by-token stepping
+/// included), and a batched engine reproduces independent sessions
+/// token-for-token.
+#[test]
+fn structured_model_decode_and_engine_match_full_forward() {
+    use apt::model::DecodeSession;
+    use apt::serve::{Engine, EngineConfig, Request};
+
+    for (label, model) in &structured_variants() {
+        let mut rng = Rng::new(75);
+        let toks: Vec<u32> = (0..24).map(|_| rng.below(47) as u32).collect();
+        let mut x = model.embed_tokens(&toks);
+        for b in 0..model.n_blocks() {
+            x = model.forward_block(b, &x, (1, toks.len()));
+        }
+        let want = model.logits_last(&x);
+        let check = |got: &[f32], how: &str| {
+            for (g, w) in got.iter().zip(&want) {
+                assert!((g - w).abs() < 1e-5, "{label} {how}: {g} vs {w}");
+            }
+        };
+        let mut s = DecodeSession::new(model.as_ref());
+        check(s.prefill(&toks), "one-shot prefill");
+        let mut s2 = DecodeSession::new(model.as_ref());
+        s2.prefill(&toks[..11]);
+        check(s2.prefill(&toks[11..]), "split prefill");
+        let mut s3 = DecodeSession::new(model.as_ref());
+        s3.prefill(&toks[..1]);
+        for &t in &toks[1..] {
+            s3.step(t);
+        }
+        check(s3.last_logits(), "token-by-token");
+
+        // batched engine vs independent sessions
+        let bsz = 3usize;
+        let prompts: Vec<Vec<u32>> = (0..bsz)
+            .map(|i| (0..3 + i * 4).map(|j| ((j * 3 + i * 7) % 47) as u32).collect())
+            .collect();
+        let mut eng =
+            Engine::new(model.as_ref(), EngineConfig { max_batch: bsz, ..Default::default() });
+        for p in &prompts {
+            eng.submit(Request::greedy(p.clone(), 5));
+        }
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), bsz, "{label}");
+        for (i, p) in prompts.iter().enumerate() {
+            let mut s = DecodeSession::new(model.as_ref());
+            s.prefill(p);
+            assert_eq!(done[i].tokens, s.generate(5), "{label} stream {i}");
+        }
+    }
+}
+
+/// Speculative gate: a structured-pruned draft proposes for its own
+/// dense source weights and the output stays bit-identical to plain
+/// greedy decoding, per family; the serve-level report runs the same
+/// pair through batched engines.
+#[test]
+fn speculative_structured_draft_matches_plain_greedy() {
+    use apt::coordinator::{structured_prune_mamba, structured_prune_transformer};
+    use apt::model::{DecodeSession, Mamba, MambaConfig};
+    use apt::prune::StructuredConfig;
+    use apt::serve::speculative::{spec_serve_report, SpecSession};
+    use apt::serve::EngineConfig;
+
+    let cfg = StructuredConfig::new(0.5);
+    let tcfg = TransformerConfig {
+        vocab: 47,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 256,
+    };
+    let target_t = Transformer::init(tcfg, &mut Rng::new(81));
+    let mut draft_t = Transformer { cfg: target_t.cfg, params: target_t.params.clone() };
+    structured_prune_transformer(&mut draft_t, &rand_calib(6, 24, 47, 82), &cfg).unwrap();
+
+    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 256 };
+    let target_m = Mamba::init(mcfg, &mut Rng::new(83));
+    let mut draft_m = Mamba { cfg: target_m.cfg, params: target_m.params.clone() };
+    structured_prune_mamba(&mut draft_m, &rand_calib(6, 24, 47, 84), &cfg).unwrap();
+
+    let pairs: Vec<(&str, &dyn LanguageModel, &dyn LanguageModel)> = vec![
+        ("microllama", &target_t, &draft_t),
+        ("micromamba", &target_m, &draft_m),
+    ];
+    for (family, target, draft) in pairs {
+        let prompt: Vec<u32> = (0..9).map(|i| ((i * 11 + 5) % 47) as u32).collect();
+        let mut plain = DecodeSession::new(target);
+        plain.prefill(&prompt);
+        let want = plain.generate(24);
+        for k in [2usize, 4] {
+            let mut s = SpecSession::new(target, draft, k);
+            s.prefill(&prompt);
+            assert_eq!(s.generate(24), want, "{family} k={k}");
+            assert_eq!(s.stats().emitted, 24, "{family} k={k}");
+        }
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|i| (0..5 + i).map(|j| ((j * 5 + i * 3) % 47) as u32).collect())
+            .collect();
+        let r = spec_serve_report(
+            target,
+            draft,
+            &prompts,
+            8,
+            4,
+            EngineConfig { max_batch: 3, ..Default::default() },
+        );
+        assert_eq!(r.total_tokens, 24, "{family}");
+        assert!((0.0..=1.0).contains(&r.acceptance_rate), "{family}");
+    }
+}
+
+/// Checkpoint gate: reduced-shape stores survive the ATS2 round-trip
+/// for both families — layouts, kept-index maps and behaviour exactly.
+#[test]
+fn structured_checkpoint_roundtrip_both_families() {
+    use apt::coordinator::{structured_prune_mamba, structured_prune_transformer};
+    use apt::model::{Mamba, MambaConfig};
+    use apt::prune::StructuredConfig;
+
+    let dir = std::env::temp_dir().join("apt_integration_structured");
+    std::fs::create_dir_all(&dir).unwrap();
+    let toks: Vec<u32> = (0..20).map(|i| (i * 7 % 47) as u32).collect();
+    let cfg = StructuredConfig::new(0.5);
+
+    // --- transformer
+    let tcfg = TransformerConfig {
+        vocab: 47,
+        d_model: 16,
+        n_layers: 2,
+        n_heads: 2,
+        d_ff: 24,
+        max_seq: 64,
+    };
+    let mut t = Transformer::init(tcfg, &mut Rng::new(71));
+    structured_prune_transformer(&mut t, &rand_calib(6, 24, 47, 72), &cfg).unwrap();
+    let path = dir.join("structured_t.ats");
+    t.save(&path).unwrap();
+    let loaded = Transformer::load(t.cfg, &path).unwrap();
+    for name in loaded.params.names() {
+        assert_eq!(loaded.params.get(name).unwrap(), t.params.get(name).unwrap());
+    }
+    assert_eq!(loaded.weight(0, "wo").format(), "dense_reduced");
+    assert_eq!(loaded.weight(0, "wo").shape(), (16, 8), "physical shape");
+    assert_eq!(loaded.weight(0, "wo").n_params(), 16 * 16, "logical geometry");
+    assert_eq!(
+        t.forward_loss(&toks, (1, toks.len())),
+        loaded.forward_loss(&toks, (1, toks.len())),
+        "transformer behaviour must survive exactly"
+    );
+    assert!(loaded.params.bytes() < loaded.params.dense_bytes());
+    std::fs::remove_file(&path).ok();
+
+    // --- mamba
+    let mcfg = MambaConfig { vocab: 47, d_model: 12, d_inner: 20, n_layers: 2, max_seq: 64 };
+    let mut m = Mamba::init(mcfg, &mut Rng::new(73));
+    structured_prune_mamba(&mut m, &rand_calib(6, 24, 47, 74), &cfg).unwrap();
+    let path = dir.join("structured_m.ats");
+    m.save(&path).unwrap();
+    let loaded = Mamba::load(m.cfg, &path).unwrap();
+    for name in loaded.params.names() {
+        assert_eq!(loaded.params.get(name).unwrap(), m.params.get(name).unwrap());
+    }
+    assert_eq!(loaded.weight(0, "dt_proj").format(), "dense_reduced");
+    assert_eq!(loaded.weight(0, "dt_proj").shape(), (10, 10), "physical shape");
+    assert_eq!(loaded.weight(0, "dt_proj").n_params(), 20 * 20, "logical geometry");
+    assert_eq!(
+        m.forward_loss(&toks, (1, toks.len())),
+        loaded.forward_loss(&toks, (1, toks.len())),
+        "mamba behaviour must survive exactly"
+    );
+    assert!(loaded.params.bytes() < loaded.params.dense_bytes());
+    std::fs::remove_file(&path).ok();
+}
+
+/// Eval gate: the full "train → structured prune → eval" path — the
+/// report carries per-block kept counts and the achieved FLOPs ratio,
+/// and perplexity runs straight off the reduced layouts.
+#[test]
+fn structured_prune_then_eval_end_to_end() {
+    use apt::coordinator::structured_prune_transformer;
+    use apt::prune::StructuredConfig;
+
+    let gen = CorpusGen::new(60, 2, 39);
+    let model = trained_model(&gen, 32, 2, 40);
+    let data = gen.generate(Profile::C4Like, 20_000, 1);
+    let calib = data.sample_calibration(6, 32, &mut Rng::new(12));
+
+    let mut pruned = Transformer { cfg: model.cfg, params: model.params.clone() };
+    let rep = structured_prune_transformer(&mut pruned, &calib, &StructuredConfig::new(0.5))
+        .unwrap();
+    assert_eq!(rep.blocks.len(), 2);
+    for b in &rep.blocks {
+        assert_eq!(b.kept_heads, Some((1, 2)));
+        assert_eq!(b.kept_ffn, Some((32, 64)));
+        assert_eq!(b.kept_channels, None);
+    }
+    assert!((rep.flops_ratio() - 0.5).abs() < 1e-9);
+    assert!(rep.to_json().to_string().contains("kept_heads"));
+
+    let eval_data = gen.generate(Profile::Wt2Like, 2_048, 3);
+    let ppl = perplexity(&pruned, &eval_data, 64);
+    let ppl_dense = perplexity(&model, &eval_data, 64);
+    assert!(ppl.is_finite() && ppl > 1.0, "structured ppl {ppl}");
+    // half the heads and channels hurt, but reconstruction keeps the
+    // model in the same regime as its dense source
+    assert!(ppl < ppl_dense * 30.0, "structured {ppl} vs dense {ppl_dense}");
 }

@@ -5,7 +5,7 @@
 #
 # Sections (substring filters): gemm hessian finalize cholesky compensate
 # mrp select sequential mask24 sparse decode paged serve speculative
-# pipeline hlo.
+# structured pipeline hlo.
 # `decode` covers both the pruned-model decode benches and the
 # decode_session_* benches (incremental KV-cache/recurrent serving path
 # vs the quadratic full-forward baseline, populating
@@ -24,6 +24,14 @@
 # populating derived.spec_decode_tokens_per_s_{dense,k2,k4,k8},
 # derived.spec_acceptance_rate, and derived.spec_decode_speedup_vs_dense
 # — the lossless gate (bit-identical outputs) is asserted before timing.
+# `gemm` now also measures K-dimension cache tiling in `matmul_into`
+# (untiled vs the default 128-column K tile, bitwise-identical output),
+# populating derived.gemm_k_tiling_speedup. `structured` runs the
+# structured-pruning pipeline (half the heads and FFN channels; every
+# block linear a physically smaller dense matmul) against a
+# magnitude-50% csr16 baseline on the same decode workload, populating
+# derived.structured_decode_tokens_per_s,
+# derived.structured_vs_csr_speedup and derived.structured_flops_ratio.
 #
 # The bench binary itself writes BENCH_perf.json at the repo root and
 # prints a delta table against the previous run (a filtered run keeps the

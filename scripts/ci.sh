@@ -24,6 +24,9 @@ cargo run --release --example long_context_smoke
 echo "== smoke: speculative decoding (lossless draft-propose / target-verify) =="
 cargo run --release --example spec_decode
 
+echo "== smoke: structured pruning (reduced-shape dense stores end to end) =="
+cargo run --release --example structured_prune
+
 echo "== hygiene: rustfmt check =="
 cargo fmt --all -- --check
 
