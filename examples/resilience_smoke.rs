@@ -1,0 +1,136 @@
+//! Resilience smoke: a budget-constrained engine under scripted faults.
+//!
+//! Runs the same six-request workload twice — once clean and unbounded,
+//! once with a 12-page K/V budget, an injected NaN, a forced recompute
+//! preemption and a mid-flight cancel — and checks the degradation
+//! contract end to end: every request finishes with a typed
+//! `FinishReason`, untouched streams are bit-identical to the clean run,
+//! the preempted stream resumes losslessly, and the engine reports every
+//! event in its stats.
+//!
+//!     cargo run --release --example resilience_smoke
+
+use apt::model::{Transformer, TransformerConfig};
+use apt::serve::faults::FaultPlan;
+use apt::serve::{
+    Completion, Deadline, Engine, EngineConfig, EngineStats, ErrorKind, FinishReason, Request,
+    RequestId, SamplingParams,
+};
+use apt::util::Rng;
+
+fn main() {
+    let vocab = 61usize;
+    let model = Transformer::init(
+        TransformerConfig { vocab, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 256 },
+        &mut Rng::new(9),
+    );
+    let prompt = |salt: usize, len: usize| -> Vec<u32> {
+        (0..len).map(|i| ((i * 3 + salt * 13) % vocab) as u32).collect()
+    };
+
+    // Six requests against four slots: mixed prompt lengths, one
+    // temperature-sampled stream, one with a 4-step deadline.
+    let reqs: Vec<(Request, Deadline)> = vec![
+        (Request::greedy(prompt(0, 12), 12), Deadline::none()),
+        (Request::greedy(prompt(1, 10), 12), Deadline::none()),
+        (
+            Request {
+                prompt: prompt(2, 14),
+                max_new_tokens: 12,
+                sampling: SamplingParams::temperature(0.9, 17),
+            },
+            Deadline::none(),
+        ),
+        (Request::greedy(prompt(3, 8), 12), Deadline::steps(4)),
+        (Request::greedy(prompt(4, 16), 12), Deadline::none()),
+        (Request::greedy(prompt(5, 9), 12), Deadline::none()),
+    ];
+
+    let run = |cfg: EngineConfig,
+               plan: FaultPlan,
+               cancel_at: Option<(RequestId, usize)>|
+     -> (Vec<Completion>, EngineStats) {
+        let mut eng = Engine::new(&model, cfg);
+        for (req, dl) in &reqs {
+            eng.submit_with_deadline(req.clone(), *dl);
+        }
+        eng.set_fault_plan(plan);
+        let mut steps = 0usize;
+        while eng.has_work() {
+            eng.step();
+            steps += 1;
+            if let Some((id, at)) = cancel_at {
+                if steps == at {
+                    assert!(eng.cancel(id), "cancel target should still be live");
+                }
+            }
+            assert!(
+                cfg.max_kv_pages.map_or(true, |b| eng.kv_pages_live() <= b),
+                "page budget violated after step {steps}"
+            );
+        }
+        assert_eq!(eng.kv_pages_live(), 0, "drained engine must hold zero pages");
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        (done, eng.stats())
+    };
+
+    // Clean reference: no budget, no faults, no cancel.
+    let clean_cfg = EngineConfig { max_batch: 4, ..Default::default() };
+    let (base, base_st) = run(clean_cfg, FaultPlan::new(), None);
+    assert_eq!(base.len(), reqs.len());
+    assert_eq!(base_st.preemptions + base_st.quarantined + base_st.cancelled, 0);
+
+    // Faulted run: 12-page budget (three streams' worth), NaN-poison one
+    // stream after 4 tokens, force-preempt another after 3, cancel a
+    // third mid-decode.
+    let ids: Vec<RequestId> = base.iter().map(|c| c.id).collect();
+    let plan = FaultPlan::new().nan_logits(ids[1], 4).force_preempt(ids[0], 3);
+    let tight_cfg =
+        EngineConfig { max_batch: 4, max_kv_pages: Some(12), ..Default::default() };
+    let (done, st) = run(tight_cfg, plan, Some((ids[4], 16)));
+
+    println!("faulted run, per-request outcomes:");
+    for c in &done {
+        println!("  {:?}: {:?} after {} tokens", c.id, c.finish, c.tokens.len());
+    }
+
+    // Every request finished, each with the expected typed reason.
+    assert_eq!(done.len(), reqs.len());
+    let finish = |i: usize| -> FinishReason { done[i].finish };
+    assert_eq!(finish(0), FinishReason::Length, "preempted stream still completes");
+    assert_eq!(done[0].tokens, base[0].tokens, "recompute preemption must be lossless");
+    assert_eq!(finish(1), FinishReason::Error(ErrorKind::NonFiniteLogits));
+    let n = done[1].tokens.len();
+    assert_eq!(done[1].tokens[..], base[1].tokens[..n], "pre-poison prefix is kept");
+    assert_eq!(finish(3), FinishReason::Deadline);
+    assert_eq!(done[3].tokens, base[3].tokens, "deadline output matches the clean run");
+    assert_eq!(finish(4), FinishReason::Cancelled);
+    let n = done[4].tokens.len();
+    assert!(n < 12, "cancel must land mid-decode");
+    assert_eq!(done[4].tokens[..], base[4].tokens[..n], "partial output is kept");
+    // untouched streams (including the sampled one): bit-identical
+    for i in [2usize, 5] {
+        assert_eq!(finish(i), FinishReason::Length);
+        assert_eq!(done[i].tokens, base[i].tokens, "untouched stream {i} diverged");
+    }
+
+    println!(
+        "\nengine stats: {} completed, {} preemptions, {} deadline, {} cancelled, \
+         {} quarantined, kv pages peak {} (budget 12)",
+        st.completed,
+        st.preemptions,
+        st.deadline_expired,
+        st.cancelled,
+        st.quarantined,
+        st.kv_pages_peak
+    );
+    assert_eq!(st.completed, reqs.len());
+    assert_eq!(st.preemptions, 1);
+    assert_eq!(st.deadline_expired, 1);
+    assert_eq!(st.cancelled, 1);
+    assert_eq!(st.quarantined, 1);
+    assert!(st.kv_pages_peak <= 12);
+
+    println!("resilience_smoke: OK");
+}

@@ -68,7 +68,14 @@ fn main() {
     done.sort_by_key(|c| c.id);
     assert_eq!(done.len(), ids.len());
     for c in &done {
-        println!("  request {:?} (+{} prompt tokens): {:?}", c.id, c.prompt.len(), c.tokens);
+        println!(
+            "  request {:?} (+{} prompt tokens, finish {:?}): {:?}",
+            c.id,
+            c.prompt.len(),
+            c.finish,
+            c.tokens
+        );
+        assert_eq!(c.finish, apt::serve::FinishReason::Length, "happy path only here");
         // the streamed view saw exactly the completed tokens, in order
         assert_eq!(
             streamed.borrow().get(&c.id),
@@ -93,6 +100,17 @@ fn main() {
         "\n{total} tokens in {batched_ms:.1} ms batched \
          ({:.0} tok/s); 3 equivalent solo greedy streams took {solo_ms:.1} ms",
         total as f64 / (batched_ms / 1000.0)
+    );
+    let st = eng.stats();
+    println!(
+        "engine stats: {} completed, {} preemptions, {} deadline, {} cancelled, \
+         {} quarantined, kv pages peak {}",
+        st.completed,
+        st.preemptions,
+        st.deadline_expired,
+        st.cancelled,
+        st.quarantined,
+        st.kv_pages_peak
     );
     println!("serve_engine: OK");
 }

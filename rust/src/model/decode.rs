@@ -87,6 +87,32 @@ impl DecodeState {
             DecodeState::Mamba(_) => None,
         }
     }
+
+    /// K/V pages this state currently holds across every block (the
+    /// engine's memory-budget unit). Mamba state is O(1) in context and
+    /// holds no pages — it reports 0 and is exempt from the budget.
+    pub fn kv_pages_live(&self) -> usize {
+        match self {
+            DecodeState::Transformer(blocks) => {
+                blocks.iter().map(|b| b.k.pages_live() + b.v.pages_live()).sum()
+            }
+            DecodeState::Mamba(_) => 0,
+        }
+    }
+
+    /// Pages a state shaped like this one would hold after caching
+    /// `positions` rows with no eviction offset (the admission-time
+    /// estimate: fresh prefills start page-aligned, so this is exact for
+    /// them; an evicted stream can straddle one extra page per cache).
+    pub fn kv_pages_for(&self, positions: usize) -> usize {
+        match self {
+            DecodeState::Transformer(blocks) => blocks
+                .iter()
+                .map(|b| 2 * positions.div_ceil(b.k.page_rows().max(1)))
+                .sum(),
+            DecodeState::Mamba(_) => 0,
+        }
+    }
 }
 
 /// Prefill `tokens` into `state` under a sliding-window bound: chunks of

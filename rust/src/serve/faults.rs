@@ -1,0 +1,212 @@
+//! Deterministic fault injection for the serving engine.
+//!
+//! Resilience paths are exactly the code a happy-path test never runs:
+//! NaN quarantine needs numerically poisoned weights, preemption needs
+//! a precisely-timed memory squeeze. A [`FaultPlan`] scripts those
+//! conditions at exact, reproducible points instead — poison a chosen
+//! stream's logits once it has emitted `n` tokens, force-preempt a
+//! stream at a chosen point, clamp the live-page budget from a chosen
+//! engine step onward.
+//!
+//! Two properties make the harness trustworthy:
+//!
+//! - **No test-only control flow.** Every injection is data the engine
+//!   consults at its normal decision points (NaN lands in
+//!   `last_logits` upstream of the quarantine scan; a forced preempt
+//!   calls the same reclamation/re-queue path the budget enforcer
+//!   does), so a faulted run exercises exactly the code a real fault
+//!   would.
+//! - **Blast-radius isolation is testable.** Streams the plan never
+//!   touches must produce bit-identical tokens to a fault-free run —
+//!   pinned by `resilience_fault_grid_spares_untouched_streams` in the
+//!   integration suite across both model families and all weight
+//!   layouts.
+//!
+//! Plans are deterministic by construction (plain data, no clocks);
+//! [`FaultPlan::seeded`] derives a random-looking but reproducible plan
+//! from a seed for grid/soak tests.
+
+use super::RequestId;
+use crate::util::Rng;
+
+/// A scripted set of faults, installed via
+/// [`Engine::set_fault_plan`](super::Engine::set_fault_plan).
+/// Builder-style:
+///
+/// ```text
+/// let plan = FaultPlan::new()
+///     .nan_logits(id_b, 2)      // poison stream b after 2 tokens
+///     .force_preempt(id_c, 1)   // evict + re-queue c after 1 token
+///     .clamp_budget(4, 8);      // at most 8 live pages from step 4 on
+/// engine.set_fault_plan(plan);
+/// ```
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    /// One-shot (stream, emitted-count) triggers: fire at the first
+    /// decision point where the stream has emitted >= n tokens.
+    nan_at: Vec<(RequestId, usize)>,
+    preempt_at: Vec<(RequestId, usize)>,
+    /// (from_step, pages) clamps: from engine step `from_step` (0-based)
+    /// onward the live-page budget is at most `pages`. The tightest
+    /// active clamp wins, and composes with `EngineConfig::max_kv_pages`
+    /// (minimum of the two).
+    clamps: Vec<(usize, usize)>,
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Poison `id`'s logits to all-NaN once it has emitted
+    /// `after_tokens` tokens. The engine's quarantine path must then
+    /// retire exactly that stream with
+    /// `FinishReason::Error(NonFiniteLogits)`. Fires once. In
+    /// speculative mode the trigger is checked on round boundaries, so
+    /// the stream may carry a few tokens past `after_tokens` before the
+    /// quarantine lands — deterministically so.
+    pub fn nan_logits(mut self, id: RequestId, after_tokens: usize) -> FaultPlan {
+        self.nan_at.push((id, after_tokens));
+        self
+    }
+
+    /// Force a recompute preemption of `id` once it has emitted
+    /// `after_tokens` tokens, regardless of the real page budget — same
+    /// evict/re-queue path, chosen timing. Fires once; streams retiring
+    /// that same step are exempt (nothing left to preempt).
+    pub fn force_preempt(mut self, id: RequestId, after_tokens: usize) -> FaultPlan {
+        self.preempt_at.push((id, after_tokens));
+        self
+    }
+
+    /// Clamp the engine's live K/V page budget to `pages` from engine
+    /// step `from_step` (0-based) onward — simulated memory pressure
+    /// arriving mid-run. Admission and the decode-growth enforcer both
+    /// honor it.
+    pub fn clamp_budget(mut self, from_step: usize, pages: usize) -> FaultPlan {
+        self.clamps.push((from_step, pages));
+        self
+    }
+
+    /// A reproducible pseudo-random plan: `nans` NaN injections and
+    /// `preempts` forced preemptions scattered over `ids` at trigger
+    /// points below `horizon` tokens. A pure function of its arguments
+    /// — the same seed always builds the same plan, so soak tests can
+    /// replay any failure.
+    pub fn seeded(
+        seed: u64,
+        ids: &[RequestId],
+        horizon: usize,
+        nans: usize,
+        preempts: usize,
+    ) -> FaultPlan {
+        let mut plan = FaultPlan::new();
+        if ids.is_empty() || horizon == 0 {
+            return plan;
+        }
+        let mut rng = Rng::new(seed ^ 0xFA17_1417_0000_0000);
+        for _ in 0..nans {
+            let id = ids[rng.below(ids.len())];
+            plan = plan.nan_logits(id, rng.below(horizon));
+        }
+        for _ in 0..preempts {
+            let id = ids[rng.below(ids.len())];
+            plan = plan.force_preempt(id, rng.below(horizon));
+        }
+        plan
+    }
+
+    /// True when nothing is scheduled (the default plan: a no-op).
+    pub fn is_empty(&self) -> bool {
+        self.nan_at.is_empty() && self.preempt_at.is_empty() && self.clamps.is_empty()
+    }
+
+    /// Streams with at least one NaN or preempt trigger — the set whose
+    /// outputs a blast-radius test must NOT pin against the fault-free
+    /// run.
+    pub fn touched(&self) -> Vec<RequestId> {
+        let mut ids: Vec<RequestId> = self
+            .nan_at
+            .iter()
+            .chain(self.preempt_at.iter())
+            .map(|&(id, _)| id)
+            .collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    }
+
+    pub(crate) fn take_nan(&mut self, id: RequestId, emitted: usize) -> bool {
+        take(&mut self.nan_at, id, emitted)
+    }
+
+    pub(crate) fn take_preempt(&mut self, id: RequestId, emitted: usize) -> bool {
+        take(&mut self.preempt_at, id, emitted)
+    }
+
+    pub(crate) fn budget_clamp(&self, step: usize) -> Option<usize> {
+        self.clamps.iter().filter(|&&(s, _)| s <= step).map(|&(_, p)| p).min()
+    }
+}
+
+/// One-shot trigger check: removing the entry on fire is what makes
+/// ">= n emitted" fire exactly once even when the count is re-checked
+/// every step (or jumps past `n` in one speculative round).
+fn take(list: &mut Vec<(RequestId, usize)>, id: RequestId, emitted: usize) -> bool {
+    match list.iter().position(|&(i, n)| i == id && emitted >= n) {
+        Some(p) => {
+            list.remove(p);
+            true
+        }
+        None => false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn triggers_fire_once_at_threshold() {
+        let a = RequestId(1);
+        let b = RequestId(2);
+        let mut plan = FaultPlan::new().nan_logits(a, 3).force_preempt(b, 0);
+        assert!(!plan.is_empty());
+        assert_eq!(plan.touched(), vec![a, b]);
+        // below threshold: nothing fires
+        assert!(!plan.take_nan(a, 2));
+        assert!(!plan.take_nan(b, 10), "wrong stream must not fire");
+        // at/after threshold: fires exactly once
+        assert!(plan.take_nan(a, 3));
+        assert!(!plan.take_nan(a, 4), "one-shot trigger fired twice");
+        assert!(plan.take_preempt(b, 0));
+        assert!(!plan.take_preempt(b, 5));
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn budget_clamp_applies_from_step_and_tightest_wins() {
+        let plan = FaultPlan::new().clamp_budget(3, 10).clamp_budget(6, 4);
+        assert_eq!(plan.budget_clamp(0), None);
+        assert_eq!(plan.budget_clamp(2), None);
+        assert_eq!(plan.budget_clamp(3), Some(10));
+        assert_eq!(plan.budget_clamp(5), Some(10));
+        assert_eq!(plan.budget_clamp(6), Some(4));
+        assert_eq!(plan.budget_clamp(100), Some(4));
+    }
+
+    #[test]
+    fn seeded_plans_are_reproducible_and_seed_sensitive() {
+        let ids: Vec<RequestId> = (0..4).map(RequestId).collect();
+        let p1 = FaultPlan::seeded(7, &ids, 10, 3, 2);
+        let p2 = FaultPlan::seeded(7, &ids, 10, 3, 2);
+        assert_eq!(format!("{p1:?}"), format!("{p2:?}"), "same seed, same plan");
+        assert_eq!(p1.nan_at.len(), 3);
+        assert_eq!(p1.preempt_at.len(), 2);
+        let p3 = FaultPlan::seeded(8, &ids, 10, 3, 2);
+        assert_ne!(format!("{p1:?}"), format!("{p3:?}"), "seeds must differ");
+        // degenerate inputs build an empty (no-op) plan
+        assert!(FaultPlan::seeded(7, &[], 10, 3, 2).is_empty());
+        assert!(FaultPlan::seeded(7, &ids, 0, 3, 2).is_empty());
+    }
+}

@@ -38,7 +38,30 @@
 //! draft-propose / target-verify rounds over a pruned draft model (see
 //! [`speculative`]) — greedy streams emit several tokens per target
 //! sweep, bit-identical to plain decoding.
+//!
+//! The engine also degrades gracefully instead of corrupting or
+//! aborting (the resilience layer):
+//!
+//! - every [`Completion`] carries a typed [`FinishReason`]; callers can
+//!   always tell "ran its budget" from "gave up";
+//! - [`Engine::submit_with_deadline`] bounds a request's decode steps
+//!   and queue wait; [`Engine::cancel`] removes it outright — either
+//!   way the stream's K/V pages return through the paged freelist;
+//! - [`EngineConfig::max_kv_pages`] caps total live K/V pages: admission
+//!   stops filling when an estimate would exceed it, and decode growth
+//!   past it preempts the YOUNGEST stream vLLM-style (evict its K/V,
+//!   re-queue for re-prefill carrying output + RNG — an unwindowed
+//!   greedy stream resumes bit-identically);
+//! - non-finite (NaN/Inf) logits quarantine exactly the poisoned stream
+//!   with `FinishReason::Error(NonFiniteLogits)` while the rest of the
+//!   batch keeps decoding; a speculative draft that goes non-finite
+//!   falls back to plain target decode for that stream;
+//! - [`Engine::stats`] counts completions, preemptions, expirations,
+//!   cancellations, quarantines and the live-page peak;
+//! - every path above is driven deterministically by the seeded
+//!   fault-injection harness in [`faults`].
 
+pub mod faults;
 pub mod speculative;
 
 use std::collections::VecDeque;
@@ -84,6 +107,17 @@ impl Default for SamplingParams {
     }
 }
 
+/// Why a stream was quarantined. Carried inside
+/// [`FinishReason::Error`] so callers can react per kind.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// The model produced NaN/Inf logits for this stream — aggressively
+    /// pruned weights can overflow, and a non-finite row poisons every
+    /// downstream softmax. The stream retires with whatever it generated
+    /// before the poison; the rest of the batch continues.
+    NonFiniteLogits,
+}
+
 /// Draw one token from `logits` under `params`. Greedy ties break to the
 /// lowest index (same rule as `argmax_last`); top-k ties at the boundary
 /// also break to the lowest index so the candidate set is deterministic.
@@ -93,8 +127,31 @@ impl Default for SamplingParams {
 /// uses an O(V) selection instead of a full sort. The softmax runs over
 /// logit/T in f64, max-subtracted (the perplexity-path convention) so
 /// extreme temperatures stay finite.
+///
+/// Panics on non-finite logits — an earlier version silently emitted
+/// the last vocab token there, which turns one NaN into an endless
+/// stream of plausible-looking garbage. Callers that must survive
+/// poisoned logits (the engine's quarantine path) use
+/// [`try_sample_token`] instead.
 pub fn sample_token(logits: &[f32], params: &SamplingParams, rng: &mut Rng) -> u32 {
-    sample_token_with(logits, params, rng, &mut SampleScratch::default())
+    match try_sample_token(logits, params, rng) {
+        Ok(t) => t,
+        Err(e) => panic!(
+            "sample_token over non-finite logits ({e:?}); \
+             use try_sample_token or the engine's quarantine path"
+        ),
+    }
+}
+
+/// [`sample_token`] with the non-finite case surfaced as a typed error
+/// instead of a panic: `Err(ErrorKind::NonFiniteLogits)` when any logit
+/// is NaN/Inf (nothing is drawn, the RNG is not consumed).
+pub fn try_sample_token(
+    logits: &[f32],
+    params: &SamplingParams,
+    rng: &mut Rng,
+) -> Result<u32, ErrorKind> {
+    try_sample_token_with(logits, params, rng, &mut SampleScratch::default())
 }
 
 /// Reusable sampling buffers (top-k index selection + softmax weights)
@@ -106,16 +163,27 @@ struct SampleScratch {
     w: Vec<f64>,
 }
 
-/// [`sample_token`] over caller-owned scratch buffers — the engine
+/// [`try_sample_token`] over caller-owned scratch buffers — the engine
 /// threads one [`SampleScratch`] across streams and steps.
-fn sample_token_with(
+///
+/// The finiteness pre-check is what makes the CDF-walk fallbacks below
+/// sound: with every logit finite, the max-subtracted weights include
+/// exp(0) = 1 at the max, so the total is >= 1 and the walk can only
+/// miss by the floating-point tail (r within rounding of the total) —
+/// where the last candidate IS the correct boundary token. Before this
+/// check, all-NaN logits produced NaN weights, the walk never fired,
+/// and the fallback silently emitted the last vocab token forever.
+fn try_sample_token_with(
     logits: &[f32],
     params: &SamplingParams,
     rng: &mut Rng,
     scratch: &mut SampleScratch,
-) -> u32 {
+) -> Result<u32, ErrorKind> {
+    if logits.iter().any(|v| !v.is_finite()) {
+        return Err(ErrorKind::NonFiniteLogits);
+    }
     if params.temperature <= 0.0 {
-        return crate::model::decode::argmax(logits) as u32;
+        return Ok(crate::model::decode::argmax(logits) as u32);
     }
     let inv_t = 1.0 / params.temperature as f64;
     // CDF walk over cached weights: each exp computed exactly once
@@ -130,7 +198,7 @@ fn sample_token_with(
         }
         None // fp tail: r stayed (barely) positive
     };
-    match params.top_k {
+    Ok(match params.top_k {
         None => {
             let mx = logits.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b)) as f64;
             scratch.w.clear();
@@ -162,7 +230,7 @@ fn sample_token_with(
             let j = draw(&scratch.w, rng).unwrap_or(scratch.idx.len() - 1);
             scratch.idx[j] as u32
         }
-    }
+    })
 }
 
 // ---------------------------------------------------------------------------
@@ -190,21 +258,79 @@ impl Request {
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
 pub struct RequestId(pub u64);
 
-/// A finished request: the generated tokens plus the logits at the final
-/// position (so scoring-style consumers don't re-run the model).
+/// Why a request finished — the completion taxonomy. Only `Length` is
+/// the happy path; everything else is a typed degradation a serving
+/// front end can surface instead of silently returning short output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Emitted its full `max_new_tokens` budget (zero-budget
+    /// prompt-logits requests finish here too).
+    Length,
+    /// A per-request [`Deadline`] expired — decode steps or admit-wait
+    /// rounds; `tokens` holds whatever was generated in time.
+    Deadline,
+    /// [`Engine::cancel`] removed it; partial output is kept.
+    Cancelled,
+    /// Quarantined with a typed error; partial output is kept.
+    Error(ErrorKind),
+}
+
+impl FinishReason {
+    pub fn is_error(&self) -> bool {
+        matches!(self, FinishReason::Error(_))
+    }
+}
+
+/// Per-request deadline, attached via [`Engine::submit_with_deadline`].
+/// Both bounds are independent and optional; the default bounds nothing.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Deadline {
+    /// Engine steps this request may spend decoding (a speculative
+    /// round counts as one step). Survives preemption — the counter
+    /// carries through re-queuing, so a preempted stream cannot reset
+    /// its clock.
+    pub max_steps: Option<usize>,
+    /// Admit rounds it may be passed over in the queue per stint
+    /// (re-counted from zero after a preemption, which re-queues
+    /// through no fault of the request). Exceeding it finishes the
+    /// request with [`FinishReason::Deadline`] instead of admitting.
+    pub max_wait_rounds: Option<usize>,
+}
+
+impl Deadline {
+    /// No bounds — what plain [`Engine::submit`] attaches.
+    pub fn none() -> Deadline {
+        Deadline::default()
+    }
+
+    pub fn steps(n: usize) -> Deadline {
+        Deadline { max_steps: Some(n), max_wait_rounds: None }
+    }
+
+    pub fn wait_rounds(n: usize) -> Deadline {
+        Deadline { max_steps: None, max_wait_rounds: Some(n) }
+    }
+}
+
+/// A finished request: the generated tokens, the logits at the final
+/// position (so scoring-style consumers don't re-run the model), and
+/// why it finished. `last_logits` is empty for requests that never
+/// prefilled (cancelled or expired while still queued).
 #[derive(Clone, Debug)]
 pub struct Completion {
     pub id: RequestId,
     pub prompt: Vec<u32>,
     pub tokens: Vec<u32>,
     pub last_logits: Vec<f32>,
+    pub finish: FinishReason,
 }
 
 /// Engine knobs. `max_batch` bounds concurrent streams (queued requests
 /// wait); `max_seq`, when set, applies the sliding-window K/V bound to
 /// every stream; `max_wait_rounds` bounds how many admit rounds a
 /// request can be passed over by shortest-first admission before it
-/// jumps the sort (see [`Engine::admit`]).
+/// jumps the sort (see [`Engine::admit`]); `max_kv_pages` caps the
+/// total K/V pages live across all streams.
 #[derive(Clone, Copy, Debug)]
 pub struct EngineConfig {
     pub max_batch: usize,
@@ -214,12 +340,45 @@ pub struct EngineConfig {
     /// sustained streams of short arrivals cannot starve a long prompt.
     /// `0` disables shortest-first entirely (pure FIFO admission).
     pub max_wait_rounds: usize,
+    /// Global K/V memory budget in pages (see
+    /// [`crate::tensor::PagedKv`]; [`Engine::kv_pages_live`] is the
+    /// measured side). `None` = unbounded. When set, admission stops
+    /// filling once the page estimate would exceed it, and decode
+    /// growth past it preempts the youngest stream (recompute
+    /// preemption — see [`Engine`] docs) rather than aborting anything.
+    /// A lone stream is always allowed to run, so one oversized request
+    /// degrades to solo decoding instead of deadlocking. Mamba states
+    /// hold no pages and are exempt.
+    pub max_kv_pages: Option<usize>,
 }
 
 impl Default for EngineConfig {
     fn default() -> EngineConfig {
-        EngineConfig { max_batch: 8, max_seq: None, max_wait_rounds: 8 }
+        EngineConfig { max_batch: 8, max_seq: None, max_wait_rounds: 8, max_kv_pages: None }
     }
+}
+
+/// Cumulative resilience counters, mirrored per engine (the
+/// `spec_stats` idiom): one snapshot answers "did anything degrade, and
+/// how often" without scanning completions.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct EngineStats {
+    /// Completions of every kind (equals `take_finished` output counts).
+    pub completed: usize,
+    /// Recompute preemptions (budget-driven or fault-injected). Not a
+    /// completion kind: a preempted stream re-queues and finishes later.
+    pub preemptions: usize,
+    /// Completions with [`FinishReason::Deadline`].
+    pub deadline_expired: usize,
+    /// Completions with [`FinishReason::Cancelled`].
+    pub cancelled: usize,
+    /// Completions with [`FinishReason::Error`].
+    pub quarantined: usize,
+    /// Speculative streams whose draft went non-finite and fell back to
+    /// plain target decoding.
+    pub draft_fallbacks: usize,
+    /// Highest live K/V page count observed (target + draft states).
+    pub kv_pages_peak: usize,
 }
 
 // ---------------------------------------------------------------------------
@@ -234,6 +393,14 @@ struct Stream {
     max_new: usize,
     sampling: SamplingParams,
     rng: Rng,
+    deadline: Deadline,
+    /// Engine steps this request has spent decoding, across preemptions
+    /// (carried through the queue so the deadline clock never resets).
+    steps_used: usize,
+    /// Admission order tiebreaker: the budget enforcer preempts the
+    /// stream with the HIGHEST admit_seq (youngest — least sunk prefill
+    /// work), the vLLM recompute-preemption victim policy.
+    admit_seq: u64,
 }
 
 impl Stream {
@@ -245,13 +412,37 @@ impl Stream {
     }
 }
 
-/// A request waiting for a batch slot, plus how many admit rounds it
-/// has already been passed over — the aging counter that bounds
-/// shortest-first starvation.
+/// A request waiting for a batch slot — either a fresh submission or a
+/// preempted stream awaiting re-prefill (recompute preemption).
+/// `out`/`rng`/`steps_used` carry a preempted stream's mid-flight state
+/// so it resumes exactly where it stopped; for fresh submissions `out`
+/// is empty and `rng` is the seed-fresh sampling stream.
 struct Queued {
     id: RequestId,
-    req: Request,
+    prompt: Vec<u32>,
+    out: Vec<u32>,
+    max_new: usize,
+    sampling: SamplingParams,
+    rng: Rng,
+    deadline: Deadline,
+    steps_used: usize,
+    /// Admit rounds passed over in THIS queue stint (resets when a
+    /// preemption re-queues the request) — the aging counter that
+    /// bounds shortest-first starvation and the clock for
+    /// `Deadline::max_wait_rounds`.
     waited: usize,
+    /// Aged entries admit ahead of every fresh one, FIFO by id. Set
+    /// when `waited` crosses `EngineConfig::max_wait_rounds`, and
+    /// immediately on preemption so preempted work re-admits promptly.
+    aged: bool,
+}
+
+impl Queued {
+    /// Tokens the next prefill must feed: the prompt plus everything
+    /// generated before a preemption.
+    fn ctx_len(&self) -> usize {
+        self.prompt.len() + self.out.len()
+    }
 }
 
 /// Continuous-batching decode engine over a borrowed model.
@@ -288,6 +479,19 @@ pub struct Engine<'m> {
     /// Acceptance accounting across every stream, including retired
     /// ones.
     spec_stats: speculative::SpecStats,
+    /// Resilience counters (completions, preemptions, quarantines, …).
+    stats: EngineStats,
+    /// Scripted fault injections; empty by default (no-op).
+    faults: faults::FaultPlan,
+    /// 0-based index of the CURRENT engine step (incremented after each
+    /// `step`); the clock `FaultPlan::clamp_budget` schedules against.
+    step_no: usize,
+    /// Next value of `Stream::admit_seq`.
+    admit_seq: u64,
+    /// An empty decode-state template probed once at construction: the
+    /// admission gate sizes page estimates off its block/page geometry
+    /// without allocating anything.
+    page_shape: DecodeState,
 }
 
 impl<'m> Engine<'m> {
@@ -309,6 +513,11 @@ impl<'m> Engine<'m> {
             spec: None,
             spec_cursors: Vec::new(),
             spec_stats: speculative::SpecStats::default(),
+            stats: EngineStats::default(),
+            faults: faults::FaultPlan::default(),
+            step_no: 0,
+            admit_seq: 0,
+            page_shape: model.decode_state(),
         }
     }
 
@@ -353,6 +562,14 @@ impl<'m> Engine<'m> {
 
     /// Queue a request; it becomes active when a batch slot frees up.
     pub fn submit(&mut self, req: Request) -> RequestId {
+        self.submit_with_deadline(req, Deadline::none())
+    }
+
+    /// [`Engine::submit`] with a per-request [`Deadline`]: the request
+    /// finishes with [`FinishReason::Deadline`] (keeping whatever it
+    /// generated in time) once it exceeds its decode-step or queue-wait
+    /// bound, and its K/V pages are reclaimed.
+    pub fn submit_with_deadline(&mut self, req: Request, deadline: Deadline) -> RequestId {
         assert!(!req.prompt.is_empty(), "request needs a non-empty prompt");
         if self.spec.is_some() {
             assert!(
@@ -363,8 +580,73 @@ impl<'m> Engine<'m> {
         }
         let id = RequestId(self.next_id);
         self.next_id += 1;
-        self.queue.push_back(Queued { id, req, waited: 0 });
+        self.queue.push_back(Queued {
+            id,
+            prompt: req.prompt,
+            out: Vec::new(),
+            max_new: req.max_new_tokens,
+            sampling: req.sampling,
+            rng: Rng::new(req.sampling.seed),
+            deadline,
+            steps_used: 0,
+            waited: 0,
+            aged: false,
+        });
         id
+    }
+
+    /// Cancel a request wherever it is: still queued (it never runs) or
+    /// actively decoding (its K/V pages are reclaimed immediately —
+    /// dropping the decode state returns every page through the paged
+    /// freelist). Either way a [`Completion`] with
+    /// [`FinishReason::Cancelled`] and any partial output is delivered
+    /// through [`Engine::take_finished`]. Returns `false` when the id is
+    /// unknown or already finished.
+    pub fn cancel(&mut self, id: RequestId) -> bool {
+        if let Some(pos) = self.queue.iter().position(|q| q.id == id) {
+            let q = self.queue.remove(pos).expect("position came from this queue");
+            self.push_finished(Completion {
+                id: q.id,
+                prompt: q.prompt,
+                tokens: q.out,
+                last_logits: Vec::new(),
+                finish: FinishReason::Cancelled,
+            });
+            return true;
+        }
+        if let Some(i) = self.streams.iter().position(|s| s.id == id) {
+            let s = self.remove_stream(i);
+            self.push_finished(Completion {
+                id: s.id,
+                prompt: s.prompt,
+                tokens: s.out,
+                last_logits: s.last_logits,
+                finish: FinishReason::Cancelled,
+            });
+            return true;
+        }
+        false
+    }
+
+    /// Resilience counters so far (a `Copy` snapshot, like
+    /// [`Engine::spec_stats`]).
+    pub fn stats(&self) -> EngineStats {
+        self.stats
+    }
+
+    /// K/V pages currently held across every active stream — target
+    /// decode states plus, in speculative mode, the per-stream draft
+    /// states. The measured side of `EngineConfig::max_kv_pages`.
+    pub fn kv_pages_live(&self) -> usize {
+        self.states.iter().map(|st| st.kv_pages_live()).sum::<usize>()
+            + self.spec_cursors.iter().map(|c| c.d_state.kv_pages_live()).sum::<usize>()
+    }
+
+    /// Install a scripted [`faults::FaultPlan`]. Injections fire at the
+    /// engine's normal decision points, so a faulted run exercises
+    /// exactly the code a real fault would.
+    pub fn set_fault_plan(&mut self, plan: faults::FaultPlan) {
+        self.faults = plan;
     }
 
     /// Streams currently decoding.
@@ -404,6 +686,27 @@ impl<'m> Engine<'m> {
     /// serve benches) can pay the prefill cost eagerly, separate from
     /// the decode loop.
     pub fn admit(&mut self) {
+        // Queue-wait deadlines first: a request passed over more rounds
+        // than its deadline allows expires HERE, before this round could
+        // admit it — bounded wait means bounded, not "unless a slot
+        // happened to open".
+        let mut expired: Vec<Completion> = Vec::new();
+        self.queue.retain(|q| match q.deadline.max_wait_rounds {
+            Some(limit) if q.waited > limit => {
+                expired.push(Completion {
+                    id: q.id,
+                    prompt: q.prompt.clone(),
+                    tokens: q.out.clone(),
+                    last_logits: Vec::new(),
+                    finish: FinishReason::Deadline,
+                });
+                false
+            }
+            _ => true,
+        });
+        for c in expired {
+            self.push_finished(c);
+        }
         // Shortest-first admission with aging: sort the WHOLE pending
         // queue before slots are filled, so the ≥50%-fill peeling below
         // sees length-sorted candidates and mixed-length bursts pack
@@ -412,16 +715,21 @@ impl<'m> Engine<'m> {
         // submission order. Under sustained skew pure shortest-first
         // starves: a long prompt loses to every fresh short arrival,
         // forever. So any request passed over for `max_wait_rounds`
-        // admit rounds is AGED: aged requests sort ahead of every fresh
-        // one, FIFO among themselves (by id = submission order), which
-        // bounds queue wait at O(max_wait_rounds) regardless of what
-        // keeps arriving.
+        // admit rounds is AGED (preempted re-queues arrive pre-aged):
+        // aged requests sort ahead of every fresh one, FIFO among
+        // themselves (by id = submission order), which bounds queue
+        // wait at O(max_wait_rounds) regardless of what keeps arriving.
         let max_wait = self.cfg.max_wait_rounds;
-        self.queue.make_contiguous().sort_by_key(|q| {
+        for q in self.queue.iter_mut() {
             if q.waited >= max_wait {
+                q.aged = true;
+            }
+        }
+        self.queue.make_contiguous().sort_by_key(|q| {
+            if q.aged {
                 (false, q.id.0 as usize) // aged: FIFO, ahead of fresh
             } else {
-                (true, q.req.prompt.len()) // fresh: shortest-first
+                (true, q.ctx_len()) // fresh: shortest-first
             }
         });
         self.admit_sorted();
@@ -432,25 +740,59 @@ impl<'m> Engine<'m> {
     }
 
     /// The slot-filling half of [`Engine::admit`], consuming the queue
-    /// in its already-sorted order.
+    /// in its already-sorted order. With a page budget set, each
+    /// candidate's need is estimated from its (window-clamped) context
+    /// length and the fill stops at the first candidate that would push
+    /// live + planned pages past the budget — head-of-line blocking is
+    /// deliberate: admitting someone BEHIND the blocked head would
+    /// subvert the priority order aging just established. The one
+    /// exception: when nothing is running at all, one stream always
+    /// admits, so an oversized lone request degrades to solo decoding
+    /// instead of deadlocking the queue. Preempted entries re-prefill
+    /// prompt + generated-so-far and resume on their carried RNG, so an
+    /// unwindowed stream continues bit-identically.
     fn admit_sorted(&mut self) {
+        let budget = self.effective_budget();
         loop {
             let free = self.cfg.max_batch - self.streams.len();
-            let mut batch: Vec<(RequestId, Request)> = Vec::with_capacity(free);
+            let mut batch: Vec<Queued> = Vec::with_capacity(free);
+            let mut planned = self.kv_pages_live();
             while batch.len() < free {
                 let Some(q) = self.queue.pop_front() else { break };
-                batch.push((q.id, q.req));
+                if let Some(b) = budget {
+                    let eff = match self.cfg.max_seq {
+                        Some(w) => q.ctx_len().min(w),
+                        None => q.ctx_len(),
+                    };
+                    let need = self.page_shape.kv_pages_for(eff);
+                    if planned + need > b && !(self.streams.is_empty() && batch.is_empty()) {
+                        self.queue.push_front(q);
+                        break;
+                    }
+                    planned += need;
+                }
+                batch.push(q);
             }
             if batch.is_empty() {
                 return;
             }
-            // prompts the one-shot packed pass can take whole: window
-            // unset, or prompt within the window (a single chunk of the
+            // context each entry prefills: the prompt, plus everything a
+            // preempted stream had already generated (fresh: out empty)
+            let ctxs: Vec<Vec<u32>> = batch
+                .iter()
+                .map(|q| {
+                    let mut c = q.prompt.clone();
+                    c.extend_from_slice(&q.out);
+                    c
+                })
+                .collect();
+            // contexts the one-shot packed pass can take whole: window
+            // unset, or context within the window (a single chunk of the
             // windowed prefill — identical math, no eviction mid-prompt)
             let mut packable: Vec<usize> = (0..batch.len())
                 .filter(|&i| match self.cfg.max_seq {
                     None => true,
-                    Some(w) => batch[i].1.prompt.len() <= w,
+                    Some(w) => ctxs[i].len() <= w,
                 })
                 .collect();
             // Bound padding waste: the packed pass costs n·max(len), so
@@ -458,10 +800,10 @@ impl<'m> Engine<'m> {
             // mostly padding. Peel the longest prompts off to the
             // per-request path until the set packs at least half full
             // (Σ len ≥ n·max/2); skew within the set is then ≤ 2x.
-            packable.sort_by_key(|&i| batch[i].1.prompt.len());
+            packable.sort_by_key(|&i| ctxs[i].len());
             while packable.len() >= 2 {
-                let max = batch[*packable.last().unwrap()].1.prompt.len();
-                let sum: usize = packable.iter().map(|&i| batch[i].1.prompt.len()).sum();
+                let max = ctxs[*packable.last().unwrap()].len();
+                let sum: usize = packable.iter().map(|&i| ctxs[i].len()).sum();
                 if sum * 2 >= packable.len() * max {
                     break;
                 }
@@ -473,7 +815,7 @@ impl<'m> Engine<'m> {
                 let mut sts: Vec<DecodeState> =
                     packable.iter().map(|_| self.model.decode_state()).collect();
                 let prompts: Vec<&[u32]> =
-                    packable.iter().map(|&i| batch[i].1.prompt.as_slice()).collect();
+                    packable.iter().map(|&i| ctxs[i].as_slice()).collect();
                 let h = self.model.prefill_batch(&mut sts, &prompts);
                 let lg = self.model.logits(&h);
                 for (j, (&i, st)) in packable.iter().zip(sts).enumerate() {
@@ -481,44 +823,50 @@ impl<'m> Engine<'m> {
                     logits[i] = Some(lg.row(j).to_vec());
                 }
             }
-            for (i, (id, req)) in batch.into_iter().enumerate() {
+            for (i, q) in batch.into_iter().enumerate() {
                 let (state, lg) = match (states[i].take(), logits[i].take()) {
                     (Some(s), Some(l)) => (s, l),
                     _ => {
-                        // singleton admission or a prompt longer than the
-                        // window: the per-request path
+                        // singleton admission or a context longer than
+                        // the window: the per-request path
                         let mut state = self.model.decode_state();
                         let h = match self.cfg.max_seq {
                             Some(w) => crate::model::decode::prefill_windowed(
                                 self.model,
                                 &mut state,
                                 0,
-                                &req.prompt,
+                                &ctxs[i],
                                 w,
                             ),
-                            None => self.model.prefill_append(&mut state, 0, &req.prompt),
+                            None => self.model.prefill_append(&mut state, 0, &ctxs[i]),
                         };
                         (state, self.model.logits_row(&h))
                     }
                 };
-                if req.max_new_tokens == 0 {
-                    self.finished.push(Completion {
-                        id,
-                        prompt: req.prompt,
-                        tokens: Vec::new(),
+                if q.out.len() >= q.max_new {
+                    // zero-budget request: completes with prompt logits
+                    self.push_finished(Completion {
+                        id: q.id,
+                        prompt: q.prompt,
+                        tokens: q.out,
                         last_logits: lg,
+                        finish: FinishReason::Length,
                     });
                     continue;
                 }
                 self.streams.push(Stream {
-                    id,
+                    id: q.id,
                     last_logits: lg,
-                    out: Vec::with_capacity(req.max_new_tokens),
-                    max_new: req.max_new_tokens,
-                    rng: Rng::new(req.sampling.seed),
-                    sampling: req.sampling,
-                    prompt: req.prompt,
+                    out: q.out,
+                    max_new: q.max_new,
+                    rng: q.rng,
+                    sampling: q.sampling,
+                    prompt: q.prompt,
+                    deadline: q.deadline,
+                    steps_used: q.steps_used,
+                    admit_seq: self.admit_seq,
                 });
+                self.admit_seq += 1;
                 self.states.push(state);
             }
             // zero-budget completions freed their slots: admit again
@@ -528,27 +876,36 @@ impl<'m> Engine<'m> {
         }
     }
 
-    /// One continuous-batching step: admit queued requests, sample one
-    /// token per active stream, run all B streams through ONE batched
-    /// forward (a single (B, d) matmul per linear plus one (B, V) logits
-    /// matmul), then retire finished streams so their slots refill next
-    /// step. Returns the number of tokens generated.
+    /// One continuous-batching step: admit queued requests, quarantine
+    /// any stream holding non-finite logits, sample one token per
+    /// surviving stream, run all B streams through ONE batched forward
+    /// (a single (B, d) matmul per linear plus one (B, V) logits
+    /// matmul), then retire finished/expired streams and enforce the
+    /// page budget so slots and pages refill next step. Returns the
+    /// number of tokens generated.
     pub fn step(&mut self) -> usize {
-        if self.spec.is_some() {
-            return self.spec_step();
-        }
+        let n = if self.spec.is_some() { self.spec_step() } else { self.plain_step() };
+        self.step_no += 1;
+        n
+    }
+
+    fn plain_step(&mut self) -> usize {
         self.admit();
+        self.note_pages_peak();
+        self.inject_nan_faults();
+        self.quarantine_nonfinite();
         if self.streams.is_empty() {
             return 0;
         }
         let mut toks: Vec<u32> = Vec::with_capacity(self.streams.len());
         for s in self.streams.iter_mut() {
-            let tok = sample_token_with(
+            let tok = try_sample_token_with(
                 &s.last_logits,
                 &s.sampling,
                 &mut s.rng,
                 &mut self.sample_scratch,
-            );
+            )
+            .expect("non-finite logits were quarantined above");
             if let Some(cb) = self.on_token.as_mut() {
                 cb(s.id, tok);
             }
@@ -559,56 +916,58 @@ impl<'m> Engine<'m> {
         let logits = self.model.logits(&h);
         for (i, s) in self.streams.iter_mut().enumerate() {
             s.out.push(toks[i]);
+            s.steps_used += 1;
             s.last_logits = logits.row(i).to_vec();
             if let Some(w) = self.cfg.max_seq {
                 self.states[i].enforce_window(w);
             }
         }
-        // retire back-to-front so swap_remove leaves earlier indices
-        // valid, then flip so same-step completions land in slot order
-        let mut retired = Vec::new();
-        for i in (0..self.streams.len()).rev() {
-            if self.streams[i].out.len() >= self.streams[i].max_new {
-                let s = self.streams.swap_remove(i);
-                self.states.swap_remove(i);
-                retired.push(Completion {
-                    id: s.id,
-                    prompt: s.prompt,
-                    tokens: s.out,
-                    last_logits: s.last_logits,
-                });
-            }
-        }
-        retired.reverse();
-        self.finished.extend(retired);
+        // retire first: finished streams free pages, which may satisfy
+        // the budget without preempting anyone
+        self.retire_finished();
+        self.apply_forced_preempts();
+        self.enforce_budget();
+        self.note_pages_peak();
         toks.len()
     }
 
     /// One speculative continuous-batching step: admit queued requests
     /// (the target still prefills through the packed path), lazily
-    /// prefill the draft for newly admitted streams, then run ONE
-    /// propose/verify round per active stream — each emits between 1
-    /// and `k + 1` tokens. Returns the number of tokens emitted.
+    /// prefill the draft for newly admitted streams, quarantine poisoned
+    /// streams, then run ONE propose/verify round per surviving stream —
+    /// each emits between 1 and `k + 1` tokens. Returns the number of
+    /// tokens emitted.
     fn spec_step(&mut self) -> usize {
         let (draft, k) = self.spec.expect("spec_step outside speculative mode");
         self.admit();
-        // new streams: prefill the draft and lift the target's prompt
-        // argmax into the pending slot (exactly the token the plain
-        // engine would sample first)
+        // new streams: prefill the draft over prompt + any output a
+        // preemption carried over, and lift the target's context argmax
+        // into the pending slot (exactly the token the plain engine
+        // would sample next)
         for i in self.spec_cursors.len()..self.streams.len() {
             let s = &self.streams[i];
+            let ctx: Vec<u32> = s.prompt.iter().chain(s.out.iter()).copied().collect();
             let mut d_state = draft.decode_state();
-            speculative::feed(draft, &mut d_state, 0, &s.prompt, self.cfg.max_seq);
+            speculative::feed(draft, &mut d_state, 0, &ctx, self.cfg.max_seq);
             self.spec_cursors.push(speculative::SpecCursor {
                 d_state,
-                d_pos: s.prompt.len(),
+                d_pos: ctx.len(),
                 pending: crate::model::decode::argmax(&s.last_logits) as u32,
+                draft_dead: false,
             });
         }
+        self.note_pages_peak();
+        // quarantine before the rounds: the pending token derives from
+        // last_logits, so a poisoned stream retires before it can emit
+        // from garbage (in spec mode quarantine lands on round
+        // boundaries — mid-round poison is caught next step)
+        self.inject_nan_faults();
+        self.quarantine_nonfinite();
         if self.streams.is_empty() {
             return 0;
         }
         let mut total = 0usize;
+        let mut poisoned: Vec<RequestId> = Vec::new();
         for i in 0..self.streams.len() {
             let budget = self.streams[i].max_new - self.streams[i].out.len();
             let k_eff = k.min(budget - 1);
@@ -616,6 +975,7 @@ impl<'m> Engine<'m> {
                 let s = &self.streams[i];
                 s.prompt.iter().chain(s.out.iter()).copied().collect()
             };
+            let was_dead = self.spec_cursors[i].draft_dead;
             let o = speculative::spec_round(
                 self.model,
                 draft,
@@ -625,6 +985,9 @@ impl<'m> Engine<'m> {
                 &mut self.spec_cursors[i],
                 &history,
             );
+            if !was_dead && self.spec_cursors[i].draft_dead {
+                self.stats.draft_fallbacks += 1;
+            }
             self.spec_stats.absorb(&o);
             let s = &mut self.streams[i];
             if let Some(cb) = self.on_token.as_mut() {
@@ -633,27 +996,195 @@ impl<'m> Engine<'m> {
                 }
             }
             s.out.extend_from_slice(&o.emitted);
+            s.steps_used += 1;
             s.last_logits = o.last_logits;
             total += o.emitted.len();
+            if o.poisoned {
+                poisoned.push(s.id);
+            }
         }
-        // retire exactly like the plain step, keeping cursors in sync
-        let mut retired = Vec::new();
+        // a poisoned TARGET verify row means the next pending token
+        // would come from garbage: quarantine those streams now, before
+        // the budget/deadline retire pass
         for i in (0..self.streams.len()).rev() {
-            if self.streams[i].out.len() >= self.streams[i].max_new {
-                let s = self.streams.swap_remove(i);
-                self.states.swap_remove(i);
-                self.spec_cursors.swap_remove(i);
-                retired.push(Completion {
+            if poisoned.contains(&self.streams[i].id) {
+                let s = self.remove_stream(i);
+                self.push_finished(Completion {
                     id: s.id,
                     prompt: s.prompt,
                     tokens: s.out,
                     last_logits: s.last_logits,
+                    finish: FinishReason::Error(ErrorKind::NonFiniteLogits),
                 });
             }
         }
-        retired.reverse();
-        self.finished.extend(retired);
+        self.retire_finished();
+        self.apply_forced_preempts();
+        self.enforce_budget();
+        self.note_pages_peak();
         total
+    }
+
+    /// Drop stream `i` from the active set, keeping `streams`, `states`
+    /// and (in speculative mode) `spec_cursors` parallel. The decode
+    /// state drops with it — every K/V page returns to the allocator.
+    fn remove_stream(&mut self, i: usize) -> Stream {
+        let s = self.streams.swap_remove(i);
+        self.states.swap_remove(i);
+        if i < self.spec_cursors.len() {
+            self.spec_cursors.swap_remove(i);
+        }
+        s
+    }
+
+    /// Single retirement choke point: every completion passes through
+    /// here, so the typed counters can never drift from the finished
+    /// list.
+    fn push_finished(&mut self, c: Completion) {
+        self.stats.completed += 1;
+        match c.finish {
+            FinishReason::Length => {}
+            FinishReason::Deadline => self.stats.deadline_expired += 1,
+            FinishReason::Cancelled => self.stats.cancelled += 1,
+            FinishReason::Error(_) => self.stats.quarantined += 1,
+        }
+        self.finished.push(c);
+    }
+
+    /// Scripted NaN injections: poisoning `last_logits` upstream of the
+    /// quarantine scan means the injected fault flows through exactly
+    /// the detection path a real non-finite forward would.
+    fn inject_nan_faults(&mut self) {
+        for s in self.streams.iter_mut() {
+            if self.faults.take_nan(s.id, s.out.len()) {
+                for v in s.last_logits.iter_mut() {
+                    *v = f32::NAN;
+                }
+            }
+        }
+    }
+
+    /// Retire every stream whose `last_logits` holds NaN/Inf with a
+    /// typed error — only the poisoned stream leaves; the rest of the
+    /// batch keeps decoding.
+    fn quarantine_nonfinite(&mut self) {
+        let mut i = 0;
+        while i < self.streams.len() {
+            if self.streams[i].last_logits.iter().all(|v| v.is_finite()) {
+                i += 1;
+                continue;
+            }
+            let s = self.remove_stream(i);
+            self.push_finished(Completion {
+                id: s.id,
+                prompt: s.prompt,
+                tokens: s.out,
+                last_logits: s.last_logits,
+                finish: FinishReason::Error(ErrorKind::NonFiniteLogits),
+            });
+        }
+    }
+
+    /// Retire streams that hit their token budget or step deadline,
+    /// back-to-front so swap_remove leaves earlier indices valid, then
+    /// flipped so same-step completions land in slot order.
+    fn retire_finished(&mut self) {
+        let mut retired = Vec::new();
+        for i in (0..self.streams.len()).rev() {
+            let s = &self.streams[i];
+            let finish = if s.out.len() >= s.max_new {
+                FinishReason::Length
+            } else if s.deadline.max_steps.is_some_and(|m| s.steps_used >= m) {
+                FinishReason::Deadline
+            } else {
+                continue;
+            };
+            let s = self.remove_stream(i);
+            retired.push(Completion {
+                id: s.id,
+                prompt: s.prompt,
+                tokens: s.out,
+                last_logits: s.last_logits,
+                finish,
+            });
+        }
+        retired.reverse();
+        for c in retired {
+            self.push_finished(c);
+        }
+    }
+
+    /// Scripted forced preemptions — same reclamation/re-queue path the
+    /// budget enforcer takes, at a chosen point. Streams about to retire
+    /// this step are exempt (preempting finished work is pure waste).
+    fn apply_forced_preempts(&mut self) {
+        for i in (0..self.streams.len()).rev() {
+            let (id, emitted) = (self.streams[i].id, self.streams[i].out.len());
+            if self.faults.take_preempt(id, emitted) {
+                self.preempt_stream(i);
+            }
+        }
+    }
+
+    /// vLLM-style recompute preemption: evict the stream's K/V entirely
+    /// (its decode state drops — pages return through the freelist) and
+    /// re-queue it pre-AGED so admission ordering re-admits it promptly.
+    /// The queued entry carries prompt + generated tokens + the
+    /// mid-stream sampling RNG, so re-prefill resumes the exact stream:
+    /// unwindowed, bit-identically (the packed/solo prefill paths are
+    /// pinned to match stepping); windowed, the chunked re-prefill is
+    /// the same approximation admission applies to any long prompt.
+    fn preempt_stream(&mut self, i: usize) {
+        let s = self.remove_stream(i);
+        self.stats.preemptions += 1;
+        self.queue.push_back(Queued {
+            id: s.id,
+            prompt: s.prompt,
+            out: s.out,
+            max_new: s.max_new,
+            sampling: s.sampling,
+            rng: s.rng,
+            deadline: s.deadline,
+            steps_used: s.steps_used,
+            waited: 0,
+            aged: true,
+        });
+    }
+
+    /// The page budget currently in force: the config bound, tightened
+    /// by any fault-injected clamp active at this step.
+    fn effective_budget(&self) -> Option<usize> {
+        match (self.cfg.max_kv_pages, self.faults.budget_clamp(self.step_no)) {
+            (None, None) => None,
+            (a, b) => Some(a.unwrap_or(usize::MAX).min(b.unwrap_or(usize::MAX))),
+        }
+    }
+
+    /// Decode-time budget enforcement: admission estimates get outgrown
+    /// (every generated token appends K/V rows; crossing a page boundary
+    /// allocates). Preempt the YOUNGEST stream — latest admitted, least
+    /// sunk prefill work — until live pages fit, but never the last
+    /// stream standing: a lone stream must be allowed to run or an
+    /// oversized request could never finish.
+    fn enforce_budget(&mut self) {
+        let Some(budget) = self.effective_budget() else { return };
+        while self.kv_pages_live() > budget && self.streams.len() > 1 {
+            let victim = self
+                .streams
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, s)| s.admit_seq)
+                .map(|(i, _)| i)
+                .expect("streams is non-empty in this loop");
+            self.preempt_stream(victim);
+        }
+    }
+
+    fn note_pages_peak(&mut self) {
+        let live = self.kv_pages_live();
+        if live > self.stats.kv_pages_peak {
+            self.stats.kv_pages_peak = live;
+        }
     }
 
     /// Drive until every queued and active request completes; returns
@@ -1005,7 +1536,7 @@ mod tests {
         let drive = |max_wait_rounds: usize, steps: usize| -> (bool, Vec<Completion>) {
             let mut eng = Engine::new(
                 &m,
-                EngineConfig { max_batch: 1, max_seq: None, max_wait_rounds },
+                EngineConfig { max_batch: 1, max_wait_rounds, ..Default::default() },
             );
             let long_id = eng.submit(Request::greedy(prompt(20, 0), 2));
             let mut done = Vec::new();
@@ -1075,5 +1606,340 @@ mod tests {
         let m = tiny_transformer(10);
         Engine::new(&m, EngineConfig::default())
             .submit(Request::greedy(vec![], 4));
+    }
+
+    // -----------------------------------------------------------------
+    // resilience: typed sampling errors, deadlines, cancel, page budget,
+    // fault injection
+    // -----------------------------------------------------------------
+
+    use super::faults::FaultPlan;
+
+    /// `tiny_transformer` with headroom past position 64, for tests that
+    /// must decode across the first page boundary (`KV_PAGE_ROWS` = 64).
+    fn roomy_transformer(seed: u64) -> Transformer {
+        Transformer::init(
+            TransformerConfig {
+                vocab: 37,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 24,
+                max_seq: 128,
+            },
+            &mut Rng::new(seed),
+        )
+    }
+
+    #[test]
+    fn try_sample_token_types_nonfinite_on_every_arm() {
+        let mut rng = Rng::new(1);
+        let finite: Vec<f32> = vec![0.1, 2.0, -1.0, 1.5];
+        let arms = [
+            SamplingParams::greedy(),
+            SamplingParams::temperature(0.9, 3),
+            SamplingParams::top_k(2, 1.0, 4),
+        ];
+        for params in &arms {
+            assert!(try_sample_token(&finite, params, &mut rng).is_ok(), "{params:?}");
+            for bad in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+                let mut poisoned = finite.clone();
+                poisoned[2] = bad;
+                assert_eq!(
+                    try_sample_token(&poisoned, params, &mut rng),
+                    Err(ErrorKind::NonFiniteLogits),
+                    "{params:?} must reject {bad}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "non-finite")]
+    fn sample_token_panics_instead_of_emitting_garbage() {
+        // The pre-resilience behavior silently emitted the LAST vocab
+        // token from all-NaN logits, forever. Panicking here is the
+        // contract that keeps that bug from coming back.
+        let mut rng = Rng::new(2);
+        sample_token(&[f32::NAN; 4], &SamplingParams::temperature(1.0, 0), &mut rng);
+    }
+
+    #[test]
+    fn cancel_reclaims_pages_and_leaves_batchmates_untouched() {
+        let m = tiny_transformer(21);
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 2, ..Default::default() });
+        let keep = eng.submit(Request::greedy(prompt(5, 0), 8));
+        let mid = eng.submit(Request::greedy(prompt(6, 1), 8));
+        let queued = eng.submit(Request::greedy(prompt(7, 2), 8));
+        // cancel the still-queued request before it ever prefills
+        assert!(eng.cancel(queued));
+        for _ in 0..3 {
+            eng.step();
+        }
+        let before = eng.kv_pages_live();
+        assert!(before > 0);
+        // cancel a mid-flight stream: its pages return immediately
+        assert!(eng.cancel(mid));
+        assert!(eng.kv_pages_live() < before, "cancelled stream must free pages");
+        assert!(!eng.cancel(mid), "double-cancel must report unknown");
+        assert!(!eng.cancel(RequestId(999)), "unknown id must report false");
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 3);
+        // the survivor is oblivious to both cancellations
+        assert_eq!(done[0].id, keep);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        let mut s = DecodeSession::new(&m);
+        s.prefill(&prompt(5, 0));
+        assert_eq!(done[0].tokens, s.generate(8));
+        // mid-flight cancel keeps the partial output (3 steps = 3 tokens)
+        assert_eq!(done[1].id, mid);
+        assert_eq!(done[1].finish, FinishReason::Cancelled);
+        let mut s = DecodeSession::new(&m);
+        s.prefill(&prompt(6, 1));
+        assert_eq!(done[1].tokens, s.generate(3), "partial output kept on cancel");
+        // the queued cancel never ran: no tokens, no logits
+        assert_eq!(done[2].id, queued);
+        assert_eq!(done[2].finish, FinishReason::Cancelled);
+        assert!(done[2].tokens.is_empty() && done[2].last_logits.is_empty());
+        let st = eng.stats();
+        assert_eq!(st.cancelled, 2);
+        assert_eq!(st.completed, 3);
+        assert_eq!(eng.kv_pages_live(), 0, "drained engine must hold zero pages");
+    }
+
+    #[test]
+    fn step_deadline_retires_with_partial_output() {
+        let m = tiny_transformer(22);
+        let mut eng = Engine::new(&m, EngineConfig::default());
+        let bounded =
+            eng.submit_with_deadline(Request::greedy(prompt(4, 0), 10), Deadline::steps(3));
+        let free = eng.submit(Request::greedy(prompt(5, 1), 6));
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, bounded);
+        assert_eq!(done[0].finish, FinishReason::Deadline);
+        let mut s = DecodeSession::new(&m);
+        s.prefill(&prompt(4, 0));
+        assert_eq!(done[0].tokens, s.generate(3), "deadline keeps the in-time prefix");
+        assert_eq!(done[1].id, free);
+        assert_eq!(done[1].finish, FinishReason::Length);
+        let mut s = DecodeSession::new(&m);
+        s.prefill(&prompt(5, 1));
+        assert_eq!(done[1].tokens, s.generate(6), "batch mate must be unaffected");
+        assert_eq!(eng.stats().deadline_expired, 1);
+    }
+
+    #[test]
+    fn queue_wait_deadline_expires_without_running() {
+        // One slot, hogged for 12 steps: a waiter bounded to 2 admit
+        // rounds must expire in the queue (empty output, typed reason)
+        // long before the slot frees.
+        let m = tiny_transformer(23);
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 1, ..Default::default() });
+        let hog = eng.submit(Request::greedy(prompt(3, 0), 12));
+        let waiter =
+            eng.submit_with_deadline(Request::greedy(prompt(4, 1), 5), Deadline::wait_rounds(2));
+        eng.run();
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 2);
+        assert_eq!(done[0].id, hog);
+        assert_eq!(done[0].finish, FinishReason::Length);
+        let mut s = DecodeSession::new(&m);
+        s.prefill(&prompt(3, 0));
+        assert_eq!(done[0].tokens, s.generate(12), "the hog is oblivious");
+        assert_eq!(done[1].id, waiter);
+        assert_eq!(done[1].finish, FinishReason::Deadline);
+        assert!(done[1].tokens.is_empty() && done[1].last_logits.is_empty());
+        assert_eq!(eng.stats().deadline_expired, 1);
+    }
+
+    #[test]
+    fn kv_budget_gates_admission_and_serializes_streams() {
+        // Each tiny_transformer stream holds 4 pages under position 64
+        // (2 layers x K+V x 1 page), so a 4-page budget serializes the
+        // workload to one stream at a time — by ADMISSION gating alone,
+        // no preemption needed.
+        let m = tiny_transformer(24);
+        let mut eng = Engine::new(
+            &m,
+            EngineConfig { max_batch: 4, max_kv_pages: Some(4), ..Default::default() },
+        );
+        for i in 0..3usize {
+            eng.submit(Request::greedy(prompt(4 + i, i), 5));
+        }
+        while eng.has_work() {
+            eng.step();
+            assert!(eng.active() <= 1, "4-page budget admits one stream at a time");
+            assert!(eng.kv_pages_live() <= 4, "budget exceeded");
+        }
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 3);
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.finish, FinishReason::Length);
+            let mut s = DecodeSession::new(&m);
+            s.prefill(&prompt(4 + i, i));
+            assert_eq!(c.tokens, s.generate(5), "stream {i}");
+        }
+        let st = eng.stats();
+        assert_eq!(st.preemptions, 0, "admission gating should avoid preemption");
+        assert_eq!(st.kv_pages_peak, 4);
+    }
+
+    #[test]
+    fn kv_budget_growth_preempts_youngest_and_resumes_lossless() {
+        // Two streams prefill under budget (4 pages each below position
+        // 64) but decode across the page boundary (8 pages each past it):
+        // 16 > 12 forces one recompute preemption of the youngest. The
+        // preempted stream re-queues aged, waits out the survivor, then
+        // re-prefills prompt + generated-so-far — and must still produce
+        // exactly its solo-session output.
+        let m = roomy_transformer(25);
+        let mut eng = Engine::new(
+            &m,
+            EngineConfig { max_batch: 2, max_kv_pages: Some(12), ..Default::default() },
+        );
+        let a = eng.submit(Request::greedy(prompt(60, 0), 10));
+        let b = eng.submit(Request::greedy(prompt(61, 1), 10));
+        while eng.has_work() {
+            eng.step();
+            assert!(eng.kv_pages_live() <= 12, "budget exceeded after enforcement");
+        }
+        assert_eq!(eng.stats().preemptions, 1, "exactly one growth preemption expected");
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 2);
+        for (c, (id, len, salt)) in done.iter().zip([(a, 60, 0), (b, 61, 1)]) {
+            assert_eq!(c.id, id);
+            assert_eq!(c.finish, FinishReason::Length);
+            let mut s = DecodeSession::new(&m);
+            s.prefill(&prompt(len, salt));
+            assert_eq!(c.tokens, s.generate(10), "stream {id:?} diverged after preemption");
+        }
+    }
+
+    #[test]
+    fn nan_fault_quarantines_only_the_poisoned_stream() {
+        for (name, model) in [
+            ("microllama", Box::new(tiny_transformer(26)) as Box<dyn LanguageModel>),
+            ("micromamba", Box::new(tiny_mamba(27)) as Box<dyn LanguageModel>),
+        ] {
+            let run = |plan: FaultPlan| -> (Vec<Completion>, EngineStats) {
+                let mut eng = Engine::new(model.as_ref(), EngineConfig::default());
+                for i in 0..3usize {
+                    eng.submit(Request::greedy(prompt(4 + i, i), 6));
+                }
+                eng.set_fault_plan(plan);
+                eng.run();
+                let mut done = eng.take_finished();
+                done.sort_by_key(|c| c.id);
+                (done, eng.stats())
+            };
+            let (base, base_st) = run(FaultPlan::new());
+            assert_eq!(base_st.quarantined, 0, "{name}");
+            let victim = base[1].id;
+            let (done, st) = run(FaultPlan::new().nan_logits(victim, 3));
+            assert_eq!(st.quarantined, 1, "{name}");
+            assert_eq!(done.len(), 3);
+            // blast radius: untouched streams are bit-identical
+            for i in [0usize, 2] {
+                assert_eq!(done[i].tokens, base[i].tokens, "{name} stream {i} tokens");
+                assert_eq!(done[i].last_logits, base[i].last_logits, "{name} stream {i}");
+                assert_eq!(done[i].finish, FinishReason::Length, "{name}");
+            }
+            // the victim keeps its pre-poison prefix under a typed error
+            assert_eq!(
+                done[1].finish,
+                FinishReason::Error(ErrorKind::NonFiniteLogits),
+                "{name}"
+            );
+            assert_eq!(done[1].tokens[..], base[1].tokens[..3], "{name} victim prefix");
+            assert!(
+                done[1].last_logits.iter().any(|v| !v.is_finite()),
+                "{name}: the poisoned evidence rides out in the completion"
+            );
+        }
+    }
+
+    #[test]
+    fn forced_preemption_is_invisible_in_every_output() {
+        // A scripted preemption mid-decode (same path the budget enforcer
+        // takes) must not change ANY stream's output — including a
+        // temperature-sampled stream, whose mid-flight RNG rides through
+        // the re-queue.
+        for (name, model) in [
+            ("microllama", Box::new(tiny_transformer(28)) as Box<dyn LanguageModel>),
+            ("micromamba", Box::new(tiny_mamba(29)) as Box<dyn LanguageModel>),
+        ] {
+            let run = |plan: FaultPlan| -> (Vec<Completion>, EngineStats) {
+                let mut eng = Engine::new(model.as_ref(), EngineConfig::default());
+                eng.submit(Request::greedy(prompt(5, 0), 8));
+                eng.submit(Request {
+                    prompt: prompt(6, 1),
+                    max_new_tokens: 8,
+                    sampling: SamplingParams::temperature(1.2, 40),
+                });
+                eng.set_fault_plan(plan);
+                eng.run();
+                let mut done = eng.take_finished();
+                done.sort_by_key(|c| c.id);
+                (done, eng.stats())
+            };
+            let (base, base_st) = run(FaultPlan::new());
+            assert_eq!(base_st.preemptions, 0, "{name}");
+            let (done, st) = run(FaultPlan::new().force_preempt(base[1].id, 3));
+            assert_eq!(st.preemptions, 1, "{name}");
+            assert_eq!(done.len(), base.len());
+            for (c, b) in done.iter().zip(&base) {
+                assert_eq!(c.tokens, b.tokens, "{name}: preemption changed {:?}", c.id);
+                assert_eq!(c.finish, FinishReason::Length, "{name}");
+            }
+            // the untouched stream is bit-identical down to its logits
+            assert_eq!(done[0].last_logits, base[0].last_logits, "{name}");
+        }
+    }
+
+    #[test]
+    fn page_accounting_survives_cancel_deadline_and_preempt() {
+        // Regression guard for every reclamation path at once: live pages
+        // must always equal the count implied by each stream's cached
+        // positions (nothing leaks through swap_remove retirement), and
+        // must return to zero once the engine drains.
+        fn check(eng: &Engine<'_>) {
+            let implied: usize = eng
+                .states()
+                .iter()
+                .map(|st| st.kv_pages_for(st.cached_len().unwrap_or(0)))
+                .sum();
+            assert_eq!(eng.kv_pages_live(), implied, "live pages drifted from cache contents");
+        }
+        let m = tiny_transformer(30);
+        let mut eng = Engine::new(&m, EngineConfig { max_batch: 3, ..Default::default() });
+        let a = eng.submit(Request::greedy(prompt(3, 0), 8));
+        let b = eng.submit(Request::greedy(prompt(4, 1), 8));
+        eng.submit_with_deadline(Request::greedy(prompt(5, 2), 8), Deadline::steps(2));
+        eng.submit(Request::greedy(prompt(6, 3), 8));
+        eng.set_fault_plan(FaultPlan::new().force_preempt(b, 2));
+        let mut cancelled = false;
+        while eng.has_work() {
+            eng.step();
+            if !cancelled && eng.streams.iter().any(|s| s.id == a && s.out.len() >= 3) {
+                assert!(eng.cancel(a));
+                cancelled = true;
+            }
+            check(&eng);
+        }
+        assert!(cancelled, "the cancel branch must actually run");
+        assert_eq!(eng.kv_pages_live(), 0, "drained engine must hold zero pages");
+        let st = eng.stats();
+        assert_eq!(st.completed, 4);
+        assert_eq!(st.cancelled, 1);
+        assert_eq!(st.deadline_expired, 1);
+        assert_eq!(st.preemptions, 1);
     }
 }

@@ -39,6 +39,14 @@
 //! no batching win), while mamba targets batch under any window (its
 //! state never evicts).
 //!
+//! **Resilience**: a draft whose logits go non-finite (pruning can
+//! overflow) is marked dead and the stream falls back to plain target
+//! decode — output unaffected, since verification never trusted the
+//! draft ([`SpecSession::draft_fell_back`], engine stat
+//! `draft_fallbacks`). A non-finite TARGET verify row poisons the
+//! round: the already-verified prefix is emitted and the engine
+//! quarantines the stream with a typed error (a bare session panics).
+//!
 //! Break-even model (PERF.md iteration 8): with acceptance rate `a` per
 //! proposal, a round emits `1 + a·k` tokens (expected) for `1` target
 //! sweep plus `k` draft steps, so
@@ -99,6 +107,14 @@ pub(crate) struct SpecCursor {
     pub(crate) d_pos: usize,
     /// Next output token: a target argmax, determined but not yet fed.
     pub(crate) pending: u32,
+    /// The draft produced non-finite logits: aggressively pruned
+    /// weights can overflow, and a poisoned proposal stream would never
+    /// verify. Once set, rounds skip the draft entirely (pure target
+    /// decode — every round emits exactly one token) and its state is
+    /// dropped so a page-budgeted engine reclaims the memory. The
+    /// TARGET stays correct throughout: verification never trusted the
+    /// draft, so emitted tokens are unaffected.
+    pub(crate) draft_dead: bool,
 }
 
 /// What one propose/verify/accept round produced.
@@ -111,6 +127,12 @@ pub(crate) struct RoundOutcome {
     pub(crate) last_logits: Vec<f32>,
     pub(crate) proposed: usize,
     pub(crate) accepted: usize,
+    /// The TARGET produced a non-finite verify row: everything in
+    /// `emitted` was verified by earlier (finite) rows and is good, but
+    /// no further token can be derived — the stream must be quarantined
+    /// (`last_logits` holds the poisoned row for diagnosis, and
+    /// `cursor.pending` is left stale).
+    pub(crate) poisoned: bool,
 }
 
 /// Append `tokens` the way a (possibly windowed) `DecodeSession` would:
@@ -150,10 +172,12 @@ pub(crate) fn spec_round(
     let p0 = history.len();
     let pending = cursor.pending;
 
-    // ---- propose: draft decodes k_eff tokens greedily, one at a time
+    // ---- propose: draft decodes up to k_eff tokens greedily, one at a
+    // time. A dead draft (non-finite logits, this round or earlier) is
+    // skipped entirely: the round degrades to pure target decode.
     let mut proposals: Vec<u32> = Vec::with_capacity(k_eff);
     let mut d_snapshot: Option<(DecodeState, usize)> = None;
-    if k_eff > 0 {
+    if k_eff > 0 && !cursor.draft_dead {
         // resync: feed every true token the draft hasn't seen yet, ending
         // with the pending one, as a single chunk (chunk boundaries never
         // change the incremental arms' math)
@@ -171,6 +195,15 @@ pub(crate) fn spec_round(
         }
         let mut lg = draft.logits_row(&h);
         loop {
+            if lg.iter().any(|v| !v.is_finite()) {
+                // draft went non-finite mid-propose: keep the (finite)
+                // proposals already made, mark the draft dead, and drop
+                // its state — it is never consulted again
+                cursor.draft_dead = true;
+                cursor.d_state = draft.decode_state();
+                cursor.d_pos = 0;
+                break;
+            }
             proposals.push(argmax(&lg) as u32);
             if proposals.len() == k_eff {
                 break;
@@ -181,15 +214,20 @@ pub(crate) fn spec_round(
             lg = draft.logits_row(&h);
         }
     }
+    // proposals actually on the table: shorter than k_eff when the
+    // draft died mid-propose (or 0 for a dead/skipped draft) — the
+    // verify below sizes to kp, never to the requested depth
+    let kp = proposals.len();
 
-    // ---- verify: target scores all k_eff + 1 positions
-    let mut batch: Vec<u32> = Vec::with_capacity(k_eff + 1);
+    // ---- verify: target scores all kp + 1 positions
+    let mut batch: Vec<u32> = Vec::with_capacity(kp + 1);
     batch.push(pending);
     batch.extend_from_slice(&proposals);
 
     let accepted: usize;
     let new_pending: u32;
     let last_logits: Vec<f32>;
+    let poisoned: bool;
     let windowed_tf_target =
         window.is_some() && matches!(t_state, DecodeState::Transformer(_));
     if windowed_tf_target {
@@ -204,35 +242,50 @@ pub(crate) fn spec_round(
             let h = target.decode_append(t_state, p0 + i, &batch[i..i + 1]);
             t_state.enforce_window(w);
             let lg = target.logits_row(&h);
+            if lg.iter().any(|v| !v.is_finite()) {
+                // rows before this one verified batch[..=i] finite and
+                // matching, so the emitted prefix stands; only the NEXT
+                // token is unknowable. State is consistent (p0 + i + 1
+                // fed), no rollback needed.
+                accepted = i;
+                new_pending = 0;
+                last_logits = lg;
+                poisoned = true;
+                break;
+            }
             let t = argmax(&lg) as u32;
-            if i < k_eff && t == proposals[i] {
+            if i < kp && t == proposals[i] {
                 i += 1;
             } else {
                 accepted = i;
                 new_pending = t;
                 last_logits = lg;
+                poisoned = false;
                 break;
             }
         }
     } else {
         // ONE batched incremental forward over the pending token + all
-        // proposals: k_eff + 1 positions for a single sweep over the
+        // proposals: kp + 1 positions for a single sweep over the
         // dense weights. Per-row hidden states (and hence logits_row)
         // are bit-identical to sequential single-token appends.
-        let t_snapshot = (k_eff > 0 && matches!(t_state, DecodeState::Mamba(_)))
+        let t_snapshot = (kp > 0 && matches!(t_state, DecodeState::Mamba(_)))
             .then(|| t_state.clone());
         let full = target.decode_append_full(t_state, p0, &batch);
         let mut a = 0usize;
-        let (np, ll) = loop {
+        let (np, ll, pz) = loop {
             let lg = target.logits_row(full.row(a));
+            if lg.iter().any(|v| !v.is_finite()) {
+                break (0, lg, true);
+            }
             let t = argmax(&lg) as u32;
-            if a < k_eff && t == proposals[a] {
+            if a < kp && t == proposals[a] {
                 a += 1;
             } else {
-                break (t, lg);
+                break (t, lg, false);
             }
         };
-        if a < k_eff {
+        if a < kp {
             // roll back the overshot positions
             match t_snapshot {
                 // mamba: restore the pre-round snapshot, re-scan the
@@ -249,12 +302,14 @@ pub(crate) fn spec_round(
         accepted = a;
         new_pending = np;
         last_logits = ll;
+        poisoned = pz;
     }
 
     // ---- draft rollback: proposal feeds beyond the accepted prefix
-    // consumed tokens that never became true
-    if k_eff > 0 {
-        let d_valid = p0 + 1 + accepted.min(k_eff - 1);
+    // consumed tokens that never became true (a dead draft was already
+    // dropped — nothing to roll back)
+    if kp > 0 && !cursor.draft_dead {
+        let d_valid = p0 + 1 + accepted.min(kp - 1);
         if cursor.d_pos > d_valid {
             match d_snapshot.take() {
                 Some((snap, pos)) => {
@@ -272,8 +327,10 @@ pub(crate) fn spec_round(
     let mut emitted = Vec::with_capacity(1 + accepted);
     emitted.push(pending);
     emitted.extend_from_slice(&proposals[..accepted]);
-    cursor.pending = new_pending;
-    RoundOutcome { emitted, last_logits, proposed: k_eff, accepted }
+    if !poisoned {
+        cursor.pending = new_pending;
+    }
+    RoundOutcome { emitted, last_logits, proposed: kp, accepted, poisoned }
 }
 
 /// A single-stream speculative decode session: draft proposes `k`
@@ -360,8 +417,17 @@ impl<'m> SpecSession<'m> {
             d_state,
             d_pos: prompt.len(),
             pending: argmax(&lg) as u32,
+            draft_dead: false,
         });
         self.history = prompt.to_vec();
+    }
+
+    /// True once the draft's logits went non-finite and the session
+    /// fell back to plain target decoding for good (rounds emit one
+    /// target token each; output is unaffected — verification never
+    /// trusted the draft).
+    pub fn draft_fell_back(&self) -> bool {
+        self.cursor.as_ref().is_some_and(|c| c.draft_dead)
     }
 
     /// Tokens consumed so far by the target (prompt + emitted).
@@ -395,6 +461,16 @@ impl<'m> SpecSession<'m> {
             self.stats.absorb(&o);
             self.history.extend_from_slice(&o.emitted);
             out.extend_from_slice(&o.emitted);
+            // a session has no quarantine to retire into — fail loudly
+            // (the Engine path turns the same condition into
+            // FinishReason::Error and keeps serving the other streams)
+            assert!(
+                !o.poisoned,
+                "target logits went non-finite at position {}: the stream \
+                 cannot continue (the serving Engine quarantines this as \
+                 FinishReason::Error(NonFiniteLogits))",
+                self.history.len()
+            );
         }
         out
     }
@@ -706,5 +782,129 @@ mod tests {
             &mut Rng::new(16),
         );
         SpecSession::new(&t, &other, 2);
+    }
+
+    // -----------------------------------------------------------------
+    // resilience: draft fallback, quarantine and preemption in spec mode
+    // -----------------------------------------------------------------
+
+    use crate::serve::{faults::FaultPlan, ErrorKind, FinishReason};
+
+    #[test]
+    fn poisoned_draft_falls_back_to_plain_target_decode() {
+        // One NaN weight element kills the whole draft forward from the
+        // first touched position — numerically the worst case aggressive
+        // pruning can produce. The session must notice at propose time,
+        // retire the draft for good, and keep emitting the target's own
+        // greedy stream.
+        let target = tiny_transformer(17);
+        let mut plain = DecodeSession::new(&target);
+        plain.prefill(&prompt(6, 1));
+        let expect = plain.generate(12);
+
+        let mut bad_t = tiny_transformer(18);
+        bad_t.weight_mut(0, "w1").dense_mut().row_mut(0)[0] = f32::NAN;
+        let mut bad_m = tiny_mamba(19);
+        bad_m.weight_mut(0, "out_proj").dense_mut().row_mut(0)[0] = f32::NAN;
+        for (name, draft) in [
+            ("poisoned llama draft", Box::new(bad_t) as Box<dyn LanguageModel>),
+            ("poisoned mamba draft", Box::new(bad_m) as Box<dyn LanguageModel>),
+        ] {
+            let mut s = SpecSession::new(&target, draft.as_ref(), 3);
+            s.prefill(&prompt(6, 1));
+            let toks = s.generate(12);
+            assert!(s.draft_fell_back(), "{name}: fallback flag must latch");
+            assert_eq!(toks, expect, "{name}: fallback must equal plain greedy");
+            // a dead draft proposes nothing: rounds emit one target token
+            assert_eq!(s.stats().proposed, 0, "{name}: dead draft cannot propose");
+            assert_eq!(s.stats().emitted, 12, "{name}");
+        }
+    }
+
+    #[test]
+    fn engine_counts_draft_fallbacks_and_stays_lossless() {
+        let target = tiny_transformer(20);
+        let mut bad = tiny_transformer(21);
+        bad.weight_mut(0, "w1").dense_mut().row_mut(0)[0] = f32::NAN;
+        let cfg = EngineConfig::default();
+        let mut plain_eng = Engine::new(&target, cfg);
+        let mut eng = Engine::speculative(&target, &bad, 3, cfg);
+        for i in 0..3usize {
+            plain_eng.submit(Request::greedy(prompt(4 + i, i), 7));
+            eng.submit(Request::greedy(prompt(4 + i, i), 7));
+        }
+        plain_eng.run();
+        eng.run();
+        let mut base = plain_eng.take_finished();
+        base.sort_by_key(|c| c.id);
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), base.len());
+        for (c, b) in done.iter().zip(&base) {
+            assert_eq!(c.tokens, b.tokens, "dead-draft engine must match plain engine");
+            assert_eq!(c.finish, FinishReason::Length);
+        }
+        assert_eq!(eng.stats().draft_fallbacks, 3, "every stream's draft dies once");
+    }
+
+    #[test]
+    fn spec_engine_quarantines_nan_stream_and_spares_the_rest() {
+        let model = tiny_transformer(22);
+        let run = |plan: FaultPlan| {
+            let mut eng = Engine::speculative(&model, &model, 2, EngineConfig::default());
+            for i in 0..3usize {
+                eng.submit(Request::greedy(prompt(4 + i, i), 9));
+            }
+            eng.set_fault_plan(plan);
+            eng.run();
+            let mut done = eng.take_finished();
+            done.sort_by_key(|c| c.id);
+            (done, eng.stats())
+        };
+        let (base, base_st) = run(FaultPlan::new());
+        assert_eq!(base_st.quarantined, 0);
+        let victim = base[1].id;
+        let (done, st) = run(FaultPlan::new().nan_logits(victim, 3));
+        assert_eq!(st.quarantined, 1);
+        assert_eq!(done.len(), 3);
+        for i in [0usize, 2] {
+            assert_eq!(done[i].tokens, base[i].tokens, "untouched stream {i}");
+            assert_eq!(done[i].finish, FinishReason::Length, "stream {i}");
+        }
+        assert_eq!(done[1].finish, FinishReason::Error(ErrorKind::NonFiniteLogits));
+        // spec quarantine lands on a round boundary: at least the trigger
+        // count, strictly less than the full budget
+        let n = done[1].tokens.len();
+        assert!((3..9).contains(&n), "quarantine point out of range: {n}");
+        assert_eq!(done[1].tokens[..], base[1].tokens[..n], "pre-poison prefix");
+    }
+
+    #[test]
+    fn spec_engine_preemption_is_lossless() {
+        // A forced recompute preemption mid-round-sequence drops both the
+        // target state AND the draft cursor; re-admission rebuilds both
+        // from prompt + emitted. Greedy spec output must be unchanged.
+        let target = tiny_transformer(23);
+        let draft = tiny_transformer(24);
+        let run = |plan: FaultPlan| {
+            let mut eng = Engine::speculative(&target, &draft, 3, EngineConfig::default());
+            for i in 0..2usize {
+                eng.submit(Request::greedy(prompt(5 + i, i), 8));
+            }
+            eng.set_fault_plan(plan);
+            eng.run();
+            let mut done = eng.take_finished();
+            done.sort_by_key(|c| c.id);
+            (done, eng.stats())
+        };
+        let (base, base_st) = run(FaultPlan::new());
+        assert_eq!(base_st.preemptions, 0);
+        let (done, st) = run(FaultPlan::new().force_preempt(base[1].id, 2));
+        assert_eq!(st.preemptions, 1);
+        assert_eq!(done.len(), base.len());
+        for (c, b) in done.iter().zip(&base) {
+            assert_eq!(c.tokens, b.tokens, "spec preemption changed {:?}", c.id);
+            assert_eq!(c.finish, FinishReason::Length);
+        }
     }
 }

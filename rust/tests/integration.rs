@@ -1147,3 +1147,123 @@ fn structured_prune_then_eval_end_to_end() {
     // model in the same regime as its dense source
     assert!(ppl < ppl_dense * 30.0, "structured {ppl} vs dense {ppl_dense}");
 }
+
+/// Resilience acceptance: a scripted fault plan (one NaN quarantine, one
+/// forced preemption) against a 4-stream batch must leave every UNTOUCHED
+/// stream bit-identical to a fault-free run — across both families × all
+/// weight layouts (Dense, Csr16, Packed24, DenseReduced). The preempted
+/// stream must still finish with its exact fault-free output (recompute
+/// preemption is lossless), and the poisoned stream must retire early
+/// with a typed error and a verified prefix. This is the blast-radius
+/// invariant `serve::faults` documents.
+#[test]
+fn resilience_fault_grid_spares_untouched_streams() {
+    use apt::serve::faults::FaultPlan;
+    use apt::serve::{
+        Completion, Engine, EngineConfig, EngineStats, ErrorKind, FinishReason, Request,
+    };
+
+    let mut models = layout_variants();
+    models.extend(structured_variants());
+    for (label, model) in &models {
+        let run = |plan: FaultPlan| -> (Vec<Completion>, EngineStats) {
+            let mut eng = Engine::new(model.as_ref(), EngineConfig::default());
+            for i in 0..4usize {
+                let p: Vec<u32> =
+                    (0..4 + i * 2).map(|j| ((j * 3 + i * 7) % 47) as u32).collect();
+                eng.submit(Request::greedy(p, 8));
+            }
+            eng.set_fault_plan(plan);
+            eng.run();
+            let mut done = eng.take_finished();
+            done.sort_by_key(|c| c.id);
+            (done, eng.stats())
+        };
+        let (base, base_st) = run(FaultPlan::new());
+        assert_eq!(base_st.quarantined, 0, "{label}");
+        assert_eq!(base_st.preemptions, 0, "{label}");
+        let plan =
+            FaultPlan::new().nan_logits(base[1].id, 2).force_preempt(base[2].id, 2);
+        let touched = plan.touched();
+        let (done, st) = run(plan);
+        assert_eq!(st.quarantined, 1, "{label}");
+        assert_eq!(st.preemptions, 1, "{label}");
+        assert_eq!(done.len(), 4, "{label}");
+        // blast radius: streams the plan never touched are bit-identical
+        for (c, b) in done.iter().zip(&base) {
+            if touched.contains(&c.id) {
+                continue;
+            }
+            assert_eq!(c.tokens, b.tokens, "{label}: untouched {:?} diverged", c.id);
+            assert_eq!(c.last_logits, b.last_logits, "{label}: untouched {:?}", c.id);
+            assert_eq!(c.finish, FinishReason::Length, "{label}");
+        }
+        // the preempted stream was evicted and recomputed — losslessly
+        assert_eq!(done[2].tokens, base[2].tokens, "{label}: preemption must be invisible");
+        assert_eq!(done[2].finish, FinishReason::Length, "{label}");
+        // the poisoned stream retires early, typed, with a verified prefix
+        assert_eq!(
+            done[1].finish,
+            FinishReason::Error(ErrorKind::NonFiniteLogits),
+            "{label}"
+        );
+        let n = done[1].tokens.len();
+        assert!((2..8).contains(&n), "{label}: quarantine point {n}");
+        assert_eq!(done[1].tokens[..], base[1].tokens[..n], "{label}: poisoned prefix");
+        assert!(
+            done[1].last_logits.iter().any(|v| !v.is_finite()),
+            "{label}: poisoned evidence must ride out in the completion"
+        );
+    }
+}
+
+/// Budget acceptance across layouts: a 4-page budget (one stream's worth
+/// for these 2-layer transformers) serializes a 3-stream workload that
+/// would otherwise hold 12 pages at once — every request still completes
+/// with its exact solo output and the live-page bound holds after every
+/// step. Mamba models hold no K/V pages, so the same config leaves them
+/// fully batched (the budget is a no-op, not a throttle).
+#[test]
+fn resilience_page_budget_completes_over_budget_workload() {
+    use apt::model::DecodeSession;
+    use apt::serve::{Engine, EngineConfig, FinishReason, Request};
+
+    let mut models = layout_variants();
+    models.extend(structured_variants());
+    for (label, model) in &models {
+        let mut eng = Engine::new(
+            model.as_ref(),
+            EngineConfig { max_batch: 4, max_kv_pages: Some(4), ..Default::default() },
+        );
+        let prompts: Vec<Vec<u32>> = (0..3)
+            .map(|i| (0..5 + i).map(|j| ((j * 5 + i * 11) % 47) as u32).collect())
+            .collect();
+        for p in &prompts {
+            eng.submit(Request::greedy(p.clone(), 6));
+        }
+        let is_tf = label.starts_with("microllama");
+        while eng.has_work() {
+            eng.step();
+            assert!(eng.kv_pages_live() <= 4, "{label}: budget exceeded");
+            if is_tf {
+                assert!(eng.active() <= 1, "{label}: 4 pages must serialize streams");
+            }
+        }
+        let mut done = eng.take_finished();
+        done.sort_by_key(|c| c.id);
+        assert_eq!(done.len(), 3, "{label}");
+        for (i, c) in done.iter().enumerate() {
+            assert_eq!(c.finish, FinishReason::Length, "{label}");
+            let mut s = DecodeSession::new(model.as_ref());
+            s.prefill(&prompts[i]);
+            assert_eq!(c.tokens, s.generate(6), "{label} stream {i}");
+        }
+        assert_eq!(eng.stats().preemptions, 0, "{label}: admission gating suffices");
+        let peak = eng.stats().kv_pages_peak;
+        if is_tf {
+            assert_eq!(peak, 4, "{label}");
+        } else {
+            assert_eq!(peak, 0, "{label}: mamba holds no pages");
+        }
+    }
+}

@@ -4,8 +4,8 @@
 #   scripts/bench.sh [filter]
 #
 # Sections (substring filters): gemm hessian finalize cholesky compensate
-# mrp select sequential mask24 sparse decode paged serve speculative
-# structured pipeline hlo.
+# mrp select sequential mask24 sparse decode paged serve resilience
+# speculative structured pipeline hlo.
 # `decode` covers both the pruned-model decode benches and the
 # decode_session_* benches (incremental KV-cache/recurrent serving path
 # vs the quadratic full-forward baseline, populating
@@ -32,6 +32,12 @@
 # magnitude-50% csr16 baseline on the same decode workload, populating
 # derived.structured_decode_tokens_per_s,
 # derived.structured_vs_csr_speedup and derived.structured_flops_ratio.
+# `resilience` times the engine's degradation paths: cancelling
+# mid-flight streams (page reclamation through the K/V freelist,
+# derived.engine_cancel_reclaim_ns per stream) and finishing an
+# over-budget workload under a tight max_kv_pages via recompute
+# preemption vs the same workload unconstrained
+# (derived.engine_preempt_recompute_overhead, a wall-clock ratio).
 #
 # The bench binary itself writes BENCH_perf.json at the repo root and
 # prints a delta table against the previous run (a filtered run keeps the

@@ -27,6 +27,9 @@ cargo run --release --example spec_decode
 echo "== smoke: structured pruning (reduced-shape dense stores end to end) =="
 cargo run --release --example structured_prune
 
+echo "== smoke: engine resilience (page budget + injected faults, typed completions) =="
+cargo run --release --example resilience_smoke
+
 echo "== hygiene: rustfmt check =="
 cargo fmt --all -- --check
 
