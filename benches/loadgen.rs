@@ -1,0 +1,210 @@
+//! HTTP serving load harness: drives the `server` front end over
+//! loopback and reports latency percentiles, throughput, and the
+//! backpressure refusal rate.
+//!
+//!     cargo bench --bench loadgen
+//!
+//! Two generator modes, run back to back against one server:
+//!
+//! - **closed loop**: C client threads, each issuing requests strictly
+//!   back-to-back (a new request only after the previous response).
+//!   Offered load adapts to service rate, so this measures the server's
+//!   sustainable latency distribution (`server_p50_latency_ms`,
+//!   `server_p99_latency_ms`) and token throughput
+//!   (`server_tokens_per_s`) without queue blowup.
+//! - **open loop**: requests arrive on a fixed schedule regardless of
+//!   completions (the arrival process does not slow down when the
+//!   server does — how real traffic behaves). The rate is set to 2x the
+//!   just-measured closed-loop capacity, so the bounded pending queue
+//!   must refuse work; `server_429_rate` is the measured refusal
+//!   fraction. A closed-loop generator structurally cannot measure
+//!   this, which is why both modes exist.
+//!
+//! Results merge into `BENCH_perf.json` under `derived`, preserving
+//! everything the perf bench wrote.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use apt::json::{self, Json};
+use apt::model::{Transformer, TransformerConfig};
+use apt::serve::EngineConfig;
+use apt::server::{client, Server, ServerConfig, ServerHandle};
+use apt::util::Rng;
+
+const OUT_PATH: &str = "BENCH_perf.json";
+const MAX_NEW_TOKENS: usize = 16;
+const CLOSED_CLIENTS: usize = 8;
+const CLOSED_PER_CLIENT: usize = 25;
+const OPEN_SECONDS: f64 = 2.0;
+const OPEN_MAX_ARRIVALS: usize = 400;
+
+fn start_server() -> ServerHandle {
+    let model = Transformer::init(
+        TransformerConfig {
+            vocab: 61,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 48,
+            max_seq: 128,
+        },
+        &mut Rng::new(13),
+    );
+    let cfg = ServerConfig {
+        engine: EngineConfig::default(),
+        // small enough that honest overload actually trips 429s in the
+        // open-loop phase; the closed loop (<= CLOSED_CLIENTS pending)
+        // never touches it
+        max_pending: 16,
+        ..Default::default()
+    };
+    Server::start(model, "127.0.0.1:0", cfg).expect("bind loopback")
+}
+
+fn gen_body(salt: usize) -> String {
+    let toks: Vec<String> = (0..12).map(|i| ((i * 7 + salt * 13 + 1) % 61).to_string()).collect();
+    format!(
+        r#"{{"prompt": [{}], "max_new_tokens": {MAX_NEW_TOKENS}}}"#,
+        toks.join(",")
+    )
+}
+
+fn percentile(sorted_ms: &[f64], p: f64) -> f64 {
+    assert!(!sorted_ms.is_empty());
+    let idx = (p * (sorted_ms.len() - 1) as f64).round() as usize;
+    sorted_ms[idx]
+}
+
+/// Closed loop: returns (sorted latencies in ms, tokens/s, requests/s).
+fn closed_loop(addr: std::net::SocketAddr) -> (Vec<f64>, f64, f64) {
+    let wall = Instant::now();
+    let workers: Vec<_> = (0..CLOSED_CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(CLOSED_PER_CLIENT);
+                let mut toks = 0usize;
+                for i in 0..CLOSED_PER_CLIENT {
+                    let body = gen_body(c * CLOSED_PER_CLIENT + i);
+                    let t0 = Instant::now();
+                    let r = client::request(addr, "POST", "/v1/generate", Some(&body))
+                        .expect("loopback request");
+                    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+                    lat.push(t0.elapsed().as_secs_f64() * 1e3);
+                    toks += r
+                        .json()
+                        .ok()
+                        .and_then(|v| v.get("tokens").and_then(Json::as_arr).map(<[Json]>::len))
+                        .unwrap_or(0);
+                }
+                (lat, toks)
+            })
+        })
+        .collect();
+    let mut lat = Vec::new();
+    let mut toks = 0usize;
+    for w in workers {
+        let (l, t) = w.join().expect("closed-loop client");
+        lat.extend(l);
+        toks += t;
+    }
+    let secs = wall.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    (lat, toks as f64 / secs, (CLOSED_CLIENTS * CLOSED_PER_CLIENT) as f64 / secs)
+}
+
+/// Open loop at `rate_hz`: returns (arrivals, 429 count, other-failure
+/// count). Each arrival is its own thread so a slow response never
+/// delays the next arrival — that independence is the point.
+fn open_loop(addr: std::net::SocketAddr, rate_hz: f64) -> (usize, usize, usize) {
+    let total = ((rate_hz * OPEN_SECONDS) as usize).clamp(50, OPEN_MAX_ARRIVALS);
+    let refused = Arc::new(AtomicUsize::new(0));
+    let failed = Arc::new(AtomicUsize::new(0));
+    let start = Instant::now();
+    let mut workers = Vec::with_capacity(total);
+    for i in 0..total {
+        let target = Duration::from_secs_f64(i as f64 / rate_hz);
+        let elapsed = start.elapsed();
+        if target > elapsed {
+            std::thread::sleep(target - elapsed);
+        }
+        let refused = refused.clone();
+        let failed = failed.clone();
+        workers.push(std::thread::spawn(move || {
+            let body = gen_body(i);
+            match client::request(addr, "POST", "/v1/generate", Some(&body)) {
+                Ok(r) if r.status == 200 => {}
+                Ok(r) if r.status == 429 => {
+                    refused.fetch_add(1, Ordering::Relaxed);
+                }
+                _ => {
+                    failed.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }));
+    }
+    for w in workers {
+        let _ = w.join();
+    }
+    (total, refused.load(Ordering::Relaxed), failed.load(Ordering::Relaxed))
+}
+
+/// Merge the four server keys into BENCH_perf.json's `derived` object,
+/// preserving whatever the perf bench wrote there.
+fn merge_results(p50: f64, p99: f64, tok_s: f64, rate_429: f64) {
+    let mut root = std::fs::read_to_string(OUT_PATH)
+        .ok()
+        .and_then(|t| json::parse(&t).ok())
+        .unwrap_or_else(Json::obj);
+    if !matches!(root, Json::Obj(_)) {
+        root = Json::obj();
+    }
+    let mut derived = match root.get("derived") {
+        Some(d @ Json::Obj(_)) => d.clone(),
+        _ => Json::obj(),
+    };
+    derived
+        .set("server_p50_latency_ms", Json::Num(p50))
+        .set("server_p99_latency_ms", Json::Num(p99))
+        .set("server_tokens_per_s", Json::Num(tok_s))
+        .set("server_429_rate", Json::Num(rate_429));
+    root.set("derived", derived);
+    std::fs::write(OUT_PATH, format!("{}\n", root.to_string_pretty())).expect("write BENCH_perf");
+}
+
+fn main() {
+    // `cargo bench` passes --bench; any other arg is a no-op filter for
+    // interface parity with the perf bench
+    let h = start_server();
+    let addr = h.addr();
+
+    println!(
+        "== closed loop: {CLOSED_CLIENTS} clients x {CLOSED_PER_CLIENT} requests, {MAX_NEW_TOKENS} tokens each =="
+    );
+    let (lat, tok_s, req_s) = closed_loop(addr);
+    let (p50, p99) = (percentile(&lat, 0.50), percentile(&lat, 0.99));
+    println!("  p50 {p50:8.3} ms   p99 {p99:8.3} ms");
+    println!("  {tok_s:8.0} tokens/s   {req_s:8.1} requests/s");
+
+    // overload: offer 2x the measured sustainable rate so refusals are a
+    // property of the bounded queue, not of an arbitrary magic number
+    let rate = (req_s * 2.0).max(25.0);
+    println!("== open loop: {rate:.0} arrivals/s for {OPEN_SECONDS}s (2x closed-loop capacity) ==");
+    let (total, refused, failed) = open_loop(addr, rate);
+    assert_eq!(failed, 0, "only 200/429 are acceptable under overload");
+    let rate_429 = refused as f64 / total as f64;
+    println!("  {total} arrivals, {refused} refused (429 rate {rate_429:.3})");
+
+    let m = client::request(addr, "GET", "/metrics", None).expect("metrics");
+    let text = String::from_utf8_lossy(&m.body).into_owned();
+    for k in
+        ["apt_engine_completions_total", "apt_http_responses_429_total", "apt_engine_kv_pages_live"]
+    {
+        println!("  {k} {}", client::metric(&text, k).unwrap_or(0));
+    }
+    h.shutdown();
+
+    merge_results(p50, p99, tok_s, rate_429);
+    println!("\nwrote server_p50_latency_ms / server_p99_latency_ms / server_tokens_per_s / server_429_rate to {OUT_PATH}");
+}

@@ -1,0 +1,82 @@
+//! HTTP serving smoke: start the std-only server on an ephemeral
+//! loopback port, exercise every endpoint once (plain generate,
+//! streamed generate, /metrics, /healthz), and shut down gracefully.
+//!
+//!     cargo run --release --example http_serve
+
+use apt::data::{CorpusGen, Profile};
+use apt::model::{train, TrainConfig, Transformer, TransformerConfig};
+use apt::server::{client, Server, ServerConfig};
+use apt::util::Rng;
+
+fn main() {
+    let gen = CorpusGen::new(60, 2, 7);
+    let data = gen.generate(Profile::C4Like, 30_000, 1);
+    let vocab = gen.tokenizer.vocab_size();
+    let mut model = Transformer::init(
+        TransformerConfig { vocab, d_model: 64, n_layers: 2, n_heads: 2, d_ff: 96, max_seq: 256 },
+        &mut Rng::new(3),
+    );
+    train(
+        &mut model,
+        &data,
+        &TrainConfig { steps: 60, batch: 8, seq_len: 32, log_every: 1000, ..Default::default() },
+    );
+
+    let h = Server::start(model, "127.0.0.1:0", ServerConfig::default()).expect("bind loopback");
+    let addr = h.addr();
+    println!("serving on http://{addr}");
+
+    let r = client::request(addr, "GET", "/healthz", None).expect("healthz");
+    assert_eq!(r.status, 200);
+    println!("GET /healthz -> {} {:?}", r.status, String::from_utf8_lossy(&r.body).trim());
+
+    let prompt: Vec<String> = (0..8).map(|i| ((i * 3 + 5) % vocab).to_string()).collect();
+    let body = format!(
+        r#"{{"prompt": [{}], "max_new_tokens": 12, "temperature": 0.8, "seed": 7}}"#,
+        prompt.join(",")
+    );
+    let r = client::request(addr, "POST", "/v1/generate", Some(&body)).expect("generate");
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json().expect("json body");
+    println!(
+        "POST /v1/generate -> {} finish={} tokens={}",
+        r.status,
+        v.get("finish").unwrap().as_str().unwrap(),
+        v.get("tokens").unwrap().as_arr().unwrap().len(),
+    );
+
+    let sbody = format!(
+        r#"{{"prompt": [{}], "max_new_tokens": 12, "stream": true}}"#,
+        prompt.join(",")
+    );
+    let (status, chunks) = client::stream_request(addr, "/v1/generate", &sbody).expect("stream");
+    assert_eq!(status, 200);
+    let (toks, terminal) = client::split_stream(&chunks);
+    let terminal = terminal.expect("terminal chunk");
+    println!(
+        "POST /v1/generate (stream) -> {} chunks, {} tokens, finish={}",
+        chunks.len(),
+        toks.len(),
+        terminal.get("finish").unwrap().as_str().unwrap(),
+    );
+    assert_eq!(toks.len(), 12);
+
+    let m = client::request(addr, "GET", "/metrics", None).expect("metrics");
+    assert_eq!(m.status, 200);
+    let text = String::from_utf8_lossy(&m.body).into_owned();
+    println!("GET /metrics ->");
+    for k in [
+        "apt_engine_completions_total",
+        "apt_engine_tokens_generated_total",
+        "apt_engine_kv_pages_live",
+        "apt_http_requests_total",
+    ] {
+        println!("  {k} {}", client::metric(&text, k).expect(k));
+    }
+    assert_eq!(client::metric(&text, "apt_engine_completions_total"), Some(2));
+    assert_eq!(client::metric(&text, "apt_engine_kv_pages_live"), Some(0));
+
+    h.shutdown();
+    println!("shutdown drained; http_serve smoke passed");
+}

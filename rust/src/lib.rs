@@ -21,6 +21,7 @@ pub mod model;
 pub mod prune;
 pub mod runtime;
 pub mod serve;
+pub mod server;
 pub mod sparse;
 pub mod tensor;
 pub mod util;

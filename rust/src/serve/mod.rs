@@ -379,6 +379,35 @@ pub struct EngineStats {
     pub draft_fallbacks: usize,
     /// Highest live K/V page count observed (target + draft states).
     pub kv_pages_peak: usize,
+    /// Tokens emitted across every stream so far (streamed through
+    /// `on_token` and accumulated into completions alike) — the
+    /// numerator of any tokens/s measurement over the engine.
+    pub tokens_generated: usize,
+}
+
+impl EngineStats {
+    /// Completions that ran their full budget — the happy path. Derived
+    /// (not stored) so the by-reason counts always sum to `completed`.
+    pub fn finished_length(&self) -> usize {
+        self.completed - self.deadline_expired - self.cancelled - self.quarantined
+    }
+}
+
+/// One read-only view of everything a monitoring surface needs:
+/// the queue, the active batch, live K/V pages and the cumulative
+/// [`EngineStats`] ledger. Taken atomically between steps via
+/// [`Engine::snapshot`], so a `/metrics` endpoint (or any other
+/// observer) never reaches into engine internals mid-step.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EngineSnapshot {
+    /// Requests waiting for a batch slot ([`Engine::queued`]).
+    pub queued: usize,
+    /// Streams actively decoding ([`Engine::active`]).
+    pub active: usize,
+    /// K/V pages currently held ([`Engine::kv_pages_live`]).
+    pub kv_pages_live: usize,
+    /// The cumulative counters ([`Engine::stats`]).
+    pub stats: EngineStats,
 }
 
 // ---------------------------------------------------------------------------
@@ -632,6 +661,19 @@ impl<'m> Engine<'m> {
     /// [`Engine::spec_stats`]).
     pub fn stats(&self) -> EngineStats {
         self.stats
+    }
+
+    /// Everything a monitoring surface reads, in one consistent view:
+    /// queue depth, live stream count, live K/V pages and the stats
+    /// ledger. The HTTP server's `/metrics` endpoint is the consumer —
+    /// it sees only this snapshot, never engine internals.
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            queued: self.queued(),
+            active: self.active(),
+            kv_pages_live: self.kv_pages_live(),
+            stats: self.stats,
+        }
     }
 
     /// K/V pages currently held across every active stream — target
@@ -922,6 +964,7 @@ impl<'m> Engine<'m> {
                 self.states[i].enforce_window(w);
             }
         }
+        self.stats.tokens_generated += toks.len();
         // retire first: finished streams free pages, which may satisfy
         // the budget without preempting anyone
         self.retire_finished();
@@ -1018,6 +1061,7 @@ impl<'m> Engine<'m> {
                 });
             }
         }
+        self.stats.tokens_generated += total;
         self.retire_finished();
         self.apply_forced_preempts();
         self.enforce_budget();

@@ -1,0 +1,245 @@
+//! Minimal loopback HTTP/1.1 client — just enough to drive this
+//! server from the load harness (`benches/loadgen.rs`), the CI smoke
+//! (`examples/http_serve.rs`) and the test suites. NOT a general HTTP
+//! client: one request per connection, `Content-Length` or chunked
+//! response bodies, no redirects, no TLS, no keep-alive — exactly the
+//! subset the server speaks.
+
+use std::io::{self, BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+use crate::json::{self, Json};
+
+/// A complete (non-streamed or fully-collected) response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+
+    /// Parse the body as JSON (the generate endpoint's responses).
+    pub fn json(&self) -> Result<Json, String> {
+        json::parse(std::str::from_utf8(&self.body).map_err(|e| e.to_string())?)
+    }
+}
+
+fn connect(addr: SocketAddr) -> io::Result<TcpStream> {
+    let s = TcpStream::connect(addr)?;
+    s.set_nodelay(true)?;
+    // generous bound so a wedged server fails a test instead of
+    // hanging it
+    s.set_read_timeout(Some(Duration::from_secs(30)))?;
+    Ok(s)
+}
+
+fn write_request(
+    s: &mut TcpStream,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> io::Result<()> {
+    let mut head = format!("{method} {path} HTTP/1.1\r\nHost: loopback\r\n");
+    if let Some(b) = body {
+        head.push_str(&format!("Content-Type: application/json\r\nContent-Length: {}\r\n", b.len()));
+    }
+    head.push_str("Connection: close\r\n\r\n");
+    s.write_all(head.as_bytes())?;
+    if let Some(b) = body {
+        s.write_all(b.as_bytes())?;
+    }
+    s.flush()
+}
+
+/// Read `HTTP/1.1 <status> <reason>` plus headers off the reader.
+fn read_head(r: &mut impl BufRead) -> io::Result<(u16, Vec<(String, String)>)> {
+    let mut line = String::new();
+    r.read_line(&mut line)?;
+    let status = line.split(' ').nth(1).and_then(|s| s.parse::<u16>().ok()).ok_or_else(|| {
+        io::Error::new(io::ErrorKind::InvalidData, format!("bad status line: {line:?}"))
+    })?;
+    let mut headers = Vec::new();
+    loop {
+        let mut line = String::new();
+        r.read_line(&mut line)?;
+        let line = line.trim_end_matches(['\r', '\n']);
+        if line.is_empty() {
+            break;
+        }
+        if let Some((n, v)) = line.split_once(':') {
+            headers.push((n.trim().to_ascii_lowercase(), v.trim().to_string()));
+        }
+    }
+    Ok((status, headers))
+}
+
+/// Read one chunk of a chunked body: `Some(data)` per frame, `None` at
+/// the terminal zero-length chunk.
+fn read_chunk(r: &mut impl BufRead) -> io::Result<Option<Vec<u8>>> {
+    let mut size_line = String::new();
+    r.read_line(&mut size_line)?;
+    let size = usize::from_str_radix(size_line.trim(), 16).map_err(|_| {
+        io::Error::new(io::ErrorKind::InvalidData, format!("bad chunk size: {size_line:?}"))
+    })?;
+    let mut data = vec![0u8; size + 2]; // chunk + trailing CRLF
+    r.read_exact(&mut data)?;
+    data.truncate(size);
+    Ok(if size == 0 { None } else { Some(data) })
+}
+
+/// One complete request/response round trip. Chunked responses are
+/// collected whole — use [`open_stream`] to consume chunks as they
+/// arrive (or to abandon the stream mid-flight).
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+) -> io::Result<Response> {
+    let mut s = connect(addr)?;
+    write_request(&mut s, method, path, body)?;
+    let mut r = BufReader::new(s);
+    let (status, headers) = read_head(&mut r)?;
+    let resp = Response { status, headers, body: Vec::new() };
+    let mut body = Vec::new();
+    if resp.header("transfer-encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked")) {
+        while let Some(chunk) = read_chunk(&mut r)? {
+            body.extend_from_slice(&chunk);
+        }
+    } else if let Some(n) = resp.header("content-length").and_then(|v| v.parse::<usize>().ok()) {
+        body.resize(n, 0);
+        r.read_exact(&mut body)?;
+    } else {
+        r.read_to_end(&mut body)?;
+    }
+    Ok(Response { body, ..resp })
+}
+
+/// Write raw bytes (an intentionally malformed request, say) and return
+/// the response status.
+pub fn raw_roundtrip_status(addr: SocketAddr, raw: &str) -> io::Result<u16> {
+    let mut s = connect(addr)?;
+    s.write_all(raw.as_bytes())?;
+    s.flush()?;
+    let mut r = BufReader::new(s);
+    Ok(read_head(&mut r)?.0)
+}
+
+/// An open streaming response. Chunks arrive via [`Stream::next_chunk`];
+/// dropping the value mid-stream closes the socket — exactly the
+/// client-disconnect path the server must survive (and cancel on).
+pub struct Stream {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    r: BufReader<TcpStream>,
+}
+
+impl Stream {
+    /// Next chunk, or `None` at the terminal chunk.
+    pub fn next_chunk(&mut self) -> io::Result<Option<Vec<u8>>> {
+        read_chunk(&mut self.r)
+    }
+}
+
+/// POST `body` to `path` and hand back the response as an open stream.
+pub fn open_stream(addr: SocketAddr, path: &str, body: &str) -> io::Result<Stream> {
+    let mut s = connect(addr)?;
+    write_request(&mut s, "POST", path, Some(body))?;
+    let mut r = BufReader::new(s);
+    let (status, headers) = read_head(&mut r)?;
+    Ok(Stream { status, headers, r })
+}
+
+/// [`open_stream`] + collect every chunk until the stream ends.
+pub fn stream_request(
+    addr: SocketAddr,
+    path: &str,
+    body: &str,
+) -> io::Result<(u16, Vec<Vec<u8>>)> {
+    let mut st = open_stream(addr, path, body)?;
+    let mut chunks = Vec::new();
+    while let Some(c) = st.next_chunk()? {
+        chunks.push(c);
+    }
+    Ok((st.status, chunks))
+}
+
+/// Split collected generate-stream chunks into (tokens, terminal
+/// object): `{"token": N}` lines accumulate, the `{"done": true, ...}`
+/// line is returned parsed.
+pub fn split_stream(chunks: &[Vec<u8>]) -> (Vec<u32>, Option<Json>) {
+    let mut toks = Vec::new();
+    let mut done = None;
+    for c in chunks {
+        let Ok(text) = std::str::from_utf8(c) else { continue };
+        for line in text.lines() {
+            let Ok(v) = json::parse(line) else { continue };
+            if let Some(t) = v.get("token").and_then(Json::as_f64) {
+                toks.push(t as u32);
+            } else if v.get("done").is_some() {
+                done = Some(v);
+            }
+        }
+    }
+    (toks, done)
+}
+
+/// Pull one `name value` line out of a `/metrics` exposition.
+pub fn metric(text: &str, name: &str) -> Option<usize> {
+    text.lines().find_map(|l| {
+        let (k, v) = l.split_once(' ')?;
+        if k == name {
+            v.trim().parse::<usize>().ok()
+        } else {
+            None
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn head_and_chunk_parsing() {
+        let wire = b"HTTP/1.1 429 Too Many Requests\r\nRetry-After: 1\r\nContent-Length: 0\r\n\r\n";
+        let mut r = Cursor::new(&wire[..]);
+        let (status, headers) = read_head(&mut r).unwrap();
+        assert_eq!(status, 429);
+        let retry = headers.iter().find(|(n, _)| n == "retry-after").map(|(_, v)| v.as_str());
+        assert_eq!(retry, Some("1"));
+
+        let chunks = b"c\r\n{\"token\":5}\n\r\n0\r\n\r\n";
+        let mut r = Cursor::new(&chunks[..]);
+        assert_eq!(read_chunk(&mut r).unwrap().as_deref(), Some(&b"{\"token\":5}\n"[..]));
+        assert_eq!(read_chunk(&mut r).unwrap(), None);
+    }
+
+    #[test]
+    fn split_stream_separates_tokens_from_terminal() {
+        let chunks: Vec<Vec<u8>> = vec![
+            b"{\"token\":3}\n".to_vec(),
+            b"{\"token\":9}\n".to_vec(),
+            b"{\"done\":true,\"finish\":\"length\",\"tokens_generated\":2}\n".to_vec(),
+        ];
+        let (toks, done) = split_stream(&chunks);
+        assert_eq!(toks, vec![3, 9]);
+        assert_eq!(done.unwrap().get("finish").unwrap().as_str(), Some("length"));
+    }
+
+    #[test]
+    fn metric_lookup() {
+        let text = "apt_up 1\napt_engine_kv_pages_live 0\napt_http_requests_total 7\n";
+        assert_eq!(metric(text, "apt_engine_kv_pages_live"), Some(0));
+        assert_eq!(metric(text, "apt_http_requests_total"), Some(7));
+        assert_eq!(metric(text, "apt_missing"), None);
+    }
+}

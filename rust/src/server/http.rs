@@ -1,0 +1,347 @@
+//! Hand-rolled HTTP/1.1 wire layer (no dependencies — the sealed build
+//! environment has no hyper/tiny_http; the same vendored-shim philosophy
+//! that gave us the offline `anyhow`/`log`).
+//!
+//! Scope is deliberately narrow: the server speaks exactly the subset a
+//! serving front end needs — one request per connection (every response
+//! carries `Connection: close`), `Content-Length` bodies on the way in,
+//! fixed-length or chunked (`Transfer-Encoding: chunked`) bodies on the
+//! way out. Parsing is defensive: every malformed input maps to a typed
+//! [`ParseError`] so the route layer can answer with the matching status
+//! code instead of dropping the connection silently, and both the header
+//! block and the body are size-capped so a hostile client cannot balloon
+//! server memory.
+
+use std::io::{self, BufRead, Read, Write};
+
+/// Upper bound on the request line + header block, in bytes. Generous
+/// for hand-written clients and curl alike; a request that exceeds it
+/// is malformed or hostile, either way a 400.
+pub const MAX_HEADER_BYTES: usize = 8 * 1024;
+
+/// A parsed request: method + path verbatim from the request line,
+/// header names lowercased (HTTP headers are case-insensitive), body
+/// read to exactly `Content-Length` bytes.
+#[derive(Clone, Debug)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpRequest {
+    /// Case-insensitive header lookup (names were lowercased at parse).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers.iter().find(|(n, _)| *n == name).map(|(_, v)| v.as_str())
+    }
+}
+
+/// Every way reading a request can fail, each mapped to one response by
+/// [`status_for`]. `Closed` is the clean no-request case (EOF before any
+/// byte — the peer connected and left); it gets no response at all.
+#[derive(Debug)]
+pub enum ParseError {
+    /// EOF before the first request byte: not an error, just a peer
+    /// that closed without sending a request.
+    Closed,
+    /// Request line is not `METHOD SP PATH SP HTTP/1.x`.
+    BadRequestLine(String),
+    /// A header line without a `:` separator (or no CRLF terminator
+    /// before EOF).
+    BadHeader(String),
+    /// Request line + headers exceeded [`MAX_HEADER_BYTES`].
+    HeadersTooLarge,
+    /// Body-carrying method without a parseable `Content-Length`.
+    MissingLength,
+    /// Declared `Content-Length` exceeds the server's body cap.
+    BodyTooLarge { declared: usize, limit: usize },
+    /// Socket-level failure (timeout included) mid-request.
+    Io(io::Error),
+}
+
+/// The (status, reason, message) a [`ParseError`] answers with.
+/// `Closed` has no response; callers skip it before writing.
+pub fn status_for(e: &ParseError) -> (u16, &'static str, String) {
+    match e {
+        ParseError::Closed => (0, "", String::new()),
+        ParseError::BadRequestLine(l) => {
+            (400, "Bad Request", format!("malformed request line: {l:?}"))
+        }
+        ParseError::BadHeader(l) => (400, "Bad Request", format!("malformed header: {l:?}")),
+        ParseError::HeadersTooLarge => {
+            (400, "Bad Request", format!("headers exceed {MAX_HEADER_BYTES} bytes"))
+        }
+        ParseError::MissingLength => {
+            (400, "Bad Request", "POST requires a Content-Length header".to_string())
+        }
+        ParseError::BodyTooLarge { declared, limit } => {
+            (413, "Payload Too Large", format!("body of {declared} bytes exceeds limit {limit}"))
+        }
+        ParseError::Io(e) => (400, "Bad Request", format!("read failed: {e}")),
+    }
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, counting its bytes
+/// against `budget`. Returns the line without the terminator.
+fn read_line(r: &mut impl BufRead, budget: &mut usize) -> Result<String, ParseError> {
+    let mut raw = Vec::new();
+    loop {
+        let buf = r.fill_buf().map_err(ParseError::Io)?;
+        if buf.is_empty() {
+            if raw.is_empty() {
+                return Err(ParseError::Closed);
+            }
+            return Err(ParseError::BadHeader(String::from_utf8_lossy(&raw).into_owned()));
+        }
+        let nl = buf.iter().position(|&b| b == b'\n');
+        let take = nl.map_or(buf.len(), |i| i + 1);
+        if take > *budget {
+            return Err(ParseError::HeadersTooLarge);
+        }
+        *budget -= take;
+        raw.extend_from_slice(&buf[..take]);
+        r.consume(take);
+        if nl.is_some() {
+            break;
+        }
+    }
+    raw.pop(); // the \n
+    if raw.last() == Some(&b'\r') {
+        raw.pop();
+    }
+    String::from_utf8(raw).map_err(|e| ParseError::BadHeader(format!("non-utf8 line: {e}")))
+}
+
+/// Parse one request off the stream: request line, headers, then exactly
+/// `Content-Length` body bytes (capped at `max_body`). Methods that
+/// carry no body (GET/HEAD/DELETE) skip the length requirement.
+pub fn parse_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpRequest, ParseError> {
+    let mut budget = MAX_HEADER_BYTES;
+    let line = read_line(r, &mut budget)?;
+    let mut parts = line.split(' ');
+    let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
+        (Some(m), Some(p), Some(v), None) if !m.is_empty() && p.starts_with('/') => (m, p, v),
+        _ => return Err(ParseError::BadRequestLine(line.clone())),
+    };
+    if !version.starts_with("HTTP/1.") {
+        return Err(ParseError::BadRequestLine(line.clone()));
+    }
+    let (method, path) = (method.to_string(), path.to_string());
+    let mut headers: Vec<(String, String)> = Vec::new();
+    loop {
+        let line = match read_line(r, &mut budget) {
+            Ok(l) => l,
+            // EOF mid-headers is malformed, not a clean close
+            Err(ParseError::Closed) => return Err(ParseError::BadHeader("<eof>".into())),
+            Err(e) => return Err(e),
+        };
+        if line.is_empty() {
+            break;
+        }
+        let Some((name, value)) = line.split_once(':') else {
+            return Err(ParseError::BadHeader(line));
+        };
+        headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
+    }
+    let req = HttpRequest { method, path, headers, body: Vec::new() };
+    let body_len = match req.header("content-length") {
+        Some(v) => v.parse::<usize>().map_err(|_| ParseError::MissingLength)?,
+        None if req.method == "POST" || req.method == "PUT" => {
+            return Err(ParseError::MissingLength)
+        }
+        None => 0,
+    };
+    if body_len > max_body {
+        return Err(ParseError::BodyTooLarge { declared: body_len, limit: max_body });
+    }
+    let mut body = vec![0u8; body_len];
+    r.read_exact(&mut body).map_err(ParseError::Io)?;
+    Ok(HttpRequest { body, ..req })
+}
+
+/// Write a complete fixed-length response (status line, standard
+/// headers, `extra` headers, body) and flush. Every response closes the
+/// connection — the server is strictly one-request-per-connection.
+pub fn write_response(
+    w: &mut impl Write,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra: &[(&str, &str)],
+    body: &[u8],
+) -> io::Result<()> {
+    write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+    write!(w, "Content-Type: {content_type}\r\n")?;
+    write!(w, "Content-Length: {}\r\n", body.len())?;
+    write!(w, "Connection: close\r\n")?;
+    for (k, v) in extra {
+        write!(w, "{k}: {v}\r\n")?;
+    }
+    w.write_all(b"\r\n")?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Chunked transfer encoding: the streaming response arm. `begin` sends
+/// the header block, each `chunk` sends one length-prefixed frame and
+/// FLUSHES (a streamed token must reach the client now, not when a
+/// buffer fills — this flush is also how a dead client is detected
+/// promptly), `finish` sends the terminal zero-length chunk.
+pub struct ChunkedWriter<'w, W: Write> {
+    w: &'w mut W,
+}
+
+impl<'w, W: Write> ChunkedWriter<'w, W> {
+    pub fn begin(
+        w: &'w mut W,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+    ) -> io::Result<ChunkedWriter<'w, W>> {
+        write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
+        write!(w, "Content-Type: {content_type}\r\n")?;
+        write!(w, "Transfer-Encoding: chunked\r\n")?;
+        write!(w, "Connection: close\r\n\r\n")?;
+        w.flush()?;
+        Ok(ChunkedWriter { w })
+    }
+
+    pub fn chunk(&mut self, data: &[u8]) -> io::Result<()> {
+        if data.is_empty() {
+            return Ok(()); // an empty chunk would terminate the stream
+        }
+        write!(self.w, "{:x}\r\n", data.len())?;
+        self.w.write_all(data)?;
+        self.w.write_all(b"\r\n")?;
+        self.w.flush()
+    }
+
+    pub fn finish(self) -> io::Result<()> {
+        self.w.write_all(b"0\r\n\r\n")?;
+        self.w.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(text: &str) -> Result<HttpRequest, ParseError> {
+        parse_request(&mut Cursor::new(text.as_bytes()), 1024)
+    }
+
+    #[test]
+    fn happy_path_post() {
+        let req = parse("POST /v1/generate HTTP/1.1\r\nHost: x\r\nContent-Length: 9\r\n\r\n{\"a\": 1}\n")
+            .unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("host"), Some("x"));
+        assert_eq!(req.header("HOST"), Some("x"), "lookup is case-insensitive");
+        assert_eq!(req.body, b"{\"a\": 1}\n");
+    }
+
+    #[test]
+    fn happy_path_get_without_body() {
+        let req = parse("GET /metrics HTTP/1.1\r\nAccept: */*\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/metrics");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn bare_lf_lines_parse_too() {
+        let req = parse("GET /healthz HTTP/1.1\nHost: x\n\n").unwrap();
+        assert_eq!(req.path, "/healthz");
+    }
+
+    #[test]
+    fn malformed_request_line_is_400() {
+        for bad in ["GARBAGE", "GET /x", "GET  HTTP/1.1", "GET noslash HTTP/1.1", "GET /x SPDY/3"] {
+            let e = parse(&format!("{bad}\r\n\r\n")).unwrap_err();
+            assert!(matches!(e, ParseError::BadRequestLine(_)), "{bad}: {e:?}");
+            assert_eq!(status_for(&e).0, 400, "{bad}");
+        }
+    }
+
+    #[test]
+    fn missing_content_length_on_post_is_400() {
+        let e = parse("POST /v1/generate HTTP/1.1\r\nHost: x\r\n\r\n{}").unwrap_err();
+        assert!(matches!(e, ParseError::MissingLength), "{e:?}");
+        assert_eq!(status_for(&e).0, 400);
+        // unparseable length is the same defect
+        let e = parse("POST /v1/generate HTTP/1.1\r\nContent-Length: many\r\n\r\n{}").unwrap_err();
+        assert!(matches!(e, ParseError::MissingLength), "{e:?}");
+    }
+
+    #[test]
+    fn oversized_body_is_413_without_reading_it() {
+        // declared length over the cap rejects BEFORE any body bytes are
+        // consumed — none are even present here
+        let e = parse("POST /v1/generate HTTP/1.1\r\nContent-Length: 4096\r\n\r\n").unwrap_err();
+        assert!(matches!(e, ParseError::BodyTooLarge { declared: 4096, limit: 1024 }), "{e:?}");
+        assert_eq!(status_for(&e).0, 413);
+    }
+
+    #[test]
+    fn header_without_colon_is_400() {
+        let e = parse("GET /metrics HTTP/1.1\r\nBadHeader\r\n\r\n").unwrap_err();
+        assert!(matches!(e, ParseError::BadHeader(_)), "{e:?}");
+    }
+
+    #[test]
+    fn oversized_header_block_is_400() {
+        let mut text = String::from("GET /metrics HTTP/1.1\r\n");
+        for i in 0..200 {
+            text.push_str(&format!("X-Pad-{i}: {}\r\n", "y".repeat(64)));
+        }
+        text.push_str("\r\n");
+        let e = parse(&text).unwrap_err();
+        assert!(matches!(e, ParseError::HeadersTooLarge), "{e:?}");
+    }
+
+    #[test]
+    fn immediate_eof_is_clean_close() {
+        let e = parse("").unwrap_err();
+        assert!(matches!(e, ParseError::Closed), "{e:?}");
+    }
+
+    #[test]
+    fn truncated_body_is_io_error() {
+        let e = parse("POST /x HTTP/1.1\r\nContent-Length: 10\r\n\r\nshort").unwrap_err();
+        assert!(matches!(e, ParseError::Io(_)), "{e:?}");
+    }
+
+    #[test]
+    fn fixed_response_wire_format() {
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "OK", "application/json", &[("Retry-After", "1")], b"{}")
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+    }
+
+    #[test]
+    fn chunked_response_wire_format() {
+        let mut out = Vec::new();
+        {
+            let mut cw = ChunkedWriter::begin(&mut out, 200, "OK", "application/x-ndjson").unwrap();
+            cw.chunk(b"{\"token\":5}\n").unwrap();
+            cw.chunk(b"").unwrap(); // no-op, must NOT terminate the stream
+            cw.chunk(b"{\"done\":true}\n").unwrap();
+            cw.finish().unwrap();
+        }
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Transfer-Encoding: chunked\r\n"), "{text}");
+        assert!(text.contains("c\r\n{\"token\":5}\n\r\n"), "{text}");
+        assert!(text.contains("e\r\n{\"done\":true}\n\r\n"), "{text}");
+        assert!(text.ends_with("0\r\n\r\n"), "{text}");
+    }
+}

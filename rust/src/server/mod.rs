@@ -1,0 +1,609 @@
+//! HTTP serving front end: a std-only threaded TCP server that puts a
+//! socket in front of [`Engine`](crate::serve::Engine).
+//!
+//! The engine is single-threaded by design (one batched forward at a
+//! time is what makes continuous batching fast), so the server maps many
+//! concurrent connections onto it with a three-role thread layout:
+//!
+//! - **one driver thread** owns the model and the engine outright and is
+//!   the only thread that ever calls [`Engine::step`]. It alternates
+//!   between draining a command channel (submit / cancel / snapshot —
+//!   each a message, never a shared lock around the engine) and stepping
+//!   the batch; sampled tokens fan out through `Engine::set_on_token` to
+//!   per-request event channels the moment they exist.
+//! - **one acceptor thread** owns the listener and spawns a short-lived
+//!   worker thread per connection (strictly one request per connection —
+//!   see [`http`]); on shutdown it stops accepting and joins every
+//!   worker before the driver is allowed to exit.
+//! - **worker threads** parse the request, talk to the driver through
+//!   the command channel, and write the response — fixed-length JSON for
+//!   plain generation, chunked transfer encoding fed by the per-request
+//!   event channel for `"stream": true`.
+//!
+//! Robustness is part of the contract, not an afterthought:
+//!
+//! - the pending queue is bounded ([`ServerConfig::max_pending`]):
+//!   a full queue answers `429 Too Many Requests` with `Retry-After`
+//!   and the engine never sees the request — no state to leak;
+//! - a client that disconnects mid-stream triggers
+//!   [`Engine::cancel`](crate::serve::Engine::cancel), so the stream's
+//!   K/V pages reclaim immediately instead of decoding for a ghost;
+//! - malformed requests get typed `400`/`413` responses (see
+//!   [`http::ParseError`]), unknown routes `404`, wrong methods `405`;
+//! - `GET /metrics` renders the engine's [`EngineSnapshot`] (queue
+//!   depth, live streams, live K/V pages, the full [`EngineStats`]
+//!   ledger) plus the server's own HTTP counters as a plain-text
+//!   exposition;
+//! - [`ServerHandle::shutdown`] drains: stop accepting, join workers
+//!   (each holds out for its completion), then let the driver finish
+//!   every queued and live stream before the thread exits.
+//!
+//! Endpoints: `POST /v1/generate`, `GET /metrics`, `GET /healthz`.
+
+pub mod client;
+pub mod http;
+mod routes;
+
+use std::collections::HashMap;
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::rc::Rc;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::model::LanguageModel;
+use crate::serve::{
+    Completion, Deadline, Engine, EngineConfig, EngineSnapshot, Request, RequestId,
+};
+
+/// Server knobs, wrapping the engine's own [`EngineConfig`].
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    /// The engine the driver thread runs (batch size, window, K/V page
+    /// budget, deadlines — all engine-side policy lives there).
+    pub engine: EngineConfig,
+    /// Backpressure bound: maximum requests waiting in the engine queue.
+    /// A submit that would exceed it is refused with `429` +
+    /// `Retry-After` before the engine ever sees it.
+    pub max_pending: usize,
+    /// Request body cap in bytes; a larger declared `Content-Length`
+    /// answers `413` without reading the body.
+    pub max_body_bytes: usize,
+    /// Socket read timeout while parsing a request (a stalled or
+    /// byte-dripping client cannot pin a worker forever).
+    pub read_timeout_ms: u64,
+    /// `max_new_tokens` when the request body doesn't set one.
+    pub default_max_new_tokens: usize,
+    /// Seconds advertised in the `Retry-After` header of a `429`.
+    pub retry_after_s: u32,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            engine: EngineConfig::default(),
+            max_pending: 64,
+            max_body_bytes: 1 << 20,
+            read_timeout_ms: 5_000,
+            default_max_new_tokens: 32,
+            retry_after_s: 1,
+        }
+    }
+}
+
+/// Server-side HTTP counters (the engine's own ledger lives in
+/// [`EngineStats`](crate::serve::EngineStats)); rendered by `/metrics`
+/// next to the engine snapshot. Plain relaxed atomics — they are
+/// monotone counters, not synchronization.
+#[derive(Debug, Default)]
+pub struct Counters {
+    /// Requests that parsed well enough to be routed.
+    pub http_requests: AtomicUsize,
+    /// Submissions refused by the bounded pending queue.
+    pub http_429: AtomicUsize,
+    /// Malformed requests (bad request line / header / JSON / prompt).
+    pub http_400: AtomicUsize,
+    /// Unknown routes (`405`s for known routes are not counted here).
+    pub http_404: AtomicUsize,
+    /// Oversized request bodies.
+    pub http_413: AtomicUsize,
+    /// Streaming responses abandoned by the client mid-stream; each one
+    /// cancelled its engine request.
+    pub stream_disconnects: AtomicUsize,
+}
+
+impl Counters {
+    fn bump(c: &AtomicUsize) {
+        c.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+/// Outcome of a submit command: admitted with an id, or refused by the
+/// bounded queue (the HTTP layer turns `Busy` into `429`).
+pub(crate) enum SubmitReply {
+    Accepted(RequestId),
+    Busy { queued: usize },
+}
+
+/// Per-request event stream, driver → worker. Tokens arrive the moment
+/// the engine samples them; `Done` carries the full typed completion
+/// and is always the final event.
+pub(crate) enum StreamEvent {
+    Token(u32),
+    Done(Completion),
+}
+
+/// Commands workers (and the handle) send the driver thread. The engine
+/// is never shared — every interaction is one of these messages.
+pub(crate) enum Cmd {
+    Submit {
+        req: Request,
+        deadline: Deadline,
+        events: Sender<StreamEvent>,
+        reply: Sender<SubmitReply>,
+    },
+    Cancel(RequestId),
+    Snapshot(Sender<EngineSnapshot>),
+    /// Deterministic-testing hooks (see [`ServerHandle::pause_engine`]):
+    /// a paused driver keeps answering commands (submits queue, metrics
+    /// snapshot, cancels land) but does not step the engine.
+    Pause,
+    Resume,
+}
+
+/// A running server: its bound address plus the shutdown plumbing.
+/// Dropping the handle shuts the server down (drain semantics — see
+/// [`ServerHandle::shutdown`]).
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    cmd_tx: Option<Sender<Cmd>>,
+    acceptor: Option<JoinHandle<()>>,
+    driver: Option<JoinHandle<()>>,
+    counters: Arc<Counters>,
+}
+
+impl ServerHandle {
+    /// The bound address — with port `0` in [`Server::start`], this is
+    /// where the ephemeral port lands.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// The server-side HTTP counters (shared with the workers).
+    pub fn counters(&self) -> &Counters {
+        &self.counters
+    }
+
+    /// Stop stepping the engine while still answering every command:
+    /// submits queue up (and the bounded-queue `429` path fires
+    /// deterministically), `/metrics` keeps serving, cancels land. A
+    /// testing hook — production code has no reason to pause.
+    pub fn pause_engine(&self) {
+        if let Some(tx) = &self.cmd_tx {
+            let _ = tx.send(Cmd::Pause);
+        }
+    }
+
+    /// Undo [`ServerHandle::pause_engine`].
+    pub fn resume_engine(&self) {
+        if let Some(tx) = &self.cmd_tx {
+            let _ = tx.send(Cmd::Resume);
+        }
+    }
+
+    /// Graceful shutdown, in dependency order: stop the acceptor (no
+    /// new connections), join every in-flight worker (each holds out
+    /// for its response — live streams drain, they are not cut), then
+    /// drop the command channel so the driver finishes whatever work
+    /// remains and exits. Idempotent; also runs on drop.
+    pub fn shutdown(mut self) {
+        self.shutdown_impl();
+    }
+
+    fn shutdown_impl(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(h) = self.acceptor.take() {
+            let _ = h.join();
+        }
+        // all workers are joined; dropping the last external sender lets
+        // the driver drain and exit
+        self.cmd_tx.take();
+        if let Some(h) = self.driver.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.shutdown_impl();
+    }
+}
+
+/// The server constructor namespace (the running state lives in
+/// [`ServerHandle`] and the three thread roles).
+pub struct Server;
+
+impl Server {
+    /// Bind `addr` (use port `0` for an ephemeral port), move `model`
+    /// into the driver thread, and start serving. The model is owned by
+    /// the driver outright — [`Engine`] borrows it there, and no other
+    /// thread ever touches it.
+    pub fn start<M: LanguageModel + 'static>(
+        model: M,
+        addr: &str,
+        cfg: ServerConfig,
+    ) -> io::Result<ServerHandle> {
+        assert!(cfg.max_body_bytes >= 1, "max_body_bytes must admit a body");
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let counters = Arc::new(Counters::default());
+        let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<Cmd>();
+        let vocab = model.vocab();
+
+        let driver = {
+            let max_pending = cfg.max_pending;
+            std::thread::Builder::new()
+                .name("apt-http-driver".into())
+                .spawn(move || drive(model, cfg.engine, max_pending, cmd_rx))?
+        };
+
+        let acceptor = {
+            let ctx = routes::Ctx {
+                cmd: cmd_tx.clone(),
+                counters: counters.clone(),
+                vocab,
+                max_body: cfg.max_body_bytes,
+                default_max_new: cfg.default_max_new_tokens,
+                retry_after_s: cfg.retry_after_s,
+            };
+            let stop = stop.clone();
+            let read_timeout = Duration::from_millis(cfg.read_timeout_ms.max(1));
+            std::thread::Builder::new()
+                .name("apt-http-acceptor".into())
+                .spawn(move || accept_loop(listener, ctx, stop, read_timeout))?
+        };
+
+        Ok(ServerHandle {
+            addr: local,
+            stop,
+            cmd_tx: Some(cmd_tx),
+            acceptor: Some(acceptor),
+            driver: Some(driver),
+            counters,
+        })
+    }
+}
+
+/// The acceptor role: accept until told to stop, one worker thread per
+/// connection, every worker joined before this thread exits (that join
+/// is what makes [`ServerHandle::shutdown`] a drain — a live stream's
+/// worker holds out for its final chunk).
+fn accept_loop(
+    listener: TcpListener,
+    ctx: routes::Ctx,
+    stop: Arc<AtomicBool>,
+    read_timeout: Duration,
+) {
+    let mut workers: Vec<JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                // the listener is non-blocking (that's how stop is
+                // polled); accepted sockets must not inherit that
+                let _ = stream.set_nonblocking(false);
+                let _ = stream.set_read_timeout(Some(read_timeout));
+                let _ = stream.set_nodelay(true);
+                let ctx = ctx.clone();
+                if let Ok(h) = std::thread::Builder::new()
+                    .name("apt-http-worker".into())
+                    .spawn(move || routes::handle_connection(stream, &ctx))
+                {
+                    workers.push(h);
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+        // reap finished workers so a long-lived server doesn't
+        // accumulate handles (join on a finished thread is immediate)
+        if workers.len() >= 32 {
+            workers = workers
+                .into_iter()
+                .filter_map(|h| {
+                    if h.is_finished() {
+                        let _ = h.join();
+                        None
+                    } else {
+                        Some(h)
+                    }
+                })
+                .collect();
+        }
+    }
+    for h in workers {
+        let _ = h.join();
+    }
+}
+
+/// The driver role: sole owner of the model and the engine. Alternates
+/// command intake with [`Engine::step`]; exits once every command
+/// sender is gone AND the engine holds no work (the drain half of
+/// shutdown). Blocks on the channel when idle, so an idle server burns
+/// no CPU stepping an empty engine.
+fn drive<M: LanguageModel>(
+    model: M,
+    engine_cfg: EngineConfig,
+    max_pending: usize,
+    rx: Receiver<Cmd>,
+) {
+    // token fan-out: on_token runs inside Engine::step on this thread;
+    // the map is shared with the command handler below, never crossing
+    // threads (Rc, not Arc — the channels do the crossing)
+    let subs: Rc<std::cell::RefCell<HashMap<RequestId, Sender<StreamEvent>>>> = Rc::default();
+    let mut engine = Engine::new(&model, engine_cfg);
+    {
+        let subs = subs.clone();
+        engine.set_on_token(move |id, tok| {
+            if let Some(tx) = subs.borrow().get(&id) {
+                // a dead receiver (worker gone mid-stream) is fine: the
+                // worker's Cancel command is already in flight
+                let _ = tx.send(StreamEvent::Token(tok));
+            }
+        });
+    }
+    let mut paused = false;
+    let mut disconnected = false;
+    loop {
+        // intake: block briefly when there is nothing to step, drain
+        // opportunistically when there is
+        if paused || !engine.has_work() {
+            match rx.recv_timeout(Duration::from_millis(20)) {
+                Ok(cmd) => handle_cmd(cmd, &mut engine, &subs, &mut paused, max_pending),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => disconnected = true,
+            }
+        }
+        while let Ok(cmd) = rx.try_recv() {
+            handle_cmd(cmd, &mut engine, &subs, &mut paused, max_pending);
+        }
+        if disconnected {
+            // shutdown drains: nothing can pause or submit anymore,
+            // finish what's in flight and leave
+            paused = false;
+            if !engine.has_work() {
+                break;
+            }
+        }
+        if !paused && engine.has_work() {
+            engine.step();
+        }
+        // deliver completions (cancel-driven ones included — cancel
+        // pushes to the finished list outside step)
+        for c in engine.take_finished() {
+            if let Some(tx) = subs.borrow_mut().remove(&c.id) {
+                let _ = tx.send(StreamEvent::Done(c));
+            }
+        }
+    }
+}
+
+fn handle_cmd(
+    cmd: Cmd,
+    engine: &mut Engine<'_>,
+    subs: &Rc<std::cell::RefCell<HashMap<RequestId, Sender<StreamEvent>>>>,
+    paused: &mut bool,
+    max_pending: usize,
+) {
+    match cmd {
+        Cmd::Submit { req, deadline, events, reply } => {
+            let queued = engine.queued();
+            if queued >= max_pending {
+                // refused before the engine sees it: nothing to leak
+                let _ = reply.send(SubmitReply::Busy { queued });
+                return;
+            }
+            let id = engine.submit_with_deadline(req, deadline);
+            subs.borrow_mut().insert(id, events);
+            let _ = reply.send(SubmitReply::Accepted(id));
+        }
+        Cmd::Cancel(id) => {
+            // unknown/finished ids are fine — the completion may have
+            // raced ahead of the cancel
+            engine.cancel(id);
+        }
+        Cmd::Snapshot(reply) => {
+            let _ = reply.send(engine.snapshot());
+        }
+        Cmd::Pause => *paused = true,
+        Cmd::Resume => *paused = false,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{Transformer, TransformerConfig};
+    use crate::serve::SamplingParams;
+    use crate::util::Rng;
+
+    fn tiny_model(seed: u64) -> Transformer {
+        Transformer::init(
+            TransformerConfig {
+                vocab: 37,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 24,
+                max_seq: 128,
+            },
+            &mut Rng::new(seed),
+        )
+    }
+
+    fn start_tiny(cfg: ServerConfig) -> ServerHandle {
+        Server::start(tiny_model(5), "127.0.0.1:0", cfg).expect("bind loopback")
+    }
+
+    fn prompt_json(len: usize) -> String {
+        let toks: Vec<String> = (0..len).map(|i| ((i * 5 + 3) % 37).to_string()).collect();
+        format!("[{}]", toks.join(","))
+    }
+
+    #[test]
+    fn healthz_and_unknown_routes() {
+        let h = start_tiny(ServerConfig::default());
+        let r = client::request(h.addr(), "GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.body, b"ok\n");
+        let r = client::request(h.addr(), "GET", "/nope", None).unwrap();
+        assert_eq!(r.status, 404);
+        // known route, wrong method
+        let r = client::request(h.addr(), "GET", "/v1/generate", None).unwrap();
+        assert_eq!(r.status, 405);
+        let r = client::request(h.addr(), "POST", "/metrics", Some("{}")).unwrap();
+        assert_eq!(r.status, 405);
+        assert_eq!(h.counters().http_404.load(Ordering::Relaxed), 1);
+        h.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_get_typed_errors() {
+        let mut cfg = ServerConfig::default();
+        cfg.max_body_bytes = 256;
+        let h = start_tiny(cfg);
+        // broken JSON
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some("{nope")).unwrap();
+        assert_eq!(r.status, 400);
+        // missing prompt
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some("{}")).unwrap();
+        assert_eq!(r.status, 400);
+        // empty prompt
+        let r =
+            client::request(h.addr(), "POST", "/v1/generate", Some(r#"{"prompt": []}"#)).unwrap();
+        assert_eq!(r.status, 400);
+        // out-of-vocab token (vocab is 37)
+        let r =
+            client::request(h.addr(), "POST", "/v1/generate", Some(r#"{"prompt": [99]}"#)).unwrap();
+        assert_eq!(r.status, 400);
+        assert!(String::from_utf8_lossy(&r.body).contains("vocab"), "names the defect");
+        // non-integer token
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(r#"{"prompt": [1.5]}"#))
+            .unwrap();
+        assert_eq!(r.status, 400);
+        // oversized body -> 413 (body is never read)
+        let big = format!(r#"{{"prompt": [{}]}}"#, "1,".repeat(400) + "1");
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(&big)).unwrap();
+        assert_eq!(r.status, 413);
+        // raw malformed request line -> 400
+        let status = client::raw_roundtrip_status(h.addr(), "GARBAGE\r\n\r\n").unwrap();
+        assert_eq!(status, 400);
+        assert!(h.counters().http_400.load(Ordering::Relaxed) >= 6);
+        assert_eq!(h.counters().http_413.load(Ordering::Relaxed), 1);
+        h.shutdown();
+    }
+
+    #[test]
+    fn generate_plain_and_streamed_agree_with_engine() {
+        let h = start_tiny(ServerConfig::default());
+        let body = format!(
+            r#"{{"prompt": {}, "max_new_tokens": 6, "seed": 3}}"#,
+            prompt_json(5)
+        );
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+        let v = crate::json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("length"));
+        let plain: Vec<u32> = v
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as u32)
+            .collect();
+        assert_eq!(plain.len(), 6);
+
+        // library path: the same greedy request straight into an Engine
+        // over an identically seeded model
+        let model = tiny_model(5);
+        let mut eng = Engine::new(&model, EngineConfig::default());
+        let p: Vec<u32> = (0..5).map(|i| ((i * 5 + 3) % 37) as u32).collect();
+        eng.submit(Request { prompt: p, max_new_tokens: 6, sampling: SamplingParams::greedy() });
+        eng.run();
+        let expect = eng.take_finished().pop().unwrap().tokens;
+        assert_eq!(plain, expect, "HTTP path must match the library path");
+
+        // streamed: same tokens, one per chunk, then the terminal chunk
+        let sbody = format!(
+            r#"{{"prompt": {}, "max_new_tokens": 6, "stream": true}}"#,
+            prompt_json(5)
+        );
+        let (status, chunks) = client::stream_request(h.addr(), "/v1/generate", &sbody).unwrap();
+        assert_eq!(status, 200);
+        let (toks, done) = client::split_stream(&chunks);
+        assert_eq!(toks, expect, "streamed tokens must match too");
+        let done = done.expect("terminal chunk present");
+        assert_eq!(done.get("finish").unwrap().as_str(), Some("length"));
+        assert_eq!(done.get("tokens_generated").unwrap().as_usize(), Some(6));
+        h.shutdown();
+    }
+
+    #[test]
+    fn metrics_reflect_the_ledger_and_drain_to_zero_pages() {
+        let h = start_tiny(ServerConfig::default());
+        let body =
+            format!(r#"{{"prompt": {}, "max_new_tokens": 4}}"#, prompt_json(6));
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+        let m = client::request(h.addr(), "GET", "/metrics", None).unwrap();
+        assert_eq!(m.status, 200);
+        let text = String::from_utf8(m.body).unwrap();
+        let get = |k: &str| client::metric(&text, k).unwrap_or_else(|| panic!("missing {k}"));
+        assert_eq!(get("apt_engine_completions_total"), 1);
+        assert_eq!(get("apt_engine_completions_length_total"), 1);
+        assert_eq!(get("apt_engine_tokens_generated_total"), 4);
+        assert_eq!(get("apt_engine_kv_pages_live"), 0, "drained engine holds no pages");
+        assert_eq!(get("apt_engine_queue_depth"), 0);
+        assert_eq!(get("apt_engine_streams_active"), 0);
+        assert!(get("apt_http_requests_total") >= 1);
+        h.shutdown();
+    }
+
+    #[test]
+    fn deadline_fields_map_to_engine_deadlines() {
+        let h = start_tiny(ServerConfig::default());
+        // 2 decode steps against a 30-token ask: finishes by deadline
+        // with exactly the 2-step prefix
+        let body = format!(
+            r#"{{"prompt": {}, "max_new_tokens": 30, "deadline_steps": 2}}"#,
+            prompt_json(5)
+        );
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+        let v = crate::json::parse(std::str::from_utf8(&r.body).unwrap()).unwrap();
+        assert_eq!(v.get("finish").unwrap().as_str(), Some("deadline"));
+        assert_eq!(v.get("tokens").unwrap().as_arr().unwrap().len(), 2);
+        h.shutdown();
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_drains() {
+        let h = start_tiny(ServerConfig::default());
+        let addr = h.addr();
+        let body = format!(r#"{{"prompt": {}, "max_new_tokens": 3}}"#, prompt_json(4));
+        let r = client::request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+        h.shutdown();
+        // the listener is gone after shutdown
+        assert!(client::request(addr, "GET", "/healthz", None).is_err());
+    }
+}

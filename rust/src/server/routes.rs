@@ -1,0 +1,544 @@
+//! Route layer: maps parsed HTTP requests onto engine commands.
+//!
+//! Three endpoints:
+//! - `POST /v1/generate` — JSON body → [`Request`] (+ optional
+//!   [`Deadline`]); plain mode answers one JSON object when the typed
+//!   [`Completion`] arrives, `"stream": true` answers chunked
+//!   transfer encoding with one NDJSON line per token and a terminal
+//!   line carrying the [`FinishReason`];
+//! - `GET /metrics` — plain-text exposition of the engine's
+//!   [`EngineSnapshot`] and the server's HTTP [`Counters`];
+//! - `GET /healthz` — liveness.
+//!
+//! Every worker runs [`handle_connection`] once: parse, route, answer,
+//! close. A streaming client that disconnects mid-response triggers
+//! `Cmd::Cancel`, so the engine reclaims the stream's K/V pages
+//! immediately instead of generating for a ghost.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::Sender;
+use std::sync::Arc;
+
+use super::http::{self, ChunkedWriter, HttpRequest, ParseError};
+use super::{Cmd, Counters, StreamEvent, SubmitReply};
+use crate::json::{self, Json};
+use crate::serve::{
+    Completion, Deadline, EngineSnapshot, ErrorKind, FinishReason, Request, RequestId,
+    SamplingParams,
+};
+
+/// Everything a worker thread needs: the driver's command channel, the
+/// shared counters, and the request-validation knobs captured at
+/// startup.
+#[derive(Clone)]
+pub(crate) struct Ctx {
+    pub cmd: Sender<Cmd>,
+    pub counters: Arc<Counters>,
+    pub vocab: usize,
+    pub max_body: usize,
+    pub default_max_new: usize,
+    pub retry_after_s: u32,
+}
+
+/// One connection, one request, one response.
+pub(crate) fn handle_connection(stream: TcpStream, ctx: &Ctx) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut stream = stream;
+    let req = match http::parse_request(&mut reader, ctx.max_body) {
+        Ok(r) => r,
+        Err(ParseError::Closed) => return,
+        Err(e) => {
+            let (status, reason, msg) = http::status_for(&e);
+            match status {
+                413 => Counters::bump(&ctx.counters.http_413),
+                _ => Counters::bump(&ctx.counters.http_400),
+            }
+            let _ = http::write_response(
+                &mut stream,
+                status,
+                reason,
+                "text/plain",
+                &[],
+                format!("{msg}\n").as_bytes(),
+            );
+            return;
+        }
+    };
+    Counters::bump(&ctx.counters.http_requests);
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => {
+            let _ = http::write_response(&mut stream, 200, "OK", "text/plain", &[], b"ok\n");
+        }
+        ("GET", "/metrics") => metrics(&mut stream, ctx),
+        ("POST", "/v1/generate") => generate(&mut stream, ctx, &req),
+        // known routes, wrong method: say so instead of a blanket 404
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/generate") => {
+            let _ = http::write_response(
+                &mut stream,
+                405,
+                "Method Not Allowed",
+                "text/plain",
+                &[],
+                b"method not allowed\n",
+            );
+        }
+        _ => {
+            Counters::bump(&ctx.counters.http_404);
+            let _ = http::write_response(
+                &mut stream,
+                404,
+                "Not Found",
+                "text/plain",
+                &[],
+                b"unknown route\n",
+            );
+        }
+    }
+}
+
+// ------------------------------------------------------------------ metrics
+
+/// `/metrics`: ask the driver for one consistent [`EngineSnapshot`] and
+/// render it with the HTTP counters as `name value` lines (the
+/// Prometheus text idiom, minus types — every value is a gauge or a
+/// monotone counter, the `_total` suffix says which).
+fn metrics(stream: &mut TcpStream, ctx: &Ctx) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    if ctx.cmd.send(Cmd::Snapshot(tx)).is_err() {
+        let _ = http::write_response(
+            stream,
+            503,
+            "Service Unavailable",
+            "text/plain",
+            &[],
+            b"engine is shut down\n",
+        );
+        return;
+    }
+    let Ok(snap) = rx.recv() else {
+        let _ = http::write_response(
+            stream,
+            503,
+            "Service Unavailable",
+            "text/plain",
+            &[],
+            b"engine is shut down\n",
+        );
+        return;
+    };
+    let text = render_metrics(&snap, &ctx.counters);
+    let _ = http::write_response(stream, 200, "OK", "text/plain", &[], text.as_bytes());
+}
+
+pub(crate) fn render_metrics(s: &EngineSnapshot, c: &Counters) -> String {
+    let st = &s.stats;
+    let mut out = String::with_capacity(1024);
+    let mut line = |k: &str, v: usize| {
+        out.push_str(k);
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    };
+    line("apt_up", 1);
+    // engine: gauges first, then the cumulative ledger
+    line("apt_engine_queue_depth", s.queued);
+    line("apt_engine_streams_active", s.active);
+    line("apt_engine_kv_pages_live", s.kv_pages_live);
+    line("apt_engine_kv_pages_peak", st.kv_pages_peak);
+    line("apt_engine_completions_total", st.completed);
+    line("apt_engine_completions_length_total", st.finished_length());
+    line("apt_engine_completions_deadline_total", st.deadline_expired);
+    line("apt_engine_completions_cancelled_total", st.cancelled);
+    line("apt_engine_completions_error_total", st.quarantined);
+    line("apt_engine_preemptions_total", st.preemptions);
+    line("apt_engine_draft_fallbacks_total", st.draft_fallbacks);
+    line("apt_engine_tokens_generated_total", st.tokens_generated);
+    // server-side HTTP ledger
+    let rel = |a: &std::sync::atomic::AtomicUsize| a.load(Ordering::Relaxed);
+    line("apt_http_requests_total", rel(&c.http_requests));
+    line("apt_http_responses_429_total", rel(&c.http_429));
+    line("apt_http_responses_400_total", rel(&c.http_400));
+    line("apt_http_responses_404_total", rel(&c.http_404));
+    line("apt_http_responses_413_total", rel(&c.http_413));
+    line("apt_http_stream_disconnects_total", rel(&c.stream_disconnects));
+    out
+}
+
+// ----------------------------------------------------------------- generate
+
+/// The decoded body of a `POST /v1/generate`.
+struct GenSpec {
+    req: Request,
+    deadline: Deadline,
+    stream: bool,
+}
+
+fn generate(stream: &mut TcpStream, ctx: &Ctx, req: &HttpRequest) {
+    let spec = match parse_generate(&req.body, ctx) {
+        Ok(s) => s,
+        Err(msg) => {
+            Counters::bump(&ctx.counters.http_400);
+            let mut o = Json::obj();
+            o.set("error", Json::Str(msg));
+            let _ = http::write_response(
+                stream,
+                400,
+                "Bad Request",
+                "application/json",
+                &[],
+                format!("{}\n", o.to_string()).as_bytes(),
+            );
+            return;
+        }
+    };
+    let (ev_tx, ev_rx) = std::sync::mpsc::channel::<StreamEvent>();
+    let (rp_tx, rp_rx) = std::sync::mpsc::channel::<SubmitReply>();
+    let submitted = ctx
+        .cmd
+        .send(Cmd::Submit { req: spec.req, deadline: spec.deadline, events: ev_tx, reply: rp_tx })
+        .is_ok();
+    let reply = if submitted { rp_rx.recv().ok() } else { None };
+    let id = match reply {
+        None => {
+            let _ = http::write_response(
+                stream,
+                503,
+                "Service Unavailable",
+                "text/plain",
+                &[],
+                b"engine is shut down\n",
+            );
+            return;
+        }
+        Some(SubmitReply::Busy { queued }) => {
+            Counters::bump(&ctx.counters.http_429);
+            let retry = ctx.retry_after_s.to_string();
+            let mut o = Json::obj();
+            o.set("error", Json::Str(format!("pending queue is full ({queued} waiting)")));
+            let _ = http::write_response(
+                stream,
+                429,
+                "Too Many Requests",
+                "application/json",
+                &[("Retry-After", retry.as_str())],
+                format!("{}\n", o.to_string()).as_bytes(),
+            );
+            return;
+        }
+        Some(SubmitReply::Accepted(id)) => id,
+    };
+    if spec.stream {
+        stream_completion(stream, ctx, id, &ev_rx);
+    } else {
+        wait_completion(stream, &ev_rx);
+    }
+}
+
+/// Plain mode: ignore token events, answer when `Done` arrives.
+fn wait_completion(stream: &mut TcpStream, ev_rx: &std::sync::mpsc::Receiver<StreamEvent>) {
+    loop {
+        match ev_rx.recv() {
+            Ok(StreamEvent::Token(_)) => {}
+            Ok(StreamEvent::Done(c)) => {
+                let body = format!("{}\n", completion_json(&c).to_string());
+                let _ = http::write_response(
+                    stream,
+                    200,
+                    "OK",
+                    "application/json",
+                    &[],
+                    body.as_bytes(),
+                );
+                return;
+            }
+            Err(_) => {
+                // driver gone mid-request (shutdown drains normally make
+                // this unreachable; a panicked driver does not)
+                let _ = http::write_response(
+                    stream,
+                    503,
+                    "Service Unavailable",
+                    "text/plain",
+                    &[],
+                    b"engine is shut down\n",
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// Streaming mode: one NDJSON chunk per token as it is sampled, then a
+/// terminal chunk with the typed finish reason. A failed chunk write
+/// means the client is gone: cancel the engine request (its K/V pages
+/// reclaim immediately), drain the event channel to its `Done`, and
+/// give up on the socket.
+fn stream_completion(
+    stream: &mut TcpStream,
+    ctx: &Ctx,
+    id: RequestId,
+    ev_rx: &std::sync::mpsc::Receiver<StreamEvent>,
+) {
+    let Ok(mut cw) = ChunkedWriter::begin(stream, 200, "OK", "application/x-ndjson") else {
+        cancel_and_drain(ctx, id, ev_rx);
+        return;
+    };
+    loop {
+        match ev_rx.recv() {
+            Ok(StreamEvent::Token(t)) => {
+                let mut o = Json::obj();
+                o.set("token", Json::Num(t as f64));
+                if cw.chunk(format!("{}\n", o.to_string()).as_bytes()).is_err() {
+                    Counters::bump(&ctx.counters.stream_disconnects);
+                    cancel_and_drain(ctx, id, ev_rx);
+                    return;
+                }
+            }
+            Ok(StreamEvent::Done(c)) => {
+                let mut o = Json::obj();
+                o.set("done", Json::Bool(true))
+                    .set("id", Json::Num(c.id.0 as f64))
+                    .set("finish", Json::Str(finish_str(c.finish).to_string()))
+                    .set("tokens_generated", Json::Num(c.tokens.len() as f64));
+                let _ = cw.chunk(format!("{}\n", o.to_string()).as_bytes());
+                let _ = cw.finish();
+                return;
+            }
+            Err(_) => return, // driver gone; nothing more will arrive
+        }
+    }
+}
+
+/// Disconnect path: ask the driver to cancel, then drain events until
+/// the (possibly already in-flight) `Done` arrives so the driver never
+/// blocks on a full channel. The completion itself is discarded — its
+/// client left.
+fn cancel_and_drain(ctx: &Ctx, id: RequestId, ev_rx: &std::sync::mpsc::Receiver<StreamEvent>) {
+    let _ = ctx.cmd.send(Cmd::Cancel(id));
+    loop {
+        match ev_rx.recv() {
+            Ok(StreamEvent::Done(_)) | Err(_) => return,
+            Ok(StreamEvent::Token(_)) => {}
+        }
+    }
+}
+
+// ------------------------------------------------------------------- bodies
+
+pub(crate) fn finish_str(f: FinishReason) -> &'static str {
+    match f {
+        FinishReason::Length => "length",
+        FinishReason::Deadline => "deadline",
+        FinishReason::Cancelled => "cancelled",
+        FinishReason::Error(ErrorKind::NonFiniteLogits) => "error:non_finite_logits",
+    }
+}
+
+pub(crate) fn completion_json(c: &Completion) -> Json {
+    let mut o = Json::obj();
+    o.set("id", Json::Num(c.id.0 as f64))
+        .set("finish", Json::Str(finish_str(c.finish).to_string()))
+        .set("prompt_tokens", Json::Num(c.prompt.len() as f64))
+        .set(
+            "tokens",
+            Json::Arr(c.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        );
+    o
+}
+
+/// Decode + validate a generate body. Every defect answers with a
+/// message naming it — a serving API that just says "400" wastes its
+/// callers' time.
+fn parse_generate(body: &[u8], ctx: &Ctx) -> Result<GenSpec, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
+    let v = json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let usize_field = |name: &str| -> Result<Option<usize>, String> {
+        match v.get(name) {
+            None | Some(Json::Null) => Ok(None),
+            Some(j) => {
+                let n = j.as_f64().ok_or_else(|| format!("{name} must be a number"))?;
+                if n.fract() != 0.0 || n < 0.0 {
+                    return Err(format!("{name} must be a non-negative integer"));
+                }
+                Ok(Some(n as usize))
+            }
+        }
+    };
+    let prompt_json = v.get("prompt").ok_or_else(|| "missing field: prompt".to_string())?;
+    let arr = prompt_json.as_arr().ok_or_else(|| "prompt must be an array".to_string())?;
+    if arr.is_empty() {
+        return Err("prompt must be non-empty".to_string());
+    }
+    let mut prompt = Vec::with_capacity(arr.len());
+    for (i, t) in arr.iter().enumerate() {
+        let n = t.as_f64().ok_or_else(|| format!("prompt[{i}] is not a number"))?;
+        if n.fract() != 0.0 || n < 0.0 || (n as usize) >= ctx.vocab {
+            return Err(format!(
+                "prompt[{i}] = {n} is not a token id in vocab range 0..{}",
+                ctx.vocab
+            ));
+        }
+        prompt.push(n as u32);
+    }
+    let max_new = usize_field("max_new_tokens")?.unwrap_or(ctx.default_max_new);
+    let temperature = match v.get("temperature") {
+        None | Some(Json::Null) => 0.0f32,
+        Some(j) => j.as_f64().ok_or_else(|| "temperature must be a number".to_string())? as f32,
+    };
+    let top_k = match usize_field("top_k")? {
+        Some(0) => return Err("top_k must be at least 1".to_string()),
+        k => k,
+    };
+    let seed = usize_field("seed")?.unwrap_or(0) as u64;
+    let stream = match v.get("stream") {
+        None | Some(Json::Null) => false,
+        Some(j) => j.as_bool().ok_or_else(|| "stream must be a boolean".to_string())?,
+    };
+    let deadline = Deadline {
+        max_steps: usize_field("deadline_steps")?,
+        max_wait_rounds: usize_field("deadline_wait_rounds")?,
+    };
+    let sampling = SamplingParams { temperature, top_k, seed };
+    Ok(GenSpec { req: Request { prompt, max_new_tokens: max_new, sampling }, deadline, stream })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::EngineStats;
+
+    fn ctx_for_parse(vocab: usize) -> Ctx {
+        let (cmd, _rx) = std::sync::mpsc::channel();
+        Ctx {
+            cmd,
+            counters: Arc::new(Counters::default()),
+            vocab,
+            max_body: 1 << 20,
+            default_max_new: 32,
+            retry_after_s: 1,
+        }
+    }
+
+    #[test]
+    fn parse_generate_full_body() {
+        let ctx = ctx_for_parse(50);
+        let spec = parse_generate(
+            br#"{"prompt": [1, 2, 3], "max_new_tokens": 9, "temperature": 0.8,
+                "top_k": 4, "seed": 11, "stream": true, "deadline_steps": 6,
+                "deadline_wait_rounds": 2}"#,
+            &ctx,
+        )
+        .unwrap();
+        assert_eq!(spec.req.prompt, vec![1, 2, 3]);
+        assert_eq!(spec.req.max_new_tokens, 9);
+        assert!((spec.req.sampling.temperature - 0.8).abs() < 1e-6);
+        assert_eq!(spec.req.sampling.top_k, Some(4));
+        assert_eq!(spec.req.sampling.seed, 11);
+        assert!(spec.stream);
+        assert_eq!(spec.deadline.max_steps, Some(6));
+        assert_eq!(spec.deadline.max_wait_rounds, Some(2));
+    }
+
+    #[test]
+    fn parse_generate_defaults() {
+        let ctx = ctx_for_parse(50);
+        let spec = parse_generate(br#"{"prompt": [0]}"#, &ctx).unwrap();
+        assert_eq!(spec.req.max_new_tokens, 32);
+        assert_eq!(spec.req.sampling, SamplingParams::greedy());
+        assert!(!spec.stream);
+        assert_eq!(spec.deadline, Deadline::none());
+    }
+
+    #[test]
+    fn parse_generate_rejects_each_defect_with_its_name() {
+        let ctx = ctx_for_parse(10);
+        for (body, needle) in [
+            (&br#"{}"#[..], "prompt"),
+            (&br#"{"prompt": 5}"#[..], "array"),
+            (&br#"{"prompt": []}"#[..], "non-empty"),
+            (&br#"{"prompt": [10]}"#[..], "vocab"),
+            (&br#"{"prompt": [-1]}"#[..], "vocab"),
+            (&br#"{"prompt": [1.5]}"#[..], "vocab"),
+            (&br#"{"prompt": [1], "max_new_tokens": -2}"#[..], "max_new_tokens"),
+            (&br#"{"prompt": [1], "top_k": 0}"#[..], "top_k"),
+            (&br#"{"prompt": [1], "stream": "yes"}"#[..], "stream"),
+            (&br#"{"prompt": [1], "deadline_steps": 1.5}"#[..], "deadline_steps"),
+        ] {
+            let err = parse_generate(body, &ctx).unwrap_err();
+            assert!(
+                err.contains(needle),
+                "{}: error {err:?} should mention {needle:?}",
+                String::from_utf8_lossy(body)
+            );
+        }
+    }
+
+    #[test]
+    fn finish_strings_are_stable() {
+        assert_eq!(finish_str(FinishReason::Length), "length");
+        assert_eq!(finish_str(FinishReason::Deadline), "deadline");
+        assert_eq!(finish_str(FinishReason::Cancelled), "cancelled");
+        assert_eq!(
+            finish_str(FinishReason::Error(ErrorKind::NonFiniteLogits)),
+            "error:non_finite_logits"
+        );
+    }
+
+    #[test]
+    fn metrics_render_by_reason_sums_to_total() {
+        let snap = EngineSnapshot {
+            queued: 2,
+            active: 3,
+            kv_pages_live: 7,
+            stats: EngineStats {
+                completed: 10,
+                deadline_expired: 2,
+                cancelled: 1,
+                quarantined: 1,
+                preemptions: 4,
+                tokens_generated: 123,
+                kv_pages_peak: 9,
+                draft_fallbacks: 0,
+            },
+        };
+        let c = Counters::default();
+        c.http_429.store(5, Ordering::Relaxed);
+        let text = render_metrics(&snap, &c);
+        for expect in [
+            "apt_engine_queue_depth 2",
+            "apt_engine_streams_active 3",
+            "apt_engine_kv_pages_live 7",
+            "apt_engine_completions_total 10",
+            "apt_engine_completions_length_total 6",
+            "apt_engine_completions_deadline_total 2",
+            "apt_engine_completions_cancelled_total 1",
+            "apt_engine_completions_error_total 1",
+            "apt_engine_tokens_generated_total 123",
+            "apt_http_responses_429_total 5",
+        ] {
+            assert!(text.contains(&format!("{expect}\n")), "missing {expect:?} in:\n{text}");
+        }
+    }
+
+    #[test]
+    fn completion_json_shape() {
+        let c = Completion {
+            id: RequestId(4),
+            prompt: vec![1, 2],
+            tokens: vec![7, 8, 9],
+            last_logits: vec![0.0; 3],
+            finish: FinishReason::Length,
+        };
+        let j = completion_json(&c);
+        assert_eq!(j.get("id").unwrap().as_usize(), Some(4));
+        assert_eq!(j.get("finish").unwrap().as_str(), Some("length"));
+        assert_eq!(j.get("prompt_tokens").unwrap().as_usize(), Some(2));
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        // last_logits deliberately omitted: a serving API should not ship
+        // a vocab-sized float array per response
+        assert!(j.get("last_logits").is_none());
+    }
+}

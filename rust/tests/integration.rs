@@ -1267,3 +1267,199 @@ fn resilience_page_budget_completes_over_budget_workload() {
         }
     }
 }
+
+// ---------------------------------------------------------------- HTTP front end
+
+/// Poll `/metrics` until `pred` holds over the exposition text, up to
+/// ~10s; panics with the last exposition on timeout so a failed wait
+/// shows the actual ledger.
+fn await_metrics(
+    addr: std::net::SocketAddr,
+    what: &str,
+    pred: impl Fn(&str) -> bool,
+) -> String {
+    use apt::server::client;
+    let mut last = String::new();
+    for _ in 0..500 {
+        if let Ok(m) = client::request(addr, "GET", "/metrics", None) {
+            last = String::from_utf8_lossy(&m.body).into_owned();
+            if pred(&last) {
+                return last;
+            }
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    panic!("timed out waiting for {what}; last /metrics:\n{last}");
+}
+
+#[test]
+fn http_streamed_tokens_match_library_engine() {
+    use apt::serve::{Engine, EngineConfig, Request, SamplingParams};
+    use apt::server::{client, Server, ServerConfig};
+
+    // a trained model so the distribution is peaked (greedy and seeded
+    // sampling both have something real to disagree about)
+    let gen = CorpusGen::new(60, 2, 31);
+    let model = trained_model(&gen, 32, 2, 60);
+    let vocab = gen.tokenizer.vocab_size();
+    let prompt: Vec<u32> = (0..6).map(|i| ((i * 7 + 1) % vocab) as u32).collect();
+    let sampled = SamplingParams { temperature: 0.7, top_k: Some(5), seed: 11 };
+
+    // library path first (the server takes the model by value)
+    let mut eng = Engine::new(&model, EngineConfig::default());
+    eng.submit(Request::greedy(prompt.clone(), 8));
+    eng.submit(Request { prompt: prompt.clone(), max_new_tokens: 8, sampling: sampled });
+    eng.run();
+    let mut done = eng.take_finished();
+    done.sort_by_key(|c| c.id);
+    let (expect_greedy, expect_sampled) = (done[0].tokens.clone(), done[1].tokens.clone());
+
+    let h = Server::start(model, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let plist: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let pjson = format!("[{}]", plist.join(","));
+
+    // plain greedy over HTTP == greedy through the library Engine
+    let body = format!(r#"{{"prompt": {pjson}, "max_new_tokens": 8}}"#);
+    let r = client::request(h.addr(), "POST", "/v1/generate", Some(&body)).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    let v = r.json().unwrap();
+    assert_eq!(v.get("finish").unwrap().as_str(), Some("length"));
+    let got: Vec<u32> = v
+        .get("tokens")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as u32)
+        .collect();
+    assert_eq!(got, expect_greedy, "HTTP plain response != library engine");
+
+    // streamed seeded sampling over HTTP == the library run, byte for
+    // byte (seed and top_k thread through the JSON body intact)
+    let body = format!(
+        r#"{{"prompt": {pjson}, "max_new_tokens": 8, "temperature": 0.7, "top_k": 5, "seed": 11, "stream": true}}"#
+    );
+    let (status, chunks) = client::stream_request(h.addr(), "/v1/generate", &body).unwrap();
+    assert_eq!(status, 200);
+    let (toks, terminal) = client::split_stream(&chunks);
+    assert_eq!(toks, expect_sampled, "HTTP stream != library engine");
+    let terminal = terminal.expect("terminal chunk");
+    assert_eq!(terminal.get("finish").unwrap().as_str(), Some("length"));
+    assert_eq!(terminal.get("tokens_generated").unwrap().as_usize(), Some(8));
+
+    // the metrics ledger agrees and the engine drained to zero pages
+    let text = await_metrics(h.addr(), "2 completions", |t| {
+        client::metric(t, "apt_engine_completions_total") == Some(2)
+    });
+    let get = |k: &str| client::metric(&text, k).unwrap_or_else(|| panic!("missing {k}"));
+    assert_eq!(get("apt_engine_completions_length_total"), 2);
+    assert_eq!(get("apt_engine_tokens_generated_total"), 16);
+    assert_eq!(get("apt_engine_kv_pages_live"), 0);
+    assert_eq!(get("apt_engine_streams_active"), 0);
+    h.shutdown();
+}
+
+#[test]
+fn http_stream_disconnect_cancels_and_frees_pages() {
+    use apt::serve::EngineConfig;
+    use apt::server::{client, Server, ServerConfig};
+
+    let model = Transformer::init(
+        TransformerConfig {
+            vocab: 31,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+        },
+        &mut Rng::new(9),
+    );
+    // windowed K/V so a huge token ask decodes indefinitely instead of
+    // outgrowing max_seq — the cancel must be what stops it
+    let cfg = ServerConfig {
+        engine: EngineConfig { max_seq: Some(32), ..Default::default() },
+        ..Default::default()
+    };
+    let h = Server::start(model, "127.0.0.1:0", cfg).unwrap();
+
+    let body = r#"{"prompt": [1, 2, 3, 4], "max_new_tokens": 20000, "stream": true}"#;
+    let mut st = client::open_stream(h.addr(), "/v1/generate", body).unwrap();
+    assert_eq!(st.status, 200);
+    for _ in 0..3 {
+        assert!(st.next_chunk().unwrap().is_some(), "stream produced tokens");
+    }
+    drop(st); // client walks away mid-stream
+
+    // the failed chunk write must cancel the engine request: exactly one
+    // cancelled completion, and its K/V pages reclaim (live count drains
+    // to zero long before 20k tokens could have decoded)
+    let text = await_metrics(h.addr(), "disconnect cancel + page reclaim", |t| {
+        client::metric(t, "apt_engine_completions_cancelled_total") == Some(1)
+            && client::metric(t, "apt_engine_kv_pages_live") == Some(0)
+    });
+    let get = |k: &str| client::metric(&text, k).unwrap_or_else(|| panic!("missing {k}"));
+    assert_eq!(get("apt_engine_completions_total"), 1);
+    assert_eq!(get("apt_http_stream_disconnects_total"), 1);
+    assert_eq!(get("apt_engine_streams_active"), 0);
+    h.shutdown();
+}
+
+#[test]
+fn http_backpressure_429_without_engine_state_leak() {
+    use apt::server::{client, Server, ServerConfig};
+
+    let model = Transformer::init(
+        TransformerConfig {
+            vocab: 31,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+        },
+        &mut Rng::new(9),
+    );
+    let cfg = ServerConfig { max_pending: 2, ..Default::default() };
+    let h = Server::start(model, "127.0.0.1:0", cfg).unwrap();
+    let addr = h.addr();
+
+    // freeze the engine (commands still answered, nothing steps) so the
+    // queue fills deterministically instead of by winning a race
+    h.pause_engine();
+    let body = r#"{"prompt": [5, 6, 7], "max_new_tokens": 3}"#;
+    let waiters: Vec<_> = (0..2)
+        .map(|_| {
+            std::thread::spawn(move || {
+                client::request(addr, "POST", "/v1/generate", Some(body)).unwrap()
+            })
+        })
+        .collect();
+    await_metrics(addr, "queue depth 2", |t| {
+        client::metric(t, "apt_engine_queue_depth") == Some(2)
+    });
+
+    // the bounded queue refuses the third request before the engine
+    // sees it
+    let r = client::request(addr, "POST", "/v1/generate", Some(body)).unwrap();
+    assert_eq!(r.status, 429);
+    assert_eq!(r.header("retry-after"), Some("1"));
+    assert!(String::from_utf8_lossy(&r.body).contains("queue"), "429 body names the cause");
+
+    h.resume_engine();
+    for w in waiters {
+        let r = w.join().unwrap();
+        assert_eq!(r.status, 200, "queued requests complete after resume");
+        assert_eq!(r.json().unwrap().get("finish").unwrap().as_str(), Some("length"));
+    }
+    // the refused request left nothing behind: exactly the two admitted
+    // completions, empty queue, zero live pages
+    let text = await_metrics(addr, "drain after resume", |t| {
+        client::metric(t, "apt_engine_completions_total") == Some(2)
+            && client::metric(t, "apt_engine_kv_pages_live") == Some(0)
+    });
+    let get = |k: &str| client::metric(&text, k).unwrap_or_else(|| panic!("missing {k}"));
+    assert_eq!(get("apt_engine_queue_depth"), 0);
+    assert_eq!(get("apt_http_responses_429_total"), 1);
+    h.shutdown();
+}

@@ -5,7 +5,7 @@
 #
 # Sections (substring filters): gemm hessian finalize cholesky compensate
 # mrp select sequential mask24 sparse decode paged serve resilience
-# speculative structured pipeline hlo.
+# speculative structured pipeline hlo server.
 # `decode` covers both the pruned-model decode benches and the
 # decode_session_* benches (incremental KV-cache/recurrent serving path
 # vs the quadratic full-forward baseline, populating
@@ -38,6 +38,13 @@
 # over-budget workload under a tight max_kv_pages via recompute
 # preemption vs the same workload unconstrained
 # (derived.engine_preempt_recompute_overhead, a wall-clock ratio).
+# `server` runs the separate loadgen bench binary against the HTTP
+# front end over loopback: a closed-loop generator (8 clients,
+# back-to-back requests) for derived.server_p50_latency_ms,
+# derived.server_p99_latency_ms and derived.server_tokens_per_s, then
+# an open-loop generator at 2x the measured capacity for
+# derived.server_429_rate (the bounded pending queue's refusal
+# fraction under honest overload).
 #
 # The bench binary itself writes BENCH_perf.json at the repo root and
 # prints a delta table against the previous run (a filtered run keeps the
@@ -47,6 +54,16 @@ set -euo pipefail
 cd "$(dirname "$0")/.."
 
 cargo bench --bench perf -- "$@"
+
+# the HTTP load harness is its own binary (it owns a server lifecycle,
+# not a kernel loop); runs unfiltered or under the `server` filter and
+# merges its keys into the same trajectory file
+case "${1:-}" in
+  "" | server)
+    echo
+    cargo bench --bench loadgen
+    ;;
+esac
 
 echo
 echo "perf trajectory: $(pwd)/BENCH_perf.json"

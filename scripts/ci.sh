@@ -30,6 +30,9 @@ cargo run --release --example structured_prune
 echo "== smoke: engine resilience (page budget + injected faults, typed completions) =="
 cargo run --release --example resilience_smoke
 
+echo "== smoke: HTTP serving front end (loopback generate/stream/metrics, graceful drain) =="
+cargo run --release --example http_serve
+
 echo "== hygiene: rustfmt check =="
 cargo fmt --all -- --check
 
