@@ -4,14 +4,19 @@
 //!
 //!     cargo bench --bench loadgen
 //!
-//! Two generator modes, run back to back against one server:
+//! Four generator modes, run back to back:
 //!
-//! - **closed loop**: C client threads, each issuing requests strictly
-//!   back-to-back (a new request only after the previous response).
-//!   Offered load adapts to service rate, so this measures the server's
-//!   sustainable latency distribution (`server_p50_latency_ms`,
-//!   `server_p99_latency_ms`) and token throughput
-//!   (`server_tokens_per_s`) without queue blowup.
+//! - **closed loop** (one-shot): C client threads, each issuing requests
+//!   strictly back-to-back (a new request only after the previous
+//!   response), one TCP connection per request. Offered load adapts to
+//!   service rate, so this measures the server's sustainable latency
+//!   distribution (`server_p50_latency_ms`, `server_p99_latency_ms`)
+//!   and token throughput (`server_tokens_per_s`) without queue blowup.
+//! - **closed loop** (keep-alive): the same workload down one reused
+//!   connection per client thread. The requests/s ratio against the
+//!   one-shot loop is `server_keepalive_speedup` — what connection
+//!   reuse is actually worth on this stack (connect + teardown per
+//!   request vs. amortized).
 //! - **open loop**: requests arrive on a fixed schedule regardless of
 //!   completions (the arrival process does not slow down when the
 //!   server does — how real traffic behaves). The rate is set to 2x the
@@ -19,6 +24,19 @@
 //!   must refuse work; `server_429_rate` is the measured refusal
 //!   fraction. A closed-loop generator structurally cannot measure
 //!   this, which is why both modes exist.
+//! - **misbehaving clients**: a pack of slow-loris connections (full
+//!   headers, then a body that never finishes) against a short-timeout
+//!   server while honest keep-alive clients run alongside. Every
+//!   misbehaving connection must be put down with a typed `408`/`503`
+//!   (`server_shed_rate_misbehaving`, ideally 1.0) and every honest
+//!   request must still complete.
+//!
+//! Coordinated omission: closed-loop latency percentiles are honest
+//! only below saturation — a closed generator slows down with the
+//! server, silently omitting the arrivals that would have queued. The
+//! open-loop phase exists precisely because its arrival schedule never
+//! coordinates with server state; refusal rate under overload comes
+//! from there, never from the closed loop.
 //!
 //! Results merge into `BENCH_perf.json` under `derived`, preserving
 //! everything the perf bench wrote.
@@ -39,6 +57,7 @@ const CLOSED_CLIENTS: usize = 8;
 const CLOSED_PER_CLIENT: usize = 25;
 const OPEN_SECONDS: f64 = 2.0;
 const OPEN_MAX_ARRIVALS: usize = 400;
+const LORIS_CLIENTS: usize = 16;
 
 fn start_server() -> ServerHandle {
     let model = Transformer::init(
@@ -114,12 +133,45 @@ fn closed_loop(addr: std::net::SocketAddr) -> (Vec<f64>, f64, f64) {
     (lat, toks as f64 / secs, (CLOSED_CLIENTS * CLOSED_PER_CLIENT) as f64 / secs)
 }
 
-/// Open loop at `rate_hz`: returns (arrivals, 429 count, other-failure
-/// count). Each arrival is its own thread so a slow response never
-/// delays the next arrival — that independence is the point.
-fn open_loop(addr: std::net::SocketAddr, rate_hz: f64) -> (usize, usize, usize) {
+/// Closed loop again, but each client thread holds ONE keep-alive
+/// connection for all its requests. Returns requests/s; the ratio
+/// against the one-shot loop is the measured value of reuse.
+fn closed_loop_keepalive(addr: std::net::SocketAddr) -> f64 {
+    let wall = Instant::now();
+    let workers: Vec<_> = (0..CLOSED_CLIENTS)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut kc = client::Client::new(addr);
+                for i in 0..CLOSED_PER_CLIENT {
+                    let body = gen_body(c * CLOSED_PER_CLIENT + i);
+                    let r = kc
+                        .request("POST", "/v1/generate", Some(&body))
+                        .expect("keep-alive request");
+                    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+                }
+                kc.connects_made()
+            })
+        })
+        .collect();
+    let connects: usize = workers.into_iter().map(|w| w.join().expect("keep-alive client")).sum();
+    let secs = wall.elapsed().as_secs_f64();
+    println!(
+        "  {} requests over {connects} TCP connection(s)",
+        CLOSED_CLIENTS * CLOSED_PER_CLIENT
+    );
+    (CLOSED_CLIENTS * CLOSED_PER_CLIENT) as f64 / secs
+}
+
+/// Open loop at `rate_hz`: returns (arrivals, 429 count, 503 count,
+/// other-failure count). Each arrival is its own thread so a slow
+/// response never delays the next arrival — that independence is the
+/// point. Both refusal shapes are expected under overload: 429 from the
+/// bounded pending queue, 503 from accept-time connection shedding once
+/// arrivals outrun the bounded worker pool's backlog.
+fn open_loop(addr: std::net::SocketAddr, rate_hz: f64) -> (usize, usize, usize, usize) {
     let total = ((rate_hz * OPEN_SECONDS) as usize).clamp(50, OPEN_MAX_ARRIVALS);
     let refused = Arc::new(AtomicUsize::new(0));
+    let shed = Arc::new(AtomicUsize::new(0));
     let failed = Arc::new(AtomicUsize::new(0));
     let start = Instant::now();
     let mut workers = Vec::with_capacity(total);
@@ -130,6 +182,7 @@ fn open_loop(addr: std::net::SocketAddr, rate_hz: f64) -> (usize, usize, usize) 
             std::thread::sleep(target - elapsed);
         }
         let refused = refused.clone();
+        let shed = shed.clone();
         let failed = failed.clone();
         workers.push(std::thread::spawn(move || {
             let body = gen_body(i);
@@ -137,6 +190,9 @@ fn open_loop(addr: std::net::SocketAddr, rate_hz: f64) -> (usize, usize, usize) 
                 Ok(r) if r.status == 200 => {}
                 Ok(r) if r.status == 429 => {
                     refused.fetch_add(1, Ordering::Relaxed);
+                }
+                Ok(r) if r.status == 503 => {
+                    shed.fetch_add(1, Ordering::Relaxed);
                 }
                 _ => {
                     failed.fetch_add(1, Ordering::Relaxed);
@@ -147,12 +203,105 @@ fn open_loop(addr: std::net::SocketAddr, rate_hz: f64) -> (usize, usize, usize) 
     for w in workers {
         let _ = w.join();
     }
-    (total, refused.load(Ordering::Relaxed), failed.load(Ordering::Relaxed))
+    (
+        total,
+        refused.load(Ordering::Relaxed),
+        shed.load(Ordering::Relaxed),
+        failed.load(Ordering::Relaxed),
+    )
 }
 
-/// Merge the four server keys into BENCH_perf.json's `derived` object,
+/// Misbehaving-client mode: `LORIS_CLIENTS` slow-loris connections
+/// (complete headers, a body that never arrives) against a server with
+/// short timeouts and a small pool, while honest keep-alive clients run
+/// alongside. Returns the fraction of misbehaving connections the
+/// server put down with a typed `408` or `503` — anything else (a hang,
+/// an untyped close) drags the rate below 1.0, which is the regression
+/// this mode exists to catch.
+fn misbehaving_clients() -> f64 {
+    let model = Transformer::init(
+        TransformerConfig {
+            vocab: 61,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 48,
+            max_seq: 128,
+        },
+        &mut Rng::new(17),
+    );
+    let cfg = ServerConfig {
+        read_timeout_ms: 150,
+        header_deadline_ms: 400,
+        idle_timeout_ms: 500,
+        pool_workers: 4,
+        conn_backlog: 4,
+        ..Default::default()
+    };
+    let h = Server::start(model, "127.0.0.1:0", cfg).expect("bind loopback");
+    let addr = h.addr();
+
+    let shed = Arc::new(AtomicUsize::new(0));
+    let loris: Vec<_> = (0..LORIS_CLIENTS)
+        .map(|_| {
+            let shed = shed.clone();
+            std::thread::spawn(move || {
+                let raw = "POST /v1/generate HTTP/1.1\r\nContent-Length: 64\r\n\r\n{\"prompt\"";
+                if matches!(client::raw_roundtrip_status(addr, raw), Ok(408 | 503)) {
+                    shed.fetch_add(1, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+
+    // honest traffic alongside the abuse: every request must complete,
+    // retrying politely when shed at accept time (503) or refused (429)
+    let honest: Vec<_> = (0..2)
+        .map(|c| {
+            std::thread::spawn(move || {
+                let mut kc = client::Client::new(addr);
+                for i in 0..8 {
+                    let body = gen_body(1000 + c * 8 + i);
+                    let mut attempts = 0;
+                    loop {
+                        match kc.request("POST", "/v1/generate", Some(&body)) {
+                            Ok(r) if r.status == 200 => break,
+                            Ok(r) if r.status == 503 || r.status == 429 => {
+                                attempts += 1;
+                                assert!(attempts < 50, "honest request starved out");
+                                std::thread::sleep(Duration::from_millis(50));
+                            }
+                            Ok(r) => panic!("honest request got {}", r.status),
+                            Err(e) => panic!("honest request failed: {e}"),
+                        }
+                    }
+                }
+            })
+        })
+        .collect();
+
+    for w in loris {
+        let _ = w.join();
+    }
+    for w in honest {
+        w.join().expect("honest client");
+    }
+    let m = client::request(addr, "GET", "/metrics", None).expect("metrics");
+    let text = String::from_utf8_lossy(&m.body).into_owned();
+    for k in [
+        "apt_http_responses_408_total",
+        "apt_http_responses_503_shed_total",
+        "apt_engine_kv_pages_live",
+    ] {
+        println!("  {k} {}", client::metric(&text, k).unwrap_or(0));
+    }
+    h.shutdown();
+    shed.load(Ordering::Relaxed) as f64 / LORIS_CLIENTS as f64
+}
+
+/// Merge the six server keys into BENCH_perf.json's `derived` object,
 /// preserving whatever the perf bench wrote there.
-fn merge_results(p50: f64, p99: f64, tok_s: f64, rate_429: f64) {
+fn merge_results(p50: f64, p99: f64, tok_s: f64, rate_429: f64, ka_speedup: f64, shed_rate: f64) {
     let mut root = std::fs::read_to_string(OUT_PATH)
         .ok()
         .and_then(|t| json::parse(&t).ok())
@@ -168,7 +317,9 @@ fn merge_results(p50: f64, p99: f64, tok_s: f64, rate_429: f64) {
         .set("server_p50_latency_ms", Json::Num(p50))
         .set("server_p99_latency_ms", Json::Num(p99))
         .set("server_tokens_per_s", Json::Num(tok_s))
-        .set("server_429_rate", Json::Num(rate_429));
+        .set("server_429_rate", Json::Num(rate_429))
+        .set("server_keepalive_speedup", Json::Num(ka_speedup))
+        .set("server_shed_rate_misbehaving", Json::Num(shed_rate));
     root.set("derived", derived);
     std::fs::write(OUT_PATH, format!("{}\n", root.to_string_pretty())).expect("write BENCH_perf");
 }
@@ -187,14 +338,21 @@ fn main() {
     println!("  p50 {p50:8.3} ms   p99 {p99:8.3} ms");
     println!("  {tok_s:8.0} tokens/s   {req_s:8.1} requests/s");
 
+    println!(
+        "== closed loop, keep-alive: {CLOSED_CLIENTS} clients x {CLOSED_PER_CLIENT} requests, one connection each =="
+    );
+    let ka_req_s = closed_loop_keepalive(addr);
+    let ka_speedup = ka_req_s / req_s;
+    println!("  {ka_req_s:8.1} requests/s ({ka_speedup:.2}x one-shot)");
+
     // overload: offer 2x the measured sustainable rate so refusals are a
     // property of the bounded queue, not of an arbitrary magic number
     let rate = (req_s * 2.0).max(25.0);
     println!("== open loop: {rate:.0} arrivals/s for {OPEN_SECONDS}s (2x closed-loop capacity) ==");
-    let (total, refused, failed) = open_loop(addr, rate);
-    assert_eq!(failed, 0, "only 200/429 are acceptable under overload");
+    let (total, refused, shed, failed) = open_loop(addr, rate);
+    assert_eq!(failed, 0, "only 200/429/503 are acceptable under overload");
     let rate_429 = refused as f64 / total as f64;
-    println!("  {total} arrivals, {refused} refused (429 rate {rate_429:.3})");
+    println!("  {total} arrivals, {refused} refused 429, {shed} shed 503 (429 rate {rate_429:.3})");
 
     let m = client::request(addr, "GET", "/metrics", None).expect("metrics");
     let text = String::from_utf8_lossy(&m.body).into_owned();
@@ -205,6 +363,13 @@ fn main() {
     }
     h.shutdown();
 
-    merge_results(p50, p99, tok_s, rate_429);
-    println!("\nwrote server_p50_latency_ms / server_p99_latency_ms / server_tokens_per_s / server_429_rate to {OUT_PATH}");
+    println!("== misbehaving clients: {LORIS_CLIENTS} slow-loris conns vs a short-timeout server ==");
+    let shed_rate = misbehaving_clients();
+    println!("  shed rate {shed_rate:.3} (typed 408/503 per misbehaving connection)");
+
+    merge_results(p50, p99, tok_s, rate_429, ka_speedup, shed_rate);
+    println!(
+        "\nwrote server_{{p50,p99}}_latency_ms / server_tokens_per_s / server_429_rate / \
+         server_keepalive_speedup / server_shed_rate_misbehaving to {OUT_PATH}"
+    );
 }

@@ -1,0 +1,142 @@
+//! Chaos smoke: the hardened HTTP front end under deliberate abuse, on
+//! exactly the production code path (scripted wire faults, no test-only
+//! control flow). Phases:
+//!
+//!   1. clean keep-alive workload — the baseline the chaos must not dent
+//!   2. slow-loris client (trickled bytes, then a stall) -> typed `408`
+//!   3. mid-stream client disconnect -> engine cancel, pages drain to 0
+//!   4. pool saturation (2 workers, backlog 1) -> `503` + `Retry-After`
+//!      at accept time, then everything queued still completes
+//!
+//! Every degraded connection must land in a typed counter, live K/V
+//! pages must return to zero, and shutdown must reclaim every worker.
+//!
+//!     cargo run --release --example chaos_serve
+
+use std::thread;
+use std::time::{Duration, Instant};
+
+use apt::model::{Transformer, TransformerConfig};
+use apt::server::netfaults::{ConnScript, NetFaultPlan};
+use apt::server::{client, Server, ServerConfig};
+use apt::util::Rng;
+
+/// Poll `/metrics` until `key == want` (the engine drains asynchronously).
+fn await_metric(addr: std::net::SocketAddr, key: &str, want: usize) -> String {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let r = client::request(addr, "GET", "/metrics", None).expect("metrics");
+        let text = String::from_utf8_lossy(&r.body).into_owned();
+        if client::metric(&text, key) == Some(want) {
+            return text;
+        }
+        assert!(Instant::now() < deadline, "timed out waiting for {key} == {want}:\n{text}");
+        thread::sleep(Duration::from_millis(20));
+    }
+}
+
+fn metric(text: &str, key: &str) -> usize {
+    client::metric(text, key).unwrap_or_else(|| panic!("metric {key} missing"))
+}
+
+fn main() {
+    // untrained tiny model: the chaos smoke exercises plumbing, not text
+    let vocab = 31;
+    let model = Transformer::init(
+        TransformerConfig { vocab, d_model: 32, n_layers: 2, n_heads: 2, d_ff: 48, max_seq: 128 },
+        &mut Rng::new(11),
+    );
+
+    let cfg = ServerConfig {
+        pool_workers: 2,
+        conn_backlog: 1,
+        read_timeout_ms: 150,
+        header_deadline_ms: 400,
+        ..ServerConfig::default()
+    };
+
+    // accept order: conn 0 is the clean keep-alive client, conn 1 the
+    // slow loris, conn 2 the mid-stream disconnect; everything after
+    // (saturation probes, metrics polls) runs on a clean wire
+    let loris_raw = "POST /v1/generate HTTP/1.1\r\nContent-Length: 5\r\n\r\nab";
+    let plan = NetFaultPlan::new()
+        .on_conn(1, ConnScript::clean().trickle(1).stall_after(20))
+        .on_conn(2, ConnScript::clean().drop_after(150));
+    let h = Server::start_with_netfaults(model, "127.0.0.1:0", cfg, plan).expect("bind loopback");
+    let addr = h.addr();
+    println!("chaos target on http://{addr} (2 workers, backlog 1)");
+
+    // -- phase 1: clean keep-alive workload --------------------------
+    let body = r#"{"prompt": [1, 2, 3], "max_new_tokens": 6, "seed": 5}"#;
+    let mut kc = client::Client::new(addr);
+    for _ in 0..4 {
+        let r = kc.request("POST", "/v1/generate", Some(body)).expect("clean generate");
+        assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    }
+    assert_eq!(kc.connects_made(), 1);
+    println!("phase 1: 4 clean requests on 1 keep-alive connection -> all 200");
+    drop(kc);
+
+    // -- phase 2: slow loris -----------------------------------------
+    // trickles 1 byte per read, stalls for good after byte 20 — the
+    // header deadline fires and the server answers a typed 408
+    let status = client::raw_roundtrip_status(addr, loris_raw).expect("loris response");
+    assert_eq!(status, 408, "slow loris must get 408, not pin a worker");
+    println!("phase 2: slow loris -> 408 request timeout");
+
+    // -- phase 3: mid-stream disconnect ------------------------------
+    // the wire drops dead 150 bytes into the response: headers clear,
+    // the first token chunks do not — the server must cancel the stream
+    let sbody = r#"{"prompt": [4, 5, 6], "max_new_tokens": 64, "stream": true}"#;
+    let mut st = client::open_stream(addr, "/v1/generate", sbody).expect("open stream");
+    assert_eq!(st.status, 200);
+    let mut got = 0usize;
+    while let Ok(Some(_)) = st.next_chunk() {
+        got += 1;
+    }
+    drop(st);
+    let text = await_metric(addr, "apt_engine_completions_cancelled_total", 1);
+    assert_eq!(metric(&text, "apt_engine_kv_pages_live"), 0);
+    println!("phase 3: wire cut mid-stream after {got} chunk(s) -> cancelled, 0 live pages");
+
+    // -- phase 4: pool saturation ------------------------------------
+    // freeze the engine so two streams pin both workers; one more
+    // connection parks in the backlog, and the next is shed with 503 +
+    // Retry-After at accept time without touching a worker
+    h.pause_engine();
+    let s1 = client::open_stream(addr, "/v1/generate", sbody).expect("pin worker 1");
+    let s2 = client::open_stream(addr, "/v1/generate", sbody).expect("pin worker 2");
+    thread::sleep(Duration::from_millis(100));
+    let parked = thread::spawn(move || client::request(addr, "POST", "/v1/generate", Some(body)));
+    thread::sleep(Duration::from_millis(150));
+    let shed = client::request(addr, "POST", "/v1/generate", Some(body)).expect("shed response");
+    assert_eq!(shed.status, 503, "{}", String::from_utf8_lossy(&shed.body));
+    let retry = shed.header("retry-after").expect("Retry-After on 503").to_string();
+    h.resume_engine();
+    let parked = parked.join().expect("parked thread").expect("parked response");
+    assert_eq!(parked.status, 200, "queued connection must still be served");
+    for mut s in [s1, s2] {
+        while let Ok(Some(_)) = s.next_chunk() {}
+    }
+    println!("phase 4: saturated pool -> 503 (Retry-After: {retry}), parked conn served after resume");
+
+    // -- the ledger --------------------------------------------------
+    let text = await_metric(addr, "apt_engine_kv_pages_live", 0);
+    assert_eq!(metric(&text, "apt_engine_queue_depth"), 0);
+    assert_eq!(metric(&text, "apt_engine_streams_active"), 0);
+    assert_eq!(metric(&text, "apt_http_responses_408_total"), 1);
+    assert_eq!(metric(&text, "apt_http_responses_503_shed_total"), 1);
+    assert_eq!(metric(&text, "apt_http_stream_disconnects_total"), 1);
+    assert_eq!(metric(&text, "apt_net_stalls_total"), 1);
+    assert_eq!(metric(&text, "apt_net_disconnects_total"), 1);
+    assert_eq!(metric(&text, "apt_net_short_io_conns_total"), 1);
+    assert_eq!(metric(&text, "apt_engine_completions_cancelled_total"), 1);
+    println!("ledger: every degraded connection in a typed counter, 0 live pages");
+
+    let report = h.shutdown();
+    assert_eq!(report.pool_workers_joined, 2, "shutdown must reclaim every pool worker");
+    println!(
+        "shutdown reclaimed {} workers; chaos_serve smoke passed",
+        report.pool_workers_joined
+    );
+}

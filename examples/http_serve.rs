@@ -62,6 +62,16 @@ fn main() {
     );
     assert_eq!(toks.len(), 12);
 
+    // keep-alive: several requests down ONE reused connection
+    let mut kc = client::Client::new(addr);
+    for _ in 0..3 {
+        let r = kc.request("POST", "/v1/generate", Some(&body)).expect("keep-alive generate");
+        assert_eq!(r.status, 200);
+    }
+    assert_eq!(kc.connects_made(), 1, "three requests must reuse one connection");
+    println!("keep-alive client: 3 requests, {} TCP connect(s)", kc.connects_made());
+    drop(kc);
+
     let m = client::request(addr, "GET", "/metrics", None).expect("metrics");
     assert_eq!(m.status, 200);
     let text = String::from_utf8_lossy(&m.body).into_owned();
@@ -71,12 +81,17 @@ fn main() {
         "apt_engine_tokens_generated_total",
         "apt_engine_kv_pages_live",
         "apt_http_requests_total",
+        "apt_http_keepalive_reuses_total",
     ] {
         println!("  {k} {}", client::metric(&text, k).expect(k));
     }
-    assert_eq!(client::metric(&text, "apt_engine_completions_total"), Some(2));
+    assert_eq!(client::metric(&text, "apt_engine_completions_total"), Some(5));
     assert_eq!(client::metric(&text, "apt_engine_kv_pages_live"), Some(0));
+    assert_eq!(client::metric(&text, "apt_http_keepalive_reuses_total"), Some(2));
 
-    h.shutdown();
-    println!("shutdown drained; http_serve smoke passed");
+    let report = h.shutdown();
+    println!(
+        "shutdown drained ({} pool workers joined); http_serve smoke passed",
+        report.pool_workers_joined
+    );
 }

@@ -406,6 +406,11 @@ pub struct EngineSnapshot {
     pub active: usize,
     /// K/V pages currently held ([`Engine::kv_pages_live`]).
     pub kv_pages_live: usize,
+    /// The engine's batch-slot bound (`EngineConfig::max_batch`) —
+    /// capacity context for the queue depth above, so a monitoring
+    /// surface (or an admission-control consumer) can tell "2 queued"
+    /// behind 1 slot from "2 queued" behind 64.
+    pub max_batch: usize,
     /// The cumulative counters ([`Engine::stats`]).
     pub stats: EngineStats,
 }
@@ -672,8 +677,15 @@ impl<'m> Engine<'m> {
             queued: self.queued(),
             active: self.active(),
             kv_pages_live: self.kv_pages_live(),
+            max_batch: self.cfg.max_batch,
             stats: self.stats,
         }
+    }
+
+    /// The configuration this engine runs under (read-only — knobs are
+    /// fixed at construction).
+    pub fn config(&self) -> &EngineConfig {
+        &self.cfg
     }
 
     /// K/V pages currently held across every active stream — target

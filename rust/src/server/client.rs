@@ -1,15 +1,31 @@
 //! Minimal loopback HTTP/1.1 client — just enough to drive this
-//! server from the load harness (`benches/loadgen.rs`), the CI smoke
-//! (`examples/http_serve.rs`) and the test suites. NOT a general HTTP
-//! client: one request per connection, `Content-Length` or chunked
-//! response bodies, no redirects, no TLS, no keep-alive — exactly the
-//! subset the server speaks.
+//! server from the load harness (`benches/loadgen.rs`), the CI smokes
+//! (`examples/http_serve.rs`, `examples/chaos_serve.rs`) and the test
+//! suites. NOT a general HTTP client: `Content-Length` or chunked
+//! response bodies, no redirects, no TLS — exactly the subset the
+//! server speaks.
+//!
+//! Two shapes:
+//! - the free functions ([`request`], [`open_stream`], …) are one-shot:
+//!   one connection per call, `Connection: close`, with the read
+//!   timeout caller-configurable via [`request_with_timeout`];
+//! - [`Client`] holds a keep-alive connection and reuses it across
+//!   requests, reconnecting transparently when the server (or the
+//!   per-connection request cap) closes it — the client half of the
+//!   server's keep-alive support, so tests and loadgen can measure
+//!   connection reuse honestly.
 
 use std::io::{self, BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpStream};
 use std::time::Duration;
 
 use crate::json::{self, Json};
+
+/// Default read timeout: generous, so a wedged server fails a test
+/// instead of hanging it. Every entry point has a `_with_timeout`
+/// variant (or [`Client::with_timeout`]) for callers that need a short,
+/// explicit bound — stall tests, open-loop load generation.
+pub const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
 
 /// A complete (non-streamed or fully-collected) response.
 #[derive(Clone, Debug)]
@@ -31,12 +47,10 @@ impl Response {
     }
 }
 
-fn connect(addr: SocketAddr) -> io::Result<TcpStream> {
+fn connect(addr: SocketAddr, timeout: Duration) -> io::Result<TcpStream> {
     let s = TcpStream::connect(addr)?;
     s.set_nodelay(true)?;
-    // generous bound so a wedged server fails a test instead of
-    // hanging it
-    s.set_read_timeout(Some(Duration::from_secs(30)))?;
+    s.set_read_timeout(Some(timeout))?;
     Ok(s)
 }
 
@@ -45,12 +59,16 @@ fn write_request(
     method: &str,
     path: &str,
     body: Option<&str>,
+    close: bool,
 ) -> io::Result<()> {
     let mut head = format!("{method} {path} HTTP/1.1\r\nHost: loopback\r\n");
     if let Some(b) = body {
         head.push_str(&format!("Content-Type: application/json\r\nContent-Length: {}\r\n", b.len()));
     }
-    head.push_str("Connection: close\r\n\r\n");
+    if close {
+        head.push_str("Connection: close\r\n");
+    }
+    head.push_str("\r\n");
     s.write_all(head.as_bytes())?;
     if let Some(b) = body {
         s.write_all(b.as_bytes())?;
@@ -94,7 +112,29 @@ fn read_chunk(r: &mut impl BufRead) -> io::Result<Option<Vec<u8>>> {
     Ok(if size == 0 { None } else { Some(data) })
 }
 
-/// One complete request/response round trip. Chunked responses are
+/// Read one complete response off the reader, consuming exactly its
+/// bytes (so a keep-alive connection is positioned at the next
+/// response afterwards). Chunked bodies are collected whole.
+fn read_response(r: &mut BufReader<TcpStream>) -> io::Result<Response> {
+    let (status, headers) = read_head(r)?;
+    let resp = Response { status, headers, body: Vec::new() };
+    let mut body = Vec::new();
+    if resp.header("transfer-encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked")) {
+        while let Some(chunk) = read_chunk(r)? {
+            body.extend_from_slice(&chunk);
+        }
+    } else if let Some(n) = resp.header("content-length").and_then(|v| v.parse::<usize>().ok()) {
+        body.resize(n, 0);
+        r.read_exact(&mut body)?;
+    } else {
+        // no framing: the body runs to EOF (and the connection is dead)
+        r.read_to_end(&mut body)?;
+    }
+    Ok(Response { body, ..resp })
+}
+
+/// One complete request/response round trip on a fresh `Connection:
+/// close` connection, under [`DEFAULT_TIMEOUT`]. Chunked responses are
 /// collected whole — use [`open_stream`] to consume chunks as they
 /// arrive (or to abandon the stream mid-flight).
 pub fn request(
@@ -103,33 +143,119 @@ pub fn request(
     path: &str,
     body: Option<&str>,
 ) -> io::Result<Response> {
-    let mut s = connect(addr)?;
-    write_request(&mut s, method, path, body)?;
-    let mut r = BufReader::new(s);
-    let (status, headers) = read_head(&mut r)?;
-    let resp = Response { status, headers, body: Vec::new() };
-    let mut body = Vec::new();
-    if resp.header("transfer-encoding").is_some_and(|v| v.eq_ignore_ascii_case("chunked")) {
-        while let Some(chunk) = read_chunk(&mut r)? {
-            body.extend_from_slice(&chunk);
-        }
-    } else if let Some(n) = resp.header("content-length").and_then(|v| v.parse::<usize>().ok()) {
-        body.resize(n, 0);
-        r.read_exact(&mut body)?;
-    } else {
-        r.read_to_end(&mut body)?;
-    }
-    Ok(Response { body, ..resp })
+    request_with_timeout(addr, method, path, body, DEFAULT_TIMEOUT)
 }
 
-/// Write raw bytes (an intentionally malformed request, say) and return
-/// the response status.
+/// [`request`] with a caller-chosen read timeout — stall tests and
+/// open-loop load generation need short, explicit bounds, not the
+/// test-friendly 30 s default.
+pub fn request_with_timeout(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: Option<&str>,
+    timeout: Duration,
+) -> io::Result<Response> {
+    let mut s = connect(addr, timeout)?;
+    write_request(&mut s, method, path, body, true)?;
+    read_response(&mut BufReader::new(s))
+}
+
+/// Write raw bytes (an intentionally malformed or deliberately partial
+/// request) and return the response status. The socket stays open on
+/// the write side — a partial request here looks to the server exactly
+/// like a stalled client, which is what the 408 tests need.
 pub fn raw_roundtrip_status(addr: SocketAddr, raw: &str) -> io::Result<u16> {
-    let mut s = connect(addr)?;
+    let mut s = connect(addr, DEFAULT_TIMEOUT)?;
     s.write_all(raw.as_bytes())?;
     s.flush()?;
     let mut r = BufReader::new(s);
     Ok(read_head(&mut r)?.0)
+}
+
+/// A keep-alive client: holds one connection to `addr` and reuses it
+/// across [`Client::request`] calls, reconnecting transparently when
+/// the server closes it (idle timeout, per-connection request cap,
+/// `Connection: close` response) or when a reused connection turns out
+/// to be stale mid-roundtrip. [`Client::connects_made`] counts actual
+/// TCP connects, so tests and loadgen can pin reuse honestly.
+pub struct Client {
+    addr: SocketAddr,
+    timeout: Duration,
+    conn: Option<BufReader<TcpStream>>,
+    connects: usize,
+}
+
+impl Client {
+    pub fn new(addr: SocketAddr) -> Client {
+        Client::with_timeout(addr, DEFAULT_TIMEOUT)
+    }
+
+    pub fn with_timeout(addr: SocketAddr, timeout: Duration) -> Client {
+        Client { addr, timeout, conn: None, connects: 0 }
+    }
+
+    /// TCP connections opened so far (1 after the first request if the
+    /// server keeps the connection alive).
+    pub fn connects_made(&self) -> usize {
+        self.connects
+    }
+
+    /// One round trip, reusing the held connection when there is one.
+    /// A reused connection that fails mid-roundtrip is presumed stale
+    /// (the server closed it between requests — a race keep-alive
+    /// clients must absorb) and retried ONCE on a fresh connection;
+    /// errors on a fresh connection propagate.
+    pub fn request(
+        &mut self,
+        method: &str,
+        path: &str,
+        body: Option<&str>,
+    ) -> io::Result<Response> {
+        let had_conn = self.conn.is_some();
+        match self.roundtrip(method, path, body) {
+            Ok(resp) => Ok(resp),
+            Err(e) if had_conn => {
+                // stale reuse: reconnect and retry the idempotent-by-
+                // construction request once
+                self.conn = None;
+                let _ = e;
+                self.roundtrip(method, path, body)
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
+
+    fn roundtrip(&mut self, method: &str, path: &str, body: Option<&str>) -> io::Result<Response> {
+        if self.conn.is_none() {
+            let s = connect(self.addr, self.timeout)?;
+            self.connects += 1;
+            self.conn = Some(BufReader::new(s));
+        }
+        let r = self.conn.as_mut().expect("connection just ensured");
+        let result = write_request(r.get_mut(), method, path, body, false)
+            .and_then(|()| read_response(r));
+        match result {
+            Ok(resp) => {
+                // the server said close (cap reached, shutdown): honor
+                // it so the next request reconnects instead of failing
+                let closing = resp.header("connection").is_some_and(|v| v.contains("close"))
+                    || resp.header("content-length").is_none()
+                        && resp.header("transfer-encoding").is_none();
+                if closing {
+                    self.conn = None;
+                }
+                Ok(resp)
+            }
+            Err(e) => {
+                self.conn = None;
+                Err(e)
+            }
+        }
+    }
 }
 
 /// An open streaming response. Chunks arrive via [`Stream::next_chunk`];
@@ -150,8 +276,8 @@ impl Stream {
 
 /// POST `body` to `path` and hand back the response as an open stream.
 pub fn open_stream(addr: SocketAddr, path: &str, body: &str) -> io::Result<Stream> {
-    let mut s = connect(addr)?;
-    write_request(&mut s, "POST", path, Some(body))?;
+    let mut s = connect(addr, DEFAULT_TIMEOUT)?;
+    write_request(&mut s, "POST", path, Some(body), true)?;
     let mut r = BufReader::new(s);
     let (status, headers) = read_head(&mut r)?;
     Ok(Stream { status, headers, r })

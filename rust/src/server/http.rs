@@ -3,16 +3,22 @@
 //! that gave us the offline `anyhow`/`log`).
 //!
 //! Scope is deliberately narrow: the server speaks exactly the subset a
-//! serving front end needs — one request per connection (every response
-//! carries `Connection: close`), `Content-Length` bodies on the way in,
-//! fixed-length or chunked (`Transfer-Encoding: chunked`) bodies on the
-//! way out. Parsing is defensive: every malformed input maps to a typed
-//! [`ParseError`] so the route layer can answer with the matching status
-//! code instead of dropping the connection silently, and both the header
-//! block and the body are size-capped so a hostile client cannot balloon
-//! server memory.
+//! serving front end needs — HTTP/1.1 keep-alive with an explicit
+//! per-response `Connection` header (the route layer decides when a
+//! connection has earned another request), `Content-Length` bodies on
+//! the way in, fixed-length or chunked (`Transfer-Encoding: chunked`)
+//! bodies on the way out. Parsing is defensive: every malformed input
+//! maps to a typed [`ParseError`] so the route layer can answer with the
+//! matching status code instead of dropping the connection silently,
+//! both the header block and the body are size-capped so a hostile
+//! client cannot balloon server memory, and the whole head+body read
+//! runs under an optional wall-clock deadline so a client that drips
+//! one byte per read-timeout window (the slow loris) still maps to a
+//! typed [`ParseError::Timeout`] → `408` instead of pinning a worker
+//! indefinitely.
 
 use std::io::{self, BufRead, Read, Write};
+use std::time::Instant;
 
 /// Upper bound on the request line + header block, in bytes. Generous
 /// for hand-written clients and curl alike; a request that exceeds it
@@ -28,6 +34,11 @@ pub struct HttpRequest {
     pub path: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
+    /// The client's connection preference: `true` unless it sent
+    /// `Connection: close` (or spoke HTTP/1.0 without an explicit
+    /// `keep-alive`). The server may still close — this is the
+    /// client-side half of the negotiation.
+    pub keep_alive: bool,
 }
 
 impl HttpRequest {
@@ -44,8 +55,17 @@ impl HttpRequest {
 #[derive(Debug)]
 pub enum ParseError {
     /// EOF before the first request byte: not an error, just a peer
-    /// that closed without sending a request.
+    /// that closed without sending (another) request.
     Closed,
+    /// The socket read timed out before the first request byte arrived
+    /// — an idle keep-alive connection (or a peer that connected and
+    /// sent nothing). Closed without a response, counted separately
+    /// from the mid-request timeout below.
+    IdleTimeout,
+    /// The socket read timed out (or the header-read deadline passed)
+    /// MID-request — a slow-loris header drip, a body stalled mid-
+    /// `Content-Length`. Typed `408 Request Timeout`, then close.
+    Timeout,
     /// Request line is not `METHOD SP PATH SP HTTP/1.x`.
     BadRequestLine(String),
     /// A header line without a `:` separator (or no CRLF terminator
@@ -57,15 +77,19 @@ pub enum ParseError {
     MissingLength,
     /// Declared `Content-Length` exceeds the server's body cap.
     BodyTooLarge { declared: usize, limit: usize },
-    /// Socket-level failure (timeout included) mid-request.
+    /// Socket-level failure (other than a timeout) mid-request.
     Io(io::Error),
 }
 
 /// The (status, reason, message) a [`ParseError`] answers with.
-/// `Closed` has no response; callers skip it before writing.
+/// `Closed` and `IdleTimeout` have no response; callers skip them
+/// before writing.
 pub fn status_for(e: &ParseError) -> (u16, &'static str, String) {
     match e {
-        ParseError::Closed => (0, "", String::new()),
+        ParseError::Closed | ParseError::IdleTimeout => (0, "", String::new()),
+        ParseError::Timeout => {
+            (408, "Request Timeout", "request timed out before it completed".to_string())
+        }
         ParseError::BadRequestLine(l) => {
             (400, "Bad Request", format!("malformed request line: {l:?}"))
         }
@@ -83,12 +107,43 @@ pub fn status_for(e: &ParseError) -> (u16, &'static str, String) {
     }
 }
 
+/// A socket read timeout surfaces as `WouldBlock` (unix) or `TimedOut`
+/// (windows, and our scripted wire faults); both mean "the peer went
+/// quiet", never "the peer is gone".
+pub fn is_timeout(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut)
+}
+
 /// Read one CRLF- (or bare-LF-) terminated line, counting its bytes
-/// against `budget`. Returns the line without the terminator.
-fn read_line(r: &mut impl BufRead, budget: &mut usize) -> Result<String, ParseError> {
+/// against `budget` and honoring `deadline`. Returns the line without
+/// the terminator. `first_line` marks the request's opening line, where
+/// a timeout before ANY byte is idleness, not a stalled request.
+fn read_line(
+    r: &mut impl BufRead,
+    budget: &mut usize,
+    deadline: Option<Instant>,
+    first_line: bool,
+) -> Result<String, ParseError> {
     let mut raw = Vec::new();
     loop {
-        let buf = r.fill_buf().map_err(ParseError::Io)?;
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(if first_line && raw.is_empty() {
+                ParseError::IdleTimeout
+            } else {
+                ParseError::Timeout
+            });
+        }
+        let buf = match r.fill_buf() {
+            Ok(b) => b,
+            Err(e) if is_timeout(&e) => {
+                return Err(if first_line && raw.is_empty() {
+                    ParseError::IdleTimeout
+                } else {
+                    ParseError::Timeout
+                });
+            }
+            Err(e) => return Err(ParseError::Io(e)),
+        };
         if buf.is_empty() {
             if raw.is_empty() {
                 return Err(ParseError::Closed);
@@ -117,9 +172,16 @@ fn read_line(r: &mut impl BufRead, budget: &mut usize) -> Result<String, ParseEr
 /// Parse one request off the stream: request line, headers, then exactly
 /// `Content-Length` body bytes (capped at `max_body`). Methods that
 /// carry no body (GET/HEAD/DELETE) skip the length requirement.
-pub fn parse_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpRequest, ParseError> {
+/// `deadline`, when set, bounds the WHOLE read wall-clock — per-read
+/// socket timeouts bound each quiet gap, the deadline bounds a client
+/// that drips bytes fast enough to dodge them.
+pub fn parse_request(
+    r: &mut impl BufRead,
+    max_body: usize,
+    deadline: Option<Instant>,
+) -> Result<HttpRequest, ParseError> {
     let mut budget = MAX_HEADER_BYTES;
-    let line = read_line(r, &mut budget)?;
+    let line = read_line(r, &mut budget, deadline, true)?;
     let mut parts = line.split(' ');
     let (method, path, version) = match (parts.next(), parts.next(), parts.next(), parts.next()) {
         (Some(m), Some(p), Some(v), None) if !m.is_empty() && p.starts_with('/') => (m, p, v),
@@ -128,10 +190,11 @@ pub fn parse_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpReques
     if !version.starts_with("HTTP/1.") {
         return Err(ParseError::BadRequestLine(line.clone()));
     }
+    let http10 = version == "HTTP/1.0";
     let (method, path) = (method.to_string(), path.to_string());
     let mut headers: Vec<(String, String)> = Vec::new();
     loop {
-        let line = match read_line(r, &mut budget) {
+        let line = match read_line(r, &mut budget, deadline, false) {
             Ok(l) => l,
             // EOF mid-headers is malformed, not a clean close
             Err(ParseError::Closed) => return Err(ParseError::BadHeader("<eof>".into())),
@@ -145,7 +208,15 @@ pub fn parse_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpReques
         };
         headers.push((name.trim().to_ascii_lowercase(), value.trim().to_string()));
     }
-    let req = HttpRequest { method, path, headers, body: Vec::new() };
+    let req =
+        HttpRequest { method, path, headers, body: Vec::new(), keep_alive: true };
+    // HTTP/1.1 defaults to keep-alive, 1.0 to close; an explicit
+    // `Connection:` token overrides either default
+    let keep_alive = match req.header("connection") {
+        Some(v) if v.to_ascii_lowercase().contains("close") => false,
+        Some(v) if v.to_ascii_lowercase().contains("keep-alive") => true,
+        _ => !http10,
+    };
     let body_len = match req.header("content-length") {
         Some(v) => v.parse::<usize>().map_err(|_| ParseError::MissingLength)?,
         None if req.method == "POST" || req.method == "PUT" => {
@@ -156,14 +227,35 @@ pub fn parse_request(r: &mut impl BufRead, max_body: usize) -> Result<HttpReques
     if body_len > max_body {
         return Err(ParseError::BodyTooLarge { declared: body_len, limit: max_body });
     }
+    // body: read in slices so a trickled body re-checks the deadline —
+    // one read_exact would let the drip outlive it
     let mut body = vec![0u8; body_len];
-    r.read_exact(&mut body).map_err(ParseError::Io)?;
-    Ok(HttpRequest { body, ..req })
+    let mut filled = 0usize;
+    while filled < body_len {
+        if deadline.is_some_and(|d| Instant::now() >= d) {
+            return Err(ParseError::Timeout);
+        }
+        let take = (body_len - filled).min(8 * 1024);
+        match r.read(&mut body[filled..filled + take]) {
+            Ok(0) => {
+                return Err(ParseError::Io(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("body truncated at {filled} of {body_len} bytes"),
+                )))
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) if is_timeout(&e) => return Err(ParseError::Timeout),
+            Err(e) => return Err(ParseError::Io(e)),
+        }
+    }
+    Ok(HttpRequest { body, keep_alive, ..req })
 }
 
 /// Write a complete fixed-length response (status line, standard
-/// headers, `extra` headers, body) and flush. Every response closes the
-/// connection — the server is strictly one-request-per-connection.
+/// headers, `extra` headers, body) and flush. `keep_alive` picks the
+/// `Connection:` header — the route layer owns that decision (client
+/// preference ∧ per-connection request cap ∧ not shutting down).
 pub fn write_response(
     w: &mut impl Write,
     status: u16,
@@ -171,11 +263,12 @@ pub fn write_response(
     content_type: &str,
     extra: &[(&str, &str)],
     body: &[u8],
+    keep_alive: bool,
 ) -> io::Result<()> {
     write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
     write!(w, "Content-Type: {content_type}\r\n")?;
     write!(w, "Content-Length: {}\r\n", body.len())?;
-    write!(w, "Connection: close\r\n")?;
+    write!(w, "Connection: {}\r\n", if keep_alive { "keep-alive" } else { "close" })?;
     for (k, v) in extra {
         write!(w, "{k}: {v}\r\n")?;
     }
@@ -188,7 +281,9 @@ pub fn write_response(
 /// the header block, each `chunk` sends one length-prefixed frame and
 /// FLUSHES (a streamed token must reach the client now, not when a
 /// buffer fills — this flush is also how a dead client is detected
-/// promptly), `finish` sends the terminal zero-length chunk.
+/// promptly), `finish` sends the terminal zero-length chunk. Chunked
+/// bodies are self-delimiting, so a finished stream can keep its
+/// connection alive like any fixed-length response.
 pub struct ChunkedWriter<'w, W: Write> {
     w: &'w mut W,
 }
@@ -199,11 +294,12 @@ impl<'w, W: Write> ChunkedWriter<'w, W> {
         status: u16,
         reason: &str,
         content_type: &str,
+        keep_alive: bool,
     ) -> io::Result<ChunkedWriter<'w, W>> {
         write!(w, "HTTP/1.1 {status} {reason}\r\n")?;
         write!(w, "Content-Type: {content_type}\r\n")?;
         write!(w, "Transfer-Encoding: chunked\r\n")?;
-        write!(w, "Connection: close\r\n\r\n")?;
+        write!(w, "Connection: {}\r\n\r\n", if keep_alive { "keep-alive" } else { "close" })?;
         w.flush()?;
         Ok(ChunkedWriter { w })
     }
@@ -228,9 +324,10 @@ impl<'w, W: Write> ChunkedWriter<'w, W> {
 mod tests {
     use super::*;
     use std::io::Cursor;
+    use std::time::Duration;
 
     fn parse(text: &str) -> Result<HttpRequest, ParseError> {
-        parse_request(&mut Cursor::new(text.as_bytes()), 1024)
+        parse_request(&mut Cursor::new(text.as_bytes()), 1024, None)
     }
 
     #[test]
@@ -242,6 +339,7 @@ mod tests {
         assert_eq!(req.header("host"), Some("x"));
         assert_eq!(req.header("HOST"), Some("x"), "lookup is case-insensitive");
         assert_eq!(req.body, b"{\"a\": 1}\n");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
     }
 
     #[test]
@@ -250,6 +348,18 @@ mod tests {
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/metrics");
         assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn connection_negotiation_follows_version_and_header() {
+        let req = parse("GET /healthz HTTP/1.1\r\nConnection: close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive, "explicit close wins over the 1.1 default");
+        let req = parse("GET /healthz HTTP/1.0\r\n\r\n").unwrap();
+        assert!(!req.keep_alive, "HTTP/1.0 defaults to close");
+        let req = parse("GET /healthz HTTP/1.0\r\nConnection: keep-alive\r\n\r\n").unwrap();
+        assert!(req.keep_alive, "explicit keep-alive wins over the 1.0 default");
+        let req = parse("GET /healthz HTTP/1.1\r\nConnection: Close\r\n\r\n").unwrap();
+        assert!(!req.keep_alive, "token match is case-insensitive");
     }
 
     #[test]
@@ -315,24 +425,193 @@ mod tests {
         assert!(matches!(e, ParseError::Io(_)), "{e:?}");
     }
 
+    /// A reader that yields its script one item at a time: `Ok(bytes)`
+    /// frames arrive intact, `TimedOut` simulates the socket read
+    /// timeout a stalled peer produces. BufRead so it plugs straight
+    /// into `parse_request` — the adversarial-framing harness.
+    struct ScriptedReader {
+        script: std::collections::VecDeque<Result<Vec<u8>, io::ErrorKind>>,
+        cur: Vec<u8>,
+    }
+
+    impl ScriptedReader {
+        fn new(script: Vec<Result<&[u8], io::ErrorKind>>) -> ScriptedReader {
+            ScriptedReader {
+                script: script.into_iter().map(|r| r.map(<[u8]>::to_vec)).collect(),
+                cur: Vec::new(),
+            }
+        }
+    }
+
+    impl Read for ScriptedReader {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let avail = self.fill_buf()?;
+            let n = avail.len().min(buf.len());
+            buf[..n].copy_from_slice(&avail[..n]);
+            self.consume(n);
+            Ok(n)
+        }
+    }
+
+    impl BufRead for ScriptedReader {
+        fn fill_buf(&mut self) -> io::Result<&[u8]> {
+            if self.cur.is_empty() {
+                match self.script.pop_front() {
+                    Some(Ok(b)) => self.cur = b,
+                    Some(Err(kind)) => return Err(io::Error::new(kind, "scripted")),
+                    None => {} // EOF
+                }
+            }
+            Ok(&self.cur)
+        }
+
+        fn consume(&mut self, amt: usize) {
+            self.cur.drain(..amt);
+        }
+    }
+
+    #[test]
+    fn byte_at_a_time_trickle_still_parses() {
+        // correct framing must survive maximal fragmentation: one byte
+        // per read, header and body alike
+        let wire = b"POST /v1/generate HTTP/1.1\r\nContent-Length: 11\r\n\r\n{\"a\": [1]}\n";
+        let script: Vec<Result<&[u8], io::ErrorKind>> =
+            wire.chunks(1).map(|c| Ok(c)).collect();
+        let mut r = ScriptedReader::new(script);
+        let req = parse_request(&mut r, 1024, None).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"a\": [1]}\n");
+    }
+
+    #[test]
+    fn stall_mid_headers_is_408_timeout() {
+        // the slow loris: part of the header block arrives, then the
+        // socket read timeout fires forever after
+        let mut r = ScriptedReader::new(vec![
+            Ok(b"POST /v1/generate HTTP/1.1\r\nContent-Le"),
+            Err(io::ErrorKind::TimedOut),
+        ]);
+        let e = parse_request(&mut r, 1024, None).unwrap_err();
+        assert!(matches!(e, ParseError::Timeout), "{e:?}");
+        assert_eq!(status_for(&e).0, 408);
+    }
+
+    #[test]
+    fn stall_after_complete_headers_is_408_timeout() {
+        // headers land whole, the promised body never starts
+        let mut r = ScriptedReader::new(vec![
+            Ok(b"POST /v1/generate HTTP/1.1\r\nContent-Length: 40\r\n\r\n"),
+            Err(io::ErrorKind::TimedOut),
+        ]);
+        let e = parse_request(&mut r, 1024, None).unwrap_err();
+        assert!(matches!(e, ParseError::Timeout), "{e:?}");
+        assert_eq!(status_for(&e).0, 408);
+    }
+
+    #[test]
+    fn body_split_mid_content_length_then_stall_is_408() {
+        // half the declared body arrives, then the drip stops — the
+        // worker must get a typed timeout, not spin or panic
+        let mut r = ScriptedReader::new(vec![
+            Ok(b"POST /v1/generate HTTP/1.1\r\nContent-Length: 20\r\n\r\n"),
+            Ok(b"{\"prompt\": "),
+            Err(io::ErrorKind::WouldBlock),
+        ]);
+        let e = parse_request(&mut r, 1024, None).unwrap_err();
+        assert!(matches!(e, ParseError::Timeout), "{e:?}");
+        assert_eq!(status_for(&e).0, 408);
+    }
+
+    #[test]
+    fn timeout_before_any_byte_is_idle_not_408() {
+        let mut r = ScriptedReader::new(vec![Err(io::ErrorKind::WouldBlock)]);
+        let e = parse_request(&mut r, 1024, None).unwrap_err();
+        assert!(matches!(e, ParseError::IdleTimeout), "{e:?}");
+        assert_eq!(status_for(&e).0, 0, "idleness earns no response, just a close");
+    }
+
+    /// Delays each frame by a few ms — enough for a short wall-clock
+    /// deadline to expire BETWEEN reads while bytes keep arriving.
+    struct SlowReader {
+        inner: ScriptedReader,
+        delay: Duration,
+    }
+
+    impl Read for SlowReader {
+        fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+            let avail = self.fill_buf()?;
+            let n = avail.len().min(buf.len());
+            buf[..n].copy_from_slice(&avail[..n]);
+            self.consume(n);
+            Ok(n)
+        }
+    }
+
+    impl BufRead for SlowReader {
+        fn fill_buf(&mut self) -> io::Result<&[u8]> {
+            if self.inner.cur.is_empty() {
+                std::thread::sleep(self.delay);
+            }
+            self.inner.fill_buf()
+        }
+
+        fn consume(&mut self, amt: usize) {
+            self.inner.consume(amt);
+        }
+    }
+
+    #[test]
+    fn expired_deadline_is_408_even_when_bytes_keep_coming() {
+        // the deadline is the defense per-read timeouts can't provide:
+        // a client dripping bytes fast enough to reset the socket timer
+        // still runs out of wall clock
+        let wire = b"POST /v1/generate HTTP/1.1\r\nX-Drip: 1\r\nContent-Length: 4\r\n\r\nbody";
+        let script: Vec<Result<&[u8], io::ErrorKind>> = wire.chunks(8).map(|c| Ok(c)).collect();
+        let mut r =
+            SlowReader { inner: ScriptedReader::new(script), delay: Duration::from_millis(5) };
+        let deadline = Instant::now() + Duration::from_millis(8);
+        let e = parse_request(&mut r, 1024, Some(deadline)).unwrap_err();
+        assert!(matches!(e, ParseError::Timeout), "{e:?}");
+        assert_eq!(status_for(&e).0, 408);
+        // the same wire under a live deadline parses fine
+        let script: Vec<Result<&[u8], io::ErrorKind>> = wire.chunks(8).map(|c| Ok(c)).collect();
+        let mut r = ScriptedReader::new(script);
+        let live = Instant::now() + Duration::from_secs(30);
+        assert!(parse_request(&mut r, 1024, Some(live)).is_ok(), "a live deadline admits");
+    }
+
     #[test]
     fn fixed_response_wire_format() {
         let mut out = Vec::new();
-        write_response(&mut out, 200, "OK", "application/json", &[("Retry-After", "1")], b"{}")
-            .unwrap();
+        write_response(
+            &mut out,
+            200,
+            "OK",
+            "application/json",
+            &[("Retry-After", "1")],
+            b"{}",
+            false,
+        )
+        .unwrap();
         let text = String::from_utf8(out).unwrap();
         assert!(text.starts_with("HTTP/1.1 200 OK\r\n"), "{text}");
         assert!(text.contains("Content-Length: 2\r\n"), "{text}");
         assert!(text.contains("Connection: close\r\n"), "{text}");
         assert!(text.contains("Retry-After: 1\r\n"), "{text}");
         assert!(text.ends_with("\r\n\r\n{}"), "{text}");
+
+        let mut out = Vec::new();
+        write_response(&mut out, 200, "OK", "text/plain", &[], b"ok", true).unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"), "{text}");
     }
 
     #[test]
     fn chunked_response_wire_format() {
         let mut out = Vec::new();
         {
-            let mut cw = ChunkedWriter::begin(&mut out, 200, "OK", "application/x-ndjson").unwrap();
+            let mut cw =
+                ChunkedWriter::begin(&mut out, 200, "OK", "application/x-ndjson", false).unwrap();
             cw.chunk(b"{\"token\":5}\n").unwrap();
             cw.chunk(b"").unwrap(); // no-op, must NOT terminate the stream
             cw.chunk(b"{\"done\":true}\n").unwrap();
@@ -340,6 +619,7 @@ mod tests {
         }
         let text = String::from_utf8(out).unwrap();
         assert!(text.contains("Transfer-Encoding: chunked\r\n"), "{text}");
+        assert!(text.contains("Connection: close\r\n"), "{text}");
         assert!(text.contains("c\r\n{\"token\":5}\n\r\n"), "{text}");
         assert!(text.contains("e\r\n{\"done\":true}\n\r\n"), "{text}");
         assert!(text.ends_with("0\r\n\r\n"), "{text}");

@@ -10,21 +10,33 @@
 //!   between draining a command channel (submit / cancel / snapshot —
 //!   each a message, never a shared lock around the engine) and stepping
 //!   the batch; sampled tokens fan out through `Engine::set_on_token` to
-//!   per-request event channels the moment they exist.
-//! - **one acceptor thread** owns the listener and spawns a short-lived
-//!   worker thread per connection (strictly one request per connection —
-//!   see [`http`]); on shutdown it stops accepting and joins every
-//!   worker before the driver is allowed to exit.
-//! - **worker threads** parse the request, talk to the driver through
-//!   the command channel, and write the response — fixed-length JSON for
-//!   plain generation, chunked transfer encoding fed by the per-request
-//!   event channel for `"stream": true`.
+//!   per-request event channels the moment they exist. It also meters
+//!   its own drain rate, so backpressure responses carry a measured
+//!   `Retry-After` instead of a constant.
+//! - **one acceptor thread** owns the listener and feeds accepted
+//!   connections into a BOUNDED queue; when the queue is full it answers
+//!   `503` + `Retry-After` right at accept time — load is shed before a
+//!   hostile burst can pin anything. No thread is ever spawned per
+//!   connection.
+//! - **a fixed pool of worker threads** ([`ServerConfig::pool_workers`])
+//!   pulls connections off the queue and runs the keep-alive request
+//!   loop on each: parse (under read timeouts and a header-read
+//!   deadline), route, answer, repeat until the connection closes, goes
+//!   idle, or exhausts its per-connection request cap. Concurrent
+//!   connection count can no longer exhaust threads by construction.
 //!
 //! Robustness is part of the contract, not an afterthought:
 //!
-//! - the pending queue is bounded ([`ServerConfig::max_pending`]):
-//!   a full queue answers `429 Too Many Requests` with `Retry-After`
-//!   and the engine never sees the request — no state to leak;
+//! - the pending queue is bounded ([`ServerConfig::max_pending`]): a
+//!   full queue answers `429 Too Many Requests` with a `Retry-After`
+//!   computed from live queue depth and the measured completion rate,
+//!   and the engine never sees the request — no state to leak. A
+//!   request whose own queue-wait deadline provably cannot be met is
+//!   refused the same way instead of queueing doomed work;
+//! - a slow-loris client (header drip, mid-body stall) is dropped with
+//!   a typed `408` once its socket goes quiet past the read timeout or
+//!   its request outlives the header-read deadline — either way the
+//!   worker is reclaimed;
 //! - a client that disconnects mid-stream triggers
 //!   [`Engine::cancel`](crate::serve::Engine::cancel), so the stream's
 //!   K/V pages reclaim immediately instead of decoding for a ghost;
@@ -32,32 +44,41 @@
 //!   [`http::ParseError`]), unknown routes `404`, wrong methods `405`;
 //! - `GET /metrics` renders the engine's [`EngineSnapshot`] (queue
 //!   depth, live streams, live K/V pages, the full [`EngineStats`]
-//!   ledger) plus the server's own HTTP counters as a plain-text
-//!   exposition;
-//! - [`ServerHandle::shutdown`] drains: stop accepting, join workers
-//!   (each holds out for its completion), then let the driver finish
-//!   every queued and live stream before the thread exits.
+//!   ledger) plus the server's own HTTP counters — every shed,
+//!   timed-out and wire-faulted connection lands in a typed counter;
+//! - [`ServerHandle::shutdown`] drains: stop accepting, serve whatever
+//!   was already queued, join every pool worker, then let the driver
+//!   finish every queued and live stream before the thread exits. The
+//!   returned [`ShutdownReport`] counts the joined workers so tests can
+//!   pin full thread reclamation;
+//! - the wire layer is deterministically faultable: a
+//!   [`netfaults::NetFaultPlan`] scripts per-connection short reads,
+//!   stalls and mid-stream disconnects at the normal read/write points,
+//!   so blast-radius tests can prove a hostile connection never
+//!   perturbs a well-behaved one.
 //!
 //! Endpoints: `POST /v1/generate`, `GET /metrics`, `GET /healthz`.
 
 pub mod client;
 pub mod http;
+pub mod netfaults;
 mod routes;
 
-use std::collections::HashMap;
+use std::collections::{HashMap, VecDeque};
 use std::io;
 use std::net::{SocketAddr, TcpListener};
 use std::rc::Rc;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::model::LanguageModel;
 use crate::serve::{
     Completion, Deadline, Engine, EngineConfig, EngineSnapshot, Request, RequestId,
 };
+use netfaults::{NetFaultPlan, Wire};
 
 /// Server knobs, wrapping the engine's own [`EngineConfig`].
 #[derive(Clone, Copy, Debug)]
@@ -72,12 +93,42 @@ pub struct ServerConfig {
     /// Request body cap in bytes; a larger declared `Content-Length`
     /// answers `413` without reading the body.
     pub max_body_bytes: usize,
-    /// Socket read timeout while parsing a request (a stalled or
-    /// byte-dripping client cannot pin a worker forever).
+    /// Per-read socket timeout while a request is in flight (a stalled
+    /// client maps to a typed `408`), and the wait bound for the FIRST
+    /// request of a fresh connection.
     pub read_timeout_ms: u64,
+    /// Wall-clock deadline for reading one whole request (head + body).
+    /// The defense `read_timeout_ms` can't provide: a slow-loris client
+    /// dripping one byte per timeout window still runs out of clock.
+    pub header_deadline_ms: u64,
+    /// Socket write timeout — a client that stops reading its response
+    /// cannot pin a worker behind a full send buffer.
+    pub write_timeout_ms: u64,
+    /// Keep-alive: how long a kept-alive connection may sit idle
+    /// between requests before the server closes it.
+    pub idle_timeout_ms: u64,
+    /// Keep-alive: requests served per connection before the server
+    /// closes it (`Connection: close` on the last response). Bounds how
+    /// long any one client can monopolize a pool worker.
+    pub keepalive_max_requests: usize,
+    /// Fixed worker-pool size: the maximum number of connections being
+    /// SERVED concurrently. More connections queue (bounded by
+    /// `conn_backlog`) or shed with `503`.
+    pub pool_workers: usize,
+    /// Bound on accepted connections waiting for a free pool worker;
+    /// overflow is answered `503` + `Retry-After` at accept time.
+    pub conn_backlog: usize,
+    /// Server-side clamp on any request's `max_new_tokens`: a hostile
+    /// body asking for an unbounded decode is clamped to this (the
+    /// response's `tokens` length says so — no silent truncation of
+    /// well-behaved asks, which sit far below it).
+    pub max_new_tokens_cap: usize,
     /// `max_new_tokens` when the request body doesn't set one.
     pub default_max_new_tokens: usize,
-    /// Seconds advertised in the `Retry-After` header of a `429`.
+    /// Floor (and no-data fallback) for the `Retry-After` seconds on
+    /// `429`/`503`. Once the driver has measured a drain rate, the
+    /// advertised value is `queued / rate`, clamped to
+    /// `[retry_after_s, 60]`.
     pub retry_after_s: u32,
 }
 
@@ -88,6 +139,13 @@ impl Default for ServerConfig {
             max_pending: 64,
             max_body_bytes: 1 << 20,
             read_timeout_ms: 5_000,
+            header_deadline_ms: 10_000,
+            write_timeout_ms: 5_000,
+            idle_timeout_ms: 5_000,
+            keepalive_max_requests: 64,
+            pool_workers: 8,
+            conn_backlog: 64,
+            max_new_tokens_cap: 4096,
             default_max_new_tokens: 32,
             retry_after_s: 1,
         }
@@ -97,22 +155,48 @@ impl Default for ServerConfig {
 /// Server-side HTTP counters (the engine's own ledger lives in
 /// [`EngineStats`](crate::serve::EngineStats)); rendered by `/metrics`
 /// next to the engine snapshot. Plain relaxed atomics — they are
-/// monotone counters, not synchronization.
+/// monotone counters, not synchronization. Between them, every
+/// connection the server degraded on purpose — shed, timed out, refused
+/// or wire-faulted — is accounted in a typed counter.
 #[derive(Debug, Default)]
 pub struct Counters {
+    /// Connections taken off the listener (shed ones included).
+    pub conns_accepted: AtomicUsize,
     /// Requests that parsed well enough to be routed.
     pub http_requests: AtomicUsize,
+    /// Requests served on an already-used keep-alive connection (the
+    /// second and later request of each connection).
+    pub keepalive_reuses: AtomicUsize,
+    /// Connections closed for idling between requests (or connecting
+    /// and never sending a byte). No response is owed.
+    pub idle_closes: AtomicUsize,
     /// Submissions refused by the bounded pending queue.
     pub http_429: AtomicUsize,
+    /// The subset of `http_429` refused because the request's own
+    /// queue-wait deadline provably could not be met at the live queue
+    /// depth (doomed work shed at admission).
+    pub http_429_doomed: AtomicUsize,
     /// Malformed requests (bad request line / header / JSON / prompt).
     pub http_400: AtomicUsize,
     /// Unknown routes (`405`s for known routes are not counted here).
     pub http_404: AtomicUsize,
+    /// Requests that stalled mid-flight (socket timeout or header-read
+    /// deadline) and were answered `408` + close.
+    pub http_408: AtomicUsize,
     /// Oversized request bodies.
     pub http_413: AtomicUsize,
+    /// Connections shed with `503` at accept time because the bounded
+    /// connection queue was full.
+    pub http_503_shed: AtomicUsize,
     /// Streaming responses abandoned by the client mid-stream; each one
     /// cancelled its engine request.
     pub stream_disconnects: AtomicUsize,
+    /// Scripted wire faults that fired: read stalls.
+    pub net_stalls: AtomicUsize,
+    /// Scripted wire faults that fired: mid-stream disconnects.
+    pub net_disconnects: AtomicUsize,
+    /// Connections that ran with scripted short reads/writes.
+    pub net_short_io_conns: AtomicUsize,
 }
 
 impl Counters {
@@ -121,11 +205,17 @@ impl Counters {
     }
 }
 
-/// Outcome of a submit command: admitted with an id, or refused by the
-/// bounded queue (the HTTP layer turns `Busy` into `429`).
+/// Outcome of a submit command: admitted with an id, or refused before
+/// the engine saw it (the HTTP layer turns both refusals into `429`,
+/// with the measured `retry_after_s` and, for `Doomed`, a body naming
+/// the unmeetable deadline).
 pub(crate) enum SubmitReply {
     Accepted(RequestId),
-    Busy { queued: usize },
+    /// The bounded pending queue is full.
+    Busy { queued: usize, retry_after_s: u32 },
+    /// The request's `deadline_wait_rounds` cannot be met: at the live
+    /// queue depth it needs at least `need_rounds` admit rounds.
+    Doomed { queued: usize, need_rounds: usize, allowed_rounds: usize, retry_after_s: u32 },
 }
 
 /// Per-request event stream, driver → worker. Tokens arrive the moment
@@ -154,6 +244,112 @@ pub(crate) enum Cmd {
     Resume,
 }
 
+// ------------------------------------------------------------- conn queue
+
+/// An accepted connection waiting for a pool worker.
+pub(crate) struct Job {
+    pub(crate) wire: Wire,
+}
+
+/// The bounded handoff between the acceptor and the worker pool:
+/// `try_push` refuses when full (the acceptor sheds with `503`), `pop`
+/// blocks until a job or close-and-empty. Depth is mirrored in an
+/// atomic so `/metrics` and the keep-alive idle-yield never take the
+/// lock.
+pub(crate) struct ConnQueue {
+    q: Mutex<(VecDeque<Job>, bool)>,
+    cv: Condvar,
+    cap: usize,
+    depth: AtomicUsize,
+}
+
+impl ConnQueue {
+    fn new(cap: usize) -> ConnQueue {
+        ConnQueue {
+            q: Mutex::new((VecDeque::new(), false)),
+            cv: Condvar::new(),
+            cap: cap.max(1),
+            depth: AtomicUsize::new(0),
+        }
+    }
+
+    /// Enqueue unless full. Full → the job comes back (the acceptor
+    /// sheds it); a closed queue refuses too.
+    fn try_push(&self, job: Job) -> Result<(), Job> {
+        let mut g = self.q.lock().expect("conn queue");
+        if g.1 || g.0.len() >= self.cap {
+            return Err(job);
+        }
+        g.0.push_back(job);
+        self.depth.store(g.0.len(), Ordering::Relaxed);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Next job, blocking; `None` once the queue is closed AND drained
+    /// (workers serve everything that was accepted before shutdown).
+    fn pop(&self) -> Option<Job> {
+        let mut g = self.q.lock().expect("conn queue");
+        loop {
+            if let Some(job) = g.0.pop_front() {
+                self.depth.store(g.0.len(), Ordering::Relaxed);
+                return Some(job);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.cv.wait(g).expect("conn queue");
+        }
+    }
+
+    fn close(&self) {
+        self.q.lock().expect("conn queue").1 = true;
+        self.cv.notify_all();
+    }
+
+    pub(crate) fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed)
+    }
+}
+
+/// Pool service-time accounting, fed by the workers and read by the
+/// acceptor to compute an honest `Retry-After` for accept-time sheds:
+/// `depth x avg_service / workers`, clamped — a measured estimate of
+/// when a slot will actually exist, not a constant.
+#[derive(Debug, Default)]
+pub(crate) struct PoolStats {
+    served: AtomicUsize,
+    busy_micros: AtomicU64,
+}
+
+impl PoolStats {
+    fn record(&self, d: Duration) {
+        self.served.fetch_add(1, Ordering::Relaxed);
+        self.busy_micros.fetch_add(d.as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Seconds until a queue of `depth` connections plausibly drains
+    /// across `workers` — or `fallback` before any service time exists.
+    fn retry_after_s(&self, depth: usize, workers: usize, fallback: u32) -> u32 {
+        let served = self.served.load(Ordering::Relaxed);
+        if served == 0 {
+            return fallback;
+        }
+        let avg_s = self.busy_micros.load(Ordering::Relaxed) as f64 / served as f64 / 1e6;
+        let secs = (depth.max(1) as f64 * avg_s / workers.max(1) as f64).ceil();
+        (secs as u32).clamp(fallback, 60)
+    }
+}
+
+/// What [`ServerHandle::shutdown`] observed on the way down — lets
+/// tests pin that every pool thread was reclaimed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShutdownReport {
+    /// Pool workers joined (== `ServerConfig::pool_workers` unless a
+    /// worker panicked).
+    pub pool_workers_joined: usize,
+}
+
 /// A running server: its bound address plus the shutdown plumbing.
 /// Dropping the handle shuts the server down (drain semantics — see
 /// [`ServerHandle::shutdown`]).
@@ -162,7 +358,9 @@ pub struct ServerHandle {
     stop: Arc<AtomicBool>,
     cmd_tx: Option<Sender<Cmd>>,
     acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
     driver: Option<JoinHandle<()>>,
+    queue: Arc<ConnQueue>,
     counters: Arc<Counters>,
 }
 
@@ -196,25 +394,36 @@ impl ServerHandle {
     }
 
     /// Graceful shutdown, in dependency order: stop the acceptor (no
-    /// new connections), join every in-flight worker (each holds out
-    /// for its response — live streams drain, they are not cut), then
-    /// drop the command channel so the driver finishes whatever work
-    /// remains and exits. Idempotent; also runs on drop.
-    pub fn shutdown(mut self) {
-        self.shutdown_impl();
+    /// new connections), close the connection queue, join every pool
+    /// worker (each serves out its current — and any already-queued —
+    /// connection; live streams drain, they are not cut), then drop the
+    /// command channel so the driver finishes whatever work remains and
+    /// exits. Idempotent; also runs on drop.
+    pub fn shutdown(mut self) -> ShutdownReport {
+        self.shutdown_impl()
     }
 
-    fn shutdown_impl(&mut self) {
+    fn shutdown_impl(&mut self) -> ShutdownReport {
         self.stop.store(true, Ordering::SeqCst);
         if let Some(h) = self.acceptor.take() {
             let _ = h.join();
         }
-        // all workers are joined; dropping the last external sender lets
+        // no more pushes: close the queue so idle workers wake, and
+        // busy ones drain what was already accepted
+        self.queue.close();
+        let mut joined = 0usize;
+        for h in self.workers.drain(..) {
+            if h.join().is_ok() {
+                joined += 1;
+            }
+        }
+        // all workers are gone; dropping the last external sender lets
         // the driver drain and exit
         self.cmd_tx.take();
         if let Some(h) = self.driver.take() {
             let _ = h.join();
         }
+        ShutdownReport { pool_workers_joined: joined }
     }
 }
 
@@ -238,36 +447,89 @@ impl Server {
         addr: &str,
         cfg: ServerConfig,
     ) -> io::Result<ServerHandle> {
+        Server::start_with_netfaults(model, addr, cfg, NetFaultPlan::new())
+    }
+
+    /// [`Server::start`] with a scripted [`NetFaultPlan`]: chosen
+    /// connections (by accept order) get trickled reads, stalls or
+    /// mid-stream disconnects injected at the wire layer's normal
+    /// read/write points. The default (empty) plan is a no-op — this is
+    /// the deterministic-chaos entry point for tests and the chaos
+    /// smoke, on exactly the production code path.
+    pub fn start_with_netfaults<M: LanguageModel + 'static>(
+        model: M,
+        addr: &str,
+        cfg: ServerConfig,
+        faults: NetFaultPlan,
+    ) -> io::Result<ServerHandle> {
         assert!(cfg.max_body_bytes >= 1, "max_body_bytes must admit a body");
+        assert!(cfg.pool_workers >= 1, "the pool needs at least one worker");
+        assert!(cfg.keepalive_max_requests >= 1, "a connection must serve at least one request");
+        assert!(cfg.max_new_tokens_cap >= 1, "a zero token cap would make every request empty");
         let listener = TcpListener::bind(addr)?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
         let counters = Arc::new(Counters::default());
+        let queue = Arc::new(ConnQueue::new(cfg.conn_backlog));
+        let pool_stats = Arc::new(PoolStats::default());
         let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<Cmd>();
         let vocab = model.vocab();
 
         let driver = {
             let max_pending = cfg.max_pending;
+            let engine_cfg = cfg.engine;
+            let retry_floor = cfg.retry_after_s;
             std::thread::Builder::new()
                 .name("apt-http-driver".into())
-                .spawn(move || drive(model, cfg.engine, max_pending, cmd_rx))?
+                .spawn(move || drive(model, engine_cfg, max_pending, retry_floor, cmd_rx))?
         };
 
+        let ctx = routes::Ctx {
+            cmd: cmd_tx.clone(),
+            counters: counters.clone(),
+            queue: queue.clone(),
+            stop: stop.clone(),
+            vocab,
+            max_body: cfg.max_body_bytes,
+            default_max_new: cfg.default_max_new_tokens,
+            max_new_cap: cfg.max_new_tokens_cap,
+            retry_after_s: cfg.retry_after_s,
+            read_timeout: Duration::from_millis(cfg.read_timeout_ms.max(1)),
+            idle_timeout: Duration::from_millis(cfg.idle_timeout_ms.max(1)),
+            header_deadline: Duration::from_millis(cfg.header_deadline_ms.max(1)),
+            keepalive_max_requests: cfg.keepalive_max_requests,
+            pool_workers: cfg.pool_workers,
+        };
+
+        let mut workers = Vec::with_capacity(cfg.pool_workers);
+        for i in 0..cfg.pool_workers {
+            let queue = queue.clone();
+            let ctx = ctx.clone();
+            let pool_stats = pool_stats.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("apt-http-worker-{i}"))
+                    .spawn(move || worker_loop(&queue, &ctx, &pool_stats))?,
+            );
+        }
+
         let acceptor = {
-            let ctx = routes::Ctx {
-                cmd: cmd_tx.clone(),
-                counters: counters.clone(),
-                vocab,
-                max_body: cfg.max_body_bytes,
-                default_max_new: cfg.default_max_new_tokens,
-                retry_after_s: cfg.retry_after_s,
-            };
             let stop = stop.clone();
-            let read_timeout = Duration::from_millis(cfg.read_timeout_ms.max(1));
+            let queue = queue.clone();
+            let counters = counters.clone();
+            let a = AcceptCtx {
+                faults,
+                counters,
+                pool_stats,
+                queue,
+                write_timeout: Duration::from_millis(cfg.write_timeout_ms.max(1)),
+                pool_workers: cfg.pool_workers,
+                retry_after_floor: cfg.retry_after_s,
+            };
             std::thread::Builder::new()
                 .name("apt-http-acceptor".into())
-                .spawn(move || accept_loop(listener, ctx, stop, read_timeout))?
+                .spawn(move || accept_loop(listener, a, stop))?
         };
 
         Ok(ServerHandle {
@@ -275,37 +537,57 @@ impl Server {
             stop,
             cmd_tx: Some(cmd_tx),
             acceptor: Some(acceptor),
+            workers,
             driver: Some(driver),
+            queue,
             counters,
         })
     }
 }
 
-/// The acceptor role: accept until told to stop, one worker thread per
-/// connection, every worker joined before this thread exits (that join
-/// is what makes [`ServerHandle::shutdown`] a drain — a live stream's
-/// worker holds out for its final chunk).
-fn accept_loop(
-    listener: TcpListener,
-    ctx: routes::Ctx,
-    stop: Arc<AtomicBool>,
-    read_timeout: Duration,
-) {
-    let mut workers: Vec<JoinHandle<()>> = Vec::new();
+struct AcceptCtx {
+    faults: NetFaultPlan,
+    counters: Arc<Counters>,
+    pool_stats: Arc<PoolStats>,
+    queue: Arc<ConnQueue>,
+    write_timeout: Duration,
+    pool_workers: usize,
+    retry_after_floor: u32,
+}
+
+/// The acceptor role: accept until told to stop, wrap each connection
+/// in its (usually clean) fault-plan [`Wire`], and hand it to the
+/// bounded queue. A full queue is LOAD SHEDDING, not an error: the
+/// connection is answered `503` + a drain-rate-derived `Retry-After`
+/// on a short detached thread and closed — no pool worker is touched.
+fn accept_loop(listener: TcpListener, a: AcceptCtx, stop: Arc<AtomicBool>) {
+    let mut conn_no = 0usize;
+    let mut sheds: Vec<JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::SeqCst) {
         match listener.accept() {
             Ok((stream, _peer)) => {
                 // the listener is non-blocking (that's how stop is
                 // polled); accepted sockets must not inherit that
                 let _ = stream.set_nonblocking(false);
-                let _ = stream.set_read_timeout(Some(read_timeout));
                 let _ = stream.set_nodelay(true);
-                let ctx = ctx.clone();
-                if let Ok(h) = std::thread::Builder::new()
-                    .name("apt-http-worker".into())
-                    .spawn(move || routes::handle_connection(stream, &ctx))
-                {
-                    workers.push(h);
+                let _ = stream.set_write_timeout(Some(a.write_timeout));
+                let script = a.faults.script_for(conn_no);
+                conn_no += 1;
+                Counters::bump(&a.counters.conns_accepted);
+                let wire = Wire::new(stream, script, a.counters.clone());
+                if let Err(job) = a.queue.try_push(Job { wire }) {
+                    Counters::bump(&a.counters.http_503_shed);
+                    let retry = a.pool_stats.retry_after_s(
+                        a.queue.depth(),
+                        a.pool_workers,
+                        a.retry_after_floor,
+                    );
+                    if let Ok(h) = std::thread::Builder::new()
+                        .name("apt-http-shed".into())
+                        .spawn(move || shed_connection(job, retry))
+                    {
+                        sheds.push(h);
+                    }
                 }
             }
             Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
@@ -313,10 +595,10 @@ fn accept_loop(
             }
             Err(_) => std::thread::sleep(Duration::from_millis(5)),
         }
-        // reap finished workers so a long-lived server doesn't
+        // reap finished shed threads so a sustained overload doesn't
         // accumulate handles (join on a finished thread is immediate)
-        if workers.len() >= 32 {
-            workers = workers
+        if sheds.len() >= 32 {
+            sheds = sheds
                 .into_iter()
                 .filter_map(|h| {
                     if h.is_finished() {
@@ -329,8 +611,80 @@ fn accept_loop(
                 .collect();
         }
     }
-    for h in workers {
+    for h in sheds {
         let _ = h.join();
+    }
+}
+
+/// Answer a shed connection `503` and close it gently: drain whatever
+/// request bytes the client already sent so the close delivers the
+/// response instead of resetting the connection under it.
+fn shed_connection(mut job: Job, retry_after_s: u32) {
+    let retry = retry_after_s.to_string();
+    let _ = http::write_response(
+        &mut job.wire,
+        503,
+        "Service Unavailable",
+        "text/plain",
+        &[("Retry-After", retry.as_str())],
+        b"connection queue is full\n",
+        false,
+    );
+    job.wire.drain_unread(64 * 1024);
+}
+
+/// The worker role: pull connections off the bounded queue, run each
+/// one's keep-alive loop, account its service time for the shed
+/// estimator. Exits when the queue closes (shutdown) — after draining
+/// any connection that was already accepted.
+fn worker_loop(queue: &ConnQueue, ctx: &routes::Ctx, stats: &PoolStats) {
+    while let Some(job) = queue.pop() {
+        let t0 = Instant::now();
+        routes::handle_connection(job.wire, ctx);
+        stats.record(t0.elapsed());
+    }
+}
+
+/// Sliding window of recent completion times: the drain-rate meter
+/// behind `Retry-After`. Plain data on the driver thread — no atomics,
+/// no locks.
+struct DrainMeter {
+    recent: VecDeque<Instant>,
+}
+
+impl DrainMeter {
+    fn new() -> DrainMeter {
+        DrainMeter { recent: VecDeque::with_capacity(64) }
+    }
+
+    fn note_completion(&mut self) {
+        if self.recent.len() == 64 {
+            self.recent.pop_front();
+        }
+        self.recent.push_back(Instant::now());
+    }
+
+    /// Completions per second over the recent window, if measurable.
+    fn rate(&self) -> Option<f64> {
+        let (first, last) = (self.recent.front()?, self.recent.back()?);
+        let span = last.duration_since(*first).as_secs_f64();
+        if self.recent.len() < 2 || span <= 0.0 {
+            return None;
+        }
+        Some((self.recent.len() - 1) as f64 / span)
+    }
+
+    /// Seconds a newcomer behind `queued` requests should wait before
+    /// retrying: measured queue depth over measured drain rate, clamped
+    /// to `[floor, 60]`; `floor` when no rate has been measured yet.
+    fn retry_after_s(&self, queued: usize, floor: u32) -> u32 {
+        match self.rate() {
+            Some(rate) if rate > 0.0 => {
+                let secs = (queued.max(1) as f64 / rate).ceil();
+                (secs as u32).clamp(floor, 60)
+            }
+            _ => floor,
+        }
     }
 }
 
@@ -343,6 +697,7 @@ fn drive<M: LanguageModel>(
     model: M,
     engine_cfg: EngineConfig,
     max_pending: usize,
+    retry_floor: u32,
     rx: Receiver<Cmd>,
 ) {
     // token fan-out: on_token runs inside Engine::step on this thread;
@@ -360,6 +715,7 @@ fn drive<M: LanguageModel>(
             }
         });
     }
+    let mut drain = DrainMeter::new();
     let mut paused = false;
     let mut disconnected = false;
     loop {
@@ -367,13 +723,15 @@ fn drive<M: LanguageModel>(
         // opportunistically when there is
         if paused || !engine.has_work() {
             match rx.recv_timeout(Duration::from_millis(20)) {
-                Ok(cmd) => handle_cmd(cmd, &mut engine, &subs, &mut paused, max_pending),
+                Ok(cmd) => {
+                    handle_cmd(cmd, &mut engine, &subs, &mut paused, max_pending, retry_floor, &drain)
+                }
                 Err(RecvTimeoutError::Timeout) => {}
                 Err(RecvTimeoutError::Disconnected) => disconnected = true,
             }
         }
         while let Ok(cmd) = rx.try_recv() {
-            handle_cmd(cmd, &mut engine, &subs, &mut paused, max_pending);
+            handle_cmd(cmd, &mut engine, &subs, &mut paused, max_pending, retry_floor, &drain);
         }
         if disconnected {
             // shutdown drains: nothing can pause or submit anymore,
@@ -389,6 +747,7 @@ fn drive<M: LanguageModel>(
         // deliver completions (cancel-driven ones included — cancel
         // pushes to the finished list outside step)
         for c in engine.take_finished() {
+            drain.note_completion();
             if let Some(tx) = subs.borrow_mut().remove(&c.id) {
                 let _ = tx.send(StreamEvent::Done(c));
             }
@@ -402,13 +761,37 @@ fn handle_cmd(
     subs: &Rc<std::cell::RefCell<HashMap<RequestId, Sender<StreamEvent>>>>,
     paused: &mut bool,
     max_pending: usize,
+    retry_floor: u32,
+    drain: &DrainMeter,
 ) {
     match cmd {
         Cmd::Submit { req, deadline, events, reply } => {
             let queued = engine.queued();
+            // doomed-work check first: at the live queue depth the
+            // engine admits at most max_batch requests per round, so a
+            // request at the back needs >= queued / max_batch rounds —
+            // exact under FIFO admission (engine max_wait_rounds = 0),
+            // a front-of-queue-pessimistic estimate under
+            // shortest-first. Queueing it would only burn a slot on
+            // work destined for FinishReason::Deadline.
+            if let Some(allowed) = deadline.max_wait_rounds {
+                let need = queued / engine.config().max_batch.max(1);
+                if need > allowed {
+                    let _ = reply.send(SubmitReply::Doomed {
+                        queued,
+                        need_rounds: need,
+                        allowed_rounds: allowed,
+                        retry_after_s: drain.retry_after_s(queued, retry_floor),
+                    });
+                    return;
+                }
+            }
             if queued >= max_pending {
                 // refused before the engine sees it: nothing to leak
-                let _ = reply.send(SubmitReply::Busy { queued });
+                let _ = reply.send(SubmitReply::Busy {
+                    queued,
+                    retry_after_s: drain.retry_after_s(queued, retry_floor),
+                });
                 return;
             }
             let id = engine.submit_with_deadline(req, deadline);
@@ -575,6 +958,97 @@ mod tests {
         assert_eq!(get("apt_engine_queue_depth"), 0);
         assert_eq!(get("apt_engine_streams_active"), 0);
         assert!(get("apt_http_requests_total") >= 1);
+        assert_eq!(get("apt_http_pool_workers"), ServerConfig::default().pool_workers);
+        assert!(get("apt_http_conns_accepted_total") >= 2);
+        h.shutdown();
+    }
+
+    #[test]
+    fn keepalive_serves_many_requests_on_one_connection() {
+        let h = start_tiny(ServerConfig::default());
+        let mut c = client::Client::new(h.addr());
+        for i in 0..4 {
+            let body = format!(r#"{{"prompt": {}, "max_new_tokens": 2}}"#, prompt_json(3 + i));
+            let r = c.request("POST", "/v1/generate", Some(&body)).unwrap();
+            assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+            assert_eq!(r.header("connection"), Some("keep-alive"));
+        }
+        assert_eq!(c.connects_made(), 1, "four requests rode one connection");
+        drop(c);
+        // the whole burst cost exactly one accepted connection, and the
+        // reuse ledger saw the three follow-ups
+        let reused = h.counters().keepalive_reuses.load(Ordering::Relaxed);
+        assert_eq!(reused, 3);
+        assert_eq!(h.counters().conns_accepted.load(Ordering::Relaxed), 1);
+        h.shutdown();
+    }
+
+    #[test]
+    fn keepalive_request_cap_closes_the_connection() {
+        let mut cfg = ServerConfig::default();
+        cfg.keepalive_max_requests = 2;
+        let h = start_tiny(cfg);
+        let mut c = client::Client::new(h.addr());
+        let r = c.request("GET", "/healthz", None).unwrap();
+        assert_eq!(r.header("connection"), Some("keep-alive"));
+        // request 2 hits the cap: the server says close and means it
+        let r = c.request("GET", "/healthz", None).unwrap();
+        assert_eq!(r.header("connection"), Some("close"));
+        // request 3 transparently reconnects
+        let r = c.request("GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(c.connects_made(), 2, "cap forced exactly one reconnect");
+        drop(c);
+        h.shutdown();
+    }
+
+    #[test]
+    fn connection_close_header_is_honored() {
+        let h = start_tiny(ServerConfig::default());
+        // the one-shot client sends Connection: close; the server must
+        // echo the close instead of promising keep-alive
+        let r = client::request(h.addr(), "GET", "/healthz", None).unwrap();
+        assert_eq!(r.header("connection"), Some("close"));
+        h.shutdown();
+    }
+
+    #[test]
+    fn slow_loris_partial_header_times_out_with_408() {
+        let mut cfg = ServerConfig::default();
+        cfg.read_timeout_ms = 120;
+        cfg.header_deadline_ms = 400;
+        let h = start_tiny(cfg);
+        // half a request line, then silence: the worker must type it
+        // 408 and move on, not wait forever
+        let r = client::raw_roundtrip_status(h.addr(), "POST /v1/gen").unwrap();
+        assert_eq!(r, 408);
+        assert_eq!(h.counters().http_408.load(Ordering::Relaxed), 1);
+        // the worker is demonstrably free again
+        let r = client::request(h.addr(), "GET", "/healthz", None).unwrap();
+        assert_eq!(r.status, 200);
+        h.shutdown();
+    }
+
+    #[test]
+    fn max_new_tokens_cap_clamps_hostile_asks() {
+        let mut cfg = ServerConfig::default();
+        cfg.max_new_tokens_cap = 4;
+        let h = start_tiny(cfg);
+        // at the cap: untouched
+        let body = format!(r#"{{"prompt": {}, "max_new_tokens": 4}}"#, prompt_json(3));
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.json().unwrap().get("tokens").unwrap().as_arr().unwrap().len(), 4);
+        // one past the cap: clamped to it (the boundary)
+        let body = format!(r#"{{"prompt": {}, "max_new_tokens": 5}}"#, prompt_json(3));
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.json().unwrap().get("tokens").unwrap().as_arr().unwrap().len(), 4);
+        // a hostile unbounded ask: clamped, not refused, not decoded
+        let body = format!(r#"{{"prompt": {}, "max_new_tokens": 1000000}}"#, prompt_json(3));
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(&body)).unwrap();
+        assert_eq!(r.status, 200);
+        assert_eq!(r.json().unwrap().get("tokens").unwrap().as_arr().unwrap().len(), 4);
         h.shutdown();
     }
 
@@ -596,14 +1070,150 @@ mod tests {
     }
 
     #[test]
+    fn doomed_wait_deadline_is_refused_at_admission() {
+        let mut cfg = ServerConfig::default();
+        cfg.engine = EngineConfig { max_batch: 1, max_wait_rounds: 0, ..Default::default() };
+        let h = start_tiny(cfg);
+        let addr = h.addr();
+        h.pause_engine();
+        // two requests pile up in the paused engine's queue
+        let body = format!(r#"{{"prompt": {}, "max_new_tokens": 2}}"#, prompt_json(3));
+        let waiters: Vec<_> = (0..2)
+            .map(|_| {
+                let body = body.clone();
+                std::thread::spawn(move || {
+                    client::request(addr, "POST", "/v1/generate", Some(&body)).unwrap()
+                })
+            })
+            .collect();
+        while client::request(addr, "GET", "/metrics", None)
+            .ok()
+            .and_then(|m| {
+                client::metric(&String::from_utf8_lossy(&m.body), "apt_engine_queue_depth")
+            })
+            != Some(2)
+        {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // queued=2, max_batch=1 (FIFO): a newcomer needs >= 2 admit
+        // rounds, so a 1-round wait deadline is provably unmeetable
+        let doomed = format!(
+            r#"{{"prompt": {}, "max_new_tokens": 2, "deadline_wait_rounds": 1}}"#,
+            prompt_json(3)
+        );
+        let r = client::request(addr, "POST", "/v1/generate", Some(&doomed)).unwrap();
+        assert_eq!(r.status, 429);
+        assert!(r.header("retry-after").is_some());
+        let text = String::from_utf8_lossy(&r.body).into_owned();
+        assert!(text.contains("cannot be met"), "names the refusal: {text}");
+        // a roomier deadline is NOT doomed — it queues normally
+        let fine = format!(
+            r#"{{"prompt": {}, "max_new_tokens": 2, "deadline_wait_rounds": 10}}"#,
+            prompt_json(3)
+        );
+        let fine_waiter = {
+            let fine = fine.clone();
+            std::thread::spawn(move || {
+                client::request(addr, "POST", "/v1/generate", Some(&fine)).unwrap()
+            })
+        };
+        h.resume_engine();
+        for w in waiters {
+            assert_eq!(w.join().unwrap().status, 200);
+        }
+        assert_eq!(fine_waiter.join().unwrap().status, 200);
+        assert_eq!(h.counters().http_429_doomed.load(Ordering::Relaxed), 1);
+        assert_eq!(h.counters().http_429.load(Ordering::Relaxed), 1, "doomed counts as a 429");
+        h.shutdown();
+    }
+
+    #[test]
+    fn pool_saturation_sheds_with_503_at_accept_time() {
+        let mut cfg = ServerConfig::default();
+        cfg.pool_workers = 2;
+        cfg.conn_backlog = 1;
+        let h = start_tiny(cfg);
+        let addr = h.addr();
+        h.pause_engine();
+        // two streaming requests pin both workers (the engine is
+        // paused, so their first token never arrives)...
+        let sbody = format!(
+            r#"{{"prompt": {}, "max_new_tokens": 4, "stream": true}}"#,
+            prompt_json(3)
+        );
+        let s1 = client::open_stream(addr, "/v1/generate", &sbody).unwrap();
+        let s2 = client::open_stream(addr, "/v1/generate", &sbody).unwrap();
+        // ...a third connection parks in the single backlog slot (on a
+        // thread: no worker will answer it until the engine resumes)...
+        let parked = {
+            let body = format!(r#"{{"prompt": {}, "max_new_tokens": 2}}"#, prompt_json(3));
+            std::thread::spawn(move || {
+                client::request(addr, "POST", "/v1/generate", Some(&body)).unwrap()
+            })
+        };
+        // give the acceptor a beat to actually enqueue it
+        std::thread::sleep(Duration::from_millis(100));
+        // ...and the fourth is shed with 503 + Retry-After at accept
+        // time, before any worker or the engine is touched
+        let r = client::request(addr, "POST", "/v1/generate", Some("{}")).unwrap();
+        assert_eq!(r.status, 503, "{}", String::from_utf8_lossy(&r.body));
+        assert!(r.header("retry-after").is_some());
+        assert_eq!(h.counters().http_503_shed.load(Ordering::Relaxed), 1);
+        // resume: the pinned streams and the parked connection all
+        // complete — shedding degraded the burst, it didn't break it
+        h.resume_engine();
+        for mut s in [s1, s2] {
+            let mut toks = 0;
+            while let Ok(Some(_)) = s.next_chunk() {
+                toks += 1;
+            }
+            assert!(toks >= 4, "stream completed after resume");
+        }
+        assert_eq!(parked.join().unwrap().status, 200);
+        let report = h.shutdown();
+        assert_eq!(report.pool_workers_joined, 2, "every pool worker reclaimed");
+    }
+
+    #[test]
     fn shutdown_is_idempotent_and_drains() {
         let h = start_tiny(ServerConfig::default());
         let addr = h.addr();
         let body = format!(r#"{{"prompt": {}, "max_new_tokens": 3}}"#, prompt_json(4));
         let r = client::request(addr, "POST", "/v1/generate", Some(&body)).unwrap();
         assert_eq!(r.status, 200);
-        h.shutdown();
+        let report = h.shutdown();
+        assert_eq!(report.pool_workers_joined, ServerConfig::default().pool_workers);
         // the listener is gone after shutdown
         assert!(client::request(addr, "GET", "/healthz", None).is_err());
+    }
+
+    #[test]
+    fn drain_meter_measures_rate_and_clamps() {
+        let mut m = DrainMeter::new();
+        assert_eq!(m.retry_after_s(10, 2), 2, "no data yet: the configured floor");
+        m.note_completion();
+        assert_eq!(m.retry_after_s(10, 2), 2, "one sample is not a rate");
+        std::thread::sleep(Duration::from_millis(30));
+        m.note_completion();
+        std::thread::sleep(Duration::from_millis(30));
+        m.note_completion();
+        let rate = m.rate().expect("two spans measured");
+        assert!(rate > 5.0 && rate < 1000.0, "{rate} completions/s over ~60ms");
+        // deep queue over a slow measured rate clamps at 60s
+        assert_eq!(m.retry_after_s(1_000_000, 1), 60);
+        // floor still wins at shallow depth
+        assert!(m.retry_after_s(1, 1) >= 1);
+    }
+
+    #[test]
+    fn pool_stats_shed_estimate() {
+        let s = PoolStats::default();
+        assert_eq!(s.retry_after_s(5, 2, 3), 3, "no service times yet: fallback");
+        s.record(Duration::from_millis(400));
+        s.record(Duration::from_millis(600));
+        // avg 0.5s x depth 8 / 2 workers = 2s
+        assert_eq!(s.retry_after_s(8, 2, 1), 2);
+        assert_eq!(s.retry_after_s(1_000_000, 1, 1), 60, "clamped");
+        assert_eq!(s.retry_after_s(0, 2, 1), 1, "floor");
     }
 }

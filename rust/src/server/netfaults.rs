@@ -1,0 +1,359 @@
+//! Deterministic wire-level fault injection for the HTTP front end —
+//! the [`serve::faults`](crate::serve::faults) idiom pushed down to the
+//! socket.
+//!
+//! The engine-side `FaultPlan` proved the pattern: script the fault as
+//! plain data, consult it at the code's NORMAL decision points, and the
+//! faulted run exercises exactly the paths a real fault would. Here the
+//! decision points are the wire layer's reads and writes: every worker
+//! talks to its connection through a [`Wire`], and a scripted
+//! [`ConnScript`] makes those reads trickle, stall, or the writes fail
+//! — producing byte-for-byte the same `io::Error`s a slow-loris client,
+//! a mid-body stall, or a mid-stream disconnect produce through the
+//! kernel, minus the wall-clock wait.
+//!
+//! Two properties carry over from the engine harness:
+//!
+//! - **No test-only control flow.** An unscripted connection takes one
+//!   branch per read/write and otherwise passes straight through to the
+//!   socket; the production server runs with an empty plan and the very
+//!   same `Wire` in the path.
+//! - **Blast-radius isolation is testable.** A stalled or disconnected
+//!   connection must leave every well-behaved concurrent stream
+//!   byte-identical to an unfaulted run, return its K/V pages, and show
+//!   up in a typed `/metrics` counter — pinned by
+//!   `http_wire_fault_blast_radius_spares_clean_streams` in the
+//!   integration suite.
+//!
+//! Plans are keyed by **accept order** (connection 0 is the first the
+//! acceptor takes), which is deterministic when a test opens its
+//! connections sequentially.
+
+use std::io::{self, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::Counters;
+
+/// What one scripted connection does at the wire. Default is clean:
+/// every field `None`, reads and writes pass through untouched.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ConnScript {
+    /// Reads return at most this many bytes per call — a client that
+    /// trickles its request byte-at-a-time (`Some(1)` is the classic
+    /// drip). Exercises the parser's incremental framing.
+    pub read_chunk: Option<usize>,
+    /// After this many request bytes have been read, every further read
+    /// fails with `ErrorKind::TimedOut` — exactly what a stalled client
+    /// produces through the socket read timeout. Position it inside the
+    /// header block for a slow-loris, inside the body for a mid-body
+    /// stall.
+    pub stall_read_after: Option<usize>,
+    /// Writes accept at most this many bytes per call (short writes) —
+    /// exercises every `write_all` loop in the response path.
+    pub write_chunk: Option<usize>,
+    /// After this many response bytes have been written, every further
+    /// write fails with `ErrorKind::BrokenPipe` — a client that
+    /// disconnected mid-stream. The server must take its normal
+    /// disconnect path: cancel the engine request, reclaim K/V pages.
+    pub drop_write_after: Option<usize>,
+}
+
+impl ConnScript {
+    pub fn clean() -> ConnScript {
+        ConnScript::default()
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.read_chunk.is_none()
+            && self.stall_read_after.is_none()
+            && self.write_chunk.is_none()
+            && self.drop_write_after.is_none()
+    }
+
+    /// Trickle reads: at most `n` bytes per read.
+    pub fn trickle(mut self, n: usize) -> ConnScript {
+        assert!(n >= 1, "a zero-byte read chunk would starve the parser");
+        self.read_chunk = Some(n);
+        self
+    }
+
+    /// Stall: reads fail `TimedOut` once `n` bytes have been read.
+    pub fn stall_after(mut self, n: usize) -> ConnScript {
+        self.stall_read_after = Some(n);
+        self
+    }
+
+    /// Short writes: at most `n` bytes accepted per write.
+    pub fn short_writes(mut self, n: usize) -> ConnScript {
+        assert!(n >= 1, "a zero-byte write chunk would loop forever");
+        self.write_chunk = Some(n);
+        self
+    }
+
+    /// Disconnect: writes fail `BrokenPipe` once `n` bytes have been
+    /// written.
+    pub fn drop_after(mut self, n: usize) -> ConnScript {
+        self.drop_write_after = Some(n);
+        self
+    }
+}
+
+/// A scripted set of per-connection wire faults, keyed by accept order,
+/// installed via [`Server::start_with_netfaults`](super::Server::
+/// start_with_netfaults). The default plan is empty — the production
+/// configuration.
+#[derive(Clone, Debug, Default)]
+pub struct NetFaultPlan {
+    scripts: Vec<(usize, ConnScript)>,
+}
+
+impl NetFaultPlan {
+    pub fn new() -> NetFaultPlan {
+        NetFaultPlan::default()
+    }
+
+    /// Script the `conn`-th accepted connection (0-based accept order).
+    pub fn on_conn(mut self, conn: usize, script: ConnScript) -> NetFaultPlan {
+        self.scripts.push((conn, script));
+        self
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scripts.iter().all(|(_, s)| s.is_clean())
+    }
+
+    /// The script for accept-order index `conn` (clean when unscripted;
+    /// later entries for the same index win, matching builder intuition).
+    pub(crate) fn script_for(&self, conn: usize) -> ConnScript {
+        self.scripts
+            .iter()
+            .rev()
+            .find(|&&(c, _)| c == conn)
+            .map(|&(_, s)| s)
+            .unwrap_or_default()
+    }
+}
+
+/// Byte cursors + one-shot fired flags for a connection's script. Shared
+/// (via `Arc<Mutex<..>>`) between the read half and the write half of a
+/// [`Wire`], which live on the same worker thread.
+#[derive(Debug)]
+struct WireState {
+    script: ConnScript,
+    read_bytes: usize,
+    written_bytes: usize,
+    stall_fired: bool,
+    drop_fired: bool,
+    short_io_counted: bool,
+}
+
+/// The wire wrapper every worker reads and writes its connection
+/// through. Unscripted connections pass straight through to the
+/// `TcpStream`; scripted ones consult their [`ConnScript`] at each read
+/// and write — the wire layer's normal decision points — and account
+/// every fault that fires in the server's typed [`Counters`].
+pub(crate) struct Wire {
+    stream: TcpStream,
+    state: Arc<Mutex<WireState>>,
+    counters: Arc<Counters>,
+}
+
+impl Wire {
+    pub(crate) fn new(stream: TcpStream, script: ConnScript, counters: Arc<Counters>) -> Wire {
+        Wire {
+            stream,
+            state: Arc::new(Mutex::new(WireState {
+                script,
+                read_bytes: 0,
+                written_bytes: 0,
+                stall_fired: false,
+                drop_fired: false,
+                short_io_counted: false,
+            })),
+            counters,
+        }
+    }
+
+    /// A second handle over the same socket and fault state (the read
+    /// half a `BufReader` wraps while the write half answers).
+    pub(crate) fn try_clone(&self) -> io::Result<Wire> {
+        Ok(Wire {
+            stream: self.stream.try_clone()?,
+            state: self.state.clone(),
+            counters: self.counters.clone(),
+        })
+    }
+
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.stream.set_read_timeout(d)
+    }
+
+    pub(crate) fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        self.stream.set_write_timeout(d)
+    }
+
+    /// Best-effort: pull any bytes the client already sent off the
+    /// socket before closing, so the kernel delivers our final response
+    /// instead of resetting the connection on close-with-unread-data.
+    pub(crate) fn drain_unread(&mut self, max: usize) {
+        let mut buf = [0u8; 512];
+        let mut left = max;
+        let _ = self.stream.set_read_timeout(Some(Duration::from_millis(10)));
+        while left > 0 {
+            match self.stream.read(&mut buf) {
+                Ok(0) | Err(_) => break,
+                Ok(n) => left = left.saturating_sub(n),
+            }
+        }
+    }
+
+    fn count_short_io(&self, st: &mut WireState) {
+        if !st.short_io_counted {
+            st.short_io_counted = true;
+            self.counters.net_short_io_conns.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Read for Wire {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        let mut st = self.state.lock().expect("wire state");
+        if st.script.is_clean() {
+            drop(st);
+            return self.stream.read(buf);
+        }
+        let mut cap = buf.len();
+        if let Some(n) = st.script.stall_read_after {
+            if st.read_bytes >= n {
+                if !st.stall_fired {
+                    st.stall_fired = true;
+                    self.counters.net_stalls.fetch_add(1, Ordering::Relaxed);
+                }
+                // the same error a stalled peer produces through the
+                // socket read timeout, without the wall-clock wait
+                return Err(io::Error::new(io::ErrorKind::TimedOut, "scripted read stall"));
+            }
+            cap = cap.min(n - st.read_bytes);
+        }
+        if let Some(c) = st.script.read_chunk {
+            self.count_short_io(&mut st);
+            cap = cap.min(c);
+        }
+        let cap = cap.max(1).min(buf.len());
+        let got = self.stream.read(&mut buf[..cap])?;
+        st.read_bytes += got;
+        Ok(got)
+    }
+}
+
+impl Write for Wire {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        let mut st = self.state.lock().expect("wire state");
+        if st.script.is_clean() {
+            drop(st);
+            return self.stream.write(buf);
+        }
+        let mut cap = buf.len();
+        if let Some(n) = st.script.drop_write_after {
+            if st.written_bytes >= n {
+                if !st.drop_fired {
+                    st.drop_fired = true;
+                    self.counters.net_disconnects.fetch_add(1, Ordering::Relaxed);
+                }
+                // the same error a vanished peer produces on write
+                return Err(io::Error::new(io::ErrorKind::BrokenPipe, "scripted disconnect"));
+            }
+            cap = cap.min(n - st.written_bytes);
+        }
+        if let Some(c) = st.script.write_chunk {
+            self.count_short_io(&mut st);
+            cap = cap.min(c);
+        }
+        let cap = cap.max(1).min(buf.len());
+        let wrote = self.stream.write(&buf[..cap])?;
+        st.written_bytes += wrote;
+        Ok(wrote)
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        self.stream.flush()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn plan_lookup_is_keyed_by_accept_order() {
+        let plan = NetFaultPlan::new()
+            .on_conn(0, ConnScript::clean().trickle(1))
+            .on_conn(2, ConnScript::clean().stall_after(10))
+            .on_conn(2, ConnScript::clean().drop_after(7));
+        assert!(!plan.is_empty());
+        assert_eq!(plan.script_for(0).read_chunk, Some(1));
+        assert!(plan.script_for(1).is_clean(), "unscripted conns stay clean");
+        // later entries for the same conn win
+        let s2 = plan.script_for(2);
+        assert_eq!(s2.drop_write_after, Some(7));
+        assert_eq!(s2.stall_read_after, None);
+        assert!(NetFaultPlan::new().is_empty());
+    }
+
+    #[test]
+    fn script_builders_compose() {
+        let s = ConnScript::clean().trickle(1).stall_after(20).short_writes(3).drop_after(64);
+        assert_eq!(s.read_chunk, Some(1));
+        assert_eq!(s.stall_read_after, Some(20));
+        assert_eq!(s.write_chunk, Some(3));
+        assert_eq!(s.drop_write_after, Some(64));
+        assert!(!s.is_clean());
+        assert!(ConnScript::clean().is_clean());
+    }
+
+    /// The fault arms are pure functions of the byte cursors, so they
+    /// are testable against a loopback socket pair without a server.
+    #[test]
+    fn wire_faults_fire_at_exact_byte_positions() {
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let client = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            s.write_all(b"0123456789").unwrap();
+            s.flush().unwrap();
+            // keep the socket open so reads see a stall, not EOF
+            let mut sink = Vec::new();
+            let _ = s.read_to_end(&mut sink);
+            sink
+        });
+        let (sock, _) = listener.accept().unwrap();
+        let counters = Arc::new(Counters::default());
+        let script = ConnScript::clean().trickle(3).stall_after(8).drop_after(5);
+        let mut wire = Wire::new(sock, script, counters.clone());
+
+        // trickled reads: at most 3 bytes per call, clamped to the stall
+        // point at byte 8, then TimedOut
+        let mut buf = [0u8; 64];
+        assert_eq!(wire.read(&mut buf).unwrap(), 3);
+        assert_eq!(wire.read(&mut buf).unwrap(), 3);
+        assert_eq!(wire.read(&mut buf).unwrap(), 2, "clamped to the stall point");
+        let e = wire.read(&mut buf).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::TimedOut);
+        let e = wire.read(&mut buf).unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::TimedOut, "stall persists");
+        assert_eq!(counters.net_stalls.load(Ordering::Relaxed), 1, "counted once");
+
+        // writes: 5 bytes pass, then BrokenPipe
+        assert_eq!(wire.write(b"abcdefgh").unwrap(), 5, "clamped to the drop point");
+        let e = wire.write(b"xyz").unwrap_err();
+        assert_eq!(e.kind(), io::ErrorKind::BrokenPipe);
+        assert_eq!(counters.net_disconnects.load(Ordering::Relaxed), 1);
+        assert_eq!(counters.net_short_io_conns.load(Ordering::Relaxed), 1);
+
+        drop(wire);
+        assert_eq!(client.join().unwrap(), b"abcde".to_vec());
+    }
+}

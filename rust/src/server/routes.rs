@@ -10,19 +10,26 @@
 //!   [`EngineSnapshot`] and the server's HTTP [`Counters`];
 //! - `GET /healthz` — liveness.
 //!
-//! Every worker runs [`handle_connection`] once: parse, route, answer,
-//! close. A streaming client that disconnects mid-response triggers
+//! Every pool worker runs [`handle_connection`] once per connection: a
+//! keep-alive loop of parse → route → answer, until the client closes,
+//! sends `Connection: close`, idles past the idle timeout, or exhausts
+//! the per-connection request cap. The loop is defensive end to end: a
+//! request that stalls mid-read (slow loris) gets a typed `408` and the
+//! connection is closed with the worker reclaimed; an idle kept-alive
+//! connection yields its worker as soon as other connections are
+//! waiting; a streaming client that disconnects mid-response triggers
 //! `Cmd::Cancel`, so the engine reclaims the stream's K/V pages
 //! immediately instead of generating for a ghost.
 
-use std::io::BufReader;
-use std::net::TcpStream;
-use std::sync::atomic::Ordering;
+use std::io::{self, BufRead, BufReader};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::Arc;
+use std::time::{Duration, Instant};
 
 use super::http::{self, ChunkedWriter, HttpRequest, ParseError};
-use super::{Cmd, Counters, StreamEvent, SubmitReply};
+use super::netfaults::Wire;
+use super::{Cmd, ConnQueue, Counters, StreamEvent, SubmitReply};
 use crate::json::{self, Json};
 use crate::serve::{
     Completion, Deadline, EngineSnapshot, ErrorKind, FinishReason, Request, RequestId,
@@ -30,71 +37,182 @@ use crate::serve::{
 };
 
 /// Everything a worker thread needs: the driver's command channel, the
-/// shared counters, and the request-validation knobs captured at
-/// startup.
+/// shared counters and connection queue, and the request-validation /
+/// connection-policy knobs captured at startup.
 #[derive(Clone)]
 pub(crate) struct Ctx {
     pub cmd: Sender<Cmd>,
     pub counters: Arc<Counters>,
+    /// The accept queue — read here only for its depth: an idle
+    /// keep-alive connection yields its worker when others are waiting.
+    pub queue: Arc<ConnQueue>,
+    /// Shutdown flag: no NEW keep-alive requests once set (responses in
+    /// flight still finish, and a queued connection still gets its
+    /// first request served — drain, not cut).
+    pub stop: Arc<AtomicBool>,
     pub vocab: usize,
     pub max_body: usize,
     pub default_max_new: usize,
+    /// Server-side clamp on `max_new_tokens` (see
+    /// `ServerConfig::max_new_tokens_cap`).
+    pub max_new_cap: usize,
     pub retry_after_s: u32,
+    /// Per-read socket timeout while a request is in flight, and the
+    /// wait bound for a fresh connection's first bytes.
+    pub read_timeout: Duration,
+    /// How long a kept-alive connection may idle between requests.
+    pub idle_timeout: Duration,
+    /// Wall-clock bound on reading one whole request.
+    pub header_deadline: Duration,
+    pub keepalive_max_requests: usize,
+    /// Pool size, exported on `/metrics` as capacity context.
+    pub pool_workers: usize,
 }
 
-/// One connection, one request, one response.
-pub(crate) fn handle_connection(stream: TcpStream, ctx: &Ctx) {
-    let Ok(read_half) = stream.try_clone() else { return };
-    let mut reader = BufReader::new(read_half);
-    let mut stream = stream;
-    let req = match http::parse_request(&mut reader, ctx.max_body) {
-        Ok(r) => r,
-        Err(ParseError::Closed) => return,
-        Err(e) => {
-            let (status, reason, msg) = http::status_for(&e);
-            match status {
-                413 => Counters::bump(&ctx.counters.http_413),
-                _ => Counters::bump(&ctx.counters.http_400),
+/// What [`await_request`] saw while waiting for a request to start.
+enum Await {
+    /// Bytes are buffered: a request is due — go parse it.
+    Data,
+    /// Nothing arrived within the idle budget (or the connection must
+    /// yield: shutdown, or other connections waiting). Close silently.
+    Idle,
+    /// Clean EOF: the peer is done with the connection.
+    Closed,
+    /// The socket failed some other way; nothing sensible to answer.
+    Failed,
+}
+
+/// Wait (in short slices, so shutdown and queue pressure are noticed)
+/// for the next request's first bytes. The per-slice timeout plays the
+/// role of a poll: data and EOF return immediately, quiet slices loop
+/// until `budget` is spent. A scripted wire stall returns its timeout
+/// instantly — the slice is then slept explicitly so a scripted run
+/// spans the same wall-clock budget as a real one.
+fn await_request(reader: &mut BufReader<Wire>, wire: &Wire, ctx: &Ctx, first: bool) -> Await {
+    let budget = if first { ctx.read_timeout } else { ctx.idle_timeout };
+    let slice = Duration::from_millis(50).min(budget).max(Duration::from_millis(1));
+    let start = Instant::now();
+    loop {
+        if wire.set_read_timeout(Some(slice)).is_err() {
+            return Await::Failed;
+        }
+        let iter = Instant::now();
+        match reader.fill_buf() {
+            Ok(b) if b.is_empty() => return Await::Closed,
+            Ok(_) => return Await::Data,
+            Err(e) if http::is_timeout(&e) => {
+                let spent = iter.elapsed();
+                if spent < slice {
+                    std::thread::sleep(slice - spent);
+                }
             }
-            let _ = http::write_response(
-                &mut stream,
-                status,
-                reason,
-                "text/plain",
-                &[],
-                format!("{msg}\n").as_bytes(),
-            );
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(_) => return Await::Failed,
+        }
+        if start.elapsed() >= budget {
+            return Await::Idle;
+        }
+        if !first && (ctx.stop.load(Ordering::SeqCst) || ctx.queue.depth() > 0) {
+            // between requests is the polite place to stop: shutting
+            // down, or other connections need this worker
+            return Await::Idle;
+        }
+    }
+}
+
+/// One connection's whole life: the keep-alive request loop.
+pub(crate) fn handle_connection(wire: Wire, ctx: &Ctx) {
+    let Ok(read_half) = wire.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut wire = wire;
+    let mut served = 0usize;
+    loop {
+        match await_request(&mut reader, &wire, ctx, served == 0) {
+            Await::Data => {}
+            Await::Idle => {
+                Counters::bump(&ctx.counters.idle_closes);
+                return;
+            }
+            Await::Closed | Await::Failed => return,
+        }
+        // a request has started: per-read timeout bounds each quiet
+        // gap, the wall-clock deadline bounds the drip that resets it
+        if wire.set_read_timeout(Some(ctx.read_timeout)).is_err() {
             return;
         }
-    };
-    Counters::bump(&ctx.counters.http_requests);
+        let deadline = Instant::now() + ctx.header_deadline;
+        let req = match http::parse_request(&mut reader, ctx.max_body, Some(deadline)) {
+            Ok(r) => r,
+            Err(ParseError::Closed) => return,
+            Err(ParseError::IdleTimeout) => {
+                Counters::bump(&ctx.counters.idle_closes);
+                return;
+            }
+            Err(e) => {
+                let (status, reason, msg) = http::status_for(&e);
+                match status {
+                    408 => Counters::bump(&ctx.counters.http_408),
+                    413 => Counters::bump(&ctx.counters.http_413),
+                    _ => Counters::bump(&ctx.counters.http_400),
+                }
+                let _ = http::write_response(
+                    &mut wire,
+                    status,
+                    reason,
+                    "text/plain",
+                    &[],
+                    format!("{msg}\n").as_bytes(),
+                    false,
+                );
+                // the broken request may still have bytes in flight;
+                // take them off the socket so the close delivers our
+                // response instead of resetting the connection
+                wire.drain_unread(64 * 1024);
+                return;
+            }
+        };
+        served += 1;
+        Counters::bump(&ctx.counters.http_requests);
+        if served > 1 {
+            Counters::bump(&ctx.counters.keepalive_reuses);
+        }
+        // the server half of the keep-alive negotiation: client said
+        // keep-alive ∧ under the per-connection cap ∧ not shutting down
+        let keep = req.keep_alive
+            && served < ctx.keepalive_max_requests
+            && !ctx.stop.load(Ordering::SeqCst);
+        let io_ok = route(&mut wire, ctx, &req, keep);
+        if !io_ok || !keep {
+            return;
+        }
+    }
+}
+
+/// Dispatch one parsed request. Returns `false` when the response could
+/// not be (fully) written — the connection is then closed regardless of
+/// the keep-alive decision.
+fn route(wire: &mut Wire, ctx: &Ctx, req: &HttpRequest, keep: bool) -> bool {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => {
-            let _ = http::write_response(&mut stream, 200, "OK", "text/plain", &[], b"ok\n");
+            http::write_response(wire, 200, "OK", "text/plain", &[], b"ok\n", keep).is_ok()
         }
-        ("GET", "/metrics") => metrics(&mut stream, ctx),
-        ("POST", "/v1/generate") => generate(&mut stream, ctx, &req),
+        ("GET", "/metrics") => metrics(wire, ctx, keep),
+        ("POST", "/v1/generate") => generate(wire, ctx, req, keep),
         // known routes, wrong method: say so instead of a blanket 404
-        (_, "/healthz") | (_, "/metrics") | (_, "/v1/generate") => {
-            let _ = http::write_response(
-                &mut stream,
-                405,
-                "Method Not Allowed",
-                "text/plain",
-                &[],
-                b"method not allowed\n",
-            );
-        }
+        (_, "/healthz") | (_, "/metrics") | (_, "/v1/generate") => http::write_response(
+            wire,
+            405,
+            "Method Not Allowed",
+            "text/plain",
+            &[],
+            b"method not allowed\n",
+            keep,
+        )
+        .is_ok(),
         _ => {
             Counters::bump(&ctx.counters.http_404);
-            let _ = http::write_response(
-                &mut stream,
-                404,
-                "Not Found",
-                "text/plain",
-                &[],
-                b"unknown route\n",
-            );
+            http::write_response(wire, 404, "Not Found", "text/plain", &[], b"unknown route\n", keep)
+                .is_ok()
         }
     }
 }
@@ -105,37 +223,33 @@ pub(crate) fn handle_connection(stream: TcpStream, ctx: &Ctx) {
 /// render it with the HTTP counters as `name value` lines (the
 /// Prometheus text idiom, minus types — every value is a gauge or a
 /// monotone counter, the `_total` suffix says which).
-fn metrics(stream: &mut TcpStream, ctx: &Ctx) {
+fn metrics(wire: &mut Wire, ctx: &Ctx, keep: bool) -> bool {
     let (tx, rx) = std::sync::mpsc::channel();
-    if ctx.cmd.send(Cmd::Snapshot(tx)).is_err() {
-        let _ = http::write_response(
-            stream,
+    let snap = if ctx.cmd.send(Cmd::Snapshot(tx)).is_ok() { rx.recv().ok() } else { None };
+    let Some(snap) = snap else {
+        return http::write_response(
+            wire,
             503,
             "Service Unavailable",
             "text/plain",
             &[],
             b"engine is shut down\n",
-        );
-        return;
-    }
-    let Ok(snap) = rx.recv() else {
-        let _ = http::write_response(
-            stream,
-            503,
-            "Service Unavailable",
-            "text/plain",
-            &[],
-            b"engine is shut down\n",
-        );
-        return;
+            false,
+        )
+        .is_ok();
     };
-    let text = render_metrics(&snap, &ctx.counters);
-    let _ = http::write_response(stream, 200, "OK", "text/plain", &[], text.as_bytes());
+    let text = render_metrics(&snap, &ctx.counters, ctx.queue.depth(), ctx.pool_workers);
+    http::write_response(wire, 200, "OK", "text/plain", &[], text.as_bytes(), keep).is_ok()
 }
 
-pub(crate) fn render_metrics(s: &EngineSnapshot, c: &Counters) -> String {
+pub(crate) fn render_metrics(
+    s: &EngineSnapshot,
+    c: &Counters,
+    conn_queue_depth: usize,
+    pool_workers: usize,
+) -> String {
     let st = &s.stats;
-    let mut out = String::with_capacity(1024);
+    let mut out = String::with_capacity(1536);
     let mut line = |k: &str, v: usize| {
         out.push_str(k);
         out.push(' ');
@@ -146,6 +260,7 @@ pub(crate) fn render_metrics(s: &EngineSnapshot, c: &Counters) -> String {
     // engine: gauges first, then the cumulative ledger
     line("apt_engine_queue_depth", s.queued);
     line("apt_engine_streams_active", s.active);
+    line("apt_engine_max_batch", s.max_batch);
     line("apt_engine_kv_pages_live", s.kv_pages_live);
     line("apt_engine_kv_pages_peak", st.kv_pages_peak);
     line("apt_engine_completions_total", st.completed);
@@ -156,14 +271,26 @@ pub(crate) fn render_metrics(s: &EngineSnapshot, c: &Counters) -> String {
     line("apt_engine_preemptions_total", st.preemptions);
     line("apt_engine_draft_fallbacks_total", st.draft_fallbacks);
     line("apt_engine_tokens_generated_total", st.tokens_generated);
-    // server-side HTTP ledger
+    // server: pool gauges, then the HTTP ledger (every degraded
+    // connection — shed, refused, timed out, wire-faulted — is here)
     let rel = |a: &std::sync::atomic::AtomicUsize| a.load(Ordering::Relaxed);
+    line("apt_http_pool_workers", pool_workers);
+    line("apt_http_conn_queue_depth", conn_queue_depth);
+    line("apt_http_conns_accepted_total", rel(&c.conns_accepted));
     line("apt_http_requests_total", rel(&c.http_requests));
+    line("apt_http_keepalive_reuses_total", rel(&c.keepalive_reuses));
+    line("apt_http_idle_closes_total", rel(&c.idle_closes));
     line("apt_http_responses_429_total", rel(&c.http_429));
+    line("apt_http_responses_429_doomed_total", rel(&c.http_429_doomed));
     line("apt_http_responses_400_total", rel(&c.http_400));
     line("apt_http_responses_404_total", rel(&c.http_404));
+    line("apt_http_responses_408_total", rel(&c.http_408));
     line("apt_http_responses_413_total", rel(&c.http_413));
+    line("apt_http_responses_503_shed_total", rel(&c.http_503_shed));
     line("apt_http_stream_disconnects_total", rel(&c.stream_disconnects));
+    line("apt_net_stalls_total", rel(&c.net_stalls));
+    line("apt_net_disconnects_total", rel(&c.net_disconnects));
+    line("apt_net_short_io_conns_total", rel(&c.net_short_io_conns));
     out
 }
 
@@ -176,22 +303,23 @@ struct GenSpec {
     stream: bool,
 }
 
-fn generate(stream: &mut TcpStream, ctx: &Ctx, req: &HttpRequest) {
+fn generate(wire: &mut Wire, ctx: &Ctx, req: &HttpRequest, keep: bool) -> bool {
     let spec = match parse_generate(&req.body, ctx) {
         Ok(s) => s,
         Err(msg) => {
             Counters::bump(&ctx.counters.http_400);
             let mut o = Json::obj();
             o.set("error", Json::Str(msg));
-            let _ = http::write_response(
-                stream,
+            return http::write_response(
+                wire,
                 400,
                 "Bad Request",
                 "application/json",
                 &[],
                 format!("{}\n", o.to_string()).as_bytes(),
-            );
-            return;
+                keep,
+            )
+            .is_ok();
         }
     };
     let (ev_tx, ev_rx) = std::sync::mpsc::channel::<StreamEvent>();
@@ -203,69 +331,100 @@ fn generate(stream: &mut TcpStream, ctx: &Ctx, req: &HttpRequest) {
     let reply = if submitted { rp_rx.recv().ok() } else { None };
     let id = match reply {
         None => {
-            let _ = http::write_response(
-                stream,
+            return http::write_response(
+                wire,
                 503,
                 "Service Unavailable",
                 "text/plain",
                 &[],
                 b"engine is shut down\n",
-            );
-            return;
+                false,
+            )
+            .is_ok();
         }
-        Some(SubmitReply::Busy { queued }) => {
+        Some(SubmitReply::Busy { queued, retry_after_s }) => {
             Counters::bump(&ctx.counters.http_429);
-            let retry = ctx.retry_after_s.to_string();
+            let retry = retry_after_s.to_string();
             let mut o = Json::obj();
             o.set("error", Json::Str(format!("pending queue is full ({queued} waiting)")));
-            let _ = http::write_response(
-                stream,
+            return http::write_response(
+                wire,
                 429,
                 "Too Many Requests",
                 "application/json",
                 &[("Retry-After", retry.as_str())],
                 format!("{}\n", o.to_string()).as_bytes(),
+                keep,
+            )
+            .is_ok();
+        }
+        Some(SubmitReply::Doomed { queued, need_rounds, allowed_rounds, retry_after_s }) => {
+            Counters::bump(&ctx.counters.http_429);
+            Counters::bump(&ctx.counters.http_429_doomed);
+            let retry = retry_after_s.to_string();
+            let mut o = Json::obj();
+            o.set(
+                "error",
+                Json::Str(format!(
+                    "deadline_wait_rounds = {allowed_rounds} cannot be met: {queued} queued \
+                     requests need at least {need_rounds} admit rounds"
+                )),
             );
-            return;
+            return http::write_response(
+                wire,
+                429,
+                "Too Many Requests",
+                "application/json",
+                &[("Retry-After", retry.as_str())],
+                format!("{}\n", o.to_string()).as_bytes(),
+                keep,
+            )
+            .is_ok();
         }
         Some(SubmitReply::Accepted(id)) => id,
     };
     if spec.stream {
-        stream_completion(stream, ctx, id, &ev_rx);
+        stream_completion(wire, ctx, id, &ev_rx, keep)
     } else {
-        wait_completion(stream, &ev_rx);
+        wait_completion(wire, &ev_rx, keep)
     }
 }
 
 /// Plain mode: ignore token events, answer when `Done` arrives.
-fn wait_completion(stream: &mut TcpStream, ev_rx: &std::sync::mpsc::Receiver<StreamEvent>) {
+fn wait_completion(
+    wire: &mut Wire,
+    ev_rx: &std::sync::mpsc::Receiver<StreamEvent>,
+    keep: bool,
+) -> bool {
     loop {
         match ev_rx.recv() {
             Ok(StreamEvent::Token(_)) => {}
             Ok(StreamEvent::Done(c)) => {
                 let body = format!("{}\n", completion_json(&c).to_string());
-                let _ = http::write_response(
-                    stream,
+                return http::write_response(
+                    wire,
                     200,
                     "OK",
                     "application/json",
                     &[],
                     body.as_bytes(),
-                );
-                return;
+                    keep,
+                )
+                .is_ok();
             }
             Err(_) => {
                 // driver gone mid-request (shutdown drains normally make
                 // this unreachable; a panicked driver does not)
-                let _ = http::write_response(
-                    stream,
+                return http::write_response(
+                    wire,
                     503,
                     "Service Unavailable",
                     "text/plain",
                     &[],
                     b"engine is shut down\n",
-                );
-                return;
+                    false,
+                )
+                .is_ok();
             }
         }
     }
@@ -275,16 +434,20 @@ fn wait_completion(stream: &mut TcpStream, ev_rx: &std::sync::mpsc::Receiver<Str
 /// terminal chunk with the typed finish reason. A failed chunk write
 /// means the client is gone: cancel the engine request (its K/V pages
 /// reclaim immediately), drain the event channel to its `Done`, and
-/// give up on the socket.
+/// give up on the socket. Chunked bodies are self-delimiting, so a
+/// stream that finishes cleanly keeps the connection alive like any
+/// other response.
 fn stream_completion(
-    stream: &mut TcpStream,
+    wire: &mut Wire,
     ctx: &Ctx,
     id: RequestId,
     ev_rx: &std::sync::mpsc::Receiver<StreamEvent>,
-) {
-    let Ok(mut cw) = ChunkedWriter::begin(stream, 200, "OK", "application/x-ndjson") else {
+    keep: bool,
+) -> bool {
+    let Ok(mut cw) = ChunkedWriter::begin(wire, 200, "OK", "application/x-ndjson", keep) else {
+        Counters::bump(&ctx.counters.stream_disconnects);
         cancel_and_drain(ctx, id, ev_rx);
-        return;
+        return false;
     };
     loop {
         match ev_rx.recv() {
@@ -294,7 +457,7 @@ fn stream_completion(
                 if cw.chunk(format!("{}\n", o.to_string()).as_bytes()).is_err() {
                     Counters::bump(&ctx.counters.stream_disconnects);
                     cancel_and_drain(ctx, id, ev_rx);
-                    return;
+                    return false;
                 }
             }
             Ok(StreamEvent::Done(c)) => {
@@ -303,11 +466,10 @@ fn stream_completion(
                     .set("id", Json::Num(c.id.0 as f64))
                     .set("finish", Json::Str(finish_str(c.finish).to_string()))
                     .set("tokens_generated", Json::Num(c.tokens.len() as f64));
-                let _ = cw.chunk(format!("{}\n", o.to_string()).as_bytes());
-                let _ = cw.finish();
-                return;
+                let body_ok = cw.chunk(format!("{}\n", o.to_string()).as_bytes()).is_ok();
+                return cw.finish().is_ok() && body_ok;
             }
-            Err(_) => return, // driver gone; nothing more will arrive
+            Err(_) => return false, // driver gone; nothing more will arrive
         }
     }
 }
@@ -351,7 +513,10 @@ pub(crate) fn completion_json(c: &Completion) -> Json {
 
 /// Decode + validate a generate body. Every defect answers with a
 /// message naming it — a serving API that just says "400" wastes its
-/// callers' time.
+/// callers' time. `max_new_tokens` is CLAMPED to the server cap rather
+/// than refused: an oversized ask is a policy question, not a malformed
+/// request, and the response's `tokens` length tells the caller what
+/// they actually got.
 fn parse_generate(body: &[u8], ctx: &Ctx) -> Result<GenSpec, String> {
     let text = std::str::from_utf8(body).map_err(|_| "body is not valid UTF-8".to_string())?;
     let v = json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
@@ -383,7 +548,8 @@ fn parse_generate(body: &[u8], ctx: &Ctx) -> Result<GenSpec, String> {
         }
         prompt.push(n as u32);
     }
-    let max_new = usize_field("max_new_tokens")?.unwrap_or(ctx.default_max_new);
+    let max_new =
+        usize_field("max_new_tokens")?.unwrap_or(ctx.default_max_new).min(ctx.max_new_cap);
     let temperature = match v.get("temperature") {
         None | Some(Json::Null) => 0.0f32,
         Some(j) => j.as_f64().ok_or_else(|| "temperature must be a number".to_string())? as f32,
@@ -415,10 +581,18 @@ mod tests {
         Ctx {
             cmd,
             counters: Arc::new(Counters::default()),
+            queue: Arc::new(ConnQueue::new(4)),
+            stop: Arc::new(AtomicBool::new(false)),
             vocab,
             max_body: 1 << 20,
             default_max_new: 32,
+            max_new_cap: 4096,
             retry_after_s: 1,
+            read_timeout: Duration::from_secs(5),
+            idle_timeout: Duration::from_secs(5),
+            header_deadline: Duration::from_secs(10),
+            keepalive_max_requests: 64,
+            pool_workers: 8,
         }
     }
 
@@ -450,6 +624,27 @@ mod tests {
         assert_eq!(spec.req.sampling, SamplingParams::greedy());
         assert!(!spec.stream);
         assert_eq!(spec.deadline, Deadline::none());
+    }
+
+    #[test]
+    fn parse_generate_clamps_max_new_tokens_at_the_cap() {
+        let mut ctx = ctx_for_parse(50);
+        ctx.max_new_cap = 10;
+        // at the cap: untouched
+        let spec = parse_generate(br#"{"prompt": [1], "max_new_tokens": 10}"#, &ctx).unwrap();
+        assert_eq!(spec.req.max_new_tokens, 10);
+        // one past: clamped (the boundary)
+        let spec = parse_generate(br#"{"prompt": [1], "max_new_tokens": 11}"#, &ctx).unwrap();
+        assert_eq!(spec.req.max_new_tokens, 10);
+        // hostile: clamped, not an error
+        let spec =
+            parse_generate(br#"{"prompt": [1], "max_new_tokens": 1000000000}"#, &ctx).unwrap();
+        assert_eq!(spec.req.max_new_tokens, 10);
+        // the default is clamped too, if someone configures it above
+        // the cap
+        ctx.default_max_new = 99;
+        let spec = parse_generate(br#"{"prompt": [1]}"#, &ctx).unwrap();
+        assert_eq!(spec.req.max_new_tokens, 10);
     }
 
     #[test]
@@ -493,6 +688,7 @@ mod tests {
             queued: 2,
             active: 3,
             kv_pages_live: 7,
+            max_batch: 8,
             stats: EngineStats {
                 completed: 10,
                 deadline_expired: 2,
@@ -506,10 +702,14 @@ mod tests {
         };
         let c = Counters::default();
         c.http_429.store(5, Ordering::Relaxed);
-        let text = render_metrics(&snap, &c);
+        c.http_408.store(2, Ordering::Relaxed);
+        c.http_503_shed.store(3, Ordering::Relaxed);
+        c.net_stalls.store(1, Ordering::Relaxed);
+        let text = render_metrics(&snap, &c, 4, 8);
         for expect in [
             "apt_engine_queue_depth 2",
             "apt_engine_streams_active 3",
+            "apt_engine_max_batch 8",
             "apt_engine_kv_pages_live 7",
             "apt_engine_completions_total 10",
             "apt_engine_completions_length_total 6",
@@ -517,7 +717,12 @@ mod tests {
             "apt_engine_completions_cancelled_total 1",
             "apt_engine_completions_error_total 1",
             "apt_engine_tokens_generated_total 123",
+            "apt_http_pool_workers 8",
+            "apt_http_conn_queue_depth 4",
             "apt_http_responses_429_total 5",
+            "apt_http_responses_408_total 2",
+            "apt_http_responses_503_shed_total 3",
+            "apt_net_stalls_total 1",
         ] {
             assert!(text.contains(&format!("{expect}\n")), "missing {expect:?} in:\n{text}");
         }

@@ -1463,3 +1463,189 @@ fn http_backpressure_429_without_engine_state_leak() {
     assert_eq!(get("apt_http_responses_429_total"), 1);
     h.shutdown();
 }
+
+/// The wire-fault blast-radius gate: with a scripted slow-loris, a
+/// mid-body stall and a mid-stream disconnect running against the
+/// server, well-behaved requests must come back BYTE-IDENTICAL to an
+/// unfaulted run, the engine must drain to zero K/V pages, every pool
+/// worker must join on shutdown, and every hostile connection must land
+/// in a typed `/metrics` counter. The faults are injected at the wire
+/// layer's normal read/write points (`server::netfaults`), so this is
+/// the production code path end to end.
+#[test]
+fn http_wire_fault_blast_radius_spares_clean_streams() {
+    use apt::server::netfaults::{ConnScript, NetFaultPlan};
+    use apt::server::{client, Server, ServerConfig};
+
+    let make_model = || {
+        Transformer::init(
+            TransformerConfig {
+                vocab: 31,
+                d_model: 16,
+                n_layers: 2,
+                n_heads: 2,
+                d_ff: 24,
+                max_seq: 64,
+            },
+            &mut Rng::new(9),
+        )
+    };
+    let hostile_stream_body =
+        r#"{"prompt": [1, 2, 3, 4], "max_new_tokens": 8, "stream": true}"#;
+    let plain_body = r#"{"prompt": [5, 6, 7], "max_new_tokens": 6}"#;
+    let clean_stream_body = r#"{"prompt": [8, 9, 10], "max_new_tokens": 6, "stream": true}"#;
+
+    // ---- unfaulted baseline: same submit order as the faulted run, so
+    // request ids (which appear in response bodies) line up and the
+    // comparison below really is byte-for-byte
+    let (baseline_plain, baseline_chunks) = {
+        let h = Server::start(make_model(), "127.0.0.1:0", ServerConfig::default()).unwrap();
+        let (st, _) = client::stream_request(h.addr(), "/v1/generate", hostile_stream_body).unwrap();
+        assert_eq!(st, 200);
+        let r = client::request(h.addr(), "POST", "/v1/generate", Some(plain_body)).unwrap();
+        assert_eq!(r.status, 200);
+        let (st, chunks) =
+            client::stream_request(h.addr(), "/v1/generate", clean_stream_body).unwrap();
+        assert_eq!(st, 200);
+        h.shutdown();
+        (r.body, chunks)
+    };
+
+    // ---- faulted run: conn 0 is a slow loris (trickled reads stalling
+    // mid-header), conn 1 stalls mid-body, conn 2 disconnects mid-stream
+    let raw_request = |body: &str| {
+        format!("POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{}", body.len(), body)
+    };
+    let stall_wire = raw_request(plain_body);
+    let head_len = stall_wire.len() - plain_body.len();
+    let plan = NetFaultPlan::new()
+        .on_conn(0, ConnScript::clean().trickle(1).stall_after(20))
+        .on_conn(1, ConnScript::clean().stall_after(head_len + plain_body.len() / 2))
+        .on_conn(2, ConnScript::clean().drop_after(150));
+    let h = Server::start_with_netfaults(make_model(), "127.0.0.1:0", ServerConfig::default(), plan)
+        .unwrap();
+    let addr = h.addr();
+
+    // conn 0: the full request is sent, but the scripted wire trickles
+    // it byte-at-a-time and stalls at byte 20 — typed 408, worker freed
+    let status = client::raw_roundtrip_status(addr, &raw_request(plain_body)).unwrap();
+    assert_eq!(status, 408, "slow loris maps to a typed 408");
+    // conn 1: headers arrive whole, the body stalls halfway through its
+    // declared Content-Length — the same typed 408
+    let status = client::raw_roundtrip_status(addr, &stall_wire).unwrap();
+    assert_eq!(status, 408, "mid-body stall maps to a typed 408");
+    // conn 2: the stream starts, then the wire drops every write past
+    // byte 150 — the server must take its normal disconnect path
+    {
+        let mut st = client::open_stream(addr, "/v1/generate", hostile_stream_body).unwrap();
+        assert_eq!(st.status, 200, "headers fit under the drop point");
+        while let Ok(Some(_)) = st.next_chunk() {}
+    }
+
+    // ---- well-behaved requests, byte-identical to the baseline
+    let r = client::request(addr, "POST", "/v1/generate", Some(plain_body)).unwrap();
+    assert_eq!(r.status, 200, "{}", String::from_utf8_lossy(&r.body));
+    assert_eq!(r.body, baseline_plain, "plain response altered by concurrent wire faults");
+    let (st, chunks) = client::stream_request(addr, "/v1/generate", clean_stream_body).unwrap();
+    assert_eq!(st, 200);
+    assert_eq!(chunks, baseline_chunks, "streamed response altered by concurrent wire faults");
+
+    // ---- ledger: every hostile connection in a typed counter, engine
+    // drained to zero pages, nothing still active
+    let text = await_metrics(addr, "fault ledger + drain", |t| {
+        client::metric(t, "apt_engine_completions_cancelled_total") == Some(1)
+            && client::metric(t, "apt_engine_kv_pages_live") == Some(0)
+    });
+    let get = |k: &str| client::metric(&text, k).unwrap_or_else(|| panic!("missing {k}"));
+    assert_eq!(get("apt_http_responses_408_total"), 2, "both stalls typed as 408");
+    assert_eq!(get("apt_net_stalls_total"), 2, "both scripted stalls fired");
+    assert_eq!(get("apt_net_disconnects_total"), 1, "scripted disconnect fired");
+    assert_eq!(get("apt_net_short_io_conns_total"), 1, "the trickled conn is accounted");
+    assert_eq!(get("apt_http_stream_disconnects_total"), 1);
+    assert_eq!(get("apt_engine_completions_cancelled_total"), 1, "disconnect cancelled its stream");
+    assert_eq!(get("apt_engine_streams_active"), 0);
+    assert_eq!(get("apt_engine_queue_depth"), 0);
+
+    // ---- full thread reclamation: every pool worker joins
+    let report = h.shutdown();
+    assert_eq!(report.pool_workers_joined, ServerConfig::default().pool_workers);
+}
+
+/// Keep-alive across the integration surface: many requests on one
+/// reused connection produce the same responses as one-shot
+/// connections, and the server's reuse/accept ledger proves only one
+/// connection was ever opened by the reusing client.
+#[test]
+fn http_keepalive_reuse_matches_one_shot_responses() {
+    use apt::server::{client, Server, ServerConfig};
+
+    let model = Transformer::init(
+        TransformerConfig {
+            vocab: 31,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 24,
+            max_seq: 64,
+        },
+        &mut Rng::new(9),
+    );
+    let h = Server::start(model, "127.0.0.1:0", ServerConfig::default()).unwrap();
+    let addr = h.addr();
+
+    let bodies: Vec<String> = (0..4)
+        .map(|i| format!(r#"{{"prompt": [{}, {}], "max_new_tokens": 4}}"#, i + 1, i + 2))
+        .collect();
+    // one-shot responses first (each opens its own connection)...
+    let one_shot: Vec<Vec<u32>> = bodies
+        .iter()
+        .map(|b| {
+            let r = client::request(addr, "POST", "/v1/generate", Some(b)).unwrap();
+            assert_eq!(r.status, 200);
+            r.json()
+                .unwrap()
+                .get("tokens")
+                .unwrap()
+                .as_arr()
+                .unwrap()
+                .iter()
+                .map(|t| t.as_f64().unwrap() as u32)
+                .collect()
+        })
+        .collect();
+    // ...then the same requests down ONE kept-alive connection
+    let before = client::metric(
+        &String::from_utf8_lossy(
+            &client::request(addr, "GET", "/metrics", None).unwrap().body,
+        ),
+        "apt_http_conns_accepted_total",
+    )
+    .unwrap();
+    let mut c = client::Client::new(addr);
+    for (b, expect) in bodies.iter().zip(&one_shot) {
+        let r = c.request("POST", "/v1/generate", Some(b)).unwrap();
+        assert_eq!(r.status, 200);
+        let got: Vec<u32> = r
+            .json()
+            .unwrap()
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as u32)
+            .collect();
+        assert_eq!(&got, expect, "keep-alive changed a response");
+    }
+    assert_eq!(c.connects_made(), 1, "four requests rode one connection");
+    drop(c);
+    let text = await_metrics(addr, "keepalive ledger", |t| {
+        client::metric(t, "apt_http_keepalive_reuses_total") == Some(3)
+    });
+    let after = client::metric(&text, "apt_http_conns_accepted_total").unwrap();
+    // the reusing client accounts for exactly one accepted connection
+    // (metrics polls add their own, all after `before` was read — so the
+    // delta is 1 reusing conn + the polls, never 4)
+    assert!(after >= before + 1, "reusing client was accepted");
+    h.shutdown();
+}

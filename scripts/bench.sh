@@ -41,10 +41,16 @@
 # `server` runs the separate loadgen bench binary against the HTTP
 # front end over loopback: a closed-loop generator (8 clients,
 # back-to-back requests) for derived.server_p50_latency_ms,
-# derived.server_p99_latency_ms and derived.server_tokens_per_s, then
-# an open-loop generator at 2x the measured capacity for
-# derived.server_429_rate (the bounded pending queue's refusal
-# fraction under honest overload).
+# derived.server_p99_latency_ms and derived.server_tokens_per_s, the
+# same closed loop down reused keep-alive connections for
+# derived.server_keepalive_speedup, an open-loop generator at 2x the
+# measured capacity for derived.server_429_rate (the bounded pending
+# queue's refusal fraction under honest overload — the open loop exists
+# because a closed generator coordinates with server state and omits
+# exactly the arrivals that would have queued), and a misbehaving-client
+# pack (slow-loris connections vs a short-timeout server) for
+# derived.server_shed_rate_misbehaving (fraction put down with a typed
+# 408/503 while honest traffic completes alongside).
 #
 # The bench binary itself writes BENCH_perf.json at the repo root and
 # prints a delta table against the previous run (a filtered run keeps the

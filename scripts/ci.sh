@@ -33,6 +33,9 @@ cargo run --release --example resilience_smoke
 echo "== smoke: HTTP serving front end (loopback generate/stream/metrics, graceful drain) =="
 cargo run --release --example http_serve
 
+echo "== smoke: HTTP chaos (slow loris, mid-stream disconnect, pool saturation, typed counters) =="
+cargo run --release --example chaos_serve
+
 echo "== hygiene: rustfmt check =="
 cargo fmt --all -- --check
 
